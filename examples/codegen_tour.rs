@@ -1,0 +1,39 @@
+//! Codegen tour: what the SASA automation flow emits for a kernel —
+//! the TAPA HLS C++ accelerator, the host program, and the execution plan.
+//!
+//! Run: `cargo run --release --example codegen_tour`
+
+use sasa::codegen::{generate_hls, generate_host, Plan};
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::explore;
+use sasa::platform::FpgaPlatform;
+
+fn main() -> anyhow::Result<()> {
+    let platform = FpgaPlatform::u280();
+
+    // HOTSPOT: two inputs, the paper's Listing 3
+    let prog = parse(b::HOTSPOT_DSL)?;
+    let info = analyze(&prog);
+    let dse = explore(&info, &platform, 64);
+    println!(
+        "// DSE chose {} for {} at iter=64 ({} HBM banks, {:.0} MHz)\n",
+        dse.best.config, info.name, dse.best.hbm_banks, dse.best.freq_mhz
+    );
+
+    let u = platform.unroll_factor(info.cell_bytes);
+    println!("{}", generate_hls(&prog, dse.best.config, u));
+    println!("// ===================== host =====================\n");
+    println!("{}", generate_host(&prog, dse.best.config));
+
+    let plan = Plan::from_choice(&info.name, info.rows, info.cols, 64, &dse.best);
+    println!("// ===================== plan =====================");
+    println!("{}", plan.to_json());
+
+    // chained-kernel codegen (Listing 4) exercises the local-buffer path
+    let chained = parse(b::BLUR_JACOBI2D_DSL)?;
+    let ci = analyze(&chained);
+    let cd = explore(&ci, &platform, 4);
+    println!("\n// ============ chained kernel (Listing 4) ============");
+    println!("{}", generate_hls(&chained, cd.best.config, u));
+    Ok(())
+}

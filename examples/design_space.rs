@@ -1,0 +1,57 @@
+//! Design-space exploration sweep: regenerates the data series behind
+//! Figs 10–20 for every benchmark × input size × iteration count, entirely
+//! through the analytical model + cycle simulator (no PJRT needed).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use sasa::dsl::benchmarks as b;
+use sasa::metrics::reports;
+use sasa::model::{explore, Parallelism};
+use sasa::platform::FpgaPlatform;
+use sasa::sim::simulate;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+
+    // Figs 10–17: throughput series per kernel
+    for (name, _) in b::ALL {
+        let t = reports::fig10_17(&platform, name);
+        println!("{}", t.to_markdown());
+    }
+
+    // Figs 18–20: PE counts
+    println!("{}", reports::fig18_20(&platform).to_markdown());
+
+    // Crossover analysis: for each kernel at the headline size, find the
+    // iteration count where temporal overtakes spatial (the paper's core
+    // compute-bound vs memory-bound story, §5.3.6)
+    println!("### Crossover: first iteration where temporal beats Spatial_S\n");
+    for (name, _) in b::ALL {
+        let dims: Vec<u64> = if name == "jacobi3d" || name == "heat3d" {
+            vec![9720, 32, 32]
+        } else {
+            vec![9720, 1024]
+        };
+        let info = reports::kernel_info(name, &dims);
+        let mut crossover = None;
+        for iter in b::ITER_SWEEP {
+            let r = explore(&info, &platform, iter);
+            let (Some(t), Some(s)) = (
+                r.scheme(Parallelism::Temporal),
+                r.scheme(Parallelism::SpatialS),
+            ) else {
+                continue;
+            };
+            let tg = simulate(&info, &platform, iter, t.config).gcell_per_s;
+            let sg = simulate(&info, &platform, iter, s.config).gcell_per_s;
+            if tg > sg {
+                crossover = Some(iter);
+                break;
+            }
+        }
+        match crossover {
+            Some(i) => println!("- {name}: temporal wins from iter = {i}"),
+            None => println!("- {name}: spatial/hybrid wins across the whole sweep"),
+        }
+    }
+}

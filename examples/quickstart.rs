@@ -1,0 +1,55 @@
+//! Quickstart: the full SASA pipeline on one kernel in ~40 lines.
+//!
+//! DSL → parse → analyze → DSE (best parallelism on a U280) → execute the
+//! chosen design for real through the AOT-compiled PJRT executables →
+//! verify against the DSL interpreter.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use sasa::coordinator::{verify::max_abs_diff, Coordinator, StencilJob};
+use sasa::dsl::{analyze, benchmarks, parse};
+use sasa::model::explore;
+use sasa::platform::FpgaPlatform;
+use sasa::reference::{interpret, Grid};
+use sasa::runtime::{artifact::default_artifact_dir, Runtime};
+use sasa::sim::simulate;
+use sasa::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a stencil program in the SASA DSL (paper Listing 2, small grid)
+    let src = benchmarks::with_dims(benchmarks::JACOBI2D_DSL, &[64, 64], 8);
+    let prog = parse(&src)?;
+    let info = analyze(&prog);
+    println!("kernel {} — {} points, radius {}, {:.2} OPs/byte @ iter=1",
+        info.name, info.points, info.radius_rows, info.intensity(1));
+
+    // 2. design-space exploration on the paper's platform
+    let platform = FpgaPlatform::u280();
+    let dse = explore(&info, &platform, 8);
+    println!("DSE best: {} — predicted {:.2} GCell/s on a U280",
+        dse.best.config, dse.best.gcell_per_s);
+
+    // 3. execute the chosen parallelism for real (PJRT CPU, AOT artifacts)
+    let mut cfg = dse.best.config;
+    cfg.k = cfg.k.min(4); // toy 64-row grid: keep tiles sensible
+    let mut rng = Prng::new(1);
+    let input = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
+    let runtime = Runtime::from_dir(default_artifact_dir())?;
+    let coord = Coordinator::new(&runtime);
+    let job = StencilJob::new(&prog, vec![input.clone()], 8)?;
+    let (result, report) = coord.execute(&job, cfg)?;
+    println!("executed via {}: rounds={} invocations={}",
+        cfg, report.rounds, report.pe_invocations);
+
+    // 4. verify against the independent Rust DSL interpreter
+    let golden = interpret(&prog, &[input], 64, 8);
+    let diff = max_abs_diff(&result, &golden);
+    println!("max |diff| vs interpreter = {diff:e}");
+    assert!(diff < 1e-5, "verification failed");
+
+    // 5. what the same design would do on the FPGA (cycle simulator)
+    let sim = simulate(&info, &platform, 8, cfg);
+    println!("simulated U280: {:.2} GCell/s @ {:.0} MHz", sim.gcell_per_s, sim.freq_mhz);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: lower every (kernel, shape) model to HLO *text*.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO
+text parser on the Rust side reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); Python is never on the Rust
+request path. Emits ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``
+which the Rust runtime reads to discover parameter layouts.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.specs import get_spec
+from .model import example_args, make_model, make_unrolled
+
+# (kernel, maxr, c, plane, unrolled_steps) — unrolled_steps == 0 means the
+# dynamic-nsteps while-loop variant (the one the Rust coordinator uses).
+DEFAULT_MATRIX = [
+    # tiny shapes: unit/integration tests + quickstart (grids up to 64 rows,
+    # tiles up to 96 rows after halo extension)
+    ("jacobi2d", 96, 64, None, 0),
+    ("blur", 96, 64, None, 0),
+    ("seidel2d", 96, 64, None, 0),
+    ("sobel2d", 96, 64, None, 0),
+    ("dilate", 96, 64, None, 0),
+    ("hotspot", 96, 64, None, 0),
+    ("jacobi3d", 96, 256, 16, 0),
+    ("heat3d", 96, 256, 16, 0),
+    # Listing 4: chained stencil loops through a `local` intermediate
+    ("blur-jacobi2d", 96, 64, None, 0),
+    # medium shapes: the end-to-end example (720x1024 workloads, k-way
+    # row partitions + halo extensions all fit in 768 rows)
+    ("jacobi2d", 768, 1024, None, 0),
+    ("hotspot", 768, 1024, None, 0),
+    ("blur", 768, 1024, None, 0),
+    # tile shapes: spatial/hybrid partitions of the 720-row workloads run
+    # on the smallest canvas that fits (perf: avoids computing dead rows —
+    # EXPERIMENTS.md §Perf L3-2)
+    ("jacobi2d", 144, 1024, None, 0),
+    ("hotspot", 144, 1024, None, 0),
+    ("blur", 144, 1024, None, 0),
+    ("jacobi2d", 288, 1024, None, 0),
+    ("hotspot", 288, 1024, None, 0),
+    ("blur", 288, 1024, None, 0),
+    # unrolled temporal-pipeline showcase (paper Fig 4: s cascaded stages
+    # fused into one dataflow executable)
+    ("jacobi2d", 96, 64, None, 4),
+]
+
+
+def artifact_name(kernel: str, maxr: int, c: int, unrolled: int) -> str:
+    suffix = f"_u{unrolled}" if unrolled else ""
+    return f"{kernel}_r{maxr}x{c}{suffix}"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kernel: str, maxr: int, c: int, plane, unrolled: int) -> str:
+    spec = get_spec(kernel, plane=plane)
+    if unrolled:
+        fn = make_unrolled(spec, maxr, c, unrolled)
+    else:
+        fn = make_model(spec, maxr, c)
+    lowered = jax.jit(fn).lower(*example_args(spec, maxr, c, unrolled=bool(unrolled)))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, only: str | None = None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kernel, maxr, c, plane, unrolled in DEFAULT_MATRIX:
+        name = artifact_name(kernel, maxr, c, unrolled)
+        if only and only not in name:
+            continue
+        spec = get_spec(kernel, plane=plane)
+        text = lower_one(kernel, maxr, c, plane, unrolled)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kernel": kernel,
+            "maxr": maxr,
+            "c": c,
+            "plane": plane or 0,
+            "n_inputs": spec.n_inputs,
+            "update_idx": spec.update_idx,
+            "pad_r": spec.pad_r,
+            "pad_c": spec.pad_c,
+            "unrolled_steps": unrolled,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        if verbose:
+            print(f"  [aot] {name}: {len(text)} chars", file=sys.stderr)
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="SASA AOT: jax/pallas -> HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact name")
+    args = ap.parse_args()
+    manifest = build(args.out_dir, only=args.only)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1: Pallas stencil kernels + specs + pure-numpy oracles."""
+from .specs import ALL_KERNELS, KernelSpec, get_spec  # noqa: F401
+from .pallas_stencils import make_raw_step, pad_inputs, pick_tile_r  # noqa: F401

@@ -1,0 +1,77 @@
+"""Layer-1: Pallas stencil kernels (interpret=True for CPU-PJRT execution).
+
+Hardware adaptation of the paper's single-PE design (Fig 3b, "coalesced
+reuse buffer") to the TPU programming model:
+
+  * The FPGA PE streams one 512-bit word (U = 16 floats) per cycle. Here a
+    Pallas grid step produces one (TILE_R, C) output block — the same
+    "consume one coalesced word, emit U cells" schedule expressed as an
+    HBM→VMEM block movement.
+  * SODA's line buffer of 2r+1 rows corresponds to the (TILE_R + 2·pad_r)
+    row window the kernel reads around each output block. The coalesced
+    optimisation (one wide FIFO instead of many narrow ones) maps to taking
+    taps as dynamic slices of a single resident block instead of
+    materialising per-tap shifted copies.
+
+Pallas must run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .specs import KernelSpec
+
+# One FPGA PE has U = 512 bit / 32 bit = 16 PUs; we emit 16-row blocks so one
+# grid step corresponds to 16 coalesced-word consumptions per row.
+DEFAULT_TILE_R = 16
+
+
+def pick_tile_r(maxr: int, tile_r: int = DEFAULT_TILE_R) -> int:
+    """Largest tile height <= tile_r that divides maxr (grid must tile evenly)."""
+    t = min(tile_r, maxr)
+    while maxr % t != 0:
+        t -= 1
+    return t
+
+
+def make_raw_step(spec: KernelSpec, maxr: int, c: int, tile_r: int | None = None):
+    """Build the raw stencil update as a Pallas kernel.
+
+    Returns ``raw(*padded) -> [maxr, c]`` where each ``padded`` input is the
+    corresponding grid padded by (pad_r, pad_c) in edge mode. The output is
+    the stencil applied at *every* cell (boundary masking is applied by the
+    Layer-2 model, which also carries non-updated inputs through).
+    """
+    pr, pc = spec.pad_r, spec.pad_c
+    tr = pick_tile_r(maxr, tile_r or DEFAULT_TILE_R)
+    n_in = spec.n_inputs
+
+    def kernel(*refs):
+        ins, o_ref = refs[:-1], refs[-1]
+        base = pl.program_id(0) * tr
+
+        def tap(k: int, dr: int, dc: int):
+            return ins[k][pl.dslice(base + pr + dr, tr), pl.dslice(pc + dc, c)]
+
+        o_ref[...] = spec.compute(tap)
+
+    in_spec = pl.BlockSpec((maxr + 2 * pr, c + 2 * pc), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(maxr // tr,),
+        in_specs=[in_spec] * n_in,
+        out_specs=pl.BlockSpec((tr, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((maxr, c), jnp.float32),
+        interpret=True,
+    )
+
+
+def pad_inputs(spec: KernelSpec, arrays):
+    """Edge-pad all input grids by (pad_r, pad_c)."""
+    return [
+        jnp.pad(a, ((spec.pad_r, spec.pad_r), (spec.pad_c, spec.pad_c)), mode="edge")
+        for a in arrays
+    ]

@@ -1,0 +1,50 @@
+"""Pure-numpy correctness oracles for every stencil kernel.
+
+These are the ground truth the Pallas kernels (L1), the JAX model (L2), and
+the Rust coordinator (L3, via golden files) are all validated against.
+Deliberately written in the most naive way possible: explicit padding,
+shifted-slice taps, python-level iteration loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .specs import KernelSpec
+
+
+def ref_raw_step(spec: KernelSpec, arrays) -> np.ndarray:
+    """Stencil applied at every cell of the (edge-padded) grid."""
+    pr, pc = spec.pad_r, spec.pad_c
+    padded = [np.pad(np.asarray(a, np.float32), ((pr, pr), (pc, pc)), mode="edge")
+              for a in arrays]
+    rows, cols = np.asarray(arrays[0]).shape
+
+    def tap(k: int, dr: int, dc: int):
+        return padded[k][pr + dr: pr + dr + rows, pc + dc: pc + dc + cols]
+
+    out = spec.compute(tap)  # DILATE uses jnp.maximum; np arrays pass through
+    return np.asarray(out, np.float32)
+
+
+def interior_mask(spec: KernelSpec, maxr: int, c: int, nrows: int) -> np.ndarray:
+    """Cells that are updated; everything else is copy-through (Dirichlet)."""
+    rows = np.arange(maxr)[:, None]
+    cols = np.arange(c)[None, :]
+    return (
+        (rows >= spec.pad_r) & (rows < nrows - spec.pad_r)
+        & (cols >= spec.pad_c) & (cols < c - spec.pad_c)
+    )
+
+
+def ref_model(spec: KernelSpec, inputs, nrows: int, nsteps: int) -> np.ndarray:
+    """nsteps masked stencil iterations; returns the iterated grid."""
+    arrays = [np.asarray(a, np.float32).copy() for a in inputs]
+    maxr, c = arrays[0].shape
+    mask = interior_mask(spec, maxr, c, nrows)
+    cur = arrays[spec.update_idx]
+    for _ in range(nsteps):
+        state = list(arrays)
+        state[spec.update_idx] = cur
+        raw = ref_raw_step(spec, state)
+        cur = np.where(mask, raw, cur).astype(np.float32)
+    return cur

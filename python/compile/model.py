@@ -1,0 +1,94 @@
+"""Layer-2: the JAX stencil model — the compute graph each FPGA "PE" runs.
+
+One exported executable per (kernel, MAXR, C):
+
+    fn(*inputs, nrows, nsteps) -> (grid,)
+
+  * ``inputs``  — ``spec.n_inputs`` f32[MAXR, C] grids (the iterated grid is
+    ``inputs[spec.update_idx]``; HOTSPOT also carries a static power grid).
+  * ``nrows``   — i32 scalar: number of *live* rows. Tiles of any height up
+    to MAXR run through one executable; rows >= nrows are inert. This is how
+    one AOT artifact serves every spatial partition the L3 coordinator picks.
+  * ``nsteps``  — i32 scalar: stencil iterations to run (the temporal-stage
+    count s of the paper; the fori_loop body is one fused stencil stage).
+
+Boundary semantics: copy-through (Dirichlet). Cells within (pad_r, pad_c)
+of the live region's edge keep their value. The Rust coordinator exploits
+exactly this to implement Spatial_R (halo-extended tiles, contamination
+depth pad_r per iteration) and Spatial_S / Hybrid_S (border streaming).
+
+``make_unrolled`` additionally exports a literally-chained s-stage variant —
+the direct analogue of the paper's cascaded temporal pipeline (Fig 4) — used
+to demonstrate that XLA fuses the chain without host round-trips.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.pallas_stencils import make_raw_step, pad_inputs
+from .kernels.specs import KernelSpec
+
+
+def _interior_mask(spec: KernelSpec, maxr: int, c: int, nrows):
+    rows = jnp.arange(maxr)[:, None]
+    cols = jnp.arange(c)[None, :]
+    return (
+        (rows >= spec.pad_r) & (rows < nrows - spec.pad_r)
+        & (cols >= spec.pad_c) & (cols < c - spec.pad_c)
+    )
+
+
+def make_step(spec: KernelSpec, maxr: int, c: int):
+    """One masked stencil iteration: grid -> grid (static inputs closed over
+    positionally)."""
+    raw_step = make_raw_step(spec, maxr, c)
+
+    def step(state, cur, mask):
+        arrays = list(state)
+        arrays[spec.update_idx] = cur
+        raw = raw_step(*pad_inputs(spec, arrays))
+        return jnp.where(mask, raw, cur)
+
+    return step
+
+
+def make_model(spec: KernelSpec, maxr: int, c: int):
+    """fn(*inputs, nrows, nsteps) -> (grid,) with a dynamic while-loop."""
+    step = make_step(spec, maxr, c)
+
+    def fn(*args):
+        inputs, nrows, nsteps = args[:-2], args[-2], args[-1]
+        mask = _interior_mask(spec, maxr, c, nrows)
+        cur = inputs[spec.update_idx]
+
+        def body(_, cur):
+            return step(inputs, cur, mask)
+
+        return (lax.fori_loop(0, nsteps, body, cur),)
+
+    return fn
+
+
+def make_unrolled(spec: KernelSpec, maxr: int, c: int, s: int):
+    """fn(*inputs, nrows) -> (grid,): literal chain of s fused stages
+    (the paper's temporal pipeline of s cascaded PEs in one executable)."""
+    step = make_step(spec, maxr, c)
+
+    def fn(*args):
+        inputs, nrows = args[:-1], args[-1]
+        mask = _interior_mask(spec, maxr, c, nrows)
+        cur = inputs[spec.update_idx]
+        for _ in range(s):
+            cur = step(inputs, cur, mask)
+        return (cur,)
+
+    return fn
+
+
+def example_args(spec: KernelSpec, maxr: int, c: int, unrolled: bool = False):
+    """Abstract args for jax.jit(...).lower()."""
+    grids = [jax.ShapeDtypeStruct((maxr, c), jnp.float32)] * spec.n_inputs
+    scalars = [jax.ShapeDtypeStruct((), jnp.int32)] * (1 if unrolled else 2)
+    return (*grids, *scalars)

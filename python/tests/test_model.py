@@ -1,0 +1,97 @@
+"""L2 correctness: the exported model (mask + while-loop) vs iterated oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.specs import ALL_KERNELS, get_spec
+from compile.kernels.ref import ref_model
+from compile.model import make_model, make_unrolled
+
+
+def spec_for(name):
+    return get_spec(name, plane=8 if name in ("jacobi3d", "heat3d") else None)
+
+
+def rand_inputs(spec, maxr, c, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.uniform(0.0, 1.0, size=(maxr, c)).astype(np.float32)
+            for _ in range(spec.n_inputs)]
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+@pytest.mark.parametrize("nrows,nsteps", [(32, 1), (32, 4), (20, 3)])
+def test_model_matches_ref(name, nrows, nsteps):
+    spec = spec_for(name)
+    maxr, c = 32, max(32, 3 * spec.pad_c)
+    inputs = rand_inputs(spec, maxr, c)
+    fn = jax.jit(make_model(spec, maxr, c))
+    (got,) = fn(*[jnp.asarray(a) for a in inputs],
+                jnp.int32(nrows), jnp.int32(nsteps))
+    want = ref_model(spec, inputs, nrows, nsteps)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["jacobi2d", "hotspot"])
+def test_model_zero_steps_is_identity(name):
+    spec = spec_for(name)
+    maxr, c = 16, 24
+    inputs = rand_inputs(spec, maxr, c)
+    fn = jax.jit(make_model(spec, maxr, c))
+    (got,) = fn(*[jnp.asarray(a) for a in inputs], jnp.int32(16), jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(got), inputs[spec.update_idx])
+
+
+def test_dead_rows_inert():
+    """Rows >= nrows must come through bit-identical (the L3 tile contract)."""
+    spec = spec_for("jacobi2d")
+    maxr, c = 32, 24
+    x = rand_inputs(spec, maxr, c)[0]
+    fn = jax.jit(make_model(spec, maxr, c))
+    (got,) = fn(jnp.asarray(x), jnp.int32(20), jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(got)[20:], x[20:])
+
+
+def test_unrolled_equals_loop():
+    """Paper Fig 4: s fused temporal stages == s loop iterations."""
+    spec = spec_for("jacobi2d")
+    maxr, c, s = 32, 24, 4
+    x = jnp.asarray(rand_inputs(spec, maxr, c)[0])
+    (a,) = jax.jit(make_unrolled(spec, maxr, c, s))(x, jnp.int32(32))
+    (b,) = jax.jit(make_model(spec, maxr, c))(x, jnp.int32(32), jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_hotspot_power_not_modified_semantics():
+    """HOTSPOT iterates temp only; rerunning with the same power grid and the
+    previous output as temp must equal a single longer run (composability —
+    exactly how the coordinator chains rounds)."""
+    spec = spec_for("hotspot")
+    maxr, c = 24, 24
+    power, temp = rand_inputs(spec, maxr, c)
+    fn = jax.jit(make_model(spec, maxr, c))
+    (t4,) = fn(jnp.asarray(power), jnp.asarray(temp), jnp.int32(24), jnp.int32(4))
+    (t22,) = fn(jnp.asarray(power),
+                fn(jnp.asarray(power), jnp.asarray(temp), jnp.int32(24), jnp.int32(2))[0],
+                jnp.int32(24), jnp.int32(2))
+    np.testing.assert_allclose(np.asarray(t4), np.asarray(t22), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the tile contract the Rust coordinator relies on (Spatial_R correctness):
+# after n steps, cells further than n*pad_r rows from a cut edge are
+# independent of the values beyond that edge.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["jacobi2d", "dilate"])
+def test_contamination_depth(name):
+    spec = spec_for(name)
+    maxr, c, nsteps = 32, 24, 3
+    rng = np.random.default_rng(7)
+    base = rng.uniform(0, 1, size=(maxr, c)).astype(np.float32)
+    perturbed = base.copy()
+    perturbed[0, :] += 100.0  # poison the first row (beyond a cut edge)
+    a = ref_model(spec, [base], maxr, nsteps)
+    b = ref_model(spec, [perturbed], maxr, nsteps)
+    depth = spec.pad_r * nsteps
+    # beyond the contamination depth the results agree exactly
+    np.testing.assert_array_equal(a[depth + spec.pad_r:], b[depth + spec.pad_r:])

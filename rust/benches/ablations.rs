@@ -1,0 +1,113 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1  coalesced reuse buffers (Fig 3b) vs SODA's line-buffer design —
+//!      how many PEs fit, and what that costs end-to-end;
+//!  A2  kernel-launch overhead sensitivity (why small inputs lose, §5.3.5);
+//!  A3  the SLR-alignment constraint on spatial PE groups (§4.3 step 3);
+//!  A4  the fewer-HBM-banks tie-break (§4.3's Spatial_S vs Hybrid_S rule).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::metrics::Table;
+use sasa::model::{explore, latency_cycles, Config, ModelParams, Parallelism};
+use sasa::platform::{max_pe_by_resource, pe_resources, DesignStyle, FpgaPlatform};
+use sasa::sim::{simulate, LAUNCH_OVERHEAD_CYCLES};
+
+fn main() {
+    let p = FpgaPlatform::u280();
+
+    // A1: buffer design ablation — PE count + temporal throughput at iter=64
+    let mut a1 = Table::new(
+        "A1 — coalesced (SASA) vs line-buffer (SODA) single-PE design",
+        &["kernel", "PEs (SODA)", "PEs (SASA)", "GCell/s (SODA)", "GCell/s (SASA)", "gain"],
+    );
+    for (name, src) in b::ALL {
+        let info = analyze(&parse(src).unwrap());
+        let pe_soda = pe_resources(&info, &p, DesignStyle::Soda, info.cols);
+        let pe_sasa = pe_resources(&info, &p, DesignStyle::Sasa, info.cols);
+        let n_soda = max_pe_by_resource(&pe_soda, &p).min(64);
+        let n_sasa = max_pe_by_resource(&pe_sasa, &p).min(64);
+        let g = |s: u64| {
+            simulate(&info, &p, 64, Config { parallelism: Parallelism::Temporal, k: 1, s })
+                .gcell_per_s
+        };
+        let (gs, gg) = (g(n_soda.max(1)), g(n_sasa.max(1)));
+        a1.row(vec![
+            name.into(),
+            n_soda.to_string(),
+            n_sasa.to_string(),
+            format!("{gs:.2}"),
+            format!("{gg:.2}"),
+            format!("{:.2}x", gg / gs),
+        ]);
+        assert!(n_sasa >= n_soda, "{name}: coalesced buffers must not lose PEs");
+    }
+    println!("{}", a1.to_markdown());
+    let _ = a1.save_csv("ablation_a1_buffers");
+
+    // A2: launch-overhead sensitivity — device-time vs end-to-end throughput
+    let mut a2 = Table::new(
+        "A2 — launch-overhead sensitivity (JACOBI2D, Spatial_S k=9, iter=1)",
+        &["size", "kernel cycles", "wall cycles", "device GCell/s", "e2e GCell/s", "e2e loss"],
+    );
+    for dims in [[256u64, 256], [720, 1024], [9720, 1024], [4096, 4096]] {
+        let src = b::with_dims(b::JACOBI2D_DSL, &dims, 1);
+        let info = analyze(&parse(&src).unwrap());
+        let s = simulate(&info, &p, 1, Config { parallelism: Parallelism::SpatialS, k: 9, s: 1 });
+        let e2e = s.gcell_per_s * s.kernel_cycles / s.wall_cycles;
+        a2.row(vec![
+            format!("{}x{}", dims[0], dims[1]),
+            format!("{:.0}", s.kernel_cycles),
+            format!("{:.0}", s.wall_cycles),
+            format!("{:.2}", s.gcell_per_s),
+            format!("{e2e:.2}"),
+            format!("{:.1}%", 100.0 * (1.0 - e2e / s.gcell_per_s)),
+        ]);
+    }
+    println!("launch overhead charged per round: {LAUNCH_OVERHEAD_CYCLES} cycles");
+    println!("{}", a2.to_markdown());
+    let _ = a2.save_csv("ablation_a2_launch_overhead");
+
+    // A3: SLR alignment — aligned k=15 vs unaligned k=16 (JACOBI2D spatial)
+    let info = analyze(&parse(b::JACOBI2D_DSL).unwrap());
+    let mp = ModelParams::from_kernel(&info, 2, 16);
+    let l15 = latency_cycles(&mp, Config { parallelism: Parallelism::SpatialR, k: 15, s: 1 });
+    let l16 = latency_cycles(&mp, Config { parallelism: Parallelism::SpatialR, k: 16, s: 1 });
+    println!(
+        "A3 — SLR alignment: k=16 would be {:.1}% faster in cycles but spans\n\
+         partial SLRs; the paper (and we) trade it for floorplan simplicity.\n",
+        100.0 * (l15 as f64 / l16 as f64 - 1.0)
+    );
+
+    // A4: tie-break ablation — how often fewer-banks changes the choice
+    let mut changed = 0;
+    let mut total = 0;
+    let mut banks_saved = 0i64;
+    for (name, src) in b::ALL {
+        let info = analyze(&parse(src).unwrap());
+        for iter in b::ITER_SWEEP {
+            let r = explore(&info, &p, iter);
+            total += 1;
+            let fastest = r
+                .per_scheme
+                .iter()
+                .min_by(|x, y| x.seconds.partial_cmp(&y.seconds).unwrap())
+                .unwrap();
+            if fastest.config != r.best.config {
+                changed += 1;
+                banks_saved += fastest.hbm_banks as i64 - r.best.hbm_banks as i64;
+                println!(
+                    "A4   {name} iter={iter}: tie-break {} -> {} (saves {} banks)",
+                    fastest.config,
+                    r.best.config,
+                    fastest.hbm_banks as i64 - r.best.hbm_banks as i64
+                );
+            }
+        }
+    }
+    println!(
+        "\nA4 — fewer-banks tie-break changed {changed}/{total} choices, \
+         saving {banks_saved} HBM banks total\n"
+    );
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Figs 10–17 — GCell/s for every benchmark × input
+//! size × iteration count × parallelism scheme (DSE-sized), on the U280
+//! cycle simulator.
+//!
+//! Run: `cargo bench --bench fig10_17_throughput`
+
+use sasa::dsl::benchmarks as b;
+use sasa::metrics::reports;
+use sasa::platform::FpgaPlatform;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+    let t0 = std::time::Instant::now();
+    let mut total_rows = 0;
+    for (name, _) in b::ALL {
+        let t = reports::fig10_17(&platform, name);
+        println!("{}", t.to_markdown());
+        total_rows += t.rows.len();
+        let _ = t.save_csv(&format!("fig10_17_{name}"));
+    }
+    println!(
+        "generated {total_rows} (kernel, size, iter) series in {:.2} s",
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(total_rows, 8 * 4 * 7, "full sweep coverage");
+}

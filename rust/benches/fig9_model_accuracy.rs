@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig 9 — analytical model accuracy vs the cycle
+//! simulator, per benchmark, across parallelisms × iteration counts.
+//! The paper's claim: error within 5% everywhere.
+//!
+//! Run: `cargo bench --bench fig9_model_accuracy`
+
+use sasa::metrics::reports;
+use sasa::platform::FpgaPlatform;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+    let t0 = std::time::Instant::now();
+    let t = reports::fig9(&platform);
+    println!("{}", t.to_markdown());
+    let mut worst: f64 = 0.0;
+    for r in &t.rows {
+        worst = worst.max(r[2].parse::<f64>().unwrap());
+    }
+    println!("worst-case error: {worst:.2}% (paper bound: 5%)");
+    assert!(worst < 5.0, "model error exceeds the paper's 5% bound");
+    if let Ok(p) = t.save_csv("fig9_model_accuracy") {
+        println!("csv: {p:?}");
+    }
+    println!("generated in {:.2} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,92 @@
+//! Bench: L3 hot paths — the performance-optimization targets of
+//! EXPERIMENTS.md §Perf.
+//!
+//! * cycle-simulator throughput (simulated cells per wall second) — the
+//!   full Fig 10–17 sweep must run in seconds;
+//! * DSE latency per (kernel, iter) query;
+//! * coordinator tile geometry + halo-exchange machinery (allocation-free
+//!   steady state);
+//! * PJRT execute latency per tile (the real request path), when
+//!   artifacts are available;
+//! * manifest/plan JSON parsing.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use sasa::bench::{bench, results_table};
+use sasa::coordinator::grid::partition;
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::{explore, Config, Parallelism};
+use sasa::platform::FpgaPlatform;
+use sasa::reference::Grid;
+use sasa::runtime::artifact::default_artifact_dir;
+use sasa::runtime::{Manifest, Runtime};
+use sasa::sim::simulate;
+use sasa::util::json::Json;
+use sasa::util::prng::Prng;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+    let info = analyze(&parse(b::JACOBI2D_DSL).unwrap());
+    let mut results = Vec::new();
+
+    // 1. simulator: one full 5-scheme config evaluation at headline size
+    let cfg = Config { parallelism: Parallelism::HybridS, k: 3, s: 7 };
+    results.push(bench("sim: hybrid_s 9720x1024 iter=64", 3, 30, || {
+        std::hint::black_box(simulate(&info, &platform, 64, cfg));
+    }));
+    let m = results.last().unwrap();
+    let cells_per_s = 9720.0 * 1024.0 * 64.0 / m.median_s;
+    println!("simulator rate: {:.1} Mcell-iters per wall-second\n", cells_per_s / 1e6);
+
+    // 2. DSE end-to-end for one (kernel, iter)
+    results.push(bench("dse: explore jacobi2d iter=64", 3, 50, || {
+        std::hint::black_box(explore(&info, &platform, 64));
+    }));
+
+    // 3. full Fig 10-17 single-kernel sweep (28 DSE + sim evaluations)
+    results.push(bench("report: fig10_17 one kernel", 1, 5, || {
+        std::hint::black_box(sasa::metrics::reports::fig10_17(&platform, "jacobi2d"));
+    }));
+
+    // 4. partitioning geometry
+    results.push(bench("grid: partition 9720 rows / 15 PEs", 10, 1000, || {
+        std::hint::black_box(partition(9720, 15, 64));
+    }));
+
+    // 5. grid row copies (the coordinator's halo slices)
+    let mut rng = Prng::new(7);
+    let g = Grid::from_vec(768, 1024, rng.grid(768, 1024, 0.0, 1.0));
+    results.push(bench("grid: slice+write 2x256 rows of 1024", 10, 500, || {
+        let s = g.slice_rows(128, 384);
+        let mut h = g.clone();
+        h.write_rows(0, &s);
+        std::hint::black_box(h);
+    }));
+
+    // 6. manifest JSON parse
+    let manifest_path = default_artifact_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        results.push(bench("json: parse manifest", 10, 500, || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        }));
+    }
+
+    // 7. the real request path: one PJRT tile execution (64x64, 1 step)
+    if manifest_path.exists() {
+        let rt = Runtime::new(Manifest::load(default_artifact_dir()).unwrap()).unwrap();
+        let entry = rt.manifest().find("jacobi2d", 64, 96).unwrap().clone();
+        let tile = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+        // warm the executable cache (compile excluded from the hot path)
+        let _ = rt.run_stencil(&entry, &[tile.clone()], 96, 1).unwrap();
+        results.push(bench("pjrt: execute 96x64 tile, 1 step", 5, 100, || {
+            std::hint::black_box(rt.run_stencil(&entry, &[tile.clone()], 96, 1).unwrap());
+        }));
+        results.push(bench("pjrt: execute 96x64 tile, 8 steps", 5, 50, || {
+            std::hint::black_box(rt.run_stencil(&entry, &[tile.clone()], 96, 8).unwrap());
+        }));
+    }
+
+    let t = results_table("L3 hot paths", &results);
+    println!("{}", t.to_markdown());
+    let _ = t.save_csv("hotpath");
+}

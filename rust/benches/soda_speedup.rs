@@ -1,0 +1,35 @@
+//! Bench: the headline comparison (§5.4) — SASA's best parallelism vs the
+//! SODA baseline (temporal-only) across every benchmark × size ×
+//! iteration, plus Fig 1 (computation intensity) and Fig 8 (single-PE
+//! resources) as the supporting evidence.
+//!
+//! Paper numbers: average ≥ 3.74×, max 15.73× (JACOBI3D, iter = 1).
+//!
+//! Run: `cargo bench --bench soda_speedup`
+
+use sasa::metrics::reports;
+use sasa::platform::FpgaPlatform;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+    let t0 = std::time::Instant::now();
+
+    let (a, b) = reports::fig1();
+    println!("{}", a.to_markdown());
+    println!("{}", b.to_markdown());
+    let _ = a.save_csv("fig1a_intensity");
+    let _ = b.save_csv("fig1b_intensity_vs_iter");
+
+    let f8 = reports::fig8(&platform);
+    println!("{}", f8.to_markdown());
+    let _ = f8.save_csv("fig8_single_pe_resources");
+
+    let (t, avg, max) = reports::soda_speedup(&platform);
+    println!("{}", t.to_markdown());
+    let _ = t.save_csv("soda_speedup");
+
+    println!("SASA vs SODA: average {avg:.2}x (paper 3.74x), max {max:.2}x (paper 15.73x)");
+    assert!(avg > 3.0 && avg < 5.0, "average speedup out of band: {avg}");
+    assert!(max > 10.0 && max < 20.0, "max speedup out of band: {max}");
+    println!("generated in {:.2} s", t0.elapsed().as_secs_f64());
+}

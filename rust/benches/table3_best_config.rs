@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 3 (best parallelism configuration), Figs 18–20
+//! (PE counts) and Fig 21 (best-config resource utilization).
+//!
+//! Run: `cargo bench --bench table3_best_config`
+
+use sasa::metrics::reports;
+use sasa::platform::FpgaPlatform;
+
+fn main() {
+    let platform = FpgaPlatform::u280();
+    let t0 = std::time::Instant::now();
+
+    let t3 = reports::table3(&platform);
+    println!("{}", t3.to_markdown());
+    let _ = t3.save_csv("table3_best_config");
+
+    // paper checks: iter=64 column is Hybrid_S everywhere, ≥225 MHz
+    for r in t3.rows.iter().filter(|r| r[1] == "64") {
+        assert_eq!(r[2], "hybrid_s", "{}: iter=64 must pick Hybrid_S", r[0]);
+        assert!(r[3].parse::<f64>().unwrap() >= 225.0);
+    }
+
+    let f18 = reports::fig18_20(&platform);
+    println!("{}", f18.to_markdown());
+    let _ = f18.save_csv("fig18_20_pe_counts");
+
+    for iter in [64, 2] {
+        let f21 = reports::fig21(&platform, iter);
+        println!("{}", f21.to_markdown());
+        let _ = f21.save_csv(&format!("fig21_utilization_iter{iter}"));
+    }
+
+    println!("generated in {:.2} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,103 @@
+//! Minimal benchmarking harness (the offline vendor set has no criterion).
+//!
+//! Measures closures with warmup + repeated timing, reports median /
+//! mean / min, and renders results as tables — the same rows the paper's
+//! evaluation section prints. Used by every target in `rust/benches/`.
+
+use std::time::Instant;
+
+use crate::metrics::Table;
+
+/// One measured benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median_s * 1e9
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `samples` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, samples: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: samples,
+        median_s: median,
+        mean_s: mean,
+        min_s: times[0],
+    }
+}
+
+/// Render a set of measurements as a table.
+pub fn results_table(title: &str, ms: &[Measurement]) -> Table {
+    let mut t = Table::new(title, &["benchmark", "samples", "median", "mean", "min"]);
+    for m in ms {
+        t.row(vec![
+            m.name.clone(),
+            m.iters.to_string(),
+            human_time(m.median_s),
+            human_time(m.mean_s),
+            human_time(m.min_s),
+        ]);
+    }
+    t
+}
+
+/// Human-readable seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.median_s > 0.0);
+        assert!(m.min_s <= m.median_s);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.5).ends_with(" s"));
+        assert!(human_time(2.5e-3).ends_with(" ms"));
+        assert!(human_time(2.5e-6).ends_with(" µs"));
+        assert!(human_time(2.5e-9).ends_with(" ns"));
+    }
+}

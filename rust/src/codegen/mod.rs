@@ -1,0 +1,20 @@
+//! Code generation (paper §4.3): from a parsed DSL program and a chosen
+//! parallelism configuration, emit
+//!
+//! * the TAPA HLS C++ accelerator design (`hls`) — single-PE datapath with
+//!   coalesced reuse buffers plus the multi-PE top-level for the chosen
+//!   scheme,
+//! * the TAPA host code (`host`),
+//! * a machine-readable execution plan (`plan`) consumed by the Rust
+//!   coordinator and the cycle simulator.
+//!
+//! The HLS/host artifacts are faithful *text* deliverables (we cannot run
+//! Vitis here); the plan drives the executable reproduction path.
+
+pub mod hls;
+pub mod host;
+pub mod plan;
+
+pub use hls::{generate_connectivity, generate_hls, generate_movers, generate_single_pe};
+pub use host::generate_host;
+pub use plan::Plan;

@@ -1,0 +1,173 @@
+//! Execution plans: the machine-readable hand-off between the DSE and the
+//! execution substrates (coordinator, simulator, HLS emission). JSON on
+//! disk so plans can be inspected, diffed, and replayed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::{Config, DseChoice, Parallelism};
+use crate::util::json::{num, obj, s, Json};
+
+/// Everything needed to execute / regenerate a chosen design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub kernel: String,
+    pub rows: u64,
+    pub cols: u64,
+    pub iter: u64,
+    pub parallelism: Parallelism,
+    pub k: u64,
+    pub s: u64,
+    pub freq_mhz: f64,
+    pub hbm_banks: u64,
+    pub predicted_gcell_per_s: f64,
+}
+
+impl Plan {
+    pub fn from_choice(kernel: &str, rows: u64, cols: u64, iter: u64, c: &DseChoice) -> Plan {
+        Plan {
+            kernel: kernel.to_string(),
+            rows,
+            cols,
+            iter,
+            parallelism: c.config.parallelism,
+            k: c.config.k,
+            s: c.config.s,
+            freq_mhz: c.freq_mhz,
+            hbm_banks: c.hbm_banks,
+            predicted_gcell_per_s: c.gcell_per_s,
+        }
+    }
+
+    pub fn config(&self) -> Config {
+        Config { parallelism: self.parallelism, k: self.k, s: self.s }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kernel", s(self.kernel.clone())),
+            ("rows", num(self.rows as f64)),
+            ("cols", num(self.cols as f64)),
+            ("iter", num(self.iter as f64)),
+            ("parallelism", s(self.parallelism.name())),
+            ("k", num(self.k as f64)),
+            ("s", num(self.s as f64)),
+            ("freq_mhz", num(self.freq_mhz)),
+            ("hbm_banks", num(self.hbm_banks as f64)),
+            ("predicted_gcell_per_s", num(self.predicted_gcell_per_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let par: Parallelism = j
+            .str_or("parallelism", "")
+            .parse()
+            .ok()
+            .context("plan missing/invalid 'parallelism'")?;
+        Ok(Plan {
+            kernel: j.str_or("kernel", "").to_string(),
+            rows: j.u64_or("rows", 0),
+            cols: j.u64_or("cols", 0),
+            iter: j.u64_or("iter", 1),
+            parallelism: par,
+            k: j.u64_or("k", 1),
+            s: j.u64_or("s", 1),
+            freq_mhz: j.get("freq_mhz").and_then(Json::as_f64).unwrap_or(225.0),
+            hbm_banks: j.u64_or("hbm_banks", 0),
+            predicted_gcell_per_s: j
+                .get("predicted_gcell_per_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing plan to {path:?}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// A set of plans keyed by (kernel, iter) — what `sasa dse --sweep` emits.
+pub fn plans_to_json(plans: &[Plan]) -> Json {
+    Json::Arr(plans.iter().map(Plan::to_json).collect())
+}
+
+/// Parse a plan array.
+pub fn plans_from_json(j: &Json) -> Result<Vec<Plan>> {
+    j.as_arr()
+        .context("expected a JSON array of plans")?
+        .iter()
+        .map(Plan::from_json)
+        .collect()
+}
+
+/// Group plans by kernel for reporting.
+pub fn group_by_kernel(plans: &[Plan]) -> BTreeMap<&str, Vec<&Plan>> {
+    let mut m: BTreeMap<&str, Vec<&Plan>> = BTreeMap::new();
+    for p in plans {
+        m.entry(p.kernel.as_str()).or_default().push(p);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Plan {
+        Plan {
+            kernel: "jacobi2d".into(),
+            rows: 9720,
+            cols: 1024,
+            iter: 64,
+            parallelism: Parallelism::HybridS,
+            k: 3,
+            s: 7,
+            freq_mhz: 243.5,
+            hbm_banks: 6,
+            predicted_gcell_per_s: 72.3,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        let j = p.to_json();
+        let q = Plan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("sasa_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let p = sample();
+        p.save(&path).unwrap();
+        assert_eq!(Plan::load(&path).unwrap(), p);
+    }
+
+    #[test]
+    fn rejects_bad_parallelism() {
+        let j = Json::parse(r#"{"kernel": "x", "parallelism": "bogus"}"#).unwrap();
+        assert!(Plan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn grouping() {
+        let mut a = sample();
+        let mut b = sample();
+        b.kernel = "blur".into();
+        a.iter = 2;
+        let plans = vec![a, b, sample()];
+        let g = group_by_kernel(&plans);
+        assert_eq!(g["jacobi2d"].len(), 2);
+        assert_eq!(g["blur"].len(), 1);
+    }
+}

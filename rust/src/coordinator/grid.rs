@@ -1,0 +1,114 @@
+//! Row partitioning and halo geometry for the multi-PE coordinator.
+//!
+//! The paper partitions the input "vertically by the rows" across k spatial
+//! PE groups (§3.3) — no host-side pre-processing, just contiguous row
+//! ranges. Halo extensions follow the contamination-depth contract of the
+//! AOT executable (see `python/compile/model.py`): with copy-through edges,
+//! `n` iterations contaminate `pad_r·n` rows inward from a cut edge, so a
+//! tile extended by that much yields bit-correct owned rows.
+
+/// A PE group's owned row range [start, end) plus the extended range
+/// [ext_start, ext_end) it actually processes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+    pub ext_start: usize,
+    pub ext_end: usize,
+}
+
+impl Tile {
+    pub fn owned_rows(&self) -> usize {
+        self.end - self.start
+    }
+    pub fn ext_rows(&self) -> usize {
+        self.ext_end - self.ext_start
+    }
+    /// Owned range in tile-local coordinates.
+    pub fn owned_local(&self) -> (usize, usize) {
+        (self.start - self.ext_start, self.end - self.ext_start)
+    }
+}
+
+/// Split `rows` into `k` contiguous tiles (ceil split: earlier tiles take
+/// the remainder, matching ⌈R/k⌉ in Eqs 5–8), each extended by `ext` rows
+/// per cut side (clipped at the global edges).
+pub fn partition(rows: usize, k: usize, ext: usize) -> Vec<Tile> {
+    assert!(k >= 1 && rows >= k, "need at least one row per tile");
+    let base = rows / k;
+    let rem = rows % k;
+    let mut tiles = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        let end = start + len;
+        tiles.push(Tile {
+            index: i,
+            start,
+            end,
+            ext_start: start.saturating_sub(ext),
+            ext_end: (end + ext).min(rows),
+        });
+        start = end;
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{check, Prng};
+
+    #[test]
+    fn partition_covers_exactly() {
+        let tiles = partition(100, 7, 3);
+        assert_eq!(tiles[0].start, 0);
+        assert_eq!(tiles.last().unwrap().end, 100);
+        for w in tiles.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn extension_clipped_at_edges() {
+        let tiles = partition(100, 4, 10);
+        assert_eq!(tiles[0].ext_start, 0);
+        assert_eq!(tiles[3].ext_end, 100);
+        assert_eq!(tiles[1].ext_start, tiles[1].start - 10);
+    }
+
+    #[test]
+    fn owned_local_maps_back() {
+        for t in partition(64, 3, 4) {
+            let (a, b) = t.owned_local();
+            assert_eq!(t.ext_start + a, t.start);
+            assert_eq!(t.ext_start + b, t.end);
+        }
+    }
+
+    #[test]
+    fn property_partition_exact_cover_no_overlap() {
+        check(200, 0xC0FFEE, |rng: &mut Prng| {
+            let rows = rng.range(8, 2000) as usize;
+            let k = rng.range(1, 16.min(rows as u64)) as usize;
+            let ext = rng.range(0, 64) as usize;
+            let tiles = partition(rows, k, ext);
+            assert_eq!(tiles.len(), k);
+            let mut covered = 0usize;
+            for (i, t) in tiles.iter().enumerate() {
+                assert_eq!(t.index, i);
+                assert!(t.start < t.end);
+                assert_eq!(t.start, covered);
+                covered = t.end;
+                // extension is a superset of owned, clipped to the grid
+                assert!(t.ext_start <= t.start && t.end <= t.ext_end);
+                assert!(t.ext_end <= rows);
+                // ceil-split balance: tiles differ by at most one row
+                assert!(t.owned_rows() >= rows / k);
+                assert!(t.owned_rows() <= rows / k + 1);
+            }
+            assert_eq!(covered, rows);
+        });
+    }
+}

@@ -1,0 +1,377 @@
+//! The multi-PE coordinator: executes a stencil job under any of the five
+//! parallelism schemes (Figs 4–6) through the real AOT-compiled PJRT
+//! executables, reproducing on the CPU exactly the dataflow the FPGA
+//! design performs:
+//!
+//! * **Temporal** — the whole grid flows through ⌈iter/s⌉ rounds of an
+//!   s-iteration executable (the cascaded pipeline is fused inside the
+//!   artifact).
+//! * **Spatial_R** — k tiles extended by `pad_r·iter` rows run all
+//!   iterations with zero communication; the redundant halo absorbs the
+//!   cut-edge contamination.
+//! * **Spatial_S** — k resident tiles extended by `pad_r`; after every
+//!   iteration neighbours exchange `pad_r` border rows over channels (the
+//!   on-chip border streams).
+//! * **Hybrid_R** — ⌈iter/s⌉ rounds; each round re-reads an extended tile
+//!   (`pad_r·s`) from the global grid — the HBM re-read of Fig 6a.
+//! * **Hybrid_S** — k resident tiles extended by `pad_r·s`; one batched
+//!   exchange of `pad_r·s` rows per round (only first-stage PEs stream,
+//!   §3.4), then an s-iteration round runs locally.
+//!
+//! All five produce bit-identical grids (enforced by `verify` and the
+//! integration tests) — the parallelism choice is a pure performance
+//! decision, exactly the paper's premise.
+
+pub mod grid;
+pub mod verify;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsl::{analyze, KernelInfo, StencilProgram};
+use crate::model::{Config, Parallelism};
+use crate::reference::Grid;
+use crate::runtime::{ArtifactEntry, Runtime};
+
+use grid::{partition, Tile};
+
+/// A stencil workload: parsed program + concrete input grids.
+pub struct StencilJob {
+    pub info: KernelInfo,
+    /// Input grids, flattened 2-D, all rows×cols equal.
+    pub inputs: Vec<Grid>,
+    pub iter: u64,
+}
+
+impl StencilJob {
+    pub fn new(prog: &StencilProgram, inputs: Vec<Grid>, iter: u64) -> Result<StencilJob> {
+        let info = analyze(prog);
+        if inputs.len() != info.n_inputs as usize {
+            bail!("kernel {} needs {} inputs, got {}", info.name, info.n_inputs, inputs.len());
+        }
+        let (r, c) = (inputs[0].rows, inputs[0].cols);
+        for g in &inputs {
+            if (g.rows, g.cols) != (r, c) {
+                bail!("all input grids must have identical shape");
+            }
+        }
+        Ok(StencilJob { info, inputs, iter })
+    }
+
+    fn update_idx(&self) -> usize {
+        // convention shared with python/compile: the last input iterates
+        (self.info.n_inputs - 1) as usize
+    }
+
+    fn rows(&self) -> usize {
+        self.inputs[0].rows
+    }
+
+    fn cols(&self) -> usize {
+        self.inputs[0].cols
+    }
+}
+
+/// Execution report alongside the result grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecReport {
+    pub config: Config,
+    pub rounds: u64,
+    pub pe_invocations: u64,
+    pub halo_rows_exchanged: u64,
+    pub wall_seconds: f64,
+    pub gcell_per_s: f64,
+}
+
+/// The coordinator. Holds the PJRT runtime; stateless across jobs.
+pub struct Coordinator<'rt> {
+    runtime: &'rt Runtime,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Self {
+        Coordinator { runtime }
+    }
+
+    fn artifact(&self, job: &StencilJob, min_rows: usize) -> Result<&'rt ArtifactEntry> {
+        let name = job.info.name.to_lowercase();
+        self.runtime
+            .manifest()
+            .find(&name, job.cols() as u64, min_rows as u64)
+            .with_context(|| {
+                format!(
+                    "no artifact for kernel '{}' cols={} rows>={min_rows} — \
+                     extend DEFAULT_MATRIX in python/compile/aot.py and re-run `make artifacts`",
+                    name,
+                    job.cols()
+                )
+            })
+    }
+
+    /// Run one tile through the executable: slice all inputs to the tile's
+    /// extended range, pad to the canvas, execute, return the full canvas.
+    fn run_tile(
+        &self,
+        job: &StencilJob,
+        entry: &ArtifactEntry,
+        tile: &Tile,
+        state: &Grid,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        let upd = job.update_idx();
+        let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
+        for (i, g) in job.inputs.iter().enumerate() {
+            let src = if i == upd { state } else { g };
+            let slice = src.slice_rows(tile.ext_start, tile.ext_end);
+            canvases.push(self.runtime.pad_to_canvas(entry, &slice));
+        }
+        self.runtime
+            .run_stencil(entry, &canvases, tile.ext_rows() as u64, nsteps)
+    }
+
+    /// Execute a job under a given configuration.
+    pub fn execute(&self, job: &StencilJob, cfg: Config) -> Result<(Grid, ExecReport)> {
+        let t0 = std::time::Instant::now();
+        let (result, rounds, invocations, halo_rows) = match cfg.parallelism {
+            Parallelism::Temporal => self.run_temporal(job, cfg.s)?,
+            Parallelism::SpatialR => self.run_spatial_r(job, cfg.k)?,
+            Parallelism::SpatialS => self.run_spatial_s(job, cfg.k)?,
+            Parallelism::HybridR => self.run_hybrid_r(job, cfg.k, cfg.s)?,
+            Parallelism::HybridS => self.run_hybrid_s(job, cfg.k, cfg.s)?,
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let cells = (job.rows() * job.cols()) as f64 * job.iter as f64;
+        Ok((
+            result,
+            ExecReport {
+                config: cfg,
+                rounds,
+                pe_invocations: invocations,
+                halo_rows_exchanged: halo_rows,
+                wall_seconds: wall,
+                gcell_per_s: cells / wall / 1e9,
+            },
+        ))
+    }
+
+    fn run_temporal(&self, job: &StencilJob, s: u64) -> Result<(Grid, u64, u64, u64)> {
+        let entry = self.artifact(job, job.rows())?;
+        let tile = partition(job.rows(), 1, 0)[0];
+        let mut state = job.inputs[job.update_idx()].clone();
+        let mut remaining = job.iter;
+        let mut rounds = 0;
+        while remaining > 0 {
+            let steps = remaining.min(s);
+            let canvas = self.run_tile(job, entry, &tile, &state, steps)?;
+            state = canvas.slice_rows(0, job.rows());
+            remaining -= steps;
+            rounds += 1;
+        }
+        Ok((state, rounds, rounds, 0))
+    }
+
+    fn run_spatial_r(&self, job: &StencilJob, k: u64) -> Result<(Grid, u64, u64, u64)> {
+        let ext = job.info.radius_rows as usize * job.iter as usize;
+        let tiles = partition(job.rows(), k as usize, ext);
+        let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
+        let entry = self.artifact(job, max_rows)?;
+        let state = &job.inputs[job.update_idx()];
+        let mut out = state.clone();
+        for tile in &tiles {
+            let canvas = self.run_tile(job, entry, tile, state, job.iter)?;
+            let (a, b) = tile.owned_local();
+            out.write_rows(tile.start, &canvas.slice_rows(a, b));
+        }
+        Ok((out, 1, k, 0))
+    }
+
+    fn run_spatial_s(&self, job: &StencilJob, k: u64) -> Result<(Grid, u64, u64, u64)> {
+        let pr = job.info.radius_rows as usize;
+        let tiles = partition(job.rows(), k as usize, pr);
+        let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
+        let entry = self.artifact(job, max_rows)?;
+        // resident per-PE state = extended tile of the iterated grid
+        let mut state: Vec<Grid> = tiles
+            .iter()
+            .map(|t| job.inputs[job.update_idx()].slice_rows(t.ext_start, t.ext_end))
+            .collect();
+        // static (non-iterated) inputs never change: build their canvases
+        // once per tile (perf: EXPERIMENTS.md §Perf L3-3)
+        let static_canvases: Vec<Vec<(usize, Grid)>> = tiles
+            .iter()
+            .map(|t| {
+                job.inputs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != job.update_idx())
+                    .map(|(i, g)| {
+                        (i, self.runtime.pad_to_canvas(entry, &g.slice_rows(t.ext_start, t.ext_end)))
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut halo_rows = 0u64;
+        let mut invocations = 0u64;
+        for _ in 0..job.iter {
+            // run every PE for one iteration
+            for (t, st) in tiles.iter().zip(state.iter_mut()) {
+                let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
+                let statics = &static_canvases[t.index];
+                let mut si = 0;
+                for i in 0..job.inputs.len() {
+                    if i == job.update_idx() {
+                        canvases.push(self.runtime.pad_to_canvas(entry, st));
+                    } else {
+                        canvases.push(statics[si].1.clone());
+                        si += 1;
+                    }
+                }
+                let canvas =
+                    self.runtime
+                        .run_stencil(entry, &canvases, t.ext_rows() as u64, 1)?;
+                *st = canvas.slice_rows(0, t.ext_rows());
+                invocations += 1;
+            }
+            // border streaming: each PE sends its owned edge rows to its
+            // neighbours over channels, then installs what it received
+            halo_rows += self.exchange_borders(&tiles, &mut state, pr)?;
+        }
+        // assemble owned regions
+        let mut out = job.inputs[job.update_idx()].clone();
+        for (t, st) in tiles.iter().zip(&state) {
+            let (a, b) = t.owned_local();
+            out.write_rows(t.start, &st.slice_rows(a, b));
+        }
+        Ok((out, job.iter, invocations, halo_rows))
+    }
+
+    /// Exchange `depth` owned-edge rows between neighbouring resident tiles
+    /// via mpsc channels (the on-chip border streams of Fig 5b / Fig 6b).
+    fn exchange_borders(
+        &self,
+        tiles: &[Tile],
+        state: &mut [Grid],
+        depth: usize,
+    ) -> Result<u64> {
+        use std::sync::mpsc;
+        let k = tiles.len();
+        let mut exchanged = 0u64;
+        // channels[i] carries rows into PE i
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..k).map(|_| mpsc::channel::<(bool, Grid)>()).unzip();
+        // send phase: PE i streams its owned top rows to i-1, bottom to i+1
+        for (i, (t, st)) in tiles.iter().zip(state.iter()).enumerate() {
+            let (a, b) = t.owned_local();
+            if i > 0 {
+                let rows = st.slice_rows(a, a + depth);
+                txs[i - 1].send((false, rows)).expect("channel open");
+            }
+            if i + 1 < k {
+                let rows = st.slice_rows(b - depth, b);
+                txs[i + 1].send((true, rows)).expect("channel open");
+            }
+        }
+        drop(txs);
+        // receive phase: install halo bands
+        for (i, (t, st)) in tiles.iter().zip(state.iter_mut()).enumerate() {
+            let (a, b) = t.owned_local();
+            while let Ok((from_above, rows)) = rxs[i].try_recv() {
+                if from_above {
+                    // neighbour above sent its bottom rows -> our top halo
+                    st.write_rows(a - depth, &rows);
+                } else {
+                    st.write_rows(b, &rows);
+                }
+                exchanged += rows.rows as u64;
+            }
+        }
+        Ok(exchanged)
+    }
+
+    fn run_hybrid_r(&self, job: &StencilJob, k: u64, s: u64) -> Result<(Grid, u64, u64, u64)> {
+        let pr = job.info.radius_rows as usize;
+        let mut global = job.inputs[job.update_idx()].clone();
+        let mut remaining = job.iter;
+        let mut rounds = 0u64;
+        let mut invocations = 0u64;
+        while remaining > 0 {
+            let steps = remaining.min(s);
+            // re-read extended tiles from the (just written) global grid —
+            // the redundant HBM read that needs no synchronization
+            let tiles = partition(job.rows(), k as usize, pr * steps as usize);
+            let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
+            let entry = self.artifact(job, max_rows)?;
+            let mut next = global.clone();
+            for tile in &tiles {
+                let canvas = self.run_tile_state(job, entry, tile, &global, steps)?;
+                let (a, b) = tile.owned_local();
+                next.write_rows(tile.start, &canvas.slice_rows(a, b));
+                invocations += 1;
+            }
+            global = next;
+            remaining -= steps;
+            rounds += 1;
+        }
+        Ok((global, rounds, invocations, 0))
+    }
+
+    fn run_hybrid_s(&self, job: &StencilJob, k: u64, s: u64) -> Result<(Grid, u64, u64, u64)> {
+        let pr = job.info.radius_rows as usize;
+        let ext = pr * s as usize;
+        let tiles = partition(job.rows(), k as usize, ext);
+        let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
+        let entry = self.artifact(job, max_rows)?;
+        let mut state: Vec<Grid> = tiles
+            .iter()
+            .map(|t| job.inputs[job.update_idx()].slice_rows(t.ext_start, t.ext_end))
+            .collect();
+        let mut remaining = job.iter;
+        let (mut rounds, mut invocations, mut halo_rows) = (0u64, 0u64, 0u64);
+        let mut first = true;
+        while remaining > 0 {
+            let steps = remaining.min(s);
+            // batched exchange of all ext rows at round start (first-stage
+            // PEs only, §3.4); the initial slices already carry fresh halo
+            if !first {
+                halo_rows += self.exchange_borders(&tiles, &mut state, ext)?;
+            }
+            first = false;
+            for (t, st) in tiles.iter().zip(state.iter_mut()) {
+                let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
+                for (i, g) in job.inputs.iter().enumerate() {
+                    let slice = if i == job.update_idx() {
+                        st.clone()
+                    } else {
+                        g.slice_rows(t.ext_start, t.ext_end)
+                    };
+                    canvases.push(self.runtime.pad_to_canvas(entry, &slice));
+                }
+                let canvas =
+                    self.runtime
+                        .run_stencil(entry, &canvases, t.ext_rows() as u64, steps)?;
+                *st = canvas.slice_rows(0, t.ext_rows());
+                invocations += 1;
+            }
+            remaining -= steps;
+            rounds += 1;
+        }
+        let mut out = job.inputs[job.update_idx()].clone();
+        for (t, st) in tiles.iter().zip(&state) {
+            let (a, b) = t.owned_local();
+            out.write_rows(t.start, &st.slice_rows(a, b));
+        }
+        Ok((out, rounds, invocations, halo_rows))
+    }
+
+    /// Like `run_tile` but the iterated input comes from an explicit state
+    /// grid (used by Hybrid_R's per-round global re-read).
+    fn run_tile_state(
+        &self,
+        job: &StencilJob,
+        entry: &ArtifactEntry,
+        tile: &Tile,
+        state: &Grid,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        self.run_tile(job, entry, tile, state, nsteps)
+    }
+}

@@ -1,0 +1,72 @@
+//! Cross-validation: every parallelism scheme must produce the same grid,
+//! and the grid must match the pure-Rust DSL interpreter (which itself is
+//! pytest-validated against the Pallas kernels through ref.py).
+
+use anyhow::{bail, Result};
+
+use crate::dsl::StencilProgram;
+use crate::model::{Config, Parallelism};
+use crate::reference::{interpret, Grid};
+
+use super::{Coordinator, StencilJob};
+
+/// Max |difference| between two grids.
+pub fn max_abs_diff(a: &Grid, b: &Grid) -> f32 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Run the job under every scheme in `configs` and check all results agree
+/// with each other (bit-exact) and with the interpreter (tight tolerance —
+/// XLA may fuse f32 arithmetic with different rounding than scalar Rust).
+pub fn cross_validate(
+    coord: &Coordinator,
+    prog: &StencilProgram,
+    job: &StencilJob,
+    configs: &[Config],
+    tol_vs_interp: f32,
+) -> Result<Vec<(Config, f32)>> {
+    let golden = interpret(
+        prog,
+        &job.inputs,
+        job.inputs[0].rows,
+        job.iter,
+    );
+    let mut results = Vec::new();
+    let mut first: Option<(Config, Grid)> = None;
+    for &cfg in configs {
+        let (grid, _) = coord.execute(job, cfg)?;
+        let d_interp = max_abs_diff(&grid, &golden);
+        if d_interp > tol_vs_interp {
+            bail!(
+                "{} diverges from interpreter by {d_interp} (tol {tol_vs_interp})",
+                cfg
+            );
+        }
+        if let Some((ref cfg0, ref g0)) = first {
+            let d = max_abs_diff(&grid, g0);
+            if d != 0.0 {
+                bail!("{} and {} differ by {d} — schemes must be bit-identical", cfg, cfg0);
+            }
+        } else {
+            first = Some((cfg, grid));
+        }
+        results.push((cfg, d_interp));
+    }
+    Ok(results)
+}
+
+/// The five canonical configs used in smoke validation.
+pub fn canonical_configs(k: u64, s: u64) -> Vec<Config> {
+    vec![
+        Config { parallelism: Parallelism::Temporal, k: 1, s },
+        Config { parallelism: Parallelism::SpatialR, k, s: 1 },
+        Config { parallelism: Parallelism::SpatialS, k, s: 1 },
+        Config { parallelism: Parallelism::HybridR, k, s },
+        Config { parallelism: Parallelism::HybridS, k, s },
+    ]
+}

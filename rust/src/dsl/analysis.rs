@@ -1,0 +1,267 @@
+//! Static analysis of a parsed stencil program: everything the automation
+//! flow (§4.3 step 1) extracts from the DSL.
+//!
+//! * effective stencil radius `r`, including composition through `local`
+//!   chains (Listing 4: BLUR (r=1, but asymmetric taps) feeding JACOBI2D
+//!   (r=1) yields an effective radius of 2–3 depending on the direction);
+//! * algorithmic operation count per output cell and the computation
+//!   intensity in OPs/byte — Fig 1's metric;
+//! * flattening of N-D grids to the 2-D view the accelerator processes
+//!   (§4.3: every dimension but the first folds into the columns);
+//! * DSP usage classification (DILATE is select-only, §5.2).
+
+use std::collections::HashMap;
+
+use super::ast::{StencilProgram, StmtKind};
+
+/// Everything downstream stages need to know about a kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelInfo {
+    pub name: String,
+    /// Iterations requested in the DSL.
+    pub iterations: u64,
+    /// Rows of the (flattened) 2-D grid.
+    pub rows: u64,
+    /// Columns of the flattened 2-D grid.
+    pub cols: u64,
+    /// Original dims as written.
+    pub dims: Vec<u64>,
+    /// Effective stencil radius in the row dimension (max |row offset|
+    /// after local-chain composition) — the paper's `r`.
+    pub radius_rows: u64,
+    /// Effective radius in flattened columns.
+    pub radius_cols: u64,
+    /// Number of distinct taps of the fused stencil ("N-point").
+    pub points: u64,
+    /// Algorithmic ops per output cell (Fig 1 numerator).
+    pub ops_per_cell: u64,
+    /// Number of input grids.
+    pub n_inputs: u64,
+    /// Number of output grids.
+    pub n_outputs: u64,
+    /// Whether the arithmetic maps onto DSP blocks.
+    pub uses_dsp: bool,
+    /// Bytes of one data cell (float => 4).
+    pub cell_bytes: u64,
+}
+
+impl KernelInfo {
+    /// Computation intensity in OPs/byte (Fig 1): algorithmic operations per
+    /// byte of off-chip traffic under optimal reuse. With optimal reuse every
+    /// input byte is read exactly once per iteration, so for `iter`
+    /// iterations processed on-chip the denominator stays one read+write of
+    /// the grid while the numerator scales with `iter` (Fig 1b's linear
+    /// growth).
+    pub fn intensity(&self, iter: u64) -> f64 {
+        let ops = (self.ops_per_cell * iter) as f64;
+        // one read of each input + one write of each output, per cell
+        let bytes = ((self.n_inputs + self.n_outputs) * self.cell_bytes) as f64;
+        ops / bytes
+    }
+
+    /// Off-chip memory banks needed per spatial PE (Eq 2 denominator):
+    /// one bank per input plus one per output.
+    pub fn banks_per_pe(&self) -> u64 {
+        self.n_inputs + self.n_outputs
+    }
+
+    /// The paper's derived parameters d = halo = 2r (Table 2).
+    pub fn halo(&self) -> u64 {
+        2 * self.radius_rows
+    }
+}
+
+/// Per-array reach: max |row offset|, max |flattened column offset|, and
+/// tap count. Column offsets are flattened per §4.3 *before* taking the
+/// max: an offset (dp, dq) on a (R, P, Q) grid reaches dp·Q + dq columns,
+/// and the kernel's column radius is the max |flattened offset| over taps
+/// (not the per-dimension sum — e.g. JACOBI3D taps reach ±Q or ±1, so its
+/// column radius is Q).
+#[derive(Debug, Clone, Default)]
+struct Reach {
+    rows: u64,
+    cols: u64,
+    taps: u64,
+}
+
+/// Analyze a parsed program.
+pub fn analyze(prog: &StencilProgram) -> KernelInfo {
+    let ndim = prog.dims().len();
+
+    // stride of each tail dimension in the flattened column layout
+    let tail: Vec<u64> = prog.dims()[1..].to_vec();
+    let mut stride = vec![1u64; tail.len()];
+    for i in (0..tail.len().saturating_sub(1)).rev() {
+        stride[i] = stride[i + 1] * tail[i + 1];
+    }
+    let flat_cols = |offs: &[i64]| -> u64 {
+        offs[1..]
+            .iter()
+            .zip(&stride)
+            .map(|(o, s)| o * *s as i64)
+            .sum::<i64>()
+            .unsigned_abs()
+    };
+
+    // Effective reach of each defined array, composed through locals:
+    // reach(stmt) = max over refs of |offset| + reach(referenced array).
+    let mut reach: HashMap<&str, Reach> = HashMap::new();
+    for input in &prog.inputs {
+        reach.insert(&input.name, Reach { rows: 0, cols: 0, taps: 1 });
+    }
+
+    let mut total_ops = 0u64;
+    let mut uses_dsp = false;
+    // ops contributed by each local, per use-site (a local is computed once
+    // per cell in hardware via dataflow, so we count it once per cell)
+    let mut local_ops: HashMap<&str, u64> = HashMap::new();
+
+    for stmt in &prog.stmts {
+        let mut r = Reach::default();
+        let mut ops_from_locals = 0u64;
+        // "N-point" counts *distinct* taps: HOTSPOT's formula references
+        // in_2(0,0) several times but it is one stencil point.
+        let mut seen: std::collections::HashSet<(String, Vec<i64>)> =
+            std::collections::HashSet::new();
+        stmt.expr.visit_refs(&mut |arr, offs| {
+            let base = reach.get(arr).cloned().unwrap_or_default();
+            r.rows = r.rows.max(offs[0].unsigned_abs() + base.rows);
+            if ndim > 1 {
+                r.cols = r.cols.max(flat_cols(offs) + base.cols);
+            }
+            if seen.insert((arr.to_string(), offs.to_vec())) {
+                r.taps += base.taps.max(1);
+            }
+            if let Some(ops) = local_ops.get(arr) {
+                ops_from_locals += ops;
+            }
+        });
+        let own_ops = stmt.expr.op_count();
+        uses_dsp |= stmt.expr.uses_dsp();
+        match stmt.kind {
+            StmtKind::Local => {
+                // computed once per cell; consumers see its reach
+                local_ops.insert(&stmt.name, 0); // ops counted here, not per use
+                total_ops += own_ops;
+            }
+            StmtKind::Output => {
+                total_ops += own_ops + ops_from_locals;
+            }
+        }
+        reach.insert(&stmt.name, r);
+    }
+
+    // Kernel radius/taps = over all outputs.
+    let (mut radius_rows, mut radius_cols, mut points) = (0u64, 0u64, 0u64);
+    for out in prog.outputs() {
+        let r = &reach[out.name.as_str()];
+        radius_rows = radius_rows.max(r.rows);
+        radius_cols = radius_cols.max(r.cols);
+        points = points.max(r.taps);
+    }
+    let cols: u64 = tail.iter().product::<u64>().max(1);
+
+    KernelInfo {
+        name: prog.kernel.clone(),
+        iterations: prog.iteration,
+        rows: prog.rows(),
+        cols,
+        dims: prog.dims().to_vec(),
+        radius_rows,
+        radius_cols,
+        points,
+        ops_per_cell: total_ops,
+        n_inputs: prog.inputs.len() as u64,
+        n_outputs: prog.outputs().count() as u64,
+        uses_dsp,
+        cell_bytes: 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::benchmarks as b;
+    use crate::dsl::parse;
+
+    fn info(src: &str) -> KernelInfo {
+        analyze(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn jacobi2d_radius_and_points() {
+        let i = info(b::JACOBI2D_DSL);
+        assert_eq!(i.radius_rows, 1);
+        assert_eq!(i.radius_cols, 1);
+        assert_eq!(i.points, 5);
+        assert_eq!(i.ops_per_cell, 5); // 4 adds + 1 div
+        assert_eq!(i.halo(), 2);
+        assert!(i.uses_dsp);
+    }
+
+    #[test]
+    fn fig1a_intensity_range() {
+        // Fig 1a: intensities between ~1.25 (JACOBI2D-like) and ~4.5 at iter=1
+        let lo = info(b::JACOBI2D_DSL).intensity(1);
+        assert!((lo - 0.625).abs() < 1e-9, "{lo}"); // 5 ops / 8 bytes
+        for (name, src) in b::ALL {
+            let x = info(src).intensity(1);
+            assert!(x > 0.3 && x < 5.0, "{name}: {x}");
+        }
+        // SOBEL2D is the most compute-intense 2-D kernel
+        assert!(info(b::SOBEL2D_DSL).intensity(1) > info(b::BLUR_DSL).intensity(1));
+    }
+
+    #[test]
+    fn fig1b_intensity_linear_in_iter() {
+        let i = info(b::JACOBI2D_DSL);
+        let x1 = i.intensity(1);
+        let x16 = i.intensity(16);
+        assert!((x16 / x1 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dilate_is_dsp_free() {
+        let i = info(b::DILATE_DSL);
+        assert!(!i.uses_dsp);
+        assert_eq!(i.points, 13);
+        assert_eq!(i.radius_rows, 2);
+    }
+
+    #[test]
+    fn hotspot_two_inputs_three_banks() {
+        let i = info(b::HOTSPOT_DSL);
+        assert_eq!(i.n_inputs, 2);
+        assert_eq!(i.banks_per_pe(), 3);
+        assert_eq!(i.radius_rows, 1);
+    }
+
+    #[test]
+    fn jacobi3d_flattened() {
+        let i = info(b::JACOBI3D_DSL);
+        assert_eq!(i.rows, 9720);
+        assert_eq!(i.cols, 32 * 32);
+        assert_eq!(i.radius_rows, 1);
+        // (0,±1,0) flattens to ±32; (0,0,±1) to ±1 → col radius 32
+        assert_eq!(i.radius_cols, 32);
+        assert_eq!(i.points, 7);
+    }
+
+    #[test]
+    fn local_chain_composes_radius() {
+        let i = info(b::BLUR_JACOBI2D_DSL);
+        // temp has row reach 1; out taps temp at ±1 rows → effective 2
+        assert_eq!(i.radius_rows, 2);
+        // temp col reach 2 (in(-1,2)); out taps temp at ±1 cols → 3
+        assert_eq!(i.radius_cols, 3);
+        // ops: blur 9 (8 add + 1 div) + jacobi 5 = 14
+        assert_eq!(i.ops_per_cell, 14);
+    }
+
+    #[test]
+    fn seidel_ops_counted() {
+        let i = info(b::SEIDEL2D_DSL);
+        assert_eq!(i.points, 9);
+        assert!(i.ops_per_cell >= 10);
+    }
+}

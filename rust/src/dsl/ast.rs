@@ -1,0 +1,179 @@
+//! Abstract syntax tree for the SASA stencil DSL.
+
+use std::fmt;
+
+/// A parsed stencil program (one DSL file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilProgram {
+    /// Kernel name (`kernel:` line) — becomes the HLS top-level function.
+    pub kernel: String,
+    /// Number of stencil iterations (`iteration:` line).
+    pub iteration: u64,
+    /// Input grids with their dimensions.
+    pub inputs: Vec<InputDecl>,
+    /// `local` and `output` statements in program order.
+    pub stmts: Vec<Stmt>,
+}
+
+impl StencilProgram {
+    pub fn outputs(&self) -> impl Iterator<Item = &Stmt> {
+        self.stmts.iter().filter(|s| s.kind == StmtKind::Output)
+    }
+    pub fn locals(&self) -> impl Iterator<Item = &Stmt> {
+        self.stmts.iter().filter(|s| s.kind == StmtKind::Local)
+    }
+    pub fn input(&self, name: &str) -> Option<&InputDecl> {
+        self.inputs.iter().find(|i| i.name == name)
+    }
+    /// Grid dimensions (all inputs must agree; checked by the parser).
+    pub fn dims(&self) -> &[u64] {
+        &self.inputs[0].dims
+    }
+    /// Rows R of the (possibly flattened) 2-D grid.
+    pub fn rows(&self) -> u64 {
+        self.dims()[0]
+    }
+    /// Columns C after flattening every non-leading dimension (§4.3).
+    pub fn cols_flat(&self) -> u64 {
+        self.dims()[1..].iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputDecl {
+    pub dtype: String,
+    pub name: String,
+    pub dims: Vec<u64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StmtKind {
+    Local,
+    Output,
+}
+
+/// `local float: temp(0,0) = expr` / `output float: out(0,0) = expr`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stmt {
+    pub kind: StmtKind,
+    pub dtype: String,
+    pub name: String,
+    /// Offsets on the LHS cell reference (always all-zero in the paper's
+    /// listings; kept for fidelity).
+    pub lhs_offsets: Vec<i64>,
+    pub expr: Expr,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Numeric literal.
+    Num(f64),
+    /// Cell reference `name(o1, o2, ...)` — offsets relative to the output cell.
+    Ref { array: String, offsets: Vec<i64> },
+    /// Binary arithmetic.
+    Bin { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// Unary negation.
+    Neg(Box<Expr>),
+    /// Intrinsic call: `max(a, b)`, `min(a, b)`, `sqrt(x)`, `abs(x)`.
+    Call { name: String, args: Vec<Expr> },
+}
+
+impl Expr {
+    /// Visit every cell reference in the expression.
+    pub fn visit_refs<'a>(&'a self, f: &mut impl FnMut(&'a str, &'a [i64])) {
+        match self {
+            Expr::Num(_) => {}
+            Expr::Ref { array, offsets } => f(array, offsets),
+            Expr::Bin { lhs, rhs, .. } => {
+                lhs.visit_refs(f);
+                rhs.visit_refs(f);
+            }
+            Expr::Neg(e) => e.visit_refs(f),
+            Expr::Call { args, .. } => args.iter().for_each(|a| a.visit_refs(f)),
+        }
+    }
+
+    /// Count arithmetic operations (paper's "algorithmic operations" for the
+    /// computation-intensity metric, Fig 1). Intrinsics count as one op.
+    pub fn op_count(&self) -> u64 {
+        match self {
+            Expr::Num(_) | Expr::Ref { .. } => 0,
+            Expr::Bin { lhs, rhs, .. } => 1 + lhs.op_count() + rhs.op_count(),
+            Expr::Neg(e) => 1 + e.op_count(),
+            Expr::Call { args, .. } => {
+                1 + args.iter().map(Expr::op_count).sum::<u64>()
+            }
+        }
+    }
+
+    /// True if the expression uses float arithmetic that maps to DSPs
+    /// (anything other than compare/select intrinsics — DILATE is pure
+    /// `max` and uses zero DSPs, §5.2).
+    pub fn uses_dsp(&self) -> bool {
+        match self {
+            Expr::Num(_) | Expr::Ref { .. } => false,
+            Expr::Bin { .. } | Expr::Neg(_) => true,
+            Expr::Call { name, args } => {
+                let intrinsic_dsp = matches!(name.as_str(), "sqrt");
+                intrinsic_dsp || args.iter().any(Expr::uses_dsp)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Num(n) => write!(f, "{n}"),
+            Expr::Ref { array, offsets } => {
+                let o: Vec<String> = offsets.iter().map(|x| x.to_string()).collect();
+                write!(f, "{array}({})", o.join(", "))
+            }
+            Expr::Bin { op, lhs, rhs } => write!(f, "({lhs} {} {rhs})", op.symbol()),
+            Expr::Neg(e) => write!(f, "(-{e})"),
+            Expr::Call { name, args } => {
+                let a: Vec<String> = args.iter().map(|x| x.to_string()).collect();
+                write!(f, "{name}({})", a.join(", "))
+            }
+        }
+    }
+}
+
+impl fmt::Display for StencilProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "kernel: {}", self.kernel)?;
+        writeln!(f, "iteration: {}", self.iteration)?;
+        for i in &self.inputs {
+            let dims: Vec<String> = i.dims.iter().map(|d| d.to_string()).collect();
+            writeln!(f, "input {}: {}({})", i.dtype, i.name, dims.join(", "))?;
+        }
+        for s in &self.stmts {
+            let kw = match s.kind {
+                StmtKind::Local => "local",
+                StmtKind::Output => "output",
+            };
+            let o: Vec<String> = s.lhs_offsets.iter().map(|x| x.to_string()).collect();
+            writeln!(f, "{kw} {}: {}({}) = {}", s.dtype, s.name, o.join(", "), s.expr)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,149 @@
+//! The paper's benchmark suite (§5.1) written in the SASA DSL.
+//!
+//! These mirror `python/compile/kernels/specs.py` — the Rust DSL programs
+//! and the Python Pallas kernels describe the same arithmetic, and the
+//! integration tests check the two agree through the AOT artifacts.
+//!
+//! Default dims use the paper's headline input size 9720×1024
+//! (3-D: 9720×32×32); benches re-instantiate with all four sizes via
+//! [`with_dims`].
+
+/// Listing 2: 5-point JACOBI2D.
+pub const JACOBI2D_DSL: &str = "\
+kernel: JACOBI2D
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = ( in_1(0,1) + in_1(1,0) + in_1(0,0) + in_1(0,-1) + in_1(-1,0) ) / 5
+";
+
+/// 3-D 7-point Jacobi (SODA testbench).
+pub const JACOBI3D_DSL: &str = "\
+kernel: JACOBI3D
+iteration: 4
+input float: in_1(9720, 32, 32)
+output float: out_1(0,0,0) = ( in_1(0,0,0) + in_1(-1,0,0) + in_1(1,0,0) + in_1(0,-1,0) + in_1(0,1,0) + in_1(0,0,-1) + in_1(0,0,1) ) / 7
+";
+
+/// 2-D 9-point box blur (SODA testbench).
+pub const BLUR_DSL: &str = "\
+kernel: BLUR
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = ( in_1(-1,-1) + in_1(-1,0) + in_1(-1,1) + in_1(0,-1) + in_1(0,0) + in_1(0,1) + in_1(1,-1) + in_1(1,0) + in_1(1,1) ) / 9
+";
+
+/// 2-D 9-point SEIDEL2D (centre-weighted, Jacobi-ordered for parallelism).
+pub const SEIDEL2D_DSL: &str = "\
+kernel: SEIDEL2D
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = ( in_1(-1,-1) + in_1(-1,0) + in_1(-1,1) + in_1(0,-1) + 2 * in_1(0,0) + in_1(0,1) + in_1(1,-1) + in_1(1,0) + in_1(1,1) ) / 10
+";
+
+/// 13-point morphological DILATE over the radius-2 diamond (Rodinia-HLS).
+/// Pure `max` — the only benchmark with zero DSP usage (§5.2).
+pub const DILATE_DSL: &str = "\
+kernel: DILATE
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = max(max(max(max(in_1(-2,0), in_1(-1,-1)), max(in_1(-1,0), in_1(-1,1))), max(max(in_1(0,-2), in_1(0,-1)), max(in_1(0,0), in_1(0,1)))), max(max(in_1(0,2), in_1(1,-1)), max(max(in_1(1,0), in_1(1,1)), in_1(2,0))))
+";
+
+/// Listing 3 style: HOTSPOT with two inputs (power grid + temperature).
+/// Constants match `python/compile/kernels/specs.py`.
+pub const HOTSPOT_DSL: &str = "\
+kernel: HOTSPOT
+iteration: 64
+input float: in_1(9720, 1024)
+input float: in_2(9720, 1024)
+output float: out_1(0,0) = in_2(0,0) + 0.10 * ( in_2(-1,0) + in_2(1,0) - 2 * in_2(0,0) ) + 0.10 * ( in_2(0,-1) + in_2(0,1) - 2 * in_2(0,0) ) + 0.05 * in_1(0,0) + 0.0000051 * ( 80 - in_2(0,0) )
+";
+
+/// 3-D 7-point heat diffusion (SODA testbench).
+pub const HEAT3D_DSL: &str = "\
+kernel: HEAT3D
+iteration: 4
+input float: in_1(9720, 32, 32)
+output float: out_1(0,0,0) = in_1(0,0,0) + 0.125 * ( in_1(-1,0,0) - 2 * in_1(0,0,0) + in_1(1,0,0) ) + 0.125 * ( in_1(0,-1,0) - 2 * in_1(0,0,0) + in_1(0,1,0) ) + 0.125 * ( in_1(0,0,-1) - 2 * in_1(0,0,0) + in_1(0,0,1) )
+";
+
+/// 2-D 9-point Sobel gradient magnitude (edge detection).
+pub const SOBEL2D_DSL: &str = "\
+kernel: SOBEL2D
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = ( ( in_1(-1,1) - in_1(-1,-1) + 2 * in_1(0,1) - 2 * in_1(0,-1) + in_1(1,1) - in_1(1,-1) ) * ( in_1(-1,1) - in_1(-1,-1) + 2 * in_1(0,1) - 2 * in_1(0,-1) + in_1(1,1) - in_1(1,-1) ) + ( in_1(1,-1) - in_1(-1,-1) + 2 * in_1(1,0) - 2 * in_1(-1,0) + in_1(1,1) - in_1(-1,1) ) * ( in_1(1,-1) - in_1(-1,-1) + 2 * in_1(1,0) - 2 * in_1(-1,0) + in_1(1,1) - in_1(-1,1) ) ) * 0.0625
+";
+
+/// Listing 4: two chained stencil loops via a `local` intermediate.
+pub const BLUR_JACOBI2D_DSL: &str = "\
+kernel: BLUR-JACOBI2D
+iteration: 4
+input float: in(9720, 1024)
+local float: temp(0,0) = ( in(-1,0) + in(-1,1) + in(-1,2) + in(0,0) + in(0,1) + in(0,2) + in(1,0) + in(1,1) + in(1,2) ) / 9
+output float: out(0,0) = ( temp(0,1) + temp(1,0) + temp(0,0) + temp(0,-1) + temp(-1,0) ) / 5
+";
+
+/// The eight evaluation benchmarks (Figs 10–17 order).
+pub const ALL: [(&str, &str); 8] = [
+    ("blur", BLUR_DSL),
+    ("seidel2d", SEIDEL2D_DSL),
+    ("dilate", DILATE_DSL),
+    ("hotspot", HOTSPOT_DSL),
+    ("heat3d", HEAT3D_DSL),
+    ("sobel2d", SOBEL2D_DSL),
+    ("jacobi2d", JACOBI2D_DSL),
+    ("jacobi3d", JACOBI3D_DSL),
+];
+
+/// Get a benchmark DSL by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static str> {
+    let lower = name.to_lowercase();
+    ALL.iter().find(|(n, _)| *n == lower).map(|(_, s)| *s)
+        .or(if lower == "blur-jacobi2d" { Some(BLUR_JACOBI2D_DSL) } else { None })
+}
+
+/// Re-instantiate a benchmark DSL with different grid dimensions and
+/// iteration count (the evaluation sweeps sizes and iterations, §5.1).
+pub fn with_dims(src: &str, dims: &[u64], iteration: u64) -> String {
+    let mut prog = super::parser::parse(src).expect("builtin DSL must parse");
+    prog.iteration = iteration;
+    for input in &mut prog.inputs {
+        input.dims = dims.to_vec();
+    }
+    prog.to_string()
+}
+
+/// The paper's four 2-D input sizes (§5.1).
+pub const SIZES_2D: [[u64; 2]; 4] =
+    [[256, 256], [720, 1024], [9720, 1024], [4096, 4096]];
+
+/// The paper's four 3-D input sizes (§5.1).
+pub const SIZES_3D: [[u64; 3]; 4] =
+    [[256, 16, 16], [720, 32, 32], [9720, 32, 32], [4096, 64, 64]];
+
+/// Iteration sweep: 1..64 at power-of-two increments (§5.1).
+pub const ITER_SWEEP: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parse;
+
+    #[test]
+    fn with_dims_rewrites_all_inputs() {
+        let src = with_dims(HOTSPOT_DSL, &[256, 256], 16);
+        let prog = parse(&src).unwrap();
+        assert_eq!(prog.iteration, 16);
+        assert!(prog.inputs.iter().all(|i| i.dims == vec![256, 256]));
+    }
+
+    #[test]
+    fn by_name_finds_all() {
+        for (name, _) in ALL {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("JACOBI2D").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,266 @@
+//! Tokenizer for the SASA stencil DSL.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Keywords and identifiers (`kernel`, `iteration`, `input`, `output`,
+    /// `local`, type names, array names, intrinsic names).
+    Ident(String),
+    /// Numeric literal (integers and floats, optional exponent).
+    Num(f64),
+    Colon,
+    Comma,
+    LParen,
+    RParen,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Eq,
+    /// Logical end of statement (newline that terminates a statement).
+    Newline,
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "'{s}'"),
+            Tok::Num(n) => write!(f, "number {n}"),
+            Tok::Colon => write!(f, "':'"),
+            Tok::Comma => write!(f, "','"),
+            Tok::LParen => write!(f, "'('"),
+            Tok::RParen => write!(f, "')'"),
+            Tok::Plus => write!(f, "'+'"),
+            Tok::Minus => write!(f, "'-'"),
+            Tok::Star => write!(f, "'*'"),
+            Tok::Slash => write!(f, "'/'"),
+            Tok::Eq => write!(f, "'='"),
+            Tok::Newline => write!(f, "newline"),
+            Tok::Eof => write!(f, "end of input"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("lex error at line {line}, col {col}: {msg}")]
+pub struct LexError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+/// Tokenize the whole input. Newlines inside parentheses are insignificant
+/// (statements may wrap lines, as the paper's HOTSPOT listing does);
+/// newlines at depth 0 terminate statements. `#` starts a comment.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let b: Vec<char> = src.chars().collect();
+    let (mut i, mut line, mut col) = (0usize, 1usize, 1usize);
+
+    let push = |tok: Tok, line: usize, col: usize, out: &mut Vec<Spanned>| {
+        out.push(Spanned { tok, line, col });
+    };
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '\n' => {
+                if depth == 0 {
+                    // collapse consecutive newlines
+                    let last_is_newline =
+                        matches!(out.last(), Some(Spanned { tok: Tok::Newline, .. }) | None);
+                    if !last_is_newline {
+                        push(Tok::Newline, line, col, &mut out);
+                    }
+                }
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '(' => {
+                depth += 1;
+                push(Tok::LParen, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            ')' => {
+                depth = depth.saturating_sub(1);
+                push(Tok::RParen, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            ':' => {
+                push(Tok::Colon, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            ',' => {
+                push(Tok::Comma, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '+' => {
+                push(Tok::Plus, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '-' => {
+                push(Tok::Minus, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '*' => {
+                push(Tok::Star, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '/' => {
+                push(Tok::Slash, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '=' => {
+                push(Tok::Eq, line, col, &mut out);
+                i += 1;
+                col += 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                let start_col = col;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    i += 1;
+                    col += 1;
+                }
+                // exponent
+                if i < b.len() && (b[i] == 'e' || b[i] == 'E') {
+                    i += 1;
+                    col += 1;
+                    if i < b.len() && (b[i] == '+' || b[i] == '-') {
+                        i += 1;
+                        col += 1;
+                    }
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                        col += 1;
+                    }
+                }
+                let text: String = b[start..i].iter().collect();
+                let n = text.parse::<f64>().map_err(|_| LexError {
+                    line,
+                    col: start_col,
+                    msg: format!("bad number '{text}'"),
+                })?;
+                push(Tok::Num(n), line, start_col, &mut out);
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                let start_col = col;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '-') {
+                    // allow '-' inside kernel names like BLUR-JACOBI2D, but
+                    // only when directly followed by an alphabetic char and
+                    // preceded by one (otherwise it's the minus operator)
+                    if b[i] == '-' {
+                        let next_alpha = b.get(i + 1).is_some_and(|c| c.is_alphabetic());
+                        if !next_alpha {
+                            break;
+                        }
+                    }
+                    i += 1;
+                    col += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                push(Tok::Ident(text), line, start_col, &mut out);
+            }
+            other => {
+                return Err(LexError {
+                    line,
+                    col,
+                    msg: format!("unexpected character '{other}'"),
+                })
+            }
+        }
+    }
+    push(Tok::Eof, line, col, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_jacobi_line() {
+        let toks = lex("output float: out_1(0,0) = (in_1(0,1) + in_1(-1,0)) / 5").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|s| &s.tok).collect();
+        assert!(matches!(kinds[0], Tok::Ident(s) if s == "output"));
+        assert!(kinds.contains(&&Tok::Slash));
+        assert!(matches!(kinds.last(), Some(Tok::Eof)));
+    }
+
+    #[test]
+    fn newlines_inside_parens_ignored() {
+        let toks = lex("out(0,0) = (a(0,0) +\n  b(0,0))\n").unwrap();
+        let newlines = toks.iter().filter(|s| s.tok == Tok::Newline).count();
+        assert_eq!(newlines, 1); // only the trailing one
+    }
+
+    #[test]
+    fn hyphenated_kernel_name() {
+        let toks = lex("kernel: BLUR-JACOBI2D\n").unwrap();
+        assert!(toks.iter().any(|s| matches!(&s.tok, Tok::Ident(n) if n == "BLUR-JACOBI2D")));
+    }
+
+    #[test]
+    fn minus_vs_hyphen() {
+        // `a(0,0) - 1` must lex the minus as an operator
+        let toks = lex("a(0,0) - 1").unwrap();
+        assert!(toks.iter().any(|s| s.tok == Tok::Minus));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let toks = lex("# full line\nkernel: X # trailing\n").unwrap();
+        assert!(toks.iter().all(|s| !matches!(&s.tok, Tok::Ident(n) if n.contains("line"))));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let toks = lex("x(0,0) * 0.00000514403 + 1e-3").unwrap();
+        let nums: Vec<f64> = toks
+            .iter()
+            .filter_map(|s| match s.tok {
+                Tok::Num(n) => Some(n),
+                _ => None,
+            })
+            .collect();
+        // nums = [0, 0, 0.00000514403, 1e-3]
+        assert!((nums[2] - 0.00000514403).abs() < 1e-15);
+        assert!((nums.last().unwrap() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_position() {
+        let err = lex("kernel: @").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert_eq!(err.col, 9);
+    }
+}

@@ -1,0 +1,26 @@
+//! The SASA stencil DSL (paper §4.1).
+//!
+//! End-users describe a stencil workload in a few lines (Listings 2–4):
+//!
+//! ```text
+//! kernel: JACOBI2D
+//! iteration: 4
+//! input float: in_1(9720, 1024)
+//! output float: out_1(0,0) = (in_1(0,1) + in_1(1,0) + in_1(0,0)
+//!                            + in_1(0,-1) + in_1(-1,0)) / 5
+//! ```
+//!
+//! Multiple inputs (HOTSPOT), `local` intermediates, and chained stencil
+//! loops (BLUR-JACOBI2D) are supported. `dsl::analysis` extracts everything
+//! the automation flow needs: radius, op counts, computation intensity
+//! (Fig 1), DSP usage, and the flattened-2D view of 3-D kernels (§4.3).
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod analysis;
+pub mod benchmarks;
+
+pub use ast::{BinOp, Expr, InputDecl, Stmt, StmtKind, StencilProgram};
+pub use analysis::{KernelInfo, analyze};
+pub use parser::parse;

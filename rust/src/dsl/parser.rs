@@ -1,0 +1,389 @@
+//! Recursive-descent parser for the SASA stencil DSL (paper §4.1).
+
+use super::ast::{BinOp, Expr, InputDecl, Stmt, StmtKind, StencilProgram};
+use super::lexer::{lex, Spanned, Tok};
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ParseError {
+    #[error(transparent)]
+    Lex(#[from] super::lexer::LexError),
+    #[error("parse error at line {line}: expected {expected}, found {found}")]
+    Unexpected { line: usize, expected: String, found: String },
+    #[error("semantic error: {0}")]
+    Semantic(String),
+}
+
+pub fn parse(src: &str) -> Result<StencilProgram, ParseError> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, i: 0 };
+    p.program()
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Spanned {
+        &self.toks[self.i.min(self.toks.len() - 1)]
+    }
+    fn bump(&mut self) -> Spanned {
+        let s = self.peek().clone();
+        if self.i < self.toks.len() - 1 {
+            self.i += 1;
+        }
+        s
+    }
+    fn unexpected<T>(&self, expected: &str) -> Result<T, ParseError> {
+        let s = self.peek();
+        Err(ParseError::Unexpected {
+            line: s.line,
+            expected: expected.to_string(),
+            found: s.tok.to_string(),
+        })
+    }
+    fn expect(&mut self, tok: Tok, what: &str) -> Result<(), ParseError> {
+        if self.peek().tok == tok {
+            self.bump();
+            Ok(())
+        } else {
+            self.unexpected(what)
+        }
+    }
+    fn ident(&mut self, what: &str) -> Result<String, ParseError> {
+        match &self.peek().tok {
+            Tok::Ident(s) => {
+                let s = s.clone();
+                self.bump();
+                Ok(s)
+            }
+            _ => self.unexpected(what),
+        }
+    }
+    fn skip_newlines(&mut self) {
+        while self.peek().tok == Tok::Newline {
+            self.bump();
+        }
+    }
+    fn end_of_stmt(&mut self) -> Result<(), ParseError> {
+        match self.peek().tok {
+            Tok::Newline => {
+                self.bump();
+                Ok(())
+            }
+            Tok::Eof => Ok(()),
+            _ => self.unexpected("end of statement"),
+        }
+    }
+
+    fn program(&mut self) -> Result<StencilProgram, ParseError> {
+        self.skip_newlines();
+        // kernel: NAME
+        self.keyword("kernel")?;
+        self.expect(Tok::Colon, "':' after 'kernel'")?;
+        let kernel = self.ident("kernel name")?;
+        self.end_of_stmt()?;
+        self.skip_newlines();
+
+        // iteration: N
+        self.keyword("iteration")?;
+        self.expect(Tok::Colon, "':' after 'iteration'")?;
+        let iteration = match self.bump().tok {
+            Tok::Num(n) if n >= 1.0 && n.fract() == 0.0 => n as u64,
+            _ => return self.unexpected("positive integer iteration count"),
+        };
+        self.end_of_stmt()?;
+        self.skip_newlines();
+
+        // input/local/output statements
+        let mut inputs = Vec::new();
+        let mut stmts = Vec::new();
+        loop {
+            self.skip_newlines();
+            match &self.peek().tok {
+                Tok::Eof => break,
+                Tok::Ident(kw) if kw == "input" => {
+                    self.bump();
+                    inputs.push(self.input_decl()?);
+                }
+                Tok::Ident(kw) if kw == "local" || kw == "output" => {
+                    let kind = if kw == "local" { StmtKind::Local } else { StmtKind::Output };
+                    self.bump();
+                    stmts.push(self.stmt(kind)?);
+                }
+                _ => return self.unexpected("'input', 'local', 'output', or end of file"),
+            }
+        }
+
+        let prog = StencilProgram { kernel, iteration, inputs, stmts };
+        validate(&prog)?;
+        Ok(prog)
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<(), ParseError> {
+        match &self.peek().tok {
+            Tok::Ident(s) if s == kw => {
+                self.bump();
+                Ok(())
+            }
+            _ => self.unexpected(&format!("'{kw}'")),
+        }
+    }
+
+    /// `input float: name(d1, d2, ...)`
+    fn input_decl(&mut self) -> Result<InputDecl, ParseError> {
+        let dtype = self.ident("data type")?;
+        self.expect(Tok::Colon, "':' after data type")?;
+        let name = self.ident("input array name")?;
+        self.expect(Tok::LParen, "'(' for dimensions")?;
+        let mut dims = Vec::new();
+        loop {
+            match self.bump().tok {
+                Tok::Num(n) if n >= 1.0 && n.fract() == 0.0 => dims.push(n as u64),
+                _ => return self.unexpected("dimension size"),
+            }
+            match self.bump().tok {
+                Tok::Comma => continue,
+                Tok::RParen => break,
+                _ => return self.unexpected("',' or ')'"),
+            }
+        }
+        self.end_of_stmt()?;
+        Ok(InputDecl { dtype, name, dims })
+    }
+
+    /// `float: name(o1, o2) = expr`
+    fn stmt(&mut self, kind: StmtKind) -> Result<Stmt, ParseError> {
+        let dtype = self.ident("data type")?;
+        self.expect(Tok::Colon, "':' after data type")?;
+        let name = self.ident("array name")?;
+        let lhs_offsets = self.offsets()?;
+        self.expect(Tok::Eq, "'='")?;
+        let expr = self.expr()?;
+        self.end_of_stmt()?;
+        Ok(Stmt { kind, dtype, name, lhs_offsets, expr })
+    }
+
+    /// `(o1, o2, ...)` with signed integer offsets.
+    fn offsets(&mut self) -> Result<Vec<i64>, ParseError> {
+        self.expect(Tok::LParen, "'(' for cell offsets")?;
+        let mut out = Vec::new();
+        loop {
+            let neg = if self.peek().tok == Tok::Minus {
+                self.bump();
+                true
+            } else {
+                false
+            };
+            match self.bump().tok {
+                Tok::Num(n) if n.fract() == 0.0 => {
+                    out.push(if neg { -(n as i64) } else { n as i64 })
+                }
+                _ => return self.unexpected("integer offset"),
+            }
+            match self.bump().tok {
+                Tok::Comma => continue,
+                Tok::RParen => break,
+                _ => return self.unexpected("',' or ')'"),
+            }
+        }
+        Ok(out)
+    }
+
+    // expr := term (('+'|'-') term)*
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek().tok {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.term()?;
+            lhs = Expr::Bin { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    // term := factor (('*'|'/') factor)*
+    fn term(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.factor()?;
+        loop {
+            let op = match self.peek().tok {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.factor()?;
+            lhs = Expr::Bin { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    // factor := NUM | '-' factor | '(' expr ')' | ident '(' ... ')'
+    fn factor(&mut self) -> Result<Expr, ParseError> {
+        match self.peek().tok.clone() {
+            Tok::Num(n) => {
+                self.bump();
+                Ok(Expr::Num(n))
+            }
+            Tok::Minus => {
+                self.bump();
+                Ok(Expr::Neg(Box::new(self.factor()?)))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if matches!(name.as_str(), "max" | "min" | "sqrt" | "abs") {
+                    self.expect(Tok::LParen, "'(' after intrinsic")?;
+                    let mut args = vec![self.expr()?];
+                    while self.peek().tok == Tok::Comma {
+                        self.bump();
+                        args.push(self.expr()?);
+                    }
+                    self.expect(Tok::RParen, "')' after intrinsic args")?;
+                    Ok(Expr::Call { name, args })
+                } else {
+                    // cell reference: name(o1, o2)
+                    let offsets = self.offsets()?;
+                    Ok(Expr::Ref { array: name, offsets })
+                }
+            }
+            _ => self.unexpected("expression"),
+        }
+    }
+}
+
+/// Post-parse semantic checks.
+fn validate(prog: &StencilProgram) -> Result<(), ParseError> {
+    let sem = |msg: String| ParseError::Semantic(msg);
+    if prog.inputs.is_empty() {
+        return Err(sem("at least one input is required".into()));
+    }
+    if prog.outputs().count() == 0 {
+        return Err(sem("at least one output is required".into()));
+    }
+    let ndim = prog.inputs[0].dims.len();
+    for i in &prog.inputs {
+        if i.dims.len() != ndim {
+            return Err(sem(format!("input '{}' dimensionality mismatch", i.name)));
+        }
+        if i.dims != prog.inputs[0].dims {
+            return Err(sem(format!("input '{}' dimension sizes mismatch", i.name)));
+        }
+    }
+    // every referenced array must be an input or an earlier local
+    let mut known: Vec<&str> = prog.inputs.iter().map(|i| i.name.as_str()).collect();
+    for stmt in &prog.stmts {
+        let mut bad: Option<String> = None;
+        stmt.expr.visit_refs(&mut |arr, offs| {
+            if !known.contains(&arr) {
+                bad = Some(format!("'{arr}' referenced before definition in '{}'", stmt.name));
+            }
+            if offs.len() != ndim {
+                bad = Some(format!(
+                    "'{arr}' referenced with {} offsets but grid is {ndim}-D",
+                    offs.len()
+                ));
+            }
+        });
+        if let Some(msg) = bad {
+            return Err(sem(msg));
+        }
+        known.push(stmt.name.as_str());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::benchmarks;
+
+    #[test]
+    fn parse_jacobi2d_listing2() {
+        let prog = parse(benchmarks::JACOBI2D_DSL).unwrap();
+        assert_eq!(prog.kernel, "JACOBI2D");
+        assert_eq!(prog.iteration, 4);
+        assert_eq!(prog.inputs.len(), 1);
+        assert_eq!(prog.dims(), &[9720, 1024]);
+        assert_eq!(prog.outputs().count(), 1);
+    }
+
+    #[test]
+    fn parse_hotspot_listing3_two_inputs() {
+        let prog = parse(benchmarks::HOTSPOT_DSL).unwrap();
+        assert_eq!(prog.inputs.len(), 2);
+        assert_eq!(prog.iteration, 64);
+    }
+
+    #[test]
+    fn parse_blur_jacobi_listing4_local() {
+        let prog = parse(benchmarks::BLUR_JACOBI2D_DSL).unwrap();
+        assert_eq!(prog.locals().count(), 1);
+        assert_eq!(prog.outputs().count(), 1);
+    }
+
+    #[test]
+    fn parse_all_benchmarks() {
+        for (name, src) in benchmarks::ALL {
+            let prog = parse(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!prog.stmts.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn pretty_print_roundtrip() {
+        for (name, src) in benchmarks::ALL {
+            let prog = parse(src).unwrap();
+            let printed = prog.to_string();
+            let reparsed = parse(&printed).unwrap_or_else(|e| panic!("{name}: {e}\n{printed}"));
+            assert_eq!(prog, reparsed, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_undefined_array() {
+        let err = parse("kernel: X\niteration: 1\ninput float: a(8, 8)\noutput float: o(0,0) = b(0,0)\n");
+        assert!(matches!(err, Err(ParseError::Semantic(_))));
+    }
+
+    #[test]
+    fn rejects_offset_arity_mismatch() {
+        let err = parse("kernel: X\niteration: 1\ninput float: a(8, 8)\noutput float: o(0,0) = a(0,0,0)\n");
+        assert!(matches!(err, Err(ParseError::Semantic(_))));
+    }
+
+    #[test]
+    fn rejects_missing_output() {
+        let err = parse("kernel: X\niteration: 1\ninput float: a(8, 8)\n");
+        assert!(matches!(err, Err(ParseError::Semantic(_))));
+    }
+
+    #[test]
+    fn operator_precedence() {
+        let prog = parse("kernel: X\niteration: 1\ninput float: a(8, 8)\noutput float: o(0,0) = a(0,0) + a(0,1) * 2\n").unwrap();
+        let out = prog.outputs().next().unwrap();
+        // must parse as a + (a*2), i.e. top node is Add
+        match &out.expr {
+            Expr::Bin { op: BinOp::Add, rhs, .. } => {
+                assert!(matches!(**rhs, Expr::Bin { op: BinOp::Mul, .. }))
+            }
+            e => panic!("wrong tree: {e}"),
+        }
+    }
+
+    #[test]
+    fn unary_minus() {
+        let prog = parse("kernel: X\niteration: 1\ninput float: a(8, 8)\noutput float: o(0,0) = -a(0,0) + 1\n").unwrap();
+        assert_eq!(prog.outputs().next().unwrap().expr.op_count(), 2);
+    }
+}

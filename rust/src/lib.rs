@@ -1,0 +1,29 @@
+//! # SASA — Scalable and Automatic Stencil Acceleration
+//!
+//! A full reproduction of *SASA: A Scalable and Automatic Stencil
+//! Acceleration Framework for Optimized Hybrid Spatial and Temporal
+//! Parallelism on HBM-based FPGAs* (Tian et al., 2022) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas stencil kernels (`python/compile/kernels/`), AOT-lowered;
+//! * **L2** — the JAX stencil model (`python/compile/model.py`) exported as
+//!   HLO text artifacts;
+//! * **L3** — this crate: the stencil DSL, the analytical performance model
+//!   and design-space exploration, the cycle-level FPGA simulator standing
+//!   in for the Alveo U280, the TAPA HLS code generator, and the multi-PE
+//!   coordinator that executes the five parallelism schemes for real
+//!   through the PJRT CPU client.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index.
+
+pub mod util;
+pub mod dsl;
+pub mod platform;
+pub mod model;
+pub mod sim;
+pub mod reference;
+pub mod runtime;
+pub mod coordinator;
+pub mod codegen;
+pub mod metrics;
+pub mod bench;

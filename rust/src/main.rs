@@ -1,0 +1,385 @@
+//! `sasa` — the SASA framework CLI (the paper's automation flow, Fig 7).
+//!
+//! ```text
+//! sasa parse <file.dsl>                        parse + analyze a stencil DSL file
+//! sasa dse --kernel jacobi2d --iter 64         explore & pick the best parallelism
+//! sasa codegen --kernel hotspot --iter 64 -o d/ emit TAPA HLS C++ + host + plan
+//! sasa run --kernel jacobi2d --dims 64x64 --iter 8   execute for real via PJRT
+//! sasa sim --kernel blur --iter 16             cycle-simulate all five schemes
+//! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use sasa::codegen::{generate_connectivity, generate_hls, generate_host, Plan};
+use sasa::coordinator::{Coordinator, StencilJob};
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::metrics::reports;
+use sasa::model::{explore, Config};
+use sasa::platform::FpgaPlatform;
+use sasa::reference::{interpret, Grid};
+use sasa::runtime::artifact::default_artifact_dir;
+use sasa::runtime::Runtime;
+use sasa::sim::simulate;
+use sasa::util::prng::Prng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: positional args + --key value pairs + bare --flags.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+    fn dims(&self, default: &[u64]) -> Result<Vec<u64>> {
+        match self.get("dims") {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split('x')
+                .map(|d| d.parse::<u64>().context("--dims expects e.g. 720x1024 or 64x16x16"))
+                .collect(),
+        }
+    }
+}
+
+fn kernel_source(args: &Args) -> Result<String> {
+    if let Some(file) = args.get("file") {
+        return std::fs::read_to_string(file).with_context(|| format!("reading {file}"));
+    }
+    let name = args.get("kernel").context("--kernel <name> (or --file <dsl>) required")?;
+    b::by_name(name)
+        .map(str::to_string)
+        .with_context(|| format!("unknown benchmark '{name}' (try: {:?})", b::ALL.map(|(n, _)| n)))
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    let platform = match args.get("platform").unwrap_or("u280") {
+        "u280" => FpgaPlatform::u280(),
+        "u50" => FpgaPlatform::u50(),
+        "small-ddr" => FpgaPlatform::small_ddr(),
+        other => bail!("unknown platform '{other}' (u280, u50, small-ddr)"),
+    };
+
+    match cmd.as_str() {
+        "parse" => cmd_parse(&args),
+        "dse" => cmd_dse(&args, &platform),
+        "codegen" => cmd_codegen(&args, &platform),
+        "run" => cmd_run(&args, &platform),
+        "sim" => cmd_sim(&args, &platform),
+        "report" => cmd_report(&args, &platform),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — run `sasa help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "sasa — Scalable and Automatic Stencil Acceleration (paper reproduction)\n\n\
+         USAGE:\n  sasa parse --file <file.dsl> | --kernel <name>\n  \
+         sasa dse --kernel <name> --iter <n> [--dims RxC]\n  \
+         sasa codegen --kernel <name> --iter <n> [--out <dir>]\n  \
+         sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
+         sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
+         sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
+         Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d"
+    );
+}
+
+fn cmd_parse(args: &Args) -> Result<()> {
+    let src = kernel_source(args)?;
+    let prog = parse(&src)?;
+    let info = analyze(&prog);
+    println!("{prog}");
+    println!("kernel          : {}", info.name);
+    println!("grid            : {:?} (flattened {}x{})", info.dims, info.rows, info.cols);
+    println!("radius (r, c)   : ({}, {})", info.radius_rows, info.radius_cols);
+    println!("points          : {}", info.points);
+    println!("ops/cell        : {}", info.ops_per_cell);
+    println!("intensity@iter1 : {:.3} OPs/byte", info.intensity(1));
+    println!("inputs/outputs  : {}/{}", info.n_inputs, info.n_outputs);
+    println!("uses DSP        : {}", info.uses_dsp);
+    Ok(())
+}
+
+fn cmd_dse(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let src = kernel_source(args)?;
+    if args.get("sweep").is_some() {
+        return cmd_dse_sweep(&src, args, platform);
+    }
+    let iter = args.u64_or("iter", 4)?;
+    let prog = parse(&src)?;
+    let dims = args.dims(prog.dims())?;
+    let prog = parse(&b::with_dims(&src, &dims, iter))?;
+    let info = analyze(&prog);
+    let r = explore(&info, platform, iter);
+    println!(
+        "bounds: PE_res={} PE_bw={} (banks/PE={})",
+        r.bounds.pe_res,
+        r.bounds.pe_bw,
+        info.banks_per_pe()
+    );
+    println!(
+        "{:<12} {:>6} {:>4} {:>4} {:>10} {:>9} {:>7}",
+        "scheme", "PEs", "k", "s", "GCell/s", "freq", "banks"
+    );
+    for c in &r.per_scheme {
+        let s = simulate(&info, platform, iter, c.config);
+        println!(
+            "{:<12} {:>6} {:>4} {:>4} {:>10.2} {:>6.0}MHz {:>7}",
+            c.config.parallelism.name(),
+            c.config.total_pes(),
+            c.config.k,
+            c.config.s,
+            s.gcell_per_s,
+            c.freq_mhz,
+            c.hbm_banks
+        );
+    }
+    println!("\nbest: {} (predicted {:.2} GCell/s)", r.best.config, r.best.gcell_per_s);
+    Ok(())
+}
+
+/// `sasa dse --kernel K --sweep [--plans out.json]`: explore the whole
+/// iteration sweep and emit one execution plan per iteration count.
+fn cmd_dse_sweep(src: &str, args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    use sasa::codegen::plan::plans_to_json;
+    let prog = parse(src)?;
+    let dims = args.dims(prog.dims())?;
+    let mut plans = Vec::new();
+    for iter in b::ITER_SWEEP {
+        let prog = parse(&b::with_dims(src, &dims, iter))?;
+        let info = analyze(&prog);
+        let r = explore(&info, platform, iter);
+        println!("iter={iter:<3} -> {} ({:.2} GCell/s, {} banks)",
+            r.best.config, r.best.gcell_per_s, r.best.hbm_banks);
+        plans.push(Plan::from_choice(&info.name.to_lowercase(), info.rows, info.cols, iter, &r.best));
+    }
+    if let Some(path) = args.get("plans") {
+        std::fs::write(path, plans_to_json(&plans).to_string())?;
+        println!("wrote {} plans to {path}", plans.len());
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let src = kernel_source(args)?;
+    let iter = args.u64_or("iter", 4)?;
+    let prog0 = parse(&src)?;
+    let dims = args.dims(prog0.dims())?;
+    let prog = parse(&b::with_dims(&src, &dims, iter))?;
+    let info = analyze(&prog);
+    let r = explore(&info, platform, iter);
+    let u = platform.unroll_factor(info.cell_bytes);
+    let hls = generate_hls(&prog, r.best.config, u);
+    let host = generate_host(&prog, r.best.config);
+    let lname = info.name.to_lowercase();
+    let plan = Plan::from_choice(&lname, info.rows, info.cols, iter, &r.best);
+    match args.get("out") {
+        Some(dir) => {
+            let d = std::path::Path::new(dir);
+            std::fs::create_dir_all(d)?;
+            std::fs::write(d.join(format!("{lname}_kernel.cpp")), hls)?;
+            std::fs::write(d.join(format!("{lname}_host.cpp")), host)?;
+            std::fs::write(
+                d.join(format!("{lname}_connectivity.ini")),
+                generate_connectivity(&prog, r.best.config),
+            )?;
+            plan.save(&d.join(format!("{lname}_plan.json")))?;
+            println!("wrote kernel/host/plan for {lname} ({}) to {dir}", r.best.config);
+        }
+        None => {
+            println!("{hls}\n// ================= host =================\n{host}");
+            println!("// ============ connectivity ============\n{}", generate_connectivity(&prog, r.best.config));
+            println!("// plan: {}", plan.to_json());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let src = kernel_source(args)?;
+    let iter = args.u64_or("iter", 4)?;
+    let prog0 = parse(&src)?;
+    let default_dims: Vec<u64> =
+        if prog0.dims().len() == 3 { vec![64, 16, 16] } else { vec![64, 64] };
+    let dims = args.dims(&default_dims)?;
+    let prog = parse(&b::with_dims(&src, &dims, iter))?;
+    let info = analyze(&prog);
+
+    // pick config: explicit or DSE-chosen (clamped to the toy grid)
+    let cfg = match args.get("scheme") {
+        Some(p) => Config {
+            parallelism: p.parse().map_err(anyhow::Error::msg)?,
+            k: args.u64_or("k", 2)?,
+            s: args.u64_or("s", 2)?,
+        },
+        None => {
+            let r = explore(&info, platform, iter);
+            let mut c = r.best.config;
+            c.k = c.k.clamp(1, (info.rows / 8).max(1));
+            c.s = c.s.max(1);
+            c
+        }
+    };
+
+    let rows = info.rows as usize;
+    let cols = info.cols as usize;
+    let mut rng = Prng::new(args.u64_or("seed", 42)?);
+    let inputs: Vec<Grid> = (0..info.n_inputs)
+        .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0)))
+        .collect();
+
+    let rt = Runtime::from_dir(default_artifact_dir())?;
+    let coord = Coordinator::new(&rt);
+    let job = StencilJob::new(&prog, inputs.clone(), iter)?;
+    let (result, report) = coord.execute(&job, cfg)?;
+
+    // verify against the DSL interpreter
+    let golden = interpret(&prog, &inputs, rows, iter);
+    let diff = sasa::coordinator::verify::max_abs_diff(&result, &golden);
+    println!("executed {} on {}x{} iter={iter} via {}", info.name, rows, cols, cfg);
+    println!(
+        "rounds={} pe_invocations={} halo_rows={}",
+        report.rounds, report.pe_invocations, report.halo_rows_exchanged
+    );
+    println!(
+        "wall: {:.3} ms  ({:.3} GCell/s CPU-PJRT)",
+        report.wall_seconds * 1e3,
+        report.gcell_per_s
+    );
+    println!("max |diff| vs interpreter: {diff:e}");
+    let sim = simulate(&info, platform, iter, cfg);
+    println!("simulated U280: {:.2} GCell/s @ {:.0} MHz", sim.gcell_per_s, sim.freq_mhz);
+    if diff > 1e-4 {
+        bail!("verification FAILED (diff {diff})");
+    }
+    println!("verification OK");
+    Ok(())
+}
+
+fn cmd_sim(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let src = kernel_source(args)?;
+    let iter = args.u64_or("iter", 4)?;
+    let prog0 = parse(&src)?;
+    let dims = args.dims(prog0.dims())?;
+    let prog = parse(&b::with_dims(&src, &dims, iter))?;
+    let info = analyze(&prog);
+    let r = explore(&info, platform, iter);
+    println!("{:<12} {:>8} {:>12} {:>10} {:>8}", "scheme", "PEs", "kcycles", "GCell/s", "rounds");
+    for c in &r.per_scheme {
+        let s = simulate(&info, platform, iter, c.config);
+        println!(
+            "{:<12} {:>8} {:>12.0} {:>10.2} {:>8}",
+            c.config.parallelism.name(),
+            c.config.total_pes(),
+            s.kernel_cycles,
+            s.gcell_per_s,
+            s.rounds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let csv = args.get("csv").is_some();
+    let mut tables: Vec<sasa::metrics::Table> = Vec::new();
+    match which {
+        "fig1" => {
+            let (a, t) = reports::fig1();
+            tables.push(a);
+            tables.push(t);
+        }
+        "fig8" => tables.push(reports::fig8(platform)),
+        "fig9" => tables.push(reports::fig9(platform)),
+        "fig10-17" => {
+            for (name, _) in b::ALL {
+                tables.push(reports::fig10_17(platform, name));
+            }
+        }
+        "fig18-20" => tables.push(reports::fig18_20(platform)),
+        "fig21" => {
+            tables.push(reports::fig21(platform, 64));
+            tables.push(reports::fig21(platform, 2));
+        }
+        "table1" => tables.push(reports::table1()),
+        "table3" => tables.push(reports::table3(platform)),
+        "soda" => tables.push(reports::soda_speedup(platform).0),
+        "all" => {
+            let (a, t) = reports::fig1();
+            tables.push(a);
+            tables.push(t);
+            tables.push(reports::table1());
+            tables.push(reports::fig8(platform));
+            tables.push(reports::fig9(platform));
+            for (name, _) in b::ALL {
+                tables.push(reports::fig10_17(platform, name));
+            }
+            tables.push(reports::fig18_20(platform));
+            tables.push(reports::fig21(platform, 64));
+            tables.push(reports::fig21(platform, 2));
+            tables.push(reports::table3(platform));
+            tables.push(reports::soda_speedup(platform).0);
+        }
+        other => bail!("unknown report '{other}'"),
+    }
+    for t in &tables {
+        if csv {
+            let name: String =
+                t.title.chars().take(24).filter(|c| c.is_alphanumeric()).collect();
+            let path = t.save_csv(&name)?;
+            println!("wrote {path:?}");
+        }
+        println!("{}", t.to_markdown());
+    }
+    Ok(())
+}

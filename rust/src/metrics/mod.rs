@@ -1,0 +1,9 @@
+//! Metrics & report generation: regenerates every table and figure of the
+//! paper's evaluation (§5) from the analytical model, the resource
+//! estimator, and the cycle simulator. Used by the `sasa report` CLI and
+//! the bench harness.
+
+pub mod reports;
+pub mod table;
+
+pub use table::Table;

@@ -1,0 +1,164 @@
+//! The latency equations of the analytical model (paper §4.2, Eqs 1–8).
+//!
+//! All latencies are in kernel cycles; the DSE divides by the modeled
+//! frequency (`model::timing`) to compare configurations in seconds.
+
+use crate::util::ceil_div;
+
+use super::params::{Config, ModelParams, Parallelism};
+
+/// PE-count bounds (Eqs 1–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bounds {
+    /// Eq 1: max PEs by on-chip resources (α-constrained).
+    pub pe_res: u64,
+    /// Eq 2: max spatial PEs by off-chip banks.
+    pub pe_bw: u64,
+}
+
+/// Eq 3: Max #PE = min(#PE_res, #PE_bw × s).
+pub fn max_pe(b: Bounds, s: u64) -> u64 {
+    b.pe_res.min(b.pe_bw * s)
+}
+
+/// Latency of one config in cycles (Eqs 4–8). Panics if k or s is 0.
+pub fn latency_cycles(p: &ModelParams, cfg: Config) -> u64 {
+    assert!(cfg.k >= 1 && cfg.s >= 1, "degenerate config {cfg}");
+    let (r_, c, u) = (p.rows, p.cols, p.unroll);
+    let (d, halo, iter) = (p.d(), p.halo(), p.iter);
+    match cfg.parallelism {
+        // Eq 4: L_t = ceil((R + d(s-1))·C / U) · ceil(iter/s)
+        Parallelism::Temporal => {
+            let s = cfg.s;
+            ceil_div((r_ + d * (s - 1)) * c, u) * ceil_div(iter, s)
+        }
+        // Eq 5: L_sr = ceil((ceil(R/k) + halo·iter')·C / U) · iter,
+        // iter' = iter/2 on average (the redundant halo shrinks every
+        // iteration, §3.3).
+        Parallelism::SpatialR => {
+            let k = cfg.k;
+            let ext2 = halo * iter; // 2·halo·iter' with iter' = iter/2
+            ceil_div((ceil_div(r_, k) * 2 + ext2) * c, 2 * u) * iter
+        }
+        // Eq 6: L_ss = ceil((ceil(R/k) + halo)·C / U) · iter
+        Parallelism::SpatialS => {
+            let k = cfg.k;
+            ceil_div((ceil_div(r_, k) + halo) * c, u) * iter
+        }
+        // Eq 7: L_hr = ceil((ceil(R/k) + halo·iter')·C / U) · ceil(iter/s),
+        // iter' = iter/2 — taken verbatim from the paper: the redundant
+        // halo a group must cover scales with the *total* remaining
+        // iterations, which is what makes Hybrid_R fall behind Hybrid_S as
+        // the iteration count grows (§5.3.4 / §5.3.7).
+        Parallelism::HybridR => {
+            let (k, s) = (cfg.k, cfg.s);
+            let ext2 = halo * iter; // 2·halo·iter' with iter' = iter/2
+            ceil_div((ceil_div(r_, k) * 2 + ext2) * c, 2 * u) * ceil_div(iter, s)
+        }
+        // Eq 8: L_hs = ceil((ceil(R/k) + halo·s)·C / U) · ceil(iter/s)
+        Parallelism::HybridS => {
+            let (k, s) = (cfg.k, cfg.s);
+            ceil_div((ceil_div(r_, k) + halo * s) * c, u) * ceil_div(iter, s)
+        }
+    }
+}
+
+/// Throughput in cells/cycle implied by the model (used for GCell/s once a
+/// frequency is attached).
+pub fn cells_per_cycle(p: &ModelParams, cfg: Config) -> f64 {
+    (p.cells() * p.iter) as f64 / latency_cycles(p, cfg) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ModelParams {
+        ModelParams { rows: 9720, cols: 1024, iter: 16, radius: 1, unroll: 16 }
+    }
+
+    fn cfg(p: Parallelism, k: u64, s: u64) -> Config {
+        Config { parallelism: p, k, s }
+    }
+
+    #[test]
+    fn eq4_temporal_hand_computed() {
+        // L_t = ceil((9720 + 2·(4-1))·1024/16) · ceil(16/4)
+        let p = params();
+        let want = ((9720u64 + 2 * 3) * 1024).div_ceil(16) * 4;
+        assert_eq!(latency_cycles(&p, cfg(Parallelism::Temporal, 1, 4)), want);
+    }
+
+    #[test]
+    fn eq6_spatial_s_hand_computed() {
+        let p = params();
+        // L_ss = ceil((ceil(9720/12) + 2)·1024/16)·16
+        let want = ((9720u64.div_ceil(12) + 2) * 1024).div_ceil(16) * 16;
+        assert_eq!(latency_cycles(&p, cfg(Parallelism::SpatialS, 12, 1)), want);
+    }
+
+    #[test]
+    fn sr_grows_superlinearly_ss_linearly_in_iter() {
+        // §4.2 observation 1
+        let mut p = params();
+        let (mut prev_sr_per_iter, mut prev_ss_per_iter) = (0.0, 0.0);
+        for (i, iter) in [4u64, 16, 64].into_iter().enumerate() {
+            p.iter = iter;
+            let sr = latency_cycles(&p, cfg(Parallelism::SpatialR, 12, 1)) as f64 / iter as f64;
+            let ss = latency_cycles(&p, cfg(Parallelism::SpatialS, 12, 1)) as f64 / iter as f64;
+            if i > 0 {
+                assert!(sr > prev_sr_per_iter, "Spatial_R per-iter cost must grow");
+                assert!((ss - prev_ss_per_iter).abs() < 1.0, "Spatial_S per-iter flat");
+            }
+            prev_sr_per_iter = sr;
+            prev_ss_per_iter = ss;
+        }
+    }
+
+    #[test]
+    fn temporal_equals_spatial_when_iter_divisible() {
+        // §4.2 observation 2: large iter divisible by s_t, s_t == k_ss:
+        // similar performance (same asymptotic cells/cycle).
+        let mut p = params();
+        p.iter = 64;
+        let t = cells_per_cycle(&p, cfg(Parallelism::Temporal, 1, 8));
+        let s = cells_per_cycle(&p, cfg(Parallelism::SpatialS, 8, 1));
+        let ratio = t / s;
+        assert!((0.9..=1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn temporal_poor_at_iter_1() {
+        // iter=1 limits s_t to 1 while spatial can use many PEs — the
+        // source of the 15.73× max speedup (§5.4).
+        let mut p = params();
+        p.iter = 1;
+        let t = latency_cycles(&p, cfg(Parallelism::Temporal, 1, 1));
+        let s = latency_cycles(&p, cfg(Parallelism::SpatialR, 15, 1));
+        assert!(t as f64 / s as f64 > 10.0);
+    }
+
+    #[test]
+    fn hybrid_s_matches_eq8() {
+        let p = params();
+        let want = ((9720u64.div_ceil(3) + 2 * 4) * 1024).div_ceil(16) * 16u64.div_ceil(4);
+        assert_eq!(latency_cycles(&p, cfg(Parallelism::HybridS, 3, 4)), want);
+    }
+
+    #[test]
+    fn idle_stage_overhead_when_not_divisible() {
+        // §4.2 observation 3: iter not divisible by s ⇒ wasted round
+        let mut p = params();
+        p.iter = 64;
+        let l21 = latency_cycles(&p, cfg(Parallelism::Temporal, 1, 21)); // ceil(64/21)=4 rounds
+        let l16 = latency_cycles(&p, cfg(Parallelism::Temporal, 1, 16)); // exactly 4 rounds
+        assert!(l21 > l16 - l16 / 10, "21 stages barely beats 16 due to idle last round");
+    }
+
+    #[test]
+    fn eq3_max_pe() {
+        let b = Bounds { pe_res: 21, pe_bw: 16 };
+        assert_eq!(max_pe(b, 1), 16);
+        assert_eq!(max_pe(b, 4), 21);
+    }
+}

@@ -1,0 +1,12 @@
+//! The analytical performance model (paper §4.2) and the design-space
+//! exploration that picks the best parallelism configuration (§4.3 step 3).
+
+pub mod params;
+pub mod latency;
+pub mod timing;
+pub mod dse;
+
+pub use dse::{explore, DseChoice, DseResult};
+pub use latency::{latency_cycles, max_pe, Bounds};
+pub use params::{Config, ModelParams, Parallelism};
+pub use timing::{build_ok, frequency_mhz};

@@ -1,0 +1,156 @@
+//! Model parameters (paper Table 2) and parallelism configurations.
+
+use crate::dsl::KernelInfo;
+
+/// The five multi-PE parallelism schemes (Figs 4–6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Parallelism {
+    /// Cascaded temporal stages (Fig 4) — what SODA supports.
+    Temporal,
+    /// Spatial, redundant computation (Fig 5a).
+    SpatialR,
+    /// Spatial, border streaming (Fig 5b).
+    SpatialS,
+    /// Hybrid, redundant computation (Fig 6a).
+    HybridR,
+    /// Hybrid, border streaming (Fig 6b).
+    HybridS,
+}
+
+impl Parallelism {
+    pub const ALL: [Parallelism; 5] = [
+        Parallelism::Temporal,
+        Parallelism::SpatialR,
+        Parallelism::SpatialS,
+        Parallelism::HybridR,
+        Parallelism::HybridS,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Parallelism::Temporal => "temporal",
+            Parallelism::SpatialR => "spatial_r",
+            Parallelism::SpatialS => "spatial_s",
+            Parallelism::HybridR => "hybrid_r",
+            Parallelism::HybridS => "hybrid_s",
+        }
+    }
+
+    /// Does this scheme use border streaming connections?
+    pub fn border_streaming(self) -> bool {
+        matches!(self, Parallelism::SpatialS | Parallelism::HybridS)
+    }
+
+    /// Does this scheme read redundant halo data from memory?
+    pub fn redundant(self) -> bool {
+        matches!(self, Parallelism::SpatialR | Parallelism::HybridR)
+    }
+}
+
+impl std::str::FromStr for Parallelism {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_lowercase().as_str() {
+            "temporal" | "t" => Ok(Parallelism::Temporal),
+            "spatial_r" | "sr" => Ok(Parallelism::SpatialR),
+            "spatial_s" | "ss" => Ok(Parallelism::SpatialS),
+            "hybrid_r" | "hr" => Ok(Parallelism::HybridR),
+            "hybrid_s" | "hs" => Ok(Parallelism::HybridS),
+            other => Err(format!("unknown parallelism '{other}'")),
+        }
+    }
+}
+
+/// A concrete multi-PE configuration: `k` spatial PE groups × `s` temporal
+/// stages (Table 2's k and s with the scheme-specific subscripts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub parallelism: Parallelism,
+    /// Degree of spatial parallelism (PE groups). 1 for Temporal.
+    pub k: u64,
+    /// Degree of temporal parallelism (stages per group). 1 for Spatial_*.
+    pub s: u64,
+}
+
+impl Config {
+    pub fn total_pes(&self) -> u64 {
+        self.k * self.s
+    }
+}
+
+impl std::fmt::Display for Config {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}(k={}, s={})", self.parallelism.name(), self.k, self.s)
+    }
+}
+
+/// Table 2: the inputs and derived parameters of the analytical model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelParams {
+    /// Number of input rows R (of the flattened 2-D grid).
+    pub rows: u64,
+    /// Number of input columns C (flattened).
+    pub cols: u64,
+    /// Number of stencil iterations.
+    pub iter: u64,
+    /// Stencil radius size r (row dimension).
+    pub radius: u64,
+    /// Unroll factor U — PUs per PE (§3.1: 512 bit / cell width = 16).
+    pub unroll: u64,
+}
+
+impl ModelParams {
+    pub fn from_kernel(info: &KernelInfo, iter: u64, unroll: u64) -> Self {
+        ModelParams {
+            rows: info.rows,
+            cols: info.cols,
+            iter,
+            radius: info.radius_rows,
+            unroll,
+        }
+    }
+
+    /// Derived: delay between temporal stages, d = 2r (Table 2).
+    pub fn d(&self) -> u64 {
+        2 * self.radius
+    }
+
+    /// Derived: halo region size for one iteration, halo = 2r (Table 2).
+    pub fn halo(&self) -> u64 {
+        2 * self.radius
+    }
+
+    /// Total cells per iteration.
+    pub fn cells(&self) -> u64 {
+        self.rows * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_params() {
+        let p = ModelParams { rows: 128, cols: 64, iter: 4, radius: 2, unroll: 16 };
+        assert_eq!(p.d(), 4);
+        assert_eq!(p.halo(), 4);
+        assert_eq!(p.cells(), 8192);
+    }
+
+    #[test]
+    fn parallelism_parse_roundtrip() {
+        for p in Parallelism::ALL {
+            assert_eq!(p.name().parse::<Parallelism>().unwrap(), p);
+        }
+        assert!("bogus".parse::<Parallelism>().is_err());
+    }
+
+    #[test]
+    fn scheme_properties() {
+        assert!(Parallelism::SpatialS.border_streaming());
+        assert!(Parallelism::HybridR.redundant());
+        assert!(!Parallelism::Temporal.border_streaming());
+        assert!(!Parallelism::Temporal.redundant());
+    }
+}

@@ -1,0 +1,160 @@
+//! Frequency / timing-closure model.
+//!
+//! The paper builds every candidate with Vitis 2020.2 and falls back when a
+//! design misses 225 MHz (§4.3 step 5). We substitute a deterministic
+//! timing model that reproduces the effects the paper reports:
+//!
+//! * designs start from the 250 MHz TAPA/AutoBridge ceiling;
+//! * Spatial_R loses frequency with the number of AXI/HBM ports it
+//!   instantiates (Table 3: 15-PE Spatial_R designs close at 226–233 MHz);
+//! * border-streaming wires cost frequency per cross-SLR connection, more
+//!   for kernels with wide exchanged windows (SOBEL2D's two gradient
+//!   fields, JACOBI3D's plane-wide halo) — which is why their Spatial_S
+//!   designs lose PEs to timing (§5.3.6 reason 2);
+//! * high overall utilization degrades P&R quality (§4.2's α-constraint).
+//!
+//! A configuration "builds OK" when its modeled frequency reaches the HBM
+//! saturation frequency (225 MHz on U280, §5.1) and utilization stays
+//! under the α constraint.
+
+use crate::dsl::KernelInfo;
+use crate::platform::{FpgaPlatform, Resources};
+
+use super::params::{Config, Parallelism};
+
+/// Per-kernel border-streaming wire weight: kernels that must route wider
+/// halo windows between PE groups pay more timing per connection.
+pub fn wire_weight(info: &KernelInfo) -> f64 {
+    match info.name.to_lowercase().as_str() {
+        // two full gradient windows routed per border (Gx and Gy)
+        "sobel2d" => 2.0,
+        // plane-wide halo rows (radius_cols = Q) cross SLRs
+        "jacobi3d" => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// Number of border-streaming connections a config instantiates.
+/// Spatial_S: every neighbouring PE pair, both directions. Hybrid_S: only
+/// first-stage PEs exchange (the paper's optimization, §3.4), so the count
+/// depends on k alone.
+pub fn border_connections(cfg: Config) -> u64 {
+    match cfg.parallelism {
+        Parallelism::SpatialS | Parallelism::HybridS => 2 * cfg.k.saturating_sub(1),
+        _ => 0,
+    }
+}
+
+/// Modeled post-P&R kernel frequency in MHz.
+pub fn frequency_mhz(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    cfg: Config,
+    total: &Resources,
+) -> f64 {
+    let mut f = platform.fmax_mhz as f64;
+
+    // AXI/HBM port pressure: each spatial PE group owns banks_per_pe ports;
+    // redundant-computation variants read neighbour partitions through
+    // extra address channels, doubling port pressure.
+    let banks = cfg.k * info.banks_per_pe();
+    let port_factor = if cfg.parallelism.redundant() { 2.0 } else { 1.0 };
+    f -= 0.28 * port_factor * banks as f64;
+
+    // Border-streaming wires crossing SLRs.
+    f -= 0.60 * wire_weight(info) * border_connections(cfg) as f64;
+
+    // Utilization pressure on P&R (only bites close to the α limit).
+    let util = total.max_utilization(platform);
+    if util > 0.72 {
+        f -= (util - 0.72) * 320.0;
+    }
+
+    f.max(0.0)
+}
+
+/// §4.3 step 5: a design "builds" when it meets the bank-saturation
+/// frequency and the α utilization constraint.
+pub fn build_ok(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    cfg: Config,
+    total: &Resources,
+) -> bool {
+    total.max_utilization(platform) <= platform.alpha + 1e-9
+        && frequency_mhz(info, platform, cfg, total) >= platform.saturation_mhz as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{analyze, benchmarks as b, parse};
+    use crate::platform::{pe_resources, DesignStyle};
+
+    fn info(src: &str) -> KernelInfo {
+        analyze(&parse(src).unwrap())
+    }
+
+    fn total(info: &KernelInfo, p: &FpgaPlatform, n: u64) -> Resources {
+        pe_resources(info, p, DesignStyle::Sasa, 1024).scale(n)
+    }
+
+    #[test]
+    fn table3_spatial_r_frequency_band() {
+        // 15-PE JACOBI2D Spatial_R closes around 233 MHz in Table 3.
+        let p = FpgaPlatform::u280();
+        let i = info(b::JACOBI2D_DSL);
+        let cfg = Config { parallelism: Parallelism::SpatialR, k: 15, s: 1 };
+        let f = frequency_mhz(&i, &p, cfg, &total(&i, &p, 15));
+        assert!((225.0..=240.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn sobel_spatial_s_fails_timing_at_full_k() {
+        // §5.3.6: SOBEL2D Spatial_S cannot keep all 12 PEs.
+        let p = FpgaPlatform::u280();
+        let i = info(b::SOBEL2D_DSL);
+        let k12 = Config { parallelism: Parallelism::SpatialS, k: 12, s: 1 };
+        assert!(!build_ok(&i, &p, k12, &total(&i, &p, 12)));
+        let k9 = Config { parallelism: Parallelism::SpatialS, k: 9, s: 1 };
+        assert!(build_ok(&i, &p, k9, &total(&i, &p, 9)));
+    }
+
+    #[test]
+    fn jacobi3d_spatial_s_loses_pes_to_timing() {
+        let p = FpgaPlatform::u280();
+        let i = info(b::JACOBI3D_DSL);
+        let k15 = Config { parallelism: Parallelism::SpatialS, k: 15, s: 1 };
+        assert!(!build_ok(&i, &p, k15, &total(&i, &p, 15)));
+    }
+
+    #[test]
+    fn hotspot_spatial_s_builds_at_9() {
+        // Table 3: HOTSPOT iter=2 best is Spatial_S with 9 PEs at 250 MHz.
+        let p = FpgaPlatform::u280();
+        let i = info(b::HOTSPOT_DSL);
+        let cfg = Config { parallelism: Parallelism::SpatialS, k: 9, s: 1 };
+        assert!(build_ok(&i, &p, cfg, &total(&i, &p, 9)));
+        let f = frequency_mhz(&i, &p, cfg, &total(&i, &p, 9));
+        assert!(f >= 225.0, "{f}");
+    }
+
+    #[test]
+    fn hybrid_s_cheap_wiring() {
+        // Hybrid_S with k=3 groups has far fewer border connections than
+        // Spatial_S with k=12 — the paper's first-stage-only optimization.
+        let ss = Config { parallelism: Parallelism::SpatialS, k: 12, s: 1 };
+        let hs = Config { parallelism: Parallelism::HybridS, k: 3, s: 4 };
+        assert!(border_connections(hs) < border_connections(ss));
+    }
+
+    #[test]
+    fn temporal_always_builds_within_alpha() {
+        let p = FpgaPlatform::u280();
+        for (name, src) in b::ALL {
+            let i = info(src);
+            let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 4 };
+            assert!(build_ok(&i, &p, cfg, &total(&i, &p, 4)), "{name}");
+        }
+    }
+}

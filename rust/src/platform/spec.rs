@@ -1,0 +1,149 @@
+//! FPGA platform specification (the second input to the SASA flow, Fig 7).
+
+/// Static description of an HBM-based FPGA platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaPlatform {
+    pub name: String,
+    /// Number of HBM pseudo-channels ("banks") exposed via AXI.
+    pub hbm_banks: u64,
+    /// Super logic regions (dies); PE-group counts are kept a multiple of
+    /// this to simplify floorplanning (§4.3 step 3).
+    pub slrs: u64,
+    /// Total on-chip resources.
+    pub lut: u64,
+    pub ff: u64,
+    /// BRAM36 blocks (36 Kbit each).
+    pub bram36: u64,
+    pub dsp: u64,
+    /// AXI port width per bank in bits.
+    pub axi_bits: u64,
+    /// HBM effective frequency seen by a 512-bit port, MHz (the kernel
+    /// frequency needed to saturate one bank — 225 MHz on U280, §5.1).
+    pub saturation_mhz: u64,
+    /// Target kernel frequency ceiling after P&R in the best case, MHz.
+    pub fmax_mhz: u64,
+    /// Resource utilization constraint α (Eq 1) — designs above this
+    /// fraction rarely pass P&R.
+    pub alpha: f64,
+}
+
+impl FpgaPlatform {
+    /// Xilinx Alveo U280 (the paper's evaluation board, §5.1).
+    pub fn u280() -> Self {
+        FpgaPlatform {
+            name: "xilinx-u280".into(),
+            hbm_banks: 32,
+            slrs: 3,
+            lut: 1_303_680,
+            ff: 2_607_360,
+            bram36: 2_016,
+            dsp: 9_024,
+            axi_bits: 512,
+            saturation_mhz: 225,
+            fmax_mhz: 250,
+            alpha: 0.75,
+        }
+    }
+
+    /// Xilinx Alveo U50: the other HBM board SASA targets for performance
+    /// portability (§4.3's closing claim) — 2 SLRs, half the logic of the
+    /// U280, same 32-bank HBM2 stack.
+    pub fn u50() -> Self {
+        FpgaPlatform {
+            name: "xilinx-u50".into(),
+            hbm_banks: 32,
+            slrs: 2,
+            lut: 872_064,
+            ff: 1_744_128,
+            bram36: 1_344,
+            dsp: 5_952,
+            axi_bits: 512,
+            saturation_mhz: 225,
+            fmax_mhz: 250,
+            alpha: 0.75,
+        }
+    }
+
+    /// A smaller DDR-based board (for portability tests of the DSE; no HBM):
+    /// 4 banks, 1 SLR — resembles a ZU9-class part scaled up.
+    pub fn small_ddr() -> Self {
+        FpgaPlatform {
+            name: "small-ddr".into(),
+            hbm_banks: 4,
+            slrs: 1,
+            lut: 274_080,
+            ff: 548_160,
+            bram36: 912,
+            dsp: 2_520,
+            axi_bits: 512,
+            saturation_mhz: 225,
+            fmax_mhz: 250,
+            alpha: 0.75,
+        }
+    }
+
+    /// Peak bandwidth of one bank in GB/s at the saturation frequency
+    /// (512 bit / 8 × 225 MHz = 14.4 GB/s on U280, §5.1).
+    pub fn bank_gbps(&self) -> f64 {
+        (self.axi_bits as f64 / 8.0) * self.saturation_mhz as f64 / 1000.0
+    }
+
+    /// Fine-grained unroll factor U: PUs per PE that saturate one bank
+    /// (512 bit / 32 bit float = 16, §3.1).
+    pub fn unroll_factor(&self, cell_bytes: u64) -> u64 {
+        self.axi_bits / 8 / cell_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_headline_numbers() {
+        let p = FpgaPlatform::u280();
+        assert_eq!(p.hbm_banks, 32);
+        assert_eq!(p.slrs, 3);
+        assert!((p.bank_gbps() - 14.4).abs() < 1e-9);
+        assert_eq!(p.unroll_factor(4), 16);
+    }
+
+    #[test]
+    fn small_board_sane() {
+        let p = FpgaPlatform::small_ddr();
+        assert!(p.hbm_banks < FpgaPlatform::u280().hbm_banks);
+        assert_eq!(p.unroll_factor(4), 16);
+    }
+
+    #[test]
+    fn u50_portability_dse() {
+        // §4.3: "performance portable accelerator designs with the optimized
+        // parallelism across different HBM-based FPGAs" — the DSE must adapt
+        // configs to the smaller board, not fail.
+        use crate::dsl::{analyze, benchmarks as b, parse};
+        use crate::model::explore;
+        let u50 = FpgaPlatform::u50();
+        let u280 = FpgaPlatform::u280();
+        for (name, src) in b::ALL {
+            let info = analyze(&parse(src).unwrap());
+            for iter in [2u64, 64] {
+                let r50 = explore(&info, &u50, iter);
+                let r280 = explore(&info, &u280, iter);
+                assert!(r50.best.config.total_pes() >= 1, "{name}");
+                // fewer resources -> never more PEs than the U280 design
+                assert!(
+                    r50.best.config.total_pes() <= r280.best.config.total_pes(),
+                    "{name} iter={iter}: U50 {} vs U280 {}",
+                    r50.best.config,
+                    r280.best.config
+                );
+                // SLR alignment follows the board (2 on U50)
+                if r50.best.config.parallelism != crate::model::Parallelism::Temporal
+                    && r50.best.config.k >= u50.slrs
+                {
+                    assert_eq!(r50.best.config.k % u50.slrs, 0, "{name}: {}", r50.best.config);
+                }
+            }
+        }
+    }
+}

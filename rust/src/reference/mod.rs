@@ -1,0 +1,469 @@
+//! Pure-Rust reference stencil engine: a direct interpreter for the SASA
+//! DSL over flattened 2-D grids.
+//!
+//! This is the third, independent implementation of the stencil semantics
+//! (after `python/compile/kernels/ref.py` and the Pallas kernels) and the
+//! oracle the coordinator's real PJRT executions are verified against.
+//! Same semantics everywhere: edge padding for taps, copy-through
+//! (Dirichlet) borders of width (radius_rows, radius_cols) around the live
+//! region, the last input is the iterated grid.
+
+use std::collections::HashMap;
+
+use crate::dsl::{analyze, BinOp, Expr, StencilProgram, StmtKind};
+
+/// A row-major f32 grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Grid {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Grid { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Grid { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Edge-clamped read (taps beyond the boundary see the edge value —
+    /// identical to numpy's `pad(mode="edge")`).
+    #[inline]
+    pub fn at_clamped(&self, r: i64, c: i64) -> f32 {
+        let r = r.clamp(0, self.rows as i64 - 1) as usize;
+        let c = c.clamp(0, self.cols as i64 - 1) as usize;
+        self.at(r, c)
+    }
+
+    /// Copy of rows [start, end).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Grid {
+        Grid::from_vec(
+            end - start,
+            self.cols,
+            self.data[start * self.cols..end * self.cols].to_vec(),
+        )
+    }
+
+    /// Overwrite rows [start, start + src.rows) with `src`.
+    pub fn write_rows(&mut self, start: usize, src: &Grid) {
+        assert_eq!(self.cols, src.cols);
+        let a = start * self.cols;
+        self.data[a..a + src.data.len()].copy_from_slice(&src.data);
+    }
+}
+
+/// The flattened column offset of a tap: (dp, dq) on dims (R, P, Q)
+/// reaches dp·Q + dq columns.
+fn flatten_offsets(offsets: &[i64], dims: &[u64]) -> (i64, i64) {
+    let tail = &dims[1..];
+    let mut stride = vec![1i64; tail.len()];
+    for i in (0..tail.len().saturating_sub(1)).rev() {
+        stride[i] = stride[i + 1] * tail[i + 1] as i64;
+    }
+    let dc = offsets[1..]
+        .iter()
+        .zip(&stride)
+        .map(|(o, s)| o * s)
+        .sum::<i64>();
+    (offsets[0], dc)
+}
+
+/// Compiled stencil expression: stack bytecode with pre-resolved grid
+/// slots and flattened tap offsets. ~6× faster than walking the AST with
+/// name lookups per cell (EXPERIMENTS.md §Perf L3-1).
+#[derive(Debug, Clone)]
+enum Op {
+    Const(f32),
+    /// Clamped tap read from grids[slot] at (r+dr, c+dc).
+    Load { slot: usize, dr: i64, dc: i64 },
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    MaxN(usize),
+    MinN(usize),
+    Sqrt,
+    Abs,
+}
+
+#[derive(Debug, Clone)]
+struct Compiled {
+    ops: Vec<Op>,
+    max_stack: usize,
+}
+
+fn compile_into(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64], ops: &mut Vec<Op>) {
+    match expr {
+        Expr::Num(n) => ops.push(Op::Const(*n as f32)),
+        Expr::Ref { array, offsets } => {
+            let (dr, dc) = flatten_offsets(offsets, dims);
+            ops.push(Op::Load { slot: slots[array.as_str()], dr, dc });
+        }
+        Expr::Bin { op, lhs, rhs } => {
+            compile_into(lhs, slots, dims, ops);
+            compile_into(rhs, slots, dims, ops);
+            ops.push(match op {
+                BinOp::Add => Op::Add,
+                BinOp::Sub => Op::Sub,
+                BinOp::Mul => Op::Mul,
+                BinOp::Div => Op::Div,
+            });
+        }
+        Expr::Neg(e) => {
+            compile_into(e, slots, dims, ops);
+            ops.push(Op::Neg);
+        }
+        Expr::Call { name, args } => {
+            for a in args {
+                compile_into(a, slots, dims, ops);
+            }
+            ops.push(match name.as_str() {
+                "max" => Op::MaxN(args.len()),
+                "min" => Op::MinN(args.len()),
+                "sqrt" => Op::Sqrt,
+                "abs" => Op::Abs,
+                other => panic!("unknown intrinsic {other}"),
+            });
+        }
+    }
+}
+
+fn compile(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64]) -> Compiled {
+    let mut ops = Vec::new();
+    compile_into(expr, slots, dims, &mut ops);
+    // conservative stack bound: every op pushes at most one value
+    let max_stack = ops.len().max(4);
+    Compiled { ops, max_stack }
+}
+
+impl Compiled {
+    #[inline]
+    fn eval(&self, grids: &[&Grid], r: i64, c: i64, stack: &mut Vec<f32>) -> f32 {
+        stack.clear();
+        for op in &self.ops {
+            match *op {
+                Op::Const(v) => stack.push(v),
+                Op::Load { slot, dr, dc } => {
+                    stack.push(grids[slot].at_clamped(r + dr, c + dc))
+                }
+                Op::Add => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a + b);
+                }
+                Op::Sub => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a - b);
+                }
+                Op::Mul => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a * b);
+                }
+                Op::Div => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a / b);
+                }
+                Op::Neg => {
+                    let a = stack.pop().unwrap();
+                    stack.push(-a);
+                }
+                Op::MaxN(n) => {
+                    let mut acc = f32::NEG_INFINITY;
+                    for _ in 0..n {
+                        acc = acc.max(stack.pop().unwrap());
+                    }
+                    stack.push(acc);
+                }
+                Op::MinN(n) => {
+                    let mut acc = f32::INFINITY;
+                    for _ in 0..n {
+                        acc = acc.min(stack.pop().unwrap());
+                    }
+                    stack.push(acc);
+                }
+                Op::Sqrt => {
+                    let a = stack.pop().unwrap();
+                    stack.push(a.sqrt());
+                }
+                Op::Abs => {
+                    let a = stack.pop().unwrap();
+                    stack.push(a.abs());
+                }
+            }
+        }
+        stack.pop().expect("expression leaves one value")
+    }
+
+    /// Evaluate over a row range into `out` (row-parallel worker body).
+    fn eval_rows(
+        &self,
+        grids: &[&Grid],
+        rows: std::ops::Range<usize>,
+        col_range: (usize, usize),
+        cols: usize,
+        out: &mut [f32],
+        out_base_row: usize,
+    ) {
+        let mut stack = Vec::with_capacity(self.max_stack);
+        for r in rows {
+            for c in col_range.0..col_range.1 {
+                out[(r - out_base_row) * cols + c] =
+                    self.eval(grids, r as i64, c as i64, &mut stack);
+            }
+        }
+    }
+}
+
+/// Which input carries state between iterations: the last one (HOTSPOT
+/// iterates temperature = in_2; single-input kernels iterate their input).
+pub fn update_index(prog: &StencilProgram) -> usize {
+    prog.inputs.len() - 1
+}
+
+/// Run `nsteps` masked stencil iterations of a DSL program over the given
+/// input grids (flattened 2-D). `nrows` is the live-row count (rows beyond
+/// it are inert — the tile contract the coordinator relies on). Returns the
+/// iterated grid.
+pub fn interpret(prog: &StencilProgram, inputs: &[Grid], nrows: usize, nsteps: u64) -> Grid {
+    let info = analyze(prog);
+    assert_eq!(inputs.len(), prog.inputs.len(), "input count mismatch");
+    let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
+    for g in inputs {
+        assert_eq!((g.rows, g.cols), (maxr, cols), "input shapes must agree");
+    }
+    let (pr, pc) = (info.radius_rows as usize, info.radius_cols as usize);
+    let upd = update_index(prog);
+    let mut cur = inputs[upd].clone();
+
+    let outputs: Vec<_> = prog.outputs().collect();
+    assert_eq!(outputs.len(), 1, "interpreter supports one output grid");
+    let out_stmt = outputs[0];
+
+    // Compile every statement once: grid slots are [inputs..., locals...].
+    let mut slots: HashMap<&str, usize> = HashMap::new();
+    for (i, decl) in prog.inputs.iter().enumerate() {
+        slots.insert(&decl.name, i);
+    }
+    let locals: Vec<_> = prog.stmts.iter().filter(|s| s.kind == StmtKind::Local).collect();
+    let mut local_progs: Vec<Compiled> = Vec::new();
+    for (j, stmt) in locals.iter().enumerate() {
+        local_progs.push(compile(&stmt.expr, &slots, prog.dims()));
+        slots.insert(&stmt.name, prog.inputs.len() + j);
+    }
+    let out_prog = compile(&out_stmt.expr, &slots, prog.dims());
+
+    // Row-parallel evaluation: split the live band into chunks per thread.
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let eval_grid = |prog_c: &Compiled,
+                     grids: &[&Grid],
+                     row_range: std::ops::Range<usize>,
+                     col_range: (usize, usize),
+                     out: &mut Grid| {
+        let rows_total = row_range.len();
+        if rows_total == 0 {
+            return;
+        }
+        let base = row_range.start;
+        let chunk = rows_total.div_ceil(n_threads);
+        let out_cols = out.cols;
+        // split the output band into disjoint row chunks
+        let band = &mut out.data[base * out_cols..row_range.end * out_cols];
+        std::thread::scope(|scope| {
+            for (ci, slab) in band.chunks_mut(chunk * out_cols).enumerate() {
+                let start = base + ci * chunk;
+                let end = start + slab.len() / out_cols;
+                scope.spawn(move || {
+                    prog_c.eval_rows(grids, start..end, col_range, out_cols, slab, start);
+                });
+            }
+        });
+    };
+
+    for _ in 0..nsteps {
+        // grids vector: inputs (iterated slot = cur) then materialized locals
+        let mut local_storage: Vec<Grid> = Vec::with_capacity(locals.len());
+        for prog_c in &local_progs {
+            let mut g = Grid::new(maxr, cols);
+            {
+                let mut grids: Vec<&Grid> = prog
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
+                    .collect();
+                grids.extend(local_storage.iter());
+                eval_grid(prog_c, &grids, 0..maxr, (0, cols), &mut g);
+            }
+            local_storage.push(g);
+        }
+
+        let mut next = cur.clone();
+        let live_top = pr;
+        let live_bot = nrows.saturating_sub(pr).min(maxr);
+        {
+            let mut grids: Vec<&Grid> = prog
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
+                .collect();
+            grids.extend(local_storage.iter());
+            if live_top < live_bot {
+                eval_grid(
+                    &out_prog,
+                    &grids,
+                    live_top..live_bot,
+                    (pc, cols.saturating_sub(pc)),
+                    &mut next,
+                );
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{benchmarks as b, parse};
+    use crate::util::prng::Prng;
+
+    fn small(src: &str, dims: &[u64], iter: u64) -> StencilProgram {
+        parse(&b::with_dims(src, dims, iter)).unwrap()
+    }
+
+    fn rand_grid(rng: &mut Prng, rows: usize, cols: usize) -> Grid {
+        Grid::from_vec(rows, cols, rng.grid(rows, cols, -1.0, 1.0))
+    }
+
+    #[test]
+    fn jacobi_constant_is_fixed_point() {
+        let prog = small(b::JACOBI2D_DSL, &[16, 16], 1);
+        let g = Grid::from_vec(16, 16, vec![2.5; 256]);
+        let out = interpret(&prog, &[g.clone()], 16, 5);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn jacobi_hand_computed_cell() {
+        let prog = small(b::JACOBI2D_DSL, &[4, 4], 1);
+        let mut g = Grid::new(4, 4);
+        for r in 0..4 {
+            for c in 0..4 {
+                g.set(r, c, (r * 4 + c) as f32);
+            }
+        }
+        let out = interpret(&prog, &[g.clone()], 4, 1);
+        // cell (1,1): (g(1,2)+g(2,1)+g(1,1)+g(1,0)+g(0,1)) / 5 = (6+9+5+4+1)/5
+        assert!((out.at(1, 1) - 5.0).abs() < 1e-6);
+        // border cells copy through
+        assert_eq!(out.at(0, 0), g.at(0, 0));
+        assert_eq!(out.at(3, 3), g.at(3, 3));
+    }
+
+    #[test]
+    fn dilate_dominates_input() {
+        let prog = small(b::DILATE_DSL, &[12, 12], 1);
+        let mut rng = Prng::new(3);
+        let g = rand_grid(&mut rng, 12, 12);
+        let out = interpret(&prog, &[g.clone()], 12, 1);
+        for r in 2..10 {
+            for c in 2..10 {
+                assert!(out.at(r, c) >= g.at(r, c) - 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_iterates_second_input() {
+        let prog = small(b::HOTSPOT_DSL, &[8, 8], 1);
+        assert_eq!(update_index(&prog), 1);
+        let mut rng = Prng::new(9);
+        let power = rand_grid(&mut rng, 8, 8);
+        let temp = Grid::from_vec(8, 8, vec![80.0; 64]);
+        // zero power + ambient temp is a fixed point
+        let zero_power = Grid::new(8, 8);
+        let out = interpret(&prog, &[zero_power, temp.clone()], 8, 4);
+        for i in 0..64 {
+            assert!((out.data[i] - 80.0).abs() < 1e-4);
+        }
+        // nonzero power heats the interior
+        let out = interpret(&prog, &[power, temp.clone()], 8, 2);
+        assert!(out.data.iter().zip(&temp.data).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn local_chain_listing4() {
+        let prog = small(b::BLUR_JACOBI2D_DSL, &[12, 12], 1);
+        let mut rng = Prng::new(5);
+        let g = rand_grid(&mut rng, 12, 12);
+        let out = interpret(&prog, &[g.clone()], 12, 1);
+        // the chained kernel has radius (2,3): outside it, copy-through
+        assert_eq!(out.at(0, 0), g.at(0, 0));
+        assert_eq!(out.at(1, 1), g.at(1, 1));
+        // interior differs from input (blur then jacobi actually averages)
+        assert!((out.at(6, 6) - g.at(6, 6)).abs() > 1e-9);
+    }
+
+    #[test]
+    fn dead_rows_inert() {
+        let prog = small(b::JACOBI2D_DSL, &[16, 16], 1);
+        let mut rng = Prng::new(11);
+        let g = rand_grid(&mut rng, 16, 16);
+        let out = interpret(&prog, &[g.clone()], 10, 3);
+        for r in 10..16 {
+            for c in 0..16 {
+                assert_eq!(out.at(r, c), g.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi3d_flattened_semantics() {
+        // taps at ±Q columns: verify against a hand-rolled 7-point update
+        let prog = small(b::JACOBI3D_DSL, &[8, 4, 4], 1);
+        let mut rng = Prng::new(13);
+        let g = rand_grid(&mut rng, 8, 16);
+        let out = interpret(&prog, &[g.clone()], 8, 1);
+        let (r, c) = (4usize, 7usize);
+        let want = (g.at(r, c)
+            + g.at(r - 1, c)
+            + g.at(r + 1, c)
+            + g.at(r, c - 4)
+            + g.at(r, c + 4)
+            + g.at(r, c - 1)
+            + g.at(r, c + 1))
+            / 7.0;
+        assert!((out.at(r, c) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grid_row_ops() {
+        let g = Grid::from_vec(4, 2, (0..8).map(|x| x as f32).collect());
+        let s = g.slice_rows(1, 3);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+        let mut h = Grid::new(4, 2);
+        h.write_rows(2, &s);
+        assert_eq!(h.at(2, 0), 2.0);
+        assert_eq!(h.at(3, 1), 5.0);
+    }
+}

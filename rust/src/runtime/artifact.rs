@@ -1,0 +1,153 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled stencil executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kernel: String,
+    /// Maximum live rows the executable accepts (grids are padded to this).
+    pub maxr: u64,
+    /// Exact column count (flattened).
+    pub c: u64,
+    /// Plane width Q for flattened 3-D kernels (0 for 2-D).
+    pub plane: u64,
+    pub n_inputs: u64,
+    /// Which input is the iterated grid.
+    pub update_idx: u64,
+    pub pad_r: u64,
+    pub pad_c: u64,
+    /// 0 = dynamic-nsteps while-loop variant; >0 = unrolled chain.
+    pub unrolled_steps: u64,
+}
+
+/// The artifact directory's manifest.json.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            entries.push(ArtifactEntry {
+                name: a.str_or("name", "").to_string(),
+                file: a.str_or("file", "").to_string(),
+                kernel: a.str_or("kernel", "").to_string(),
+                maxr: a.u64_or("maxr", 0),
+                c: a.u64_or("c", 0),
+                plane: a.u64_or("plane", 0),
+                n_inputs: a.u64_or("n_inputs", 1),
+                update_idx: a.u64_or("update_idx", 0),
+                pad_r: a.u64_or("pad_r", 1),
+                pad_c: a.u64_or("pad_c", 1),
+                unrolled_steps: a.u64_or("unrolled_steps", 0),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Find the smallest dynamic-steps artifact for `kernel` that fits
+    /// `min_rows` live rows at exactly `cols` columns.
+    pub fn find(&self, kernel: &str, cols: u64, min_rows: u64) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kernel == kernel && e.c == cols && e.maxr >= min_rows && e.unrolled_steps == 0
+            })
+            .min_by_key(|e| e.maxr)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+/// Locate the repo's artifact directory: $SASA_ARTIFACTS or ./artifacts
+/// relative to the current dir or the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SASA_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version": 1, "artifacts": [
+      {"name": "jacobi2d_r96x64", "file": "jacobi2d_r96x64.hlo.txt",
+       "kernel": "jacobi2d", "maxr": 96, "c": 64, "plane": 0, "n_inputs": 1,
+       "update_idx": 0, "pad_r": 1, "pad_c": 1, "unrolled_steps": 0},
+      {"name": "jacobi2d_r768x1024", "file": "jacobi2d_r768x1024.hlo.txt",
+       "kernel": "jacobi2d", "maxr": 768, "c": 1024, "plane": 0, "n_inputs": 1,
+       "update_idx": 0, "pad_r": 1, "pad_c": 1, "unrolled_steps": 0},
+      {"name": "jacobi2d_r96x64_u4", "file": "jacobi2d_r96x64_u4.hlo.txt",
+       "kernel": "jacobi2d", "maxr": 96, "c": 64, "plane": 0, "n_inputs": 1,
+       "update_idx": 0, "pad_r": 1, "pad_c": 1, "unrolled_steps": 4}
+    ]}"#;
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("jacobi2d", 64, 80).unwrap();
+        assert_eq!(e.name, "jacobi2d_r96x64"); // skips the unrolled variant
+        assert!(m.find("jacobi2d", 64, 200).is_none());
+        let e = m.find("jacobi2d", 1024, 700).unwrap();
+        assert_eq!(e.maxr, 768);
+        assert!(m.find("nope", 64, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse(r#"{"artifacts": []}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("jacobi2d", 64, 96).is_some());
+            assert!(m.find("hotspot", 64, 96).is_some());
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT CPU client wrapper with a compiled-executable cache.
+//!
+//! One `Runtime` per process: artifacts are compiled on first use and the
+//! executables reused for every subsequent tile execution (compilation is
+//! the expensive step; execution is the hot path — see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::reference::Grid;
+
+use super::artifact::{ArtifactEntry, Manifest};
+
+/// Cumulative runtime statistics (hot-path profiling).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_seconds: f64,
+    pub executions: u64,
+    pub execute_seconds: f64,
+    pub cells_processed: u64,
+}
+
+/// The L3-side PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.manifest.path_of(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.compiles += 1;
+        stats.compile_seconds += t0.elapsed().as_secs_f64();
+        drop(stats);
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the stencil artifact: `inputs` are full-size [maxr, c] grids
+    /// (padded by the caller), `nrows` live rows, `nsteps` iterations.
+    /// Returns the iterated [maxr, c] grid.
+    pub fn run_stencil(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Grid],
+        nrows: u64,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        if inputs.len() != entry.n_inputs as usize {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                entry.name,
+                entry.n_inputs,
+                inputs.len()
+            );
+        }
+        for g in inputs {
+            if (g.rows as u64, g.cols as u64) != (entry.maxr, entry.c) {
+                bail!(
+                    "artifact {} expects {}x{} grids, got {}x{}",
+                    entry.name,
+                    entry.maxr,
+                    entry.c,
+                    g.rows,
+                    g.cols
+                );
+            }
+        }
+        if entry.unrolled_steps != 0 && entry.unrolled_steps != nsteps {
+            bail!(
+                "unrolled artifact {} runs exactly {} steps, asked for {nsteps}",
+                entry.name,
+                entry.unrolled_steps
+            );
+        }
+        self.ensure_compiled(&entry.name)?;
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(inputs.len() + 2);
+        for g in inputs {
+            args.push(
+                xla::Literal::vec1(&g.data)
+                    .reshape(&[entry.maxr as i64, entry.c as i64])
+                    .context("reshaping input literal")?,
+            );
+        }
+        args.push(xla::Literal::scalar(nrows as i32));
+        if entry.unrolled_steps == 0 {
+            args.push(xla::Literal::scalar(nsteps as i32));
+        }
+
+        let t0 = Instant::now();
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&entry.name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .with_context(|| format!("executing {}", entry.name))?[0][0]
+            .to_literal_sync()?;
+        drop(cache);
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let data = out.to_vec::<f32>().context("reading f32 output")?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        stats.cells_processed += nrows * entry.c * nsteps;
+        drop(stats);
+        Ok(Grid::from_vec(entry.maxr as usize, entry.c as usize, data))
+    }
+
+    /// Pad a tile (rows <= maxr) up to the artifact's [maxr, c] canvas.
+    pub fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid {
+        let mut canvas = Grid::new(entry.maxr as usize, entry.c as usize);
+        canvas.write_rows(0, tile);
+        canvas
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`), compile them once on the CPU PJRT client, and
+//! execute them from the coordinator's request path. Python is never
+//! involved at runtime.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use client::Runtime;

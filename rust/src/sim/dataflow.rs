@@ -1,0 +1,118 @@
+//! Row-granularity dataflow simulation of a cascaded PE chain (Fig 4).
+//!
+//! Each temporal stage is a streaming PE that consumes rows from its
+//! predecessor and can only emit row `i` once it has seen row `i + d` of
+//! its input (d = 2r — the stage-to-stage delay of the paper's model).
+//! The simulation propagates per-row completion times through the chain,
+//! capturing the pipeline-fill behaviour that Eq 4 models with the
+//! `d·(s-1)` term, plus the first/last-stage memory-rate asymmetry the
+//! analytical model ignores (its error budget, Fig 9).
+
+/// Per-stage row counts may differ (Hybrid_R/Hybrid_S: earlier stages
+/// process extra halo rows that shrink stage by stage, §3.4).
+pub struct ChainSpec {
+    /// Rows processed by each stage, front to back.
+    pub stage_rows: Vec<u64>,
+    /// Inter-stage dependency distance in rows (d = 2r).
+    pub d: u64,
+    /// Cycles per row for the first stage (reads HBM) and last stage
+    /// (writes HBM).
+    pub row_mem: f64,
+    /// Cycles per row for interior stages (on-chip streams).
+    pub row_compute: f64,
+}
+
+/// Simulate the chain; returns total cycles until *every* stage finishes
+/// (in hybrid mode the first stage processes the most rows, so the round
+/// is not over when the last stage drains).
+pub fn chain_cycles(spec: &ChainSpec) -> f64 {
+    let s = spec.stage_rows.len();
+    assert!(s >= 1, "chain needs at least one stage");
+    let n0 = spec.stage_rows[0] as usize;
+    // completion time of each row of the current stage's output
+    let mut done: Vec<f64> = Vec::with_capacity(n0);
+    let mut t = 0.0;
+    for _ in 0..n0 {
+        t += spec.row_mem;
+        done.push(t);
+    }
+    let mut finish = t;
+    for (j, &rows) in spec.stage_rows.iter().enumerate().skip(1) {
+        let rate = if j == s - 1 { spec.row_mem } else { spec.row_compute };
+        let prev = &done;
+        let n = rows as usize;
+        let mut cur: Vec<f64> = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for i in 0..n {
+            // need row i + d of the previous stage (clipped to its length)
+            let dep_idx = (i + spec.d as usize).min(prev.len().saturating_sub(1));
+            let dep = if prev.is_empty() { 0.0 } else { prev[dep_idx] };
+            t = t.max(dep) + rate;
+            cur.push(t);
+        }
+        finish = finish.max(t);
+        done = cur;
+    }
+    finish
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_is_stream_time() {
+        let c = chain_cycles(&ChainSpec {
+            stage_rows: vec![100],
+            d: 2,
+            row_mem: 64.0,
+            row_compute: 64.0,
+        });
+        assert!((c - 6400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_fill_matches_eq4_shape() {
+        // s stages over R rows ≈ (R + d(s-1)) rows of latency (Eq 4)
+        let (r, d, s) = (1000u64, 2u64, 8usize);
+        let c = chain_cycles(&ChainSpec {
+            stage_rows: vec![r; s],
+            d,
+            row_mem: 64.0,
+            row_compute: 64.0,
+        });
+        let eq4 = ((r + d * (s as u64 - 1)) * 64) as f64;
+        let err = (c - eq4).abs() / eq4;
+        assert!(err < 0.01, "sim {c} vs eq4 {eq4}");
+    }
+
+    #[test]
+    fn shrinking_stages_monotone() {
+        // hybrid-style shrinking halo: total time dominated by first stage
+        let c = chain_cycles(&ChainSpec {
+            stage_rows: vec![120, 110, 100],
+            d: 2,
+            row_mem: 16.0,
+            row_compute: 16.0,
+        });
+        assert!(c >= 120.0 * 16.0);
+        assert!(c <= (120.0 + 20.0) * 16.0 + 2.0 * 2.0 * 16.0);
+    }
+
+    #[test]
+    fn slow_memory_stage_dominates() {
+        let fast = chain_cycles(&ChainSpec {
+            stage_rows: vec![500; 4],
+            d: 2,
+            row_mem: 64.0,
+            row_compute: 64.0,
+        });
+        let slow_mem = chain_cycles(&ChainSpec {
+            stage_rows: vec![500; 4],
+            d: 2,
+            row_mem: 80.0,
+            row_compute: 64.0,
+        });
+        assert!(slow_mem > fast);
+    }
+}

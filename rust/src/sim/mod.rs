@@ -1,0 +1,282 @@
+//! Cycle-level FPGA simulator — the evaluation substrate standing in for
+//! the Alveo U280 board (DESIGN.md §2).
+//!
+//! `simulate` executes a parallelism configuration at row granularity:
+//! streaming PEs with pipeline-fill delays (`dataflow`), HBM burst
+//! efficiency (`hbm`), per-iteration border-streaming synchronization, and
+//! per-round kernel relaunch overhead. The analytical model (Eqs 4–8)
+//! predicts `kernel_cycles` within a few percent (Fig 9); the wall-clock
+//! estimate additionally carries launch overheads, which is what depresses
+//! small-input throughput in Figs 10–17 (§5.3.5).
+
+pub mod dataflow;
+pub mod hbm;
+
+use crate::dsl::KernelInfo;
+use crate::model::{frequency_mhz, latency_cycles, Config, ModelParams, Parallelism};
+use crate::platform::{pe_resources, DesignStyle, FpgaPlatform};
+
+use dataflow::{chain_cycles, ChainSpec};
+use hbm::{row_compute_cycles, row_stream_cycles};
+
+/// Cycles charged per FPGA kernel launch (host → device round trip).
+pub const LAUNCH_OVERHEAD_CYCLES: f64 = 2_000.0;
+/// Fixed latency of one border-streaming synchronization.
+pub const SYNC_LATENCY_CYCLES: f64 = 64.0;
+
+/// Simulation output for one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    pub config: Config,
+    /// Pure kernel cycles (what the analytical model predicts).
+    pub kernel_cycles: f64,
+    /// Kernel + per-round launch overhead.
+    pub wall_cycles: f64,
+    /// Modeled post-P&R frequency used to convert to seconds.
+    pub freq_mhz: f64,
+    pub seconds: f64,
+    /// Throughput in GCell/s (the paper's headline metric).
+    pub gcell_per_s: f64,
+    /// Number of kernel launches (rounds).
+    pub rounds: u64,
+    /// Total bytes moved to/from HBM.
+    pub hbm_bytes: u64,
+}
+
+/// Simulate one configuration of a kernel on a platform.
+pub fn simulate(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    iter: u64,
+    cfg: Config,
+) -> SimResult {
+    let u = platform.unroll_factor(info.cell_bytes);
+    let p = ModelParams::from_kernel(info, iter, u);
+    let (rows, cols) = (p.rows, p.cols);
+    let halo = p.halo();
+    let d = p.d();
+    let row_mem = row_stream_cycles(cols, u, info.cell_bytes);
+    let row_cmp = row_compute_cycles(cols, u);
+    let owned = rows.div_ceil(cfg.k);
+
+    let (kernel_cycles, rounds, extra_reads): (f64, u64, u64) = match cfg.parallelism {
+        Parallelism::Temporal => {
+            let rounds = iter.div_ceil(cfg.s);
+            let per_round = chain_cycles(&ChainSpec {
+                stage_rows: vec![rows; cfg.s as usize],
+                d,
+                row_mem,
+                row_compute: row_cmp,
+            });
+            (per_round * rounds as f64, rounds, 0)
+        }
+        Parallelism::SpatialR => {
+            // one launch; each PE runs `iter` passes over a tile whose halo
+            // extension shrinks every iteration (interior tiles extend on
+            // both sides; the max over PEs dominates).
+            let mut total = 0.0;
+            let mut redundant_rows = 0u64;
+            for t in 0..iter {
+                let ext = halo * (iter - 1 - t);
+                total += (owned + ext) as f64 * row_mem;
+                redundant_rows += ext;
+            }
+            (total, 1, redundant_rows * cols + halo * iter * cols)
+        }
+        Parallelism::SpatialS => {
+            // per iteration: stream owned+halo rows, then exchange halo
+            // rows with both neighbours over on-chip streams.
+            let per_iter = (owned + halo) as f64 * row_mem
+                + halo as f64 * row_cmp
+                + SYNC_LATENCY_CYCLES;
+            (per_iter * iter as f64, 1, 0)
+        }
+        Parallelism::HybridR => {
+            // rounds of s pipelined stages; the group's halo extension
+            // covers the remaining iterations (Eq 7 semantics) and shrinks
+            // stage by stage inside the round.
+            let rounds = iter.div_ceil(cfg.s);
+            let mut total = 0.0;
+            let mut redundant_rows = 0u64;
+            for round in 0..rounds {
+                let remaining = iter - (round * cfg.s).min(iter);
+                let base_ext = halo * remaining.min(iter) / 2 + halo * (cfg.s - 1);
+                let stage_rows: Vec<u64> = (0..cfg.s)
+                    .map(|j| owned + base_ext.saturating_sub(halo * j))
+                    .collect();
+                redundant_rows += stage_rows.iter().map(|r| r - owned).sum::<u64>();
+                total += chain_cycles(&ChainSpec {
+                    stage_rows,
+                    d,
+                    row_mem,
+                    row_compute: row_cmp,
+                });
+            }
+            (total, rounds, redundant_rows * cols)
+        }
+        Parallelism::HybridS => {
+            // per round: first-stage PEs exchange halo·s rows (the paper's
+            // batched exchange, §3.4), then the s-stage pipeline runs.
+            let rounds = iter.div_ceil(cfg.s);
+            let exchange = (halo * cfg.s) as f64 * row_cmp + SYNC_LATENCY_CYCLES;
+            let stage_rows: Vec<u64> = (0..cfg.s)
+                .map(|j| owned + halo * (cfg.s - 1 - j))
+                .collect();
+            let per_round = chain_cycles(&ChainSpec {
+                stage_rows,
+                d,
+                row_mem,
+                row_compute: row_cmp,
+            });
+            ((per_round + exchange) * rounds as f64, rounds, 0)
+        }
+    };
+
+    let total_pe = pe_resources(info, platform, DesignStyle::Sasa, cols).scale(cfg.total_pes());
+    let freq = frequency_mhz(info, platform, cfg, &total_pe);
+    let wall = kernel_cycles + rounds as f64 * LAUNCH_OVERHEAD_CYCLES;
+    // Throughput uses device-side kernel time (hardware-counter style, as
+    // the paper's GCell/s measurements do); wall_cycles keeps the launch
+    // overhead for end-to-end latency estimates.
+    let seconds = kernel_cycles / (freq * 1e6);
+    let cells = (rows * cols) as f64 * iter as f64;
+
+    // HBM traffic: inputs read once per launch-pass + outputs written, plus
+    // redundant halo reads for the R variants.
+    let passes: u64 = match cfg.parallelism {
+        Parallelism::Temporal | Parallelism::HybridR | Parallelism::HybridS => rounds,
+        Parallelism::SpatialR | Parallelism::SpatialS => iter,
+    };
+    let hbm_bytes = (info.n_inputs + info.n_outputs)
+        * info.cell_bytes
+        * (rows * cols * passes + extra_reads);
+
+    SimResult {
+        config: cfg,
+        kernel_cycles,
+        wall_cycles: wall,
+        freq_mhz: freq,
+        seconds,
+        gcell_per_s: cells / seconds / 1e9,
+        rounds,
+        hbm_bytes,
+    }
+}
+
+/// Relative error between the analytical model and the simulator on pure
+/// kernel cycles (the Fig 9 metric).
+pub fn model_error(info: &KernelInfo, platform: &FpgaPlatform, iter: u64, cfg: Config) -> f64 {
+    let u = platform.unroll_factor(info.cell_bytes);
+    let p = ModelParams::from_kernel(info, iter, u);
+    let model = latency_cycles(&p, cfg) as f64;
+    let sim = simulate(info, platform, iter, cfg).kernel_cycles;
+    (model - sim).abs() / sim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{analyze, benchmarks as b, parse};
+    use crate::model::explore;
+
+    fn info(src: &str) -> KernelInfo {
+        analyze(&parse(src).unwrap())
+    }
+
+    fn u280() -> FpgaPlatform {
+        FpgaPlatform::u280()
+    }
+
+    #[test]
+    fn fig9_model_error_under_5pct() {
+        // the <5% accuracy claim, across kernels × schemes × iterations
+        let p = u280();
+        for (name, src) in b::ALL {
+            let i = info(src);
+            for iter in [1u64, 4, 16, 64] {
+                let r = explore(&i, &p, iter);
+                for c in &r.per_scheme {
+                    let e = model_error(&i, &p, iter, c.config);
+                    assert!(
+                        e < 0.05,
+                        "{name} iter={iter} {}: error {:.1}%",
+                        c.config,
+                        e * 100.0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn temporal_throughput_rises_with_iter() {
+        // §5.3.2: temporal GCell/s grows while stages fit on chip
+        let i = info(b::BLUR_DSL);
+        let p = u280();
+        let mut last = 0.0;
+        for iter in [1u64, 2, 4, 8] {
+            let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: iter };
+            let r = simulate(&i, &p, iter, cfg);
+            assert!(r.gcell_per_s > last, "iter {iter}: {} <= {last}", r.gcell_per_s);
+            last = r.gcell_per_s;
+        }
+    }
+
+    #[test]
+    fn spatial_r_throughput_decays_with_iter() {
+        // §5.3.3: Spatial_R decays as redundant halo grows
+        let i = info(b::BLUR_DSL);
+        let p = u280();
+        let cfg = Config { parallelism: Parallelism::SpatialR, k: 12, s: 1 };
+        let t4 = simulate(&i, &p, 4, cfg).gcell_per_s;
+        let t64 = simulate(&i, &p, 64, cfg).gcell_per_s;
+        assert!(t64 < t4, "{t64} !< {t4}");
+    }
+
+    #[test]
+    fn spatial_s_throughput_flat_in_iter() {
+        let i = info(b::BLUR_DSL);
+        let p = u280();
+        let cfg = Config { parallelism: Parallelism::SpatialS, k: 12, s: 1 };
+        let t4 = simulate(&i, &p, 4, cfg).gcell_per_s;
+        let t64 = simulate(&i, &p, 64, cfg).gcell_per_s;
+        let rel = (t4 - t64).abs() / t4;
+        assert!(rel < 0.05, "Spatial_S should be flat: {t4} vs {t64}");
+    }
+
+    #[test]
+    fn small_inputs_lower_throughput() {
+        // §5.3.5 observation 3
+        let small = analyze(&parse(&b::with_dims(b::JACOBI2D_DSL, &[256, 256], 4)).unwrap());
+        let big = analyze(&parse(&b::with_dims(b::JACOBI2D_DSL, &[9720, 1024], 4)).unwrap());
+        let p = u280();
+        let cfg = Config { parallelism: Parallelism::SpatialS, k: 9, s: 1 };
+        let ts = simulate(&small, &p, 4, cfg).gcell_per_s;
+        let tb = simulate(&big, &p, 4, cfg).gcell_per_s;
+        assert!(ts < tb, "{ts} !< {tb}");
+    }
+
+    #[test]
+    fn hbm_traffic_accounting() {
+        let i = info(b::JACOBI2D_DSL);
+        let p = u280();
+        let grid_bytes = 9720 * 1024 * 4 * 2; // in + out
+        // temporal processes all iterations in one pass per round
+        let t = simulate(&i, &p, 8, Config { parallelism: Parallelism::Temporal, k: 1, s: 8 });
+        assert_eq!(t.hbm_bytes, grid_bytes);
+        // spatial_s re-streams the grid every iteration
+        let s = simulate(&i, &p, 8, Config { parallelism: Parallelism::SpatialS, k: 12, s: 1 });
+        assert_eq!(s.hbm_bytes, grid_bytes * 8);
+        // spatial_r adds redundant halo reads on top
+        let r = simulate(&i, &p, 8, Config { parallelism: Parallelism::SpatialR, k: 12, s: 1 });
+        assert!(r.hbm_bytes > s.hbm_bytes);
+    }
+
+    #[test]
+    fn rounds_counted() {
+        let i = info(b::JACOBI2D_DSL);
+        let p = u280();
+        let t = simulate(&i, &p, 64, Config { parallelism: Parallelism::Temporal, k: 1, s: 21 });
+        assert_eq!(t.rounds, 4); // ceil(64/21) — §5.3.6's JACOBI2D example
+    }
+}

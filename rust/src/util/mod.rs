@@ -1,0 +1,41 @@
+//! Small self-contained substrates: JSON (no serde in the offline vendor
+//! set), a deterministic PRNG for property tests, and misc helpers.
+
+pub mod json;
+pub mod prng;
+
+/// Integer ceiling division (the ⌈x/y⌉ that appears all over Eqs 4–8).
+#[inline]
+pub fn ceil_div(x: u64, y: u64) -> u64 {
+    debug_assert!(y > 0);
+    x.div_ceil(y)
+}
+
+/// Round `x` down to a multiple of `m` (PE-group count must be a multiple of
+/// #SLRs, §4.3 step 3). Returns 0 if `x < m`.
+#[inline]
+pub fn floor_to_multiple(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    (x / m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn floor_to_multiple_basics() {
+        assert_eq!(floor_to_multiple(16, 3), 15);
+        assert_eq!(floor_to_multiple(15, 3), 15);
+        assert_eq!(floor_to_multiple(2, 3), 0);
+        assert_eq!(floor_to_multiple(0, 3), 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! informatively, never silently compute garbage.
+
+use sasa::coordinator::{Coordinator, StencilJob};
+use sasa::dsl::{benchmarks as b, parse};
+use sasa::model::{Config, Parallelism};
+use sasa::reference::Grid;
+use sasa::runtime::artifact::default_artifact_dir;
+use sasa::runtime::{Manifest, Runtime};
+use sasa::util::prng::Prng;
+
+fn runtime() -> Runtime {
+    Runtime::from_dir(default_artifact_dir()).unwrap()
+}
+
+#[test]
+fn missing_artifact_reports_kernel_and_fix() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    // 128-col grids have no artifact in DEFAULT_MATRIX
+    let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[64, 128], 2)).unwrap();
+    let mut rng = Prng::new(1);
+    let g = Grid::from_vec(64, 128, rng.grid(64, 128, 0.0, 1.0));
+    let job = StencilJob::new(&prog, vec![g], 2).unwrap();
+    let err = coord
+        .execute(&job, Config { parallelism: Parallelism::Temporal, k: 1, s: 2 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("jacobi2d"), "{err}");
+    assert!(err.contains("make artifacts"), "error must tell the user the fix: {err}");
+}
+
+#[test]
+fn grid_taller_than_any_artifact() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    // 128 rows at 64 cols: the largest 64-col artifact canvas is 96 rows
+    let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[128, 64], 2)).unwrap();
+    let mut rng = Prng::new(2);
+    let g = Grid::from_vec(128, 64, rng.grid(128, 64, 0.0, 1.0));
+    let job = StencilJob::new(&prog, vec![g], 2).unwrap();
+    let err = coord
+        .execute(&job, Config { parallelism: Parallelism::Temporal, k: 1, s: 2 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no artifact"), "{err}");
+}
+
+#[test]
+fn halo_extension_clipped_at_grid_edges_still_correct() {
+    // extreme extension (r·iter ≥ grid) degenerates every tile to the whole
+    // grid and must still be bit-correct, not an error
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[64, 64], 40)).unwrap();
+    let mut rng = Prng::new(9);
+    let g = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
+    let job = StencilJob::new(&prog, vec![g.clone()], 40).unwrap();
+    let (out, _) = coord
+        .execute(&job, Config { parallelism: Parallelism::SpatialR, k: 2, s: 1 })
+        .unwrap();
+    let golden = sasa::reference::interpret(&prog, &[g], 64, 40);
+    assert!(sasa::coordinator::verify::max_abs_diff(&out, &golden) < 1e-4);
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let prog = parse(&b::with_dims(b::HOTSPOT_DSL, &[64, 64], 2)).unwrap();
+    let mut rng = Prng::new(3);
+    let g = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
+    // HOTSPOT needs 2 inputs
+    let err = match StencilJob::new(&prog, vec![g], 2) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("job with missing input must be rejected"),
+    };
+    assert!(err.contains("needs 2 inputs"), "{err}");
+}
+
+#[test]
+fn mismatched_grid_shapes_rejected() {
+    let prog = parse(&b::with_dims(b::HOTSPOT_DSL, &[64, 64], 2)).unwrap();
+    let mut rng = Prng::new(4);
+    let a = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
+    let bgrid = Grid::from_vec(32, 64, rng.grid(32, 64, 0.0, 1.0));
+    assert!(StencilJob::new(&prog, vec![a, bgrid], 2).is_err());
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join("sasa_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err(), "empty manifest must be rejected");
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile_not_execute() {
+    let dir = std::env::temp_dir().join("sasa_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"artifacts":[{"name":"ghost","file":"ghost.hlo.txt",
+            "kernel":"jacobi2d","maxr":96,"c":64,"plane":0,"n_inputs":1,
+            "update_idx":0,"pad_r":1,"pad_c":1,"unrolled_steps":0}]}"#,
+    )
+    .unwrap();
+    let rt = Runtime::from_dir(&dir).unwrap();
+    let entry = rt.manifest().by_name("ghost").unwrap().clone();
+    let mut rng = Prng::new(5);
+    let g = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+    let err = rt.run_stencil(&entry, &[g], 96, 1).unwrap_err().to_string();
+    assert!(err.contains("ghost"), "{err}");
+}
+
+#[test]
+fn wrong_canvas_shape_rejected_by_runtime() {
+    let rt = runtime();
+    let entry = rt.manifest().find("jacobi2d", 64, 96).unwrap().clone();
+    let mut rng = Prng::new(6);
+    let wrong = Grid::from_vec(32, 64, rng.grid(32, 64, 0.0, 1.0));
+    let err = rt.run_stencil(&entry, &[wrong], 32, 1).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+}
+
+#[test]
+fn unrolled_artifact_step_mismatch_rejected() {
+    let rt = runtime();
+    let entry = rt.manifest().by_name("jacobi2d_r96x64_u4").unwrap().clone();
+    let mut rng = Prng::new(7);
+    let g = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+    let err = rt.run_stencil(&entry, &[g], 96, 3).unwrap_err().to_string();
+    assert!(err.contains("exactly 4"), "{err}");
+}
+
+#[test]
+fn degenerate_partition_rejected() {
+    // more PEs than rows must panic with a clear message, not slice badly
+    let result = std::panic::catch_unwind(|| sasa::coordinator::grid::partition(4, 8, 1));
+    assert!(result.is_err());
+}

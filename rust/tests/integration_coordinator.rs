@@ -1,0 +1,181 @@
+//! End-to-end integration: AOT artifacts → PJRT runtime → coordinator.
+//!
+//! Requires `make artifacts` to have produced artifacts/ (the Makefile
+//! `test` target guarantees the ordering). Every test validates real
+//! numerics through the compiled HLO executables.
+
+use sasa::coordinator::verify::{canonical_configs, cross_validate, max_abs_diff};
+use sasa::coordinator::{Coordinator, StencilJob};
+use sasa::dsl::{benchmarks as b, parse};
+use sasa::model::{Config, Parallelism};
+use sasa::reference::{interpret, Grid};
+use sasa::runtime::artifact::default_artifact_dir;
+use sasa::runtime::Runtime;
+use sasa::util::prng::Prng;
+
+fn runtime() -> Runtime {
+    Runtime::from_dir(default_artifact_dir()).expect("artifacts built (`make artifacts`)")
+}
+
+fn job_for(src: &str, dims: &[u64], iter: u64) -> (sasa::dsl::StencilProgram, StencilJob) {
+    let prog = parse(&b::with_dims(src, dims, iter)).unwrap();
+    let mut rng = Prng::new(dims.iter().sum::<u64>() ^ iter);
+    let rows = dims[0] as usize;
+    let cols: usize = dims[1..].iter().product::<u64>() as usize;
+    let n_inputs = prog.inputs.len();
+    let inputs: Vec<Grid> = (0..n_inputs)
+        .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0)))
+        .collect();
+    let job = StencilJob::new(&prog, inputs, iter).unwrap();
+    (prog, job)
+}
+
+#[test]
+fn all_schemes_bit_identical_jacobi2d() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 6);
+    let results =
+        cross_validate(&coord, &prog, &job, &canonical_configs(4, 3), 1e-5).unwrap();
+    assert_eq!(results.len(), 5);
+}
+
+#[test]
+fn all_schemes_bit_identical_hotspot_two_inputs() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::HOTSPOT_DSL, &[64, 64], 4);
+    cross_validate(&coord, &prog, &job, &canonical_configs(4, 2), 1e-4).unwrap();
+}
+
+#[test]
+fn all_schemes_bit_identical_dilate_radius2() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::DILATE_DSL, &[64, 64], 3);
+    cross_validate(&coord, &prog, &job, &canonical_configs(3, 3), 1e-5).unwrap();
+}
+
+#[test]
+fn all_schemes_bit_identical_jacobi3d_flattened() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::JACOBI3D_DSL, &[64, 16, 16], 4);
+    cross_validate(&coord, &prog, &job, &canonical_configs(4, 2), 1e-5).unwrap();
+}
+
+#[test]
+fn blur_seidel_sobel_heat3d_spot_checks() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    for (src, dims) in [
+        (b::BLUR_DSL, vec![64u64, 64]),
+        (b::SEIDEL2D_DSL, vec![64, 64]),
+        (b::SOBEL2D_DSL, vec![64, 64]),
+        (b::HEAT3D_DSL, vec![64, 16, 16]),
+    ] {
+        let (prog, job) = job_for(src, &dims, 4);
+        cross_validate(&coord, &prog, &job, &canonical_configs(2, 2), 1e-4).unwrap();
+    }
+}
+
+#[test]
+fn iter_not_divisible_by_stages() {
+    // ceil(iter/s) rounds with a short last round (§5.3.6's idle-stage case)
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 7);
+    let cfgs = vec![
+        Config { parallelism: Parallelism::Temporal, k: 1, s: 3 },
+        Config { parallelism: Parallelism::HybridS, k: 2, s: 3 },
+        Config { parallelism: Parallelism::HybridR, k: 2, s: 3 },
+    ];
+    cross_validate(&coord, &prog, &job, &cfgs, 1e-5).unwrap();
+}
+
+#[test]
+fn single_iteration_spatial() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 1);
+    let cfgs = vec![
+        Config { parallelism: Parallelism::SpatialR, k: 6, s: 1 },
+        Config { parallelism: Parallelism::SpatialS, k: 6, s: 1 },
+        Config { parallelism: Parallelism::Temporal, k: 1, s: 1 },
+    ];
+    cross_validate(&coord, &prog, &job, &cfgs, 1e-5).unwrap();
+}
+
+#[test]
+fn temporal_rounds_compose() {
+    // running s=2 over 6 iterations (3 rounds) == one interpreter run
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 6);
+    let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 2 };
+    let (grid, report) = coord.execute(&job, cfg).unwrap();
+    assert_eq!(report.rounds, 3);
+    let golden = interpret(&prog, &job.inputs, 64, 6);
+    assert!(max_abs_diff(&grid, &golden) < 1e-5);
+}
+
+#[test]
+fn report_counts_sane() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (_, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 4);
+    let (_, rep) = coord
+        .execute(&job, Config { parallelism: Parallelism::SpatialS, k: 4, s: 1 })
+        .unwrap();
+    assert_eq!(rep.rounds, 4); // one per iteration
+    assert_eq!(rep.pe_invocations, 16); // k × iter
+    assert!(rep.halo_rows_exchanged > 0);
+    let (_, rep) = coord
+        .execute(&job, Config { parallelism: Parallelism::SpatialR, k: 4, s: 1 })
+        .unwrap();
+    assert_eq!(rep.halo_rows_exchanged, 0); // no communication by design
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (_, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 2);
+    let _ = coord
+        .execute(&job, Config { parallelism: Parallelism::Temporal, k: 1, s: 2 })
+        .unwrap();
+    let stats = rt.stats();
+    assert_eq!(stats.compiles, 1);
+    assert!(stats.executions >= 1);
+    assert!(stats.cells_processed > 0);
+}
+
+#[test]
+fn unrolled_artifact_runs() {
+    // the Fig-4 showcase artifact: 4 fused temporal stages, no nsteps param
+    let rt = runtime();
+    let entry = rt.manifest().by_name("jacobi2d_r96x64_u4").expect("unrolled artifact");
+    let mut rng = Prng::new(77);
+    let g = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+    let out = rt.run_stencil(entry, &[g.clone()], 96, 4).unwrap();
+    // must equal the dynamic-loop artifact with nsteps=4
+    let loop_entry = rt.manifest().find("jacobi2d", 64, 96).unwrap();
+    let out2 = rt.run_stencil(loop_entry, &[g], 96, 4).unwrap();
+    assert!(max_abs_diff(&out, &out2) < 1e-6);
+}
+
+#[test]
+fn chained_blur_jacobi2d_listing4_through_full_stack() {
+    // Listing 4 (local temp chain) through DSL -> pallas artifact -> PJRT
+    // coordinator, against the two-stage Rust interpreter.
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (prog, job) = job_for(b::BLUR_JACOBI2D_DSL, &[64, 64], 3);
+    let cfgs = vec![
+        Config { parallelism: Parallelism::Temporal, k: 1, s: 3 },
+        Config { parallelism: Parallelism::SpatialR, k: 3, s: 1 },
+        Config { parallelism: Parallelism::SpatialS, k: 3, s: 1 },
+        Config { parallelism: Parallelism::HybridS, k: 2, s: 2 },
+    ];
+    cross_validate(&coord, &prog, &job, &cfgs, 1e-4).unwrap();
+}

@@ -1,0 +1,168 @@
+//! Pipeline integration: DSL → DSE → codegen → plan → coordinator replay,
+//! plus CLI smoke tests — the full Fig 7 automation flow end to end.
+
+use sasa::codegen::{generate_hls, generate_host, Plan};
+use sasa::coordinator::{verify::max_abs_diff, Coordinator, StencilJob};
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::explore;
+use sasa::platform::FpgaPlatform;
+use sasa::reference::{interpret, Grid};
+use sasa::runtime::artifact::default_artifact_dir;
+use sasa::runtime::Runtime;
+use sasa::util::prng::Prng;
+
+#[test]
+fn full_flow_dsl_to_plan_to_execution() {
+    // 1. user writes DSL (64x64 toy so the PJRT path is fast)
+    let src = b::with_dims(b::JACOBI2D_DSL, &[64, 64], 8);
+    let prog = parse(&src).unwrap();
+    let info = analyze(&prog);
+
+    // 2. DSE picks a config on the U280 model
+    let platform = FpgaPlatform::u280();
+    let dse = explore(&info, &platform, 8);
+
+    // 3. codegen: HLS + host + plan
+    let hls = generate_hls(&prog, dse.best.config, 16);
+    let host = generate_host(&prog, dse.best.config);
+    assert!(hls.contains("JACOBI2D"));
+    assert!(host.contains("tapa::invoke"));
+
+    let dir = std::env::temp_dir().join("sasa_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("plan.json");
+    let plan = Plan::from_choice(&info.name, 64, 64, 8, &dse.best);
+    plan.save(&plan_path).unwrap();
+
+    // 4. replay the plan through the coordinator (clamping k to the toy grid)
+    let loaded = Plan::load(&plan_path).unwrap();
+    assert_eq!(loaded.config(), dse.best.config);
+    let mut cfg = loaded.config();
+    cfg.k = cfg.k.min(4);
+
+    let rt = Runtime::from_dir(default_artifact_dir()).unwrap();
+    let coord = Coordinator::new(&rt);
+    let mut rng = Prng::new(23);
+    let input = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
+    let job = StencilJob::new(&prog, vec![input.clone()], 8).unwrap();
+    let (result, _) = coord.execute(&job, cfg).unwrap();
+
+    // 5. verified against the interpreter
+    let golden = interpret(&prog, &[input], 64, 8);
+    assert!(max_abs_diff(&result, &golden) < 1e-5);
+}
+
+#[test]
+fn codegen_compiles_for_every_dse_choice() {
+    let platform = FpgaPlatform::u280();
+    for (name, src) in b::ALL {
+        let prog = parse(src).unwrap();
+        let info = analyze(&prog);
+        for iter in [1, 2, 64] {
+            let dse = explore(&info, &platform, iter);
+            let hls = generate_hls(&prog, dse.best.config, 16);
+            // structural sanity: balanced braces, one PE task, a top task
+            let opens = hls.matches('{').count();
+            let closes = hls.matches('}').count();
+            assert_eq!(opens, closes, "{name} iter={iter}");
+            assert!(hls.contains("_PE("), "{name}");
+            let host = generate_host(&prog, dse.best.config);
+            assert!(host.contains(&format!("kSpatial = {}", dse.best.config.k)), "{name}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI smoke tests (the sasa binary is the user-facing automation flow)
+// ---------------------------------------------------------------------------
+
+fn sasa_bin() -> std::path::PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release/ (or debug/)
+    p.push("sasa");
+    p
+}
+
+fn run_cli(args: &[&str]) -> (bool, String) {
+    let out = std::process::Command::new(sasa_bin())
+        .args(args)
+        .env("SASA_ARTIFACTS", default_artifact_dir())
+        .output()
+        .expect("sasa binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn cli_parse_dse_sim_report() {
+    let (ok, text) = run_cli(&["parse", "--kernel", "hotspot"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("intensity"));
+
+    let (ok, text) = run_cli(&["dse", "--kernel", "jacobi2d", "--iter", "64"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("best: hybrid_s"));
+
+    let (ok, text) = run_cli(&["sim", "--kernel", "blur", "--iter", "16"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GCell/s"));
+
+    let (ok, text) = run_cli(&["report", "table3"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("hybrid_s"));
+}
+
+#[test]
+fn cli_run_executes_and_verifies() {
+    let (ok, text) = run_cli(&[
+        "run", "--kernel", "jacobi2d", "--dims", "64x64", "--iter", "4",
+        "--scheme", "spatial_s", "--k", "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verification OK"), "{text}");
+}
+
+#[test]
+fn cli_codegen_writes_files() {
+    let dir = std::env::temp_dir().join("sasa_cli_codegen");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, text) = run_cli(&[
+        "codegen", "--kernel", "hotspot", "--iter", "64",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(dir.join("hotspot_kernel.cpp").exists());
+    assert!(dir.join("hotspot_host.cpp").exists());
+    assert!(dir.join("hotspot_plan.json").exists());
+    let plan = Plan::load(&dir.join("hotspot_plan.json")).unwrap();
+    assert_eq!(plan.kernel, "hotspot");
+}
+
+#[test]
+fn cli_rejects_unknown_kernel_and_command() {
+    let (ok, _) = run_cli(&["dse", "--kernel", "nope"]);
+    assert!(!ok);
+    let (ok, _) = run_cli(&["frobnicate"]);
+    assert!(!ok);
+}
+
+#[test]
+fn dsl_file_input_works() {
+    let dir = std::env::temp_dir().join("sasa_dsl_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("custom.dsl");
+    std::fs::write(
+        &path,
+        "kernel: CUSTOM\niteration: 2\ninput float: a(128, 128)\n\
+         output float: o(0,0) = ( a(0,0) + a(0,1) + a(0,-1) + a(1,0) + a(-1,0) ) / 5\n",
+    )
+    .unwrap();
+    let (ok, text) = run_cli(&["dse", "--file", path.to_str().unwrap(), "--iter", "4"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("best:"));
+}

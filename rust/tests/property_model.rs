@@ -1,0 +1,191 @@
+//! Property-based tests over the analytical model, the DSE, the simulator,
+//! and the DSL round-trip — using the deterministic PRNG harness
+//! (`sasa::util::prng::check`), since the offline vendor set has no
+//! proptest.
+
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::{explore, latency_cycles, Config, ModelParams, Parallelism};
+use sasa::platform::FpgaPlatform;
+use sasa::reference::{interpret, Grid};
+use sasa::sim::{model_error, simulate};
+use sasa::util::prng::{check, Prng};
+
+fn rand_params(rng: &mut Prng) -> ModelParams {
+    ModelParams {
+        rows: rng.range(64, 16384),
+        cols: rng.range(64, 4096),
+        iter: *rng.pick(&[1u64, 2, 3, 4, 7, 8, 16, 31, 32, 64]),
+        radius: rng.range(1, 3),
+        unroll: 16,
+    }
+}
+
+#[test]
+fn property_latency_positive_and_monotone_in_work() {
+    check(300, 0xAB, |rng| {
+        let p = rand_params(rng);
+        for par in Parallelism::ALL {
+            let k = if par == Parallelism::Temporal { 1 } else { rng.range(1, 16) };
+            let s = match par {
+                Parallelism::Temporal => rng.range(1, 21),
+                Parallelism::SpatialR | Parallelism::SpatialS => 1,
+                _ => rng.range(1, 8),
+            };
+            let cfg = Config { parallelism: par, k, s };
+            let l = latency_cycles(&p, cfg);
+            assert!(l > 0);
+            // doubling rows never decreases latency
+            let mut p2 = p;
+            p2.rows *= 2;
+            assert!(latency_cycles(&p2, cfg) >= l, "{cfg} rows monotone");
+            // doubling iterations never decreases latency
+            let mut p3 = p;
+            p3.iter *= 2;
+            assert!(latency_cycles(&p3, cfg) >= l, "{cfg} iter monotone");
+        }
+    });
+}
+
+#[test]
+fn property_more_spatial_pes_never_hurt_spatial_s() {
+    check(200, 0xCD, |rng| {
+        let p = rand_params(rng);
+        let k = rng.range(1, 15);
+        let a = latency_cycles(&p, Config { parallelism: Parallelism::SpatialS, k, s: 1 });
+        let b = latency_cycles(&p, Config { parallelism: Parallelism::SpatialS, k: k + 1, s: 1 });
+        assert!(b <= a, "k={k}: {b} > {a}");
+    });
+}
+
+#[test]
+fn property_dse_respects_bounds_random_kernels_and_iters() {
+    let platform = FpgaPlatform::u280();
+    check(120, 0xEF, |rng| {
+        let (name, src) = *rng.pick(&b::ALL);
+        let iter = rng.range(1, 64);
+        let info = analyze(&parse(src).unwrap());
+        let r = explore(&info, &platform, iter);
+        assert!(!r.per_scheme.is_empty(), "{name}");
+        for c in &r.per_scheme {
+            assert!(c.config.total_pes() >= 1);
+            assert!(c.config.total_pes() <= r.bounds.pe_res, "{name}: PE_res");
+            if c.config.parallelism != Parallelism::Temporal {
+                assert!(c.config.k <= r.bounds.pe_bw, "{name}: PE_bw");
+            }
+            assert!(c.config.s <= iter.max(1), "{name}: no idle-by-construction stages");
+            assert!(c.seconds > 0.0 && c.seconds.is_finite());
+            assert!(c.resources.max_utilization(&platform) <= platform.alpha + 1e-9);
+        }
+        // Eq 9: best really is the min-latency survivor (modulo the 2%
+        // fewer-banks tie-break)
+        let fastest = r
+            .per_scheme
+            .iter()
+            .map(|c| c.seconds)
+            .fold(f64::INFINITY, f64::min);
+        assert!(r.best.seconds <= fastest * 1.021, "{name}: best within tie band");
+    });
+}
+
+#[test]
+fn property_model_error_under_5pct_random_configs() {
+    let platform = FpgaPlatform::u280();
+    check(100, 0x51, |rng| {
+        let (name, src) = *rng.pick(&b::ALL);
+        let iter = *rng.pick(&[1u64, 2, 4, 8, 16, 32, 64]);
+        let info = analyze(&parse(src).unwrap());
+        let r = explore(&info, &platform, iter);
+        for c in &r.per_scheme {
+            let e = model_error(&info, &platform, iter, c.config);
+            assert!(e < 0.05, "{name} iter={iter} {}: {:.2}%", c.config, e * 100.0);
+        }
+    });
+}
+
+#[test]
+fn property_simulator_work_conservation() {
+    // simulated kernel cycles never undercut the ideal streaming bound
+    // R*C*iter/U/(k*s) — no config processes cells faster than all its PEs
+    // streaming flat out
+    let platform = FpgaPlatform::u280();
+    check(150, 0x77, |rng| {
+        let (name, src) = *rng.pick(&b::ALL);
+        let iter = rng.range(1, 64);
+        let info = analyze(&parse(src).unwrap());
+        let r = explore(&info, &platform, iter);
+        for c in &r.per_scheme {
+            let s = simulate(&info, &platform, iter, c.config);
+            let ideal =
+                (info.rows * info.cols * iter) as f64 / (16.0 * c.config.total_pes() as f64);
+            assert!(
+                s.kernel_cycles >= ideal * 0.999,
+                "{name} {}: {} < ideal {}",
+                c.config,
+                s.kernel_cycles,
+                ideal
+            );
+        }
+    });
+}
+
+#[test]
+fn property_dsl_print_parse_roundtrip_with_random_dims() {
+    check(200, 0x99, |rng| {
+        let (_, src) = *rng.pick(&b::ALL);
+        let prog0 = parse(src).unwrap();
+        let ndim = prog0.dims().len();
+        let dims: Vec<u64> = (0..ndim).map(|_| rng.range(8, 4096)).collect();
+        let iter = rng.range(1, 64);
+        let rewritten = b::with_dims(src, &dims, iter);
+        let prog = parse(&rewritten).unwrap();
+        assert_eq!(prog.iteration, iter);
+        assert_eq!(prog.dims(), &dims[..]);
+        // print → parse is a fixed point
+        let printed = prog.to_string();
+        assert_eq!(parse(&printed).unwrap(), prog);
+    });
+}
+
+#[test]
+fn property_interpreter_tile_contract() {
+    // Spatial_R's foundation: perturbing rows beyond the contamination
+    // depth never changes cells below it. Checked on random kernels,
+    // radii, and iteration counts.
+    check(40, 0x13, |rng| {
+        let (_, src) = *rng.pick(&[
+            ("jacobi2d", b::JACOBI2D_DSL),
+            ("blur", b::BLUR_DSL),
+            ("dilate", b::DILATE_DSL),
+        ]);
+        let rows = 40usize;
+        let cols = 24usize;
+        let iter = rng.range(1, 4);
+        let prog = parse(&b::with_dims(src, &[rows as u64, cols as u64], iter)).unwrap();
+        let info = analyze(&prog);
+        let pr = info.radius_rows as usize;
+        let base = Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0));
+        let mut poisoned = base.clone();
+        for c in 0..cols {
+            poisoned.set(0, c, 1e6);
+        }
+        let a = interpret(&prog, &[base], rows, iter);
+        let b2 = interpret(&prog, &[poisoned], rows, iter);
+        let depth = pr * iter as usize + pr;
+        for r in depth..rows {
+            for c in 0..cols {
+                assert_eq!(a.at(r, c), b2.at(r, c), "row {r} contaminated past depth {depth}");
+            }
+        }
+    });
+}
+
+#[test]
+fn property_intensity_linear_in_iterations() {
+    check(100, 0x21, |rng| {
+        let (_, src) = *rng.pick(&b::ALL);
+        let info = analyze(&parse(src).unwrap());
+        let n = rng.range(2, 64);
+        let ratio = info.intensity(n) / info.intensity(1);
+        assert!((ratio - n as f64).abs() < 1e-9);
+    });
+}
