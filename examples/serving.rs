@@ -1,0 +1,55 @@
+//! Serving walkthrough: the `sasa::service` layer end to end.
+//!
+//! 1. three tenants queue seven stencil jobs (the `examples/jobs.json` mix);
+//! 2. the scheduler packs them onto the U280's 32 HBM banks — concurrent
+//!    admission on disjoint bank subsets, next-best fallback when the best
+//!    design doesn't fit the remaining pool, FIFO so nothing starves;
+//! 3. the plan cache persists every DSE result, so a second identical batch
+//!    runs with zero exploration;
+//! 4. one admitted configuration is executed for real through the
+//!    coordinator and verified against the DSL interpreter.
+//!
+//! Run: `cargo run --release --example serving`
+
+use sasa::platform::FpgaPlatform;
+use sasa::runtime::{artifact::default_artifact_dir, Runtime};
+use sasa::service::{demo_jobs, BatchExecutor, JobSpec, PlanCache};
+
+fn main() -> anyhow::Result<()> {
+    let platform = FpgaPlatform::u280();
+    let exec = BatchExecutor::new(&platform);
+
+    // --- pass 1: cold cache — every job pays for its exploration ---------
+    let cache_path = std::env::temp_dir().join("sasa_serving_example_plans.json");
+    let _ = std::fs::remove_file(&cache_path);
+    let mut cache = PlanCache::at_path(&cache_path)?;
+    let report = exec.run(&demo_jobs(), &mut cache)?;
+    println!("{}", report.job_table().to_markdown());
+    println!("{}", report.tenant_table().to_markdown());
+    println!("{}", report.summary_table().to_markdown());
+    cache.save()?;
+
+    // --- pass 2: warm cache — a fresh "process" skips all exploration ----
+    let mut warm = PlanCache::at_path(&cache_path)?;
+    let report2 = exec.run(&demo_jobs(), &mut warm)?;
+    println!(
+        "warm pass: {} hits, {} explorations (plans persisted at {:?})",
+        report2.schedule.cache_hits, report2.schedule.explorations, cache_path
+    );
+    assert_eq!(report2.schedule.explorations, 0);
+
+    // --- real execution: one admitted config through the coordinator -----
+    let runtime = Runtime::from_dir(default_artifact_dir())?;
+    let spec = JobSpec::new("alice", "jacobi2d", vec![64, 64], 8);
+    let mut toy_cache = PlanCache::in_memory();
+    let toy = exec.run(std::slice::from_ref(&spec), &mut toy_cache)?;
+    let cfg = toy.schedule.jobs[0].config;
+    let (diff, exec_report) = exec.execute_real(&runtime, &spec, cfg, 7)?;
+    println!(
+        "real run: jacobi2d 64x64 iter=8 via {} -> {:.3} ms, max |diff| vs interpreter {diff:e}",
+        exec_report.config, exec_report.wall_seconds * 1e3
+    );
+    anyhow::ensure!(diff < 1e-4, "verification failed");
+    println!("verification OK");
+    Ok(())
+}

@@ -10,9 +10,12 @@
 //!   HLO text artifacts;
 //! * **L3** — this crate: the stencil DSL, the analytical performance model
 //!   and design-space exploration, the cycle-level FPGA simulator standing
-//!   in for the Alveo U280, the TAPA HLS code generator, and the multi-PE
+//!   in for the Alveo U280, the TAPA HLS code generator, the multi-PE
 //!   coordinator that executes the five parallelism schemes for real
-//!   through the PJRT CPU client.
+//!   (through the PJRT CPU client with the `pjrt` feature, or the
+//!   interpreter-backed runtime by default), and the `service` layer that
+//!   schedules multi-tenant job batches over the HBM bank pool with a
+//!   persistent DSE plan cache.
 //!
 //! See DESIGN.md for the architecture and the per-experiment index.
 
@@ -26,4 +29,5 @@ pub mod runtime;
 pub mod coordinator;
 pub mod codegen;
 pub mod metrics;
+pub mod service;
 pub mod bench;

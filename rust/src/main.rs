@@ -6,6 +6,8 @@
 //! sasa codegen --kernel hotspot --iter 64 -o d/ emit TAPA HLS C++ + host + plan
 //! sasa run --kernel jacobi2d --dims 64x64 --iter 8   execute for real via PJRT
 //! sasa sim --kernel blur --iter 16             cycle-simulate all five schemes
+//! sasa serve --jobs jobs.json                  schedule a multi-tenant job batch
+//! sasa batch --iter 8 [--real]                 run the whole suite as one batch
 //! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
 //! ```
 
@@ -32,10 +34,20 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: positional args + --key value pairs + bare --flags.
+/// Tiny flag parser: positional args + `--key value` / `--key=value` pairs
+/// + bare `--flags`.
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
+}
+
+/// Is this token a flag (vs. a value)? Dashed tokens that parse as numbers
+/// are values — `--offset -1` must keep its value.
+fn looks_like_flag(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        None | Some("") => false, // plain value, or bare "-" (stdin convention)
+        Some(rest) => rest.parse::<f64>().is_err(),
+    }
 }
 
 fn parse_args(argv: &[String]) -> Args {
@@ -45,7 +57,10 @@ fn parse_args(argv: &[String]) -> Args {
     while i < argv.len() {
         let a = &argv[i];
         if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < argv.len() && !looks_like_flag(&argv[i + 1]) {
                 flags.insert(key.to_string(), argv[i + 1].clone());
                 i += 2;
             } else {
@@ -112,6 +127,8 @@ fn run() -> Result<()> {
         "codegen" => cmd_codegen(&args, &platform),
         "run" => cmd_run(&args, &platform),
         "sim" => cmd_sim(&args, &platform),
+        "serve" => cmd_serve(&args, &platform),
+        "batch" => cmd_batch(&args, &platform),
         "report" => cmd_report(&args, &platform),
         "help" | "--help" | "-h" => {
             print_help();
@@ -129,6 +146,8 @@ fn print_help() {
          sasa codegen --kernel <name> --iter <n> [--out <dir>]\n  \
          sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
+         sasa serve --jobs <jobs.json> [--cache <plans.json>] [--banks <n>]\n  \
+         sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d"
     );
@@ -329,6 +348,117 @@ fn cmd_sim(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     Ok(())
 }
 
+/// Default location of the persistent DSE plan cache.
+const DEFAULT_PLAN_CACHE: &str = ".sasa_plan_cache.json";
+
+/// Run a batch and keep any explorations already paid for even when the
+/// batch itself fails. The scheduling error is the root cause, so a save
+/// failure on that path is deliberately dropped rather than masking it.
+fn run_saving_cache(
+    exec: &sasa::service::BatchExecutor,
+    specs: &[sasa::service::JobSpec],
+    cache: &mut sasa::service::PlanCache,
+) -> Result<sasa::service::BatchReport> {
+    match exec.run(specs, cache) {
+        Ok(r) => Ok(r),
+        Err(e) => {
+            let _ = cache.save();
+            Err(e)
+        }
+    }
+}
+
+fn print_batch_report(
+    report: &sasa::service::BatchReport,
+    cache: &sasa::service::PlanCache,
+    cache_path: &str,
+) {
+    println!("{}", report.job_table().to_markdown());
+    println!("{}", report.tenant_table().to_markdown());
+    println!("{}", report.summary_table().to_markdown());
+    let s = &report.schedule;
+    println!(
+        "scheduled {} jobs, {} concurrent at peak, {:.1}% bank utilization over {:.3} ms",
+        s.jobs.len(),
+        s.peak_concurrency,
+        s.bank_utilization() * 100.0,
+        s.makespan_s * 1e3
+    );
+    println!(
+        "plan cache: {} hits, {} explorations ({} plans in {cache_path})",
+        s.cache_hits,
+        s.explorations,
+        cache.len()
+    );
+}
+
+/// `sasa serve --jobs jobs.json [--cache plans.json] [--banks n]`:
+/// schedule a multi-tenant job batch over the platform's HBM bank pool.
+fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    use sasa::service::{load_jobs, BatchExecutor, PlanCache};
+    let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
+    let specs = load_jobs(jobs_path)?;
+    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
+    let mut cache = PlanCache::at_path(cache_path)?;
+    let mut exec = BatchExecutor::new(platform);
+    if let Some(banks) = args.get("banks") {
+        exec = exec.with_pool_banks(banks.parse().context("--banks must be an integer")?);
+    }
+    let report = run_saving_cache(&exec, &specs, &mut cache)?;
+    print_batch_report(&report, &cache, cache_path);
+    cache.save()
+}
+
+/// `sasa batch [--iter n] [--real] [--cache plans.json]`: run the whole
+/// benchmark suite as one batch. With `--real`, each admitted configuration
+/// is additionally executed through the coordinator on a toy grid and
+/// verified against the DSL interpreter.
+fn cmd_batch(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    use sasa::service::{BatchExecutor, JobSpec, PlanCache};
+    let iter = args.u64_or("iter", 8)?;
+    let real = args.get("real").is_some();
+    let specs: Vec<JobSpec> = b::ALL
+        .iter()
+        .map(|(name, src)| {
+            let ndim = parse(src).expect("builtin DSL parses").dims().len();
+            let dims: Vec<u64> = match (real, ndim) {
+                (true, 3) => vec![64, 16, 16],
+                (true, _) => vec![64, 64],
+                (false, 3) => vec![9720, 32, 32],
+                (false, _) => vec![9720, 1024],
+            };
+            JobSpec::new("batch", name, dims, iter)
+        })
+        .collect();
+    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
+    let mut cache = PlanCache::at_path(cache_path)?;
+    let exec = BatchExecutor::new(platform);
+    let report = run_saving_cache(&exec, &specs, &mut cache)?;
+    print_batch_report(&report, &cache, cache_path);
+    cache.save()?;
+
+    if real {
+        let rt = Runtime::from_dir(default_artifact_dir())?;
+        println!("\nreal execution (coordinator, toy grids):");
+        for job in &report.schedule.jobs {
+            let (diff, rep) = exec.execute_real(&rt, &job.spec, job.config, 42)?;
+            // rep.config carries the k-clamp execute_real applies on toy
+            // grids — report what actually ran, not the scheduled config
+            println!(
+                "  {:<10} {} -> {:.3} ms, max |diff| vs interpreter {diff:e}",
+                job.spec.kernel,
+                rep.config,
+                rep.wall_seconds * 1e3
+            );
+            if diff > 1e-3 {
+                bail!("{}: verification FAILED (diff {diff})", job.spec.kernel);
+            }
+        }
+        println!("all {} jobs verified", report.schedule.jobs.len());
+    }
+    Ok(())
+}
+
 fn cmd_report(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     let which = args.positional.first().map(String::as_str).unwrap_or("all");
     let csv = args.get("csv").is_some();
@@ -382,4 +512,60 @@ fn cmd_report(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         println!("{}", t.to_markdown());
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        let v: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        parse_args(&v)
+    }
+
+    #[test]
+    fn key_value_pairs_and_bare_flags() {
+        // positionals come before flags (the documented CLI shape:
+        // `sasa report table3 --csv`); a dashless token right after a flag
+        // is that flag's value
+        let a = args(&["table3", "--kernel", "blur", "--csv"]);
+        assert_eq!(a.get("kernel"), Some("blur"));
+        assert_eq!(a.get("csv"), Some("true"));
+        assert_eq!(a.positional, vec!["table3"]);
+    }
+
+    #[test]
+    fn equals_form_accepted() {
+        let a = args(&["--kernel=hotspot", "--iter=64", "--dims=720x1024"]);
+        assert_eq!(a.get("kernel"), Some("hotspot"));
+        assert_eq!(a.u64_or("iter", 0).unwrap(), 64);
+        assert_eq!(a.dims(&[]).unwrap(), vec![720, 1024]);
+        // empty value via `=` stays an explicit empty string, not "true"
+        let a = args(&["--note="]);
+        assert_eq!(a.get("note"), Some(""));
+    }
+
+    #[test]
+    fn negative_values_not_swallowed_as_flags() {
+        let a = args(&["--offset", "-1", "--scale", "-2.5", "--exp", "-1e3"]);
+        assert_eq!(a.get("offset"), Some("-1"));
+        assert_eq!(a.get("scale"), Some("-2.5"));
+        assert_eq!(a.get("exp"), Some("-1e3"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_bare() {
+        let a = args(&["--csv", "--kernel", "blur"]);
+        assert_eq!(a.get("csv"), Some("true"));
+        assert_eq!(a.get("kernel"), Some("blur"));
+        // single-dash non-numbers are not values either
+        let a = args(&["--csv", "-x"]);
+        assert_eq!(a.get("csv"), Some("true"));
+    }
+
+    #[test]
+    fn bare_dash_is_a_value() {
+        let a = args(&["--file", "-"]);
+        assert_eq!(a.get("file"), Some("-"));
+    }
 }

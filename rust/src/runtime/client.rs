@@ -1,4 +1,5 @@
-//! PJRT CPU client wrapper with a compiled-executable cache.
+//! PJRT CPU client wrapper with a compiled-executable cache (feature
+//! `pjrt`; needs the vendored `xla` bindings crate — see Cargo.toml).
 //!
 //! One `Runtime` per process: artifacts are compiled on first use and the
 //! executables reused for every subsequent tile execution (compilation is
@@ -13,16 +14,7 @@ use anyhow::{bail, Context, Result};
 use crate::reference::Grid;
 
 use super::artifact::{ArtifactEntry, Manifest};
-
-/// Cumulative runtime statistics (hot-path profiling).
-#[derive(Debug, Clone, Default)]
-pub struct RuntimeStats {
-    pub compiles: u64,
-    pub compile_seconds: f64,
-    pub executions: u64,
-    pub execute_seconds: f64,
-    pub cells_processed: u64,
-}
+use super::RuntimeStats;
 
 /// The L3-side PJRT runtime.
 pub struct Runtime {

@@ -1,0 +1,290 @@
+//! Interpreter-backed runtime: the default, dependency-free execution
+//! substrate (built without the `pjrt` feature).
+//!
+//! Implements the exact artifact contract of the PJRT backend — full-size
+//! `[maxr, c]` canvases, `nrows` live rows, copy-through borders, last
+//! input iterates — by dispatching to `reference::interpret` on the builtin
+//! DSL program named by the artifact entry. The coordinator, scheduler, and
+//! CLI are backend-agnostic: the same dataflow (tiling, halo exchange,
+//! round structure) runs either way, only the per-tile executor changes.
+//!
+//! When the artifact directory has no `manifest.json`, a synthetic manifest
+//! mirroring `python/compile/aot.py`'s `DEFAULT_MATRIX` is used, so shape
+//! coverage (and the "no artifact for this shape" failure mode) is
+//! identical to a real `make artifacts` build.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsl::{analyze, benchmarks as b, parse, StencilProgram};
+use crate::reference::{interpret, Grid};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::RuntimeStats;
+
+/// The artifact shape matrix, mirrored from `python/compile/aot.py`
+/// (`DEFAULT_MATRIX`): (kernel, maxr, c, plane, unrolled_steps).
+const SHAPE_MATRIX: &[(&str, u64, u64, u64, u64)] = &[
+    // tiny shapes: unit/integration tests + quickstart
+    ("jacobi2d", 96, 64, 0, 0),
+    ("blur", 96, 64, 0, 0),
+    ("seidel2d", 96, 64, 0, 0),
+    ("sobel2d", 96, 64, 0, 0),
+    ("dilate", 96, 64, 0, 0),
+    ("hotspot", 96, 64, 0, 0),
+    ("jacobi3d", 96, 256, 16, 0),
+    ("heat3d", 96, 256, 16, 0),
+    ("blur-jacobi2d", 96, 64, 0, 0),
+    // medium shapes: the end-to-end example (720x1024 workloads)
+    ("jacobi2d", 768, 1024, 0, 0),
+    ("hotspot", 768, 1024, 0, 0),
+    ("blur", 768, 1024, 0, 0),
+    // tile shapes: spatial/hybrid partitions of the 720-row workloads
+    ("jacobi2d", 144, 1024, 0, 0),
+    ("hotspot", 144, 1024, 0, 0),
+    ("blur", 144, 1024, 0, 0),
+    ("jacobi2d", 288, 1024, 0, 0),
+    ("hotspot", 288, 1024, 0, 0),
+    ("blur", 288, 1024, 0, 0),
+    // unrolled temporal-pipeline showcase (Fig 4)
+    ("jacobi2d", 96, 64, 0, 4),
+];
+
+/// Synthesize the manifest a `make artifacts` run would produce, minus the
+/// HLO files (entries carry an empty `file`, which the interpreter backend
+/// treats as "no on-disk artifact required").
+pub fn builtin_manifest(dir: PathBuf) -> Manifest {
+    let entries = SHAPE_MATRIX
+        .iter()
+        .map(|&(kernel, maxr, c, plane, unrolled)| {
+            let src = b::by_name(kernel).expect("shape matrix names builtin kernels");
+            let info = analyze(&parse(src).expect("builtin DSL parses"));
+            let suffix = if unrolled > 0 { format!("_u{unrolled}") } else { String::new() };
+            ArtifactEntry {
+                name: format!("{kernel}_r{maxr}x{c}{suffix}"),
+                file: String::new(),
+                kernel: kernel.to_string(),
+                maxr,
+                c,
+                plane,
+                n_inputs: info.n_inputs,
+                update_idx: info.n_inputs - 1,
+                pad_r: info.radius_rows,
+                pad_c: info.radius_cols,
+                unrolled_steps: unrolled,
+            }
+        })
+        .collect();
+    Manifest { dir, entries }
+}
+
+/// The interpreter-backed runtime (same public surface as `client::Runtime`).
+pub struct Runtime {
+    manifest: Manifest,
+    /// Instantiated DSL programs per artifact name ("compiled" kernels).
+    cache: Mutex<HashMap<String, StencilProgram>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        Ok(Runtime {
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Load the manifest from `dir` if one exists there; otherwise fall back
+    /// to the builtin shape matrix. A *present but invalid* manifest is
+    /// still an error — silent fallback would mask a broken artifact build.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").exists() {
+            Self::new(Manifest::load(&dir)?)
+        } else {
+            Self::new(builtin_manifest(dir))
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Instantiate (or fetch from cache) the builtin DSL program behind an
+    /// artifact entry, at the entry's canvas shape.
+    fn ensure_compiled(&self, entry: &ArtifactEntry) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&entry.name) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        // A manifest produced by `make artifacts` names real HLO files; a
+        // missing file means the artifact build is broken, and the failure
+        // must surface at "compile" time exactly as the PJRT backend's does.
+        if !entry.file.is_empty() {
+            let path = self.manifest.path_of(entry);
+            if !path.exists() {
+                bail!(
+                    "compiling artifact '{}': HLO file {:?} is missing — re-run `make artifacts`",
+                    entry.name,
+                    path
+                );
+            }
+        }
+        let src = b::by_name(&entry.kernel).with_context(|| {
+            format!(
+                "artifact '{}': kernel '{}' is not a builtin benchmark — the \
+                 interpreter-backed runtime (no `pjrt` feature) only executes builtin kernels",
+                entry.name, entry.kernel
+            )
+        })?;
+        let dims: Vec<u64> = if entry.plane > 0 {
+            vec![entry.maxr, entry.c / entry.plane, entry.plane]
+        } else {
+            vec![entry.maxr, entry.c]
+        };
+        let prog = parse(&b::with_dims(src, &dims, 1))
+            .with_context(|| format!("instantiating '{}' at {dims:?}", entry.kernel))?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.compiles += 1;
+        stats.compile_seconds += t0.elapsed().as_secs_f64();
+        drop(stats);
+        cache.insert(entry.name.clone(), prog);
+        Ok(())
+    }
+
+    /// Execute the stencil artifact: `inputs` are full-size [maxr, c] grids
+    /// (padded by the caller), `nrows` live rows, `nsteps` iterations.
+    /// Returns the iterated [maxr, c] grid.
+    pub fn run_stencil(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Grid],
+        nrows: u64,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        if inputs.len() != entry.n_inputs as usize {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                entry.name,
+                entry.n_inputs,
+                inputs.len()
+            );
+        }
+        for g in inputs {
+            if (g.rows as u64, g.cols as u64) != (entry.maxr, entry.c) {
+                bail!(
+                    "artifact {} expects {}x{} grids, got {}x{}",
+                    entry.name,
+                    entry.maxr,
+                    entry.c,
+                    g.rows,
+                    g.cols
+                );
+            }
+        }
+        if entry.unrolled_steps != 0 && entry.unrolled_steps != nsteps {
+            bail!(
+                "unrolled artifact {} runs exactly {} steps, asked for {nsteps}",
+                entry.name,
+                entry.unrolled_steps
+            );
+        }
+        self.ensure_compiled(entry)?;
+
+        let prog = self
+            .cache
+            .lock()
+            .unwrap()
+            .get(&entry.name)
+            .expect("compiled above")
+            .clone();
+        let t0 = Instant::now();
+        let out = interpret(&prog, inputs, nrows as usize, nsteps);
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        stats.cells_processed += nrows * entry.c * nsteps;
+        drop(stats);
+        Ok(out)
+    }
+
+    /// Pad a tile (rows <= maxr) up to the artifact's [maxr, c] canvas.
+    pub fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid {
+        let mut canvas = Grid::new(entry.maxr as usize, entry.c as usize);
+        canvas.write_rows(0, tile);
+        canvas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rt() -> Runtime {
+        Runtime::new(builtin_manifest(PathBuf::from("artifacts"))).unwrap()
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_aot_matrix() {
+        let m = builtin_manifest(PathBuf::from("x"));
+        assert_eq!(m.entries.len(), SHAPE_MATRIX.len());
+        assert!(m.find("jacobi2d", 64, 96).is_some());
+        assert!(m.find("jacobi2d", 64, 97).is_none(), "96 rows is the 64-col ceiling");
+        assert!(m.find("jacobi2d", 128, 1).is_none(), "no 128-col artifacts");
+        assert!(m.by_name("jacobi2d_r96x64_u4").is_some());
+        let h = m.find("hotspot", 64, 1).unwrap();
+        assert_eq!((h.n_inputs, h.update_idx), (2, 1));
+        let j3 = m.find("jacobi3d", 256, 1).unwrap();
+        assert_eq!(j3.plane, 16);
+    }
+
+    #[test]
+    fn run_matches_direct_interpreter() {
+        let rt = rt();
+        let entry = rt.manifest().find("jacobi2d", 64, 96).unwrap().clone();
+        let mut rng = Prng::new(17);
+        let g = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+        let out = rt.run_stencil(&entry, &[g.clone()], 96, 3).unwrap();
+        let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[96, 64], 3)).unwrap();
+        let golden = interpret(&prog, &[g], 96, 3);
+        assert_eq!(out, golden);
+        let stats = rt.stats();
+        assert_eq!(stats.compiles, 1);
+        assert_eq!(stats.executions, 1);
+        assert_eq!(stats.cells_processed, 96 * 64 * 3);
+    }
+
+    #[test]
+    fn compile_cached_across_runs() {
+        let rt = rt();
+        let entry = rt.manifest().find("blur", 64, 96).unwrap().clone();
+        let mut rng = Prng::new(5);
+        let g = Grid::from_vec(96, 64, rng.grid(96, 64, 0.0, 1.0));
+        rt.run_stencil(&entry, &[g.clone()], 96, 1).unwrap();
+        rt.run_stencil(&entry, &[g], 96, 2).unwrap();
+        assert_eq!(rt.stats().compiles, 1);
+        assert_eq!(rt.stats().executions, 2);
+    }
+
+    #[test]
+    fn plane_reconstructs_3d_dims() {
+        let rt = rt();
+        let entry = rt.manifest().find("jacobi3d", 256, 96).unwrap().clone();
+        let mut rng = Prng::new(7);
+        let g = Grid::from_vec(96, 256, rng.grid(96, 256, 0.0, 1.0));
+        let out = rt.run_stencil(&entry, &[g.clone()], 96, 2).unwrap();
+        let prog = parse(&b::with_dims(b::JACOBI3D_DSL, &[96, 16, 16], 2)).unwrap();
+        assert_eq!(out, interpret(&prog, &[g], 96, 2));
+    }
+}

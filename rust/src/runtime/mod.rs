@@ -1,10 +1,37 @@
-//! PJRT runtime: load AOT artifacts (HLO text produced by
-//! `python/compile/aot.py`), compile them once on the CPU PJRT client, and
-//! execute them from the coordinator's request path. Python is never
-//! involved at runtime.
+//! Execution runtimes for AOT stencil artifacts.
+//!
+//! Two interchangeable backends expose the same API (`Runtime::from_dir`,
+//! `run_stencil`, `pad_to_canvas`, `stats`):
+//!
+//! * **`client`** (feature `pjrt`) — loads the HLO text produced by
+//!   `python/compile/aot.py`, compiles it once on the XLA PJRT CPU client,
+//!   and executes it from the coordinator's request path. Python is never
+//!   involved at runtime. Requires the vendored `xla` bindings crate.
+//! * **`interp`** (default) — interprets the same artifact contract with
+//!   the pure-Rust DSL interpreter (`reference::interpret`), so the full
+//!   pipeline (coordinator dataflow, scheduler, CLI) builds and runs
+//!   offline with zero native dependencies. When no `artifacts/` directory
+//!   exists it synthesizes a manifest mirroring the AOT shape matrix.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+pub mod interp;
 
 pub use artifact::{ArtifactEntry, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use interp::Runtime;
+
+/// Cumulative runtime statistics (hot-path profiling), shared by both
+/// backends. "Compile" means PJRT compilation under `pjrt`, and
+/// parse+instantiate of the kernel program under the interpreter.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_seconds: f64,
+    pub executions: u64,
+    pub execute_seconds: f64,
+    pub cells_processed: u64,
+}

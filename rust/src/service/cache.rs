@@ -1,0 +1,348 @@
+//! Persistent DSE plan cache.
+//!
+//! Design-space exploration is deterministic in (kernel, dims, iter,
+//! platform, design style), so its result is reusable across requests and
+//! across process runs — the serving layer's answer to "don't re-explore
+//! per job" (cf. Zohouri et al.'s observation that blocking configurations
+//! transfer across runs). The cache memoizes full [`DseResult`]s — best
+//! choice *and* the per-scheme alternatives the scheduler needs for its
+//! bank-pool fallback — and persists them as JSON via `util::json`.
+//! Round-tripping is exact: `f64` values are written with Rust's
+//! shortest-roundtrip formatting, so a cache hit returns a `DseResult`
+//! bit-identical to a fresh `explore`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsl::KernelInfo;
+use crate::model::{explore, Bounds, Config, DseChoice, DseResult, ModelParams, Parallelism};
+use crate::platform::{DesignStyle, FpgaPlatform, Resources};
+use crate::util::json::{num, obj, s, Json};
+
+/// Hit/miss counters for one cache lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    /// Misses == explorations actually run.
+    pub misses: u64,
+}
+
+/// Cache file schema version — bump when the resource model or the JSON
+/// layout changes incompatibly; stale files are rejected, not misread.
+const CACHE_VERSION: u64 = 1;
+
+/// A memoizing, optionally file-backed store of exploration results.
+pub struct PlanCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, DseResult>,
+    stats: CacheStats,
+}
+
+fn style_name(style: DesignStyle) -> &'static str {
+    match style {
+        DesignStyle::Soda => "soda",
+        DesignStyle::SodaOpt => "soda-opt",
+        DesignStyle::Sasa => "sasa",
+    }
+}
+
+impl PlanCache {
+    /// A cache that lives only for this process.
+    pub fn in_memory() -> PlanCache {
+        PlanCache { path: None, entries: BTreeMap::new(), stats: CacheStats::default() }
+    }
+
+    /// A file-backed cache: loads `path` if it exists (a missing file is an
+    /// empty cache, not an error), and `save` writes back to the same path.
+    pub fn at_path(path: impl Into<PathBuf>) -> Result<PlanCache> {
+        let path = path.into();
+        let mut cache = PlanCache {
+            path: Some(path.clone()),
+            entries: BTreeMap::new(),
+            stats: CacheStats::default(),
+        };
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading plan cache {path:?}"))?;
+            let j = Json::parse(&text)
+                .with_context(|| format!("plan cache {path:?} is corrupt — delete it to rebuild"))?;
+            let version = j.u64_or("version", 0);
+            if version != CACHE_VERSION {
+                bail!(
+                    "plan cache {path:?} has version {version}, expected {CACHE_VERSION} — \
+                     delete it to rebuild"
+                );
+            }
+            let plans = j
+                .get("plans")
+                .and_then(Json::as_obj)
+                .with_context(|| format!("plan cache {path:?} missing 'plans' object"))?;
+            for (key, val) in plans {
+                let r = result_from_json(val)
+                    .with_context(|| format!("plan cache {path:?}, entry '{key}'"))?;
+                cache.entries.insert(key.clone(), r);
+            }
+        }
+        Ok(cache)
+    }
+
+    /// The memoization key. `explore` always evaluates the SASA PE design
+    /// style; the style is part of the key so future styles can coexist in
+    /// one cache file.
+    pub fn key(info: &KernelInfo, platform: &FpgaPlatform, iter: u64, style: DesignStyle) -> String {
+        let dims: Vec<String> = info.dims.iter().map(u64::to_string).collect();
+        format!(
+            "{}|{}|iter{}|{}|{}",
+            info.name.to_lowercase(),
+            dims.join("x"),
+            iter,
+            platform.name,
+            style_name(style)
+        )
+    }
+
+    /// Memoized exploration: returns the cached `DseResult` when present
+    /// (recording a hit), otherwise runs `explore` and stores its result.
+    /// The `bool` is true on a cache hit.
+    pub fn get_or_explore(
+        &mut self,
+        info: &KernelInfo,
+        platform: &FpgaPlatform,
+        iter: u64,
+    ) -> (DseResult, bool) {
+        let key = Self::key(info, platform, iter, DesignStyle::Sasa);
+        if let Some(r) = self.entries.get(&key) {
+            self.stats.hits += 1;
+            return (r.clone(), true);
+        }
+        self.stats.misses += 1;
+        let r = explore(info, platform, iter);
+        self.entries.insert(key, r.clone());
+        (r, false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&std::path::Path> {
+        self.path.as_deref()
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches). The write
+    /// is atomic (temp file + rename) so an interrupted save or a
+    /// concurrent reader never sees a truncated cache.
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating cache directory {parent:?}"))?;
+            }
+        }
+        // per-process tmp name: concurrent savers must not share one tmp
+        // file, or a rename could publish another process's partial write
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing plan cache {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving plan cache into place at {path:?}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let plans: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.clone(), result_to_json(v)))
+            .collect();
+        obj(vec![("version", num(CACHE_VERSION as f64)), ("plans", Json::Obj(plans))])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON encoding of DseResult (no serde in the offline vendor set)
+// ---------------------------------------------------------------------------
+
+fn choice_to_json(c: &DseChoice) -> Json {
+    obj(vec![
+        ("parallelism", s(c.config.parallelism.name())),
+        ("k", num(c.config.k as f64)),
+        ("s", num(c.config.s as f64)),
+        ("cycles", num(c.cycles as f64)),
+        ("freq_mhz", num(c.freq_mhz)),
+        ("seconds", num(c.seconds)),
+        ("gcell_per_s", num(c.gcell_per_s)),
+        ("hbm_banks", num(c.hbm_banks as f64)),
+        ("lut", num(c.resources.lut as f64)),
+        ("ff", num(c.resources.ff as f64)),
+        ("bram36", num(c.resources.bram36 as f64)),
+        ("dsp", num(c.resources.dsp as f64)),
+    ])
+}
+
+/// Required u64 field — a missing or non-integer field is a corrupt entry,
+/// never a silent default or truncating cast (a defaulted/saturated
+/// `hbm_banks: 0` would disable bank accounting).
+fn u64_of(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_exact_u64)
+        .with_context(|| format!("cached entry missing or non-integer '{key}'"))
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("cached entry missing '{key}'"))
+}
+
+fn choice_from_json(j: &Json) -> Result<DseChoice> {
+    let par: Parallelism = j
+        .str_or("parallelism", "")
+        .parse()
+        .ok()
+        .context("cached choice: missing/invalid 'parallelism'")?;
+    Ok(DseChoice {
+        config: Config { parallelism: par, k: u64_of(j, "k")?, s: u64_of(j, "s")? },
+        cycles: u64_of(j, "cycles")?,
+        freq_mhz: f64_of(j, "freq_mhz")?,
+        seconds: f64_of(j, "seconds")?,
+        gcell_per_s: f64_of(j, "gcell_per_s")?,
+        hbm_banks: u64_of(j, "hbm_banks")?,
+        resources: Resources {
+            lut: u64_of(j, "lut")?,
+            ff: u64_of(j, "ff")?,
+            bram36: u64_of(j, "bram36")?,
+            dsp: u64_of(j, "dsp")?,
+        },
+    })
+}
+
+fn result_to_json(r: &DseResult) -> Json {
+    obj(vec![
+        ("best", choice_to_json(&r.best)),
+        ("per_scheme", Json::Arr(r.per_scheme.iter().map(choice_to_json).collect())),
+        ("pe_res", num(r.bounds.pe_res as f64)),
+        ("pe_bw", num(r.bounds.pe_bw as f64)),
+        ("rows", num(r.params.rows as f64)),
+        ("cols", num(r.params.cols as f64)),
+        ("iter", num(r.params.iter as f64)),
+        ("radius", num(r.params.radius as f64)),
+        ("unroll", num(r.params.unroll as f64)),
+    ])
+}
+
+fn result_from_json(j: &Json) -> Result<DseResult> {
+    let best = choice_from_json(j.get("best").context("cached result missing 'best'")?)?;
+    let per_scheme = j
+        .get("per_scheme")
+        .and_then(Json::as_arr)
+        .context("cached result missing 'per_scheme'")?
+        .iter()
+        .map(choice_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DseResult {
+        best,
+        per_scheme,
+        bounds: Bounds { pe_res: u64_of(j, "pe_res")?, pe_bw: u64_of(j, "pe_bw")? },
+        params: ModelParams {
+            rows: u64_of(j, "rows")?,
+            cols: u64_of(j, "cols")?,
+            iter: u64_of(j, "iter")?,
+            radius: u64_of(j, "radius")?,
+            unroll: u64_of(j, "unroll")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{analyze, benchmarks as b, parse};
+
+    fn info_at(src: &str, dims: &[u64], iter: u64) -> KernelInfo {
+        analyze(&parse(&b::with_dims(src, dims, iter)).unwrap())
+    }
+
+    #[test]
+    fn hit_returns_identical_result() {
+        let p = FpgaPlatform::u280();
+        let info = info_at(b::JACOBI2D_DSL, &[9720, 1024], 64);
+        let fresh = explore(&info, &p, 64);
+        let mut cache = PlanCache::in_memory();
+        let (r1, hit1) = cache.get_or_explore(&info, &p, 64);
+        let (r2, hit2) = cache.get_or_explore(&info, &p, 64);
+        assert!(!hit1 && hit2);
+        assert_eq!(r1, fresh);
+        assert_eq!(r2, fresh);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let p = FpgaPlatform::u280();
+        for (_, src) in b::ALL {
+            for iter in [2u64, 64] {
+                let info = info_at(src, &[9720, 1024], iter);
+                let r = explore(&info, &p, iter);
+                let j = result_to_json(&r);
+                let back = result_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+                assert_eq!(back, r);
+            }
+        }
+    }
+
+    #[test]
+    fn persistence_across_instances() {
+        let dir = std::env::temp_dir().join("sasa_plan_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let p = FpgaPlatform::u280();
+        let info = info_at(b::HOTSPOT_DSL, &[9720, 1024], 64);
+        let fresh = explore(&info, &p, 64);
+
+        let mut cold = PlanCache::at_path(&path).unwrap();
+        let (_, hit) = cold.get_or_explore(&info, &p, 64);
+        assert!(!hit);
+        cold.save().unwrap();
+
+        let mut warm = PlanCache::at_path(&path).unwrap();
+        assert_eq!(warm.len(), 1);
+        let (r, hit) = warm.get_or_explore(&info, &p, 64);
+        assert!(hit, "second process must not re-explore");
+        assert_eq!(r, fresh, "persisted plan must round-trip bit-identically");
+        assert_eq!(warm.stats().misses, 0);
+    }
+
+    #[test]
+    fn key_separates_platform_dims_iter() {
+        let u280 = FpgaPlatform::u280();
+        let u50 = FpgaPlatform::u50();
+        let a = info_at(b::BLUR_DSL, &[9720, 1024], 8);
+        let bsmall = info_at(b::BLUR_DSL, &[720, 1024], 8);
+        let k = |i: &KernelInfo, p: &FpgaPlatform, it| PlanCache::key(i, p, it, DesignStyle::Sasa);
+        assert_ne!(k(&a, &u280, 8), k(&a, &u50, 8));
+        assert_ne!(k(&a, &u280, 8), k(&a, &u280, 16));
+        assert_ne!(k(&a, &u280, 8), k(&bsmall, &u280, 8));
+    }
+
+    #[test]
+    fn corrupt_cache_rejected() {
+        let dir = std::env::temp_dir().join("sasa_plan_cache_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        std::fs::write(&path, "{ nope").unwrap();
+        assert!(PlanCache::at_path(&path).is_err());
+    }
+}

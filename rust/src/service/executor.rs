@@ -1,0 +1,252 @@
+//! Batch executor: turns a scheduling pass into tenant-facing reports, and
+//! optionally drives admitted configurations through the real
+//! `Coordinator` path for numeric verification.
+//!
+//! The simulated timeline (bank pool + cycle simulator) answers "what does
+//! this job mix do on a U280"; `execute_real` answers "does the chosen
+//! configuration actually compute the right grid", by running the same
+//! `Config` through the coordinator's multi-PE dataflow against the DSL
+//! interpreter oracle.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{verify::max_abs_diff, Coordinator, ExecReport, StencilJob};
+use crate::dsl::{benchmarks as b, parse};
+use crate::metrics::Table;
+use crate::model::Config;
+use crate::platform::FpgaPlatform;
+use crate::reference::{interpret, Grid};
+use crate::runtime::Runtime;
+use crate::util::prng::Prng;
+
+use super::cache::PlanCache;
+use super::jobs::JobSpec;
+use super::scheduler::{Schedule, Scheduler};
+
+/// Aggregated per-tenant service metrics.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub jobs: usize,
+    /// Total stencil work: grid cells × iterations, summed over jobs.
+    pub cells: u64,
+    /// Wall span from the tenant's first admission to its last completion.
+    pub span_s: f64,
+    /// cells / span — the tenant's delivered throughput.
+    pub gcell_per_s: f64,
+    pub mean_wait_s: f64,
+}
+
+/// A scheduling pass plus its derived per-tenant aggregation.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub schedule: Schedule,
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Runs job batches through the scheduler and renders reports.
+pub struct BatchExecutor<'p> {
+    platform: &'p FpgaPlatform,
+    pool_banks: Option<u64>,
+}
+
+impl<'p> BatchExecutor<'p> {
+    pub fn new(platform: &'p FpgaPlatform) -> BatchExecutor<'p> {
+        BatchExecutor { platform, pool_banks: None }
+    }
+
+    pub fn with_pool_banks(mut self, banks: u64) -> BatchExecutor<'p> {
+        self.pool_banks = Some(banks);
+        self
+    }
+
+    /// Schedule the batch and aggregate tenant statistics.
+    pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
+        let mut scheduler = Scheduler::new(self.platform);
+        if let Some(banks) = self.pool_banks {
+            scheduler = scheduler.with_pool_banks(banks);
+        }
+        let schedule = scheduler.schedule(specs, cache)?;
+        let tenants = aggregate_tenants(&schedule);
+        Ok(BatchReport { schedule, tenants })
+    }
+
+    /// Execute one admitted configuration for real through the coordinator
+    /// (PJRT or interpreter backend) and verify against the interpreter
+    /// oracle. Returns (max |diff| vs oracle, execution report). `k` is
+    /// clamped to keep at least 8 rows per tile on small verification grids,
+    /// mirroring the `sasa run` CLI.
+    pub fn execute_real(
+        &self,
+        runtime: &Runtime,
+        spec: &JobSpec,
+        cfg: Config,
+        seed: u64,
+    ) -> Result<(f32, ExecReport)> {
+        let src = b::by_name(&spec.kernel)
+            .with_context(|| format!("unknown benchmark kernel '{}'", spec.kernel))?;
+        let prog = parse(&b::with_dims(src, &spec.dims, spec.iter))?;
+        let info = spec.info()?;
+        let rows = info.rows as usize;
+        let cols = info.cols as usize;
+        let mut rng = Prng::new(seed);
+        let inputs: Vec<Grid> = (0..info.n_inputs)
+            .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0)))
+            .collect();
+        let mut cfg = cfg;
+        cfg.k = cfg.k.clamp(1, (info.rows / 8).max(1));
+        cfg.s = cfg.s.max(1);
+
+        let coord = Coordinator::new(runtime);
+        let job = StencilJob::new(&prog, inputs.clone(), spec.iter)?;
+        let (result, report) = coord.execute(&job, cfg)?;
+        let golden = interpret(&prog, &inputs, rows, spec.iter);
+        Ok((max_abs_diff(&result, &golden), report))
+    }
+}
+
+fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
+    let mut by_tenant: BTreeMap<&str, Vec<&super::scheduler::ScheduledJob>> = BTreeMap::new();
+    for j in &schedule.jobs {
+        by_tenant.entry(j.spec.tenant.as_str()).or_default().push(j);
+    }
+    by_tenant
+        .into_iter()
+        .map(|(tenant, jobs)| {
+            let cells: u64 = jobs.iter().map(|j| j.cells).sum();
+            let first = jobs.iter().map(|j| j.start_s).fold(f64::INFINITY, f64::min);
+            let last = jobs.iter().map(|j| j.finish_s).fold(0.0f64, f64::max);
+            let span = (last - first).max(1e-12);
+            let mean_wait =
+                jobs.iter().map(|j| j.queue_wait_s).sum::<f64>() / jobs.len() as f64;
+            TenantStats {
+                tenant: tenant.to_string(),
+                jobs: jobs.len(),
+                cells,
+                span_s: span,
+                gcell_per_s: cells as f64 / span / 1e9,
+                mean_wait_s: mean_wait,
+            }
+        })
+        .collect()
+}
+
+fn ms(seconds: f64) -> String {
+    format!("{:.3}", seconds * 1e3)
+}
+
+impl BatchReport {
+    /// One row per scheduled job, in admission order.
+    pub fn job_table(&self) -> Table {
+        let mut t = Table::new(
+            "Scheduled jobs (FIFO admission over the HBM bank pool)",
+            &[
+                "tenant", "kernel", "dims", "iter", "config", "banks", "plan",
+                "fallback", "wait ms", "start ms", "finish ms", "GCell/s",
+            ],
+        );
+        for j in &self.schedule.jobs {
+            t.row(vec![
+                j.spec.tenant.clone(),
+                j.spec.kernel.clone(),
+                j.spec.dims_label(),
+                j.spec.iter.to_string(),
+                j.config.to_string(),
+                j.hbm_banks.to_string(),
+                if j.cache_hit { "hit".into() } else { "explored".into() },
+                if j.fallback_rank == 0 {
+                    "best".into()
+                } else {
+                    format!("alt{}", j.fallback_rank)
+                },
+                ms(j.queue_wait_s),
+                ms(j.start_s),
+                ms(j.finish_s),
+                format!("{:.2}", j.sim.gcell_per_s),
+            ]);
+        }
+        t
+    }
+
+    pub fn tenant_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-tenant throughput",
+            &["tenant", "jobs", "GCells", "span ms", "GCell/s", "mean wait ms"],
+        );
+        for s in &self.tenants {
+            t.row(vec![
+                s.tenant.clone(),
+                s.jobs.to_string(),
+                format!("{:.3}", s.cells as f64 / 1e9),
+                ms(s.span_s),
+                format!("{:.2}", s.gcell_per_s),
+                ms(s.mean_wait_s),
+            ]);
+        }
+        t
+    }
+
+    pub fn summary_table(&self) -> Table {
+        let s = &self.schedule;
+        let mut t = Table::new(
+            "Service summary",
+            &[
+                "jobs", "pool banks", "makespan ms", "peak concurrency",
+                "peak banks", "bank util %", "cache hits", "explorations",
+            ],
+        );
+        t.row(vec![
+            s.jobs.len().to_string(),
+            s.pool_banks.to_string(),
+            ms(s.makespan_s),
+            s.peak_concurrency.to_string(),
+            s.peak_banks_in_use.to_string(),
+            format!("{:.1}", s.bank_utilization() * 100.0),
+            s.cache_hits.to_string(),
+            s.explorations.to_string(),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::jobs::demo_jobs;
+
+    #[test]
+    fn report_tables_render() {
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap();
+        assert_eq!(report.schedule.jobs.len(), 7);
+        assert_eq!(report.tenants.len(), 3); // alice, bob, carol
+        let jobs_md = report.job_table().to_markdown();
+        assert!(jobs_md.contains("jacobi2d"));
+        let tenant_md = report.tenant_table().to_markdown();
+        assert!(tenant_md.contains("carol"));
+        let summary_md = report.summary_table().to_markdown();
+        assert!(summary_md.contains("bank util"));
+        // every tenant delivered nonzero throughput
+        for t in &report.tenants {
+            assert!(t.gcell_per_s > 0.0, "{}", t.tenant);
+        }
+    }
+
+    #[test]
+    fn real_execution_matches_oracle() {
+        // the coordinator path on a toy grid, via the default runtime
+        let p = FpgaPlatform::u280();
+        let rt = Runtime::from_dir(crate::runtime::artifact::default_artifact_dir()).unwrap();
+        let exec = BatchExecutor::new(&p);
+        let spec = JobSpec::new("t", "jacobi2d", vec![64, 64], 6);
+        let mut cache = PlanCache::in_memory();
+        let report = exec.run(std::slice::from_ref(&spec), &mut cache).unwrap();
+        let cfg = report.schedule.jobs[0].config;
+        let (diff, exec_report) = exec.execute_real(&rt, &spec, cfg, 42).unwrap();
+        assert!(diff < 1e-4, "diff {diff}");
+        assert!(exec_report.rounds >= 1);
+    }
+}

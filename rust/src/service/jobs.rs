@@ -1,0 +1,219 @@
+//! Multi-tenant job descriptions and the `jobs.json` wire format.
+//!
+//! A job names a builtin benchmark kernel plus the workload shape; the
+//! scheduler resolves it to a `KernelInfo` and a DSE result. The JSON form
+//! is what `sasa serve --jobs <file>` consumes:
+//!
+//! ```json
+//! {"jobs": [
+//!   {"tenant": "alice", "kernel": "jacobi2d", "dims": [9720, 1024], "iter": 64},
+//!   {"tenant": "bob",   "kernel": "hotspot",  "iter": 64, "arrival_s": 0.002}
+//! ]}
+//! ```
+//!
+//! `dims` defaults to the kernel's headline size, `arrival_s` to 0 (all
+//! jobs queued up front), `tenant` to `"default"`. A bare top-level array
+//! is accepted too.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
+use crate::util::json::{num, obj, s, Json};
+
+/// One tenant request: a kernel at a shape for `iter` iterations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub tenant: String,
+    /// Builtin benchmark name (see `dsl::benchmarks::ALL`).
+    pub kernel: String,
+    pub dims: Vec<u64>,
+    pub iter: u64,
+    /// Arrival time in seconds relative to queue start (0 = queued up front).
+    pub arrival_s: f64,
+}
+
+impl JobSpec {
+    pub fn new(tenant: &str, kernel: &str, dims: Vec<u64>, iter: u64) -> JobSpec {
+        JobSpec {
+            tenant: tenant.to_string(),
+            kernel: kernel.to_lowercase(),
+            dims,
+            iter,
+            arrival_s: 0.0,
+        }
+    }
+
+    /// Resolve to the analyzed kernel at this job's shape.
+    pub fn info(&self) -> Result<KernelInfo> {
+        let src = b::by_name(&self.kernel).with_context(|| {
+            format!(
+                "unknown benchmark kernel '{}' (try: {:?})",
+                self.kernel,
+                b::ALL.map(|(n, _)| n)
+            )
+        })?;
+        let prog = parse(&b::with_dims(src, &self.dims, self.iter))
+            .with_context(|| format!("instantiating '{}' at {:?}", self.kernel, self.dims))?;
+        Ok(analyze(&prog))
+    }
+
+    /// Cells of one grid pass × iterations (the job's total work).
+    pub fn total_cells(&self) -> u64 {
+        self.dims.iter().product::<u64>() * self.iter
+    }
+
+    pub fn dims_label(&self) -> String {
+        let d: Vec<String> = self.dims.iter().map(u64::to_string).collect();
+        d.join("x")
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("tenant", s(self.tenant.clone())),
+            ("kernel", s(self.kernel.clone())),
+            ("dims", Json::Arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
+            ("iter", num(self.iter as f64)),
+            ("arrival_s", num(self.arrival_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let kernel = j.str_or("kernel", "").to_lowercase();
+        if kernel.is_empty() {
+            bail!("job entry missing 'kernel'");
+        }
+        let src = b::by_name(&kernel)
+            .with_context(|| format!("unknown benchmark kernel '{kernel}'"))?;
+        let dims: Vec<u64> = match j.get("dims") {
+            None => parse(src).expect("builtin DSL parses").dims().to_vec(),
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|d| d.as_exact_u64().context("'dims' entries must be non-negative integers"))
+                .collect::<Result<_>>()?,
+            Some(_) => bail!("'dims' must be an array of integers"),
+        };
+        if !(2..=3).contains(&dims.len()) || dims.iter().any(|&d| d == 0) {
+            bail!("job '{kernel}': dims {dims:?} must be 2-D or 3-D with nonzero extents");
+        }
+        let iter = match j.get("iter") {
+            None => 8,
+            Some(v) => v
+                .as_exact_u64()
+                .with_context(|| format!("job '{kernel}': 'iter' must be a non-negative integer"))?,
+        };
+        if iter == 0 {
+            bail!("job '{kernel}': iter must be >= 1");
+        }
+        let arrival_s = match j.get("arrival_s") {
+            None => 0.0,
+            Some(v) => v
+                .as_f64()
+                .with_context(|| format!("job '{kernel}': 'arrival_s' must be a number"))?,
+        };
+        if !arrival_s.is_finite() || arrival_s < 0.0 {
+            bail!("job '{kernel}': arrival_s must be finite and >= 0");
+        }
+        let tenant = match j.get("tenant") {
+            None => "default".to_string(),
+            Some(v) => v
+                .as_str()
+                .with_context(|| format!("job '{kernel}': 'tenant' must be a string"))?
+                .to_string(),
+        };
+        Ok(JobSpec { tenant, kernel, dims, iter, arrival_s })
+    }
+}
+
+/// Parse a jobs document: `{"jobs": [...]}` or a bare array.
+pub fn jobs_from_json(j: &Json) -> Result<Vec<JobSpec>> {
+    let arr = j
+        .as_arr()
+        .or_else(|| j.get("jobs").and_then(Json::as_arr))
+        .context("jobs file must be a JSON array or {\"jobs\": [...]}")?;
+    if arr.is_empty() {
+        bail!("jobs file lists no jobs");
+    }
+    arr.iter().map(JobSpec::from_json).collect()
+}
+
+pub fn jobs_to_json(specs: &[JobSpec]) -> Json {
+    obj(vec![("jobs", Json::Arr(specs.iter().map(JobSpec::to_json).collect()))])
+}
+
+/// Load a jobs file from disk.
+pub fn load_jobs(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading jobs file {path:?}"))?;
+    let j = Json::parse(&text).with_context(|| format!("{path:?} is not valid JSON"))?;
+    jobs_from_json(&j).with_context(|| format!("in jobs file {path:?}"))
+}
+
+/// The demo serving mix (also used by `sasa batch` and the tests): three
+/// tenants, seven kernels, enough aggregate bank demand to exercise both
+/// concurrent packing and the next-best fallback on a 32-bank U280.
+pub fn demo_jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec::new("alice", "jacobi2d", vec![9720, 1024], 64),
+        JobSpec::new("alice", "blur", vec![9720, 1024], 64),
+        JobSpec::new("bob", "seidel2d", vec![9720, 1024], 64),
+        JobSpec::new("bob", "hotspot", vec![9720, 1024], 64),
+        JobSpec::new("carol", "dilate", vec![9720, 1024], 32),
+        JobSpec::new("carol", "jacobi3d", vec![9720, 32, 32], 16),
+        JobSpec::new("carol", "sobel2d", vec![4096, 4096], 8),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_defaults() {
+        let specs = demo_jobs();
+        let j = jobs_to_json(&specs);
+        let back = jobs_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, specs);
+
+        // defaults: dims from the builtin, iter 8, tenant "default"
+        let j = Json::parse(r#"[{"kernel": "JACOBI2D"}]"#).unwrap();
+        let spec = &jobs_from_json(&j).unwrap()[0];
+        assert_eq!(spec.kernel, "jacobi2d");
+        assert_eq!(spec.dims, vec![9720, 1024]);
+        assert_eq!(spec.iter, 8);
+        assert_eq!(spec.tenant, "default");
+    }
+
+    #[test]
+    fn rejects_bad_jobs() {
+        for text in [
+            r#"[{"kernel": "nope"}]"#,
+            r#"[{"kernel": "blur", "iter": 0}]"#,
+            r#"[{"kernel": "blur", "dims": [0, 64]}]"#,
+            r#"[{"kernel": "blur", "dims": [64]}]"#,
+            r#"[{"kernel": "blur", "dims": [64.5, 1024]}]"#,
+            r#"[{"kernel": "blur", "dims": [-64, 1024]}]"#,
+            r#"[{"kernel": "blur", "iter": 8.9}]"#,
+            r#"[{"kernel": "blur", "arrival_s": -1}]"#,
+            r#"[{"kernel": "blur", "arrival_s": 1e999}]"#,
+            r#"[{"kernel": "blur", "arrival_s": "0.5"}]"#,
+            r#"[{"kernel": "blur", "tenant": 7}]"#,
+            r#"[]"#,
+            r#"{"no_jobs": 1}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(jobs_from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn info_resolves_flattened_shape() {
+        let spec = JobSpec::new("t", "jacobi3d", vec![720, 32, 32], 4);
+        let info = spec.info().unwrap();
+        assert_eq!(info.rows, 720);
+        assert_eq!(info.cols, 1024);
+        assert_eq!(spec.total_cells(), 720 * 32 * 32 * 4);
+    }
+}

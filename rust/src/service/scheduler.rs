@@ -1,0 +1,289 @@
+//! FIFO bank-pool scheduler: admits a queue of jobs onto a shared pool of
+//! HBM pseudo-channels ("banks", 32 on the U280).
+//!
+//! Every design the DSE emits owns `hbm_banks = k × banks_per_pe` channels
+//! exclusively (§3.1: one AXI port per input/output per PE group), so banks
+//! are the natural unit of multi-tenant sharing: jobs whose combined bank
+//! demand fits the pool run concurrently on disjoint channel subsets.
+//!
+//! Admission policy (deterministic, starvation-free):
+//!
+//! 1. **FIFO by arrival.** Only the head of the queue is ever admitted —
+//!    later jobs never jump ahead, so a large job is delayed at most by the
+//!    drain time of what was already running when it reached the head.
+//! 2. **Next-best fallback.** If the head's best configuration does not fit
+//!    the *remaining* pool, the scheduler walks its `per_scheme`
+//!    alternatives in predicted-latency order and admits the first that
+//!    fits — trading peak single-job throughput for concurrency instead of
+//!    idling banks (e.g. a temporal design needs only `banks_per_pe`).
+//! 3. **Head-of-line blocking.** If no alternative fits right now, the
+//!    clock advances to the next completion and frees banks; the head is
+//!    retried, never skipped.
+//!
+//! Durations come from the cycle simulator (`sim::simulate`) at the modeled
+//! post-P&R frequency, so the timeline is the one the U280 would exhibit.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::dsl::KernelInfo;
+use crate::model::{Config, DseChoice};
+use crate::platform::FpgaPlatform;
+use crate::sim::{simulate, SimResult};
+
+use super::cache::PlanCache;
+use super::jobs::JobSpec;
+
+/// A job as placed on the timeline.
+#[derive(Debug, Clone)]
+pub struct ScheduledJob {
+    pub spec: JobSpec,
+    /// The configuration actually admitted (== `choice.config`).
+    pub config: Config,
+    pub choice: DseChoice,
+    /// 0 = the DSE's best; n > 0 = the n-th fallback taken because better
+    /// candidates did not fit the remaining bank pool at admission time.
+    pub fallback_rank: usize,
+    /// Whether the plan came from the cache (no exploration run).
+    pub cache_hit: bool,
+    pub hbm_banks: u64,
+    pub queue_wait_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Cycle-simulation of the admitted configuration.
+    pub sim: SimResult,
+    /// Total cells processed (grid cells × iterations).
+    pub cells: u64,
+}
+
+/// The full timeline produced by one scheduling pass.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub jobs: Vec<ScheduledJob>,
+    pub pool_banks: u64,
+    pub makespan_s: f64,
+    /// Max number of jobs in flight at once.
+    pub peak_concurrency: usize,
+    pub peak_banks_in_use: u64,
+    /// Integral of banks-in-use over time (bank-seconds).
+    pub bank_seconds_used: f64,
+    /// Plan-cache hits/explorations attributable to this pass.
+    pub cache_hits: u64,
+    pub explorations: u64,
+}
+
+impl Schedule {
+    /// Time-averaged fraction of the bank pool in use.
+    pub fn bank_utilization(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.bank_seconds_used / (self.pool_banks as f64 * self.makespan_s)
+    }
+}
+
+/// The scheduler: a platform plus its bank pool size (overridable to model
+/// a partially reserved board).
+pub struct Scheduler<'p> {
+    platform: &'p FpgaPlatform,
+    pool_banks: u64,
+}
+
+struct Prepared {
+    spec: JobSpec,
+    info: KernelInfo,
+    /// Admission candidates, best first: `dse.best`, then the remaining
+    /// per-scheme survivors by predicted latency.
+    candidates: Vec<DseChoice>,
+    cache_hit: bool,
+}
+
+impl<'p> Scheduler<'p> {
+    pub fn new(platform: &'p FpgaPlatform) -> Scheduler<'p> {
+        Scheduler { platform, pool_banks: platform.hbm_banks }
+    }
+
+    /// Restrict the pool to fewer banks than the platform exposes.
+    pub fn with_pool_banks(mut self, banks: u64) -> Scheduler<'p> {
+        self.pool_banks = banks;
+        self
+    }
+
+    pub fn pool_banks(&self) -> u64 {
+        self.pool_banks
+    }
+
+    fn prepare(&self, spec: &JobSpec, cache: &mut PlanCache) -> Result<Prepared> {
+        let info = spec.info()?;
+        let (dse, cache_hit) = cache.get_or_explore(&info, self.platform, spec.iter);
+        let mut rest: Vec<DseChoice> = dse
+            .per_scheme
+            .iter()
+            .filter(|c| c.config != dse.best.config)
+            .cloned()
+            .collect();
+        rest.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
+        let mut candidates = Vec::with_capacity(rest.len() + 1);
+        candidates.push(dse.best.clone());
+        candidates.extend(rest);
+        let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
+        if min_banks > self.pool_banks {
+            bail!(
+                "job '{}' ({}): smallest configuration needs {min_banks} banks \
+                 but the pool has {}",
+                spec.kernel,
+                spec.dims_label(),
+                self.pool_banks
+            );
+        }
+        Ok(Prepared { spec: spec.clone(), info, candidates, cache_hit })
+    }
+
+    /// Schedule `specs` over the bank pool. Plans come from (and new
+    /// explorations go into) `cache`.
+    pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
+        let stats0 = cache.stats();
+        let mut prepared: Vec<Prepared> =
+            specs.iter().map(|s| self.prepare(s, cache)).collect::<Result<_>>()?;
+        // FIFO by arrival time; equal arrivals keep submission order
+        // (sort_by is stable).
+        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        let mut pending: VecDeque<Prepared> = prepared.into();
+
+        let mut running: Vec<(f64, u64)> = Vec::new(); // (finish, banks)
+        let mut clock = 0.0f64;
+        let mut free = self.pool_banks;
+        let mut jobs: Vec<ScheduledJob> = Vec::new();
+        let mut peak_concurrency = 0usize;
+        let mut peak_banks = 0u64;
+        let mut bank_seconds = 0.0f64;
+
+        while let Some(head) = pending.front() {
+            let arrival = head.spec.arrival_s;
+            let admit = if arrival <= clock {
+                head.candidates
+                    .iter()
+                    .enumerate()
+                    .find(|(_, c)| c.hbm_banks <= free)
+                    .map(|(rank, c)| (rank, c.clone()))
+            } else {
+                None
+            };
+
+            if let Some((rank, choice)) = admit {
+                let head = pending.pop_front().unwrap();
+                let sim = simulate(&head.info, self.platform, head.spec.iter, choice.config);
+                let duration = sim.seconds.max(1e-12);
+                free -= choice.hbm_banks;
+                running.push((clock + duration, choice.hbm_banks));
+                peak_concurrency = peak_concurrency.max(running.len());
+                peak_banks = peak_banks.max(self.pool_banks - free);
+                bank_seconds += choice.hbm_banks as f64 * duration;
+                jobs.push(ScheduledJob {
+                    config: choice.config,
+                    hbm_banks: choice.hbm_banks,
+                    fallback_rank: rank,
+                    cache_hit: head.cache_hit,
+                    queue_wait_s: clock - arrival,
+                    start_s: clock,
+                    finish_s: clock + duration,
+                    cells: head.spec.total_cells(),
+                    choice,
+                    sim,
+                    spec: head.spec,
+                });
+                continue;
+            }
+
+            // Head can't start yet: advance to the next event (a completion
+            // frees banks, or the head's arrival time is reached).
+            let next_finish =
+                running.iter().map(|&(f, _)| f).fold(f64::INFINITY, f64::min);
+            let next = if arrival > clock { next_finish.min(arrival) } else { next_finish };
+            if !next.is_finite() {
+                // Unreachable: prepare() guarantees some candidate fits an
+                // empty pool, and an empty `running` means the pool is full.
+                bail!("scheduler stalled with {} job(s) pending", pending.len());
+            }
+            clock = next;
+            running.retain(|&(finish, banks)| {
+                if finish <= clock {
+                    free += banks;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        let makespan_s = jobs.iter().map(|j| j.finish_s).fold(0.0f64, f64::max);
+        let stats1 = cache.stats();
+        Ok(Schedule {
+            jobs,
+            pool_banks: self.pool_banks,
+            makespan_s,
+            peak_concurrency,
+            peak_banks_in_use: peak_banks,
+            bank_seconds_used: bank_seconds,
+            cache_hits: stats1.hits - stats0.hits,
+            explorations: stats1.misses - stats0.misses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::jobs::demo_jobs;
+
+    #[test]
+    fn demo_mix_packs_concurrently() {
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let schedule =
+            Scheduler::new(&p).schedule(&demo_jobs(), &mut cache).unwrap();
+        assert_eq!(schedule.jobs.len(), 7);
+        assert!(schedule.peak_concurrency >= 3, "got {}", schedule.peak_concurrency);
+        assert!(schedule.peak_banks_in_use <= 32);
+        let util = schedule.bank_utilization();
+        assert!(util > 0.0 && util <= 1.0, "{util}");
+    }
+
+    #[test]
+    fn never_oversubscribes_banks() {
+        // sweep a shrinking pool; at every instant Σ banks of overlapping
+        // jobs must stay within it
+        let p = FpgaPlatform::u280();
+        for pool in [32u64, 16, 8, 4] {
+            let mut cache = PlanCache::in_memory();
+            let schedule = Scheduler::new(&p)
+                .with_pool_banks(pool)
+                .schedule(&demo_jobs(), &mut cache)
+                .unwrap();
+            for a in &schedule.jobs {
+                let mid = (a.start_s + a.finish_s) / 2.0;
+                let in_use: u64 = schedule
+                    .jobs
+                    .iter()
+                    .filter(|b| b.start_s <= mid && mid < b.finish_s)
+                    .map(|b| b.hbm_banks)
+                    .sum();
+                assert!(in_use <= pool, "pool {pool}: {in_use} banks at t={mid}");
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_job_rejected() {
+        // a 1-bank pool can't host jacobi2d's 2-bank minimum (in+out)
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let err = Scheduler::new(&p)
+            .with_pool_banks(1)
+            .schedule(&demo_jobs()[..1], &mut cache)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("banks"), "{err}");
+    }
+}

@@ -31,6 +31,14 @@ impl Json {
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|n| n as u64)
     }
+    /// Strict integer view: `Some` only when the number is a non-negative
+    /// integer exactly representable in an f64 (`as_u64` is a truncating,
+    /// saturating cast — `-3` becomes 0, `2.5` becomes 2).
+    pub fn as_exact_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n < 9e15)
+            .map(|n| n as u64)
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -367,6 +375,18 @@ mod tests {
         assert_eq!(a[0].as_f64(), Some(-3.0));
         assert_eq!(a[1].as_f64(), Some(2.5));
         assert_eq!(a[2].as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn exact_u64_rejects_lossy_casts() {
+        let j = Json::parse("[-3, 2.5, 1e3, 0, 1e30]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_exact_u64(), None, "negative");
+        assert_eq!(a[1].as_exact_u64(), None, "fractional");
+        assert_eq!(a[2].as_exact_u64(), Some(1000));
+        assert_eq!(a[3].as_exact_u64(), Some(0));
+        assert_eq!(a[4].as_exact_u64(), None, "beyond exact f64 integers");
+        assert_eq!(Json::Str("3".into()).as_exact_u64(), None);
     }
 
     #[test]

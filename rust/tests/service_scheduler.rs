@@ -1,0 +1,215 @@
+//! Integration tests for the `sasa::service` serving layer: plan-cache
+//! identity and persistence, bank-pool fallback, and starvation-free FIFO
+//! admission (the ISSUE-1 acceptance checklist).
+
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::{explore, Parallelism};
+use sasa::platform::FpgaPlatform;
+use sasa::service::{demo_jobs, BatchExecutor, JobSpec, PlanCache, Scheduler};
+
+fn u280() -> FpgaPlatform {
+    FpgaPlatform::u280()
+}
+
+// ---------------------------------------------------------------------------
+// plan cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_hit_identical_to_fresh_explore() {
+    let p = u280();
+    let dir = std::env::temp_dir().join("sasa_service_cache_identity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.json");
+    let _ = std::fs::remove_file(&path);
+
+    for (n, (src, dims, iter)) in [
+        (b::JACOBI2D_DSL, vec![9720u64, 1024], 64u64),
+        (b::HOTSPOT_DSL, vec![720, 1024], 16),
+        (b::JACOBI3D_DSL, vec![9720, 32, 32], 8),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let info = analyze(&parse(&b::with_dims(src, &dims, iter)).unwrap());
+        let fresh = explore(&info, &p, iter);
+
+        let mut cold = PlanCache::at_path(&path).unwrap();
+        let (r, hit) = cold.get_or_explore(&info, &p, iter);
+        assert!(!hit);
+        assert_eq!(r, fresh);
+        cold.save().unwrap();
+
+        // a new cache instance (fresh process) must hit and return the
+        // exact same DseChoice, through the JSON round-trip
+        let mut warm = PlanCache::at_path(&path).unwrap();
+        assert_eq!(warm.len(), n + 1, "cache file accumulates one plan per kernel");
+        let (r2, hit2) = warm.get_or_explore(&info, &p, iter);
+        assert!(hit2, "{}: persisted plan must be a hit", info.name);
+        assert_eq!(r2.best, fresh.best, "{}: cached best != fresh explore", info.name);
+        assert_eq!(r2, fresh);
+        assert_eq!(warm.stats().misses, 0, "zero re-exploration on the warm path");
+    }
+}
+
+#[test]
+fn second_scheduling_pass_skips_exploration() {
+    let p = u280();
+    let mut cache = PlanCache::in_memory();
+    let exec = BatchExecutor::new(&p);
+    let first = exec.run(&demo_jobs(), &mut cache).unwrap();
+    assert_eq!(first.schedule.explorations, 7);
+    assert_eq!(first.schedule.cache_hits, 0);
+    let second = exec.run(&demo_jobs(), &mut cache).unwrap();
+    assert_eq!(second.schedule.explorations, 0, "identical batch must be all hits");
+    assert_eq!(second.schedule.cache_hits, 7);
+    // and the resulting timelines are identical (same plans, same sim)
+    assert_eq!(first.schedule.makespan_s, second.schedule.makespan_s);
+}
+
+// ---------------------------------------------------------------------------
+// bank-pool fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_exhaustion_forces_next_best_fallback() {
+    let p = u280();
+    // jacobi2d @ iter=2: the DSE's best is Spatial_R(k=15) = 30 banks.
+    // Two of them cannot both hold their best on a 32-bank pool: the first
+    // takes 30, leaving 2 — exactly the temporal design's footprint.
+    let jobs = vec![
+        JobSpec::new("a", "jacobi2d", vec![9720, 1024], 2),
+        JobSpec::new("b", "jacobi2d", vec![9720, 1024], 2),
+    ];
+    let mut cache = PlanCache::in_memory();
+    let schedule = Scheduler::new(&p).schedule(&jobs, &mut cache).unwrap();
+    let first = &schedule.jobs[0];
+    let second = &schedule.jobs[1];
+
+    assert_eq!(first.fallback_rank, 0, "head of an empty pool gets its best");
+    assert_eq!(first.config.parallelism, Parallelism::SpatialR);
+    assert_eq!(first.hbm_banks, 30);
+
+    assert!(second.fallback_rank > 0, "second job must downgrade");
+    assert!(
+        second.hbm_banks <= 2,
+        "fallback must fit the 2 remaining banks, took {}",
+        second.hbm_banks
+    );
+    assert_eq!(second.start_s, first.start_s, "fallback admits concurrently");
+    assert!(schedule.peak_banks_in_use <= 32);
+
+    // sanity: the fallback really is drawn from the explored per_scheme set
+    let info = analyze(&parse(&b::with_dims(b::JACOBI2D_DSL, &[9720, 1024], 2)).unwrap());
+    let dse = explore(&info, &p, 2);
+    assert!(dse.per_scheme.iter().any(|c| c.config == second.config));
+}
+
+#[test]
+fn tiny_pool_serializes_jobs() {
+    // with only 2 banks, every jacobi2d job runs its smallest design, one
+    // at a time, in submission order
+    let p = u280();
+    let jobs: Vec<JobSpec> = (0..3)
+        .map(|i| JobSpec::new(&format!("t{i}"), "jacobi2d", vec![720, 1024], 4))
+        .collect();
+    let mut cache = PlanCache::in_memory();
+    let schedule = Scheduler::new(&p)
+        .with_pool_banks(2)
+        .schedule(&jobs, &mut cache)
+        .unwrap();
+    assert_eq!(schedule.peak_concurrency, 1);
+    for w in schedule.jobs.windows(2) {
+        assert!(w[1].start_s >= w[0].finish_s - 1e-12);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FIFO fairness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fifo_never_starves_a_large_job() {
+    let p = u280();
+    // a stream of small (2-bank-capable) jobs around one large job whose
+    // best design wants 30 banks
+    let mut jobs = vec![
+        JobSpec::new("small", "hotspot", vec![720, 1024], 64),
+        JobSpec::new("small", "blur", vec![720, 1024], 64),
+        JobSpec::new("LARGE", "jacobi2d", vec![9720, 1024], 2),
+    ];
+    for i in 0..6 {
+        jobs.push(JobSpec::new(&format!("late{i}"), "hotspot", vec![720, 1024], 64));
+    }
+    let mut cache = PlanCache::in_memory();
+    let schedule = Scheduler::new(&p).schedule(&jobs, &mut cache).unwrap();
+
+    // FIFO: start times never decrease across submission order, so no job
+    // that arrived after LARGE begins before it
+    for w in schedule.jobs.windows(2) {
+        assert!(
+            w[1].start_s >= w[0].start_s - 1e-12,
+            "{} started before {}",
+            w[1].spec.tenant,
+            w[0].spec.tenant
+        );
+    }
+    let large = schedule
+        .jobs
+        .iter()
+        .find(|j| j.spec.tenant == "LARGE")
+        .expect("large job scheduled");
+    for late in schedule.jobs.iter().filter(|j| j.spec.tenant.starts_with("late")) {
+        assert!(
+            late.start_s >= large.start_s - 1e-12,
+            "late job started at {} before LARGE at {}",
+            late.start_s,
+            large.start_s
+        );
+    }
+    // every job completes
+    assert_eq!(schedule.jobs.len(), jobs.len());
+    assert!(schedule.jobs.iter().all(|j| j.finish_s > j.start_s));
+}
+
+#[test]
+fn arrival_times_respected() {
+    let p = u280();
+    let mut early = JobSpec::new("a", "blur", vec![720, 1024], 8);
+    early.arrival_s = 0.0;
+    let mut late = JobSpec::new("b", "blur", vec![720, 1024], 8);
+    late.arrival_s = 1.0;
+    let mut cache = PlanCache::in_memory();
+    // submission order is late-first: arrival order must win
+    let schedule = Scheduler::new(&p)
+        .schedule(&[late.clone(), early.clone()], &mut cache)
+        .unwrap();
+    assert_eq!(schedule.jobs[0].spec.tenant, "a");
+    let b_job = &schedule.jobs[1];
+    assert!(b_job.start_s >= 1.0, "late job cannot start before it arrives");
+    assert_eq!(b_job.queue_wait_s, b_job.start_s - 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// acceptance scenario: the serving demo mix on the 32-bank U280
+// ---------------------------------------------------------------------------
+
+#[test]
+fn acceptance_demo_mix_three_concurrent_within_32_banks() {
+    let p = u280();
+    let mut cache = PlanCache::in_memory();
+    let report = BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap();
+    let s = &report.schedule;
+    assert!(s.peak_concurrency >= 3, "want >= 3 concurrent kernels, got {}", s.peak_concurrency);
+    assert_eq!(s.pool_banks, 32);
+    assert!(s.peak_banks_in_use <= 32);
+    assert!(s.bank_utilization() > 0.0 && s.bank_utilization() <= 1.0);
+    // the first three submitted kernels overlap at t = 0
+    let at_zero = s.jobs.iter().filter(|j| j.start_s == 0.0).count();
+    assert!(at_zero >= 3, "{at_zero} jobs admitted at t=0");
+    // per-tenant throughput is reported for every tenant
+    assert_eq!(report.tenants.len(), 3);
+    for t in &report.tenants {
+        assert!(t.gcell_per_s > 0.0, "{}", t.tenant);
+    }
+}
