@@ -1,69 +1,155 @@
 //! Bench: L3 hot paths — the performance-optimization targets of
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf, extended with the ISSUE 2 tiered-engine series.
 //!
-//! * cycle-simulator throughput (simulated cells per wall second) — the
-//!   full Fig 10–17 sweep must run in seconds;
-//! * DSE latency per (kernel, iter) query;
-//! * coordinator tile geometry + halo-exchange machinery (allocation-free
-//!   steady state);
-//! * PJRT execute latency per tile (the real request path), when
-//!   artifacts are available;
-//! * manifest/plan JSON parsing.
+//! * cycle-simulator throughput: the closed-form steady-state fast-forward
+//!   vs the pre-PR explicit row walk (`sim: hybrid_s` vs `sim: ... walk`);
+//! * DSE latency per (kernel, iter) query and the full Fig 10–17 sweep;
+//! * DSL interpreter Mcell-iters/s: the tiered interior/border-split
+//!   engine vs the naive per-cell oracle (the pre-PR interpreter), on
+//!   jacobi2d and hotspot;
+//! * coordinator tile geometry + allocation-free row-window copies;
+//! * PJRT execute latency per tile and manifest parsing, when artifacts
+//!   are available.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath`. Set `SASA_BENCH_SMOKE=1` for the CI
+//! smoke invocation (reduced sizes, seconds not minutes). Besides the
+//! table/CSV, emits `BENCH_hotpath.json` with named series and derived
+//! speedups so the perf trajectory is machine-readable across PRs.
 
-use sasa::bench::{bench, results_table};
+use std::collections::BTreeMap;
+
+use sasa::bench::{bench, results_table, Measurement};
 use sasa::coordinator::grid::partition;
 use sasa::dsl::{analyze, benchmarks as b, parse};
 use sasa::model::{explore, Config, Parallelism};
 use sasa::platform::FpgaPlatform;
-use sasa::reference::Grid;
+use sasa::reference::{interpret, interpret_naive, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
 use sasa::runtime::{Manifest, Runtime};
-use sasa::sim::simulate;
-use sasa::util::json::Json;
+use sasa::sim::{simulate, simulate_walk};
+use sasa::util::json::{num, obj, Json};
 use sasa::util::prng::Prng;
 
+fn series_json(m: &Measurement) -> Json {
+    obj(vec![
+        ("median_s", num(m.median_s)),
+        ("mean_s", num(m.mean_s)),
+        ("min_s", num(m.min_s)),
+        ("samples", num(m.iters as f64)),
+    ])
+}
+
 fn main() {
+    let smoke = std::env::var("SASA_BENCH_SMOKE").is_ok();
+    // interpreter workload: headline-ish in full mode, tiny in smoke mode
+    let (irows, icols, iiter) = if smoke { (96usize, 256usize, 2u64) } else { (768, 1024, 8) };
+    let (sim_samples, interp_samples, sweep_samples, dse_samples) =
+        if smoke { (5u32, 3u32, 2u32, 8u32) } else { (30, 10, 5, 50) };
+
     let platform = FpgaPlatform::u280();
     let info = analyze(&parse(b::JACOBI2D_DSL).unwrap());
     let mut results = Vec::new();
+    let mut derived: BTreeMap<String, Json> = BTreeMap::new();
 
-    // 1. simulator: one full 5-scheme config evaluation at headline size
+    // 1. simulator: one full 5-scheme config evaluation at headline size —
+    //    steady-state fast-forward vs the pre-PR row walk
     let cfg = Config { parallelism: Parallelism::HybridS, k: 3, s: 7 };
-    results.push(bench("sim: hybrid_s 9720x1024 iter=64", 3, 30, || {
+    results.push(bench("sim: hybrid_s 9720x1024 iter=64", 3, sim_samples, || {
         std::hint::black_box(simulate(&info, &platform, 64, cfg));
     }));
-    let m = results.last().unwrap();
-    let cells_per_s = 9720.0 * 1024.0 * 64.0 / m.median_s;
-    println!("simulator rate: {:.1} Mcell-iters per wall-second\n", cells_per_s / 1e6);
+    let sim_fast = results.last().unwrap().clone();
+    results.push(bench("sim: hybrid_s walk (pre-PR row-walk)", 3, sim_samples, || {
+        std::hint::black_box(simulate_walk(&info, &platform, 64, cfg));
+    }));
+    let sim_walk = results.last().unwrap().clone();
+    let sim_cells_per_s = 9720.0 * 1024.0 * 64.0 / sim_fast.median_s;
+    let sim_speedup = sim_walk.median_s / sim_fast.median_s;
+    println!(
+        "simulator rate: {:.1} Mcell-iters per wall-second ({sim_speedup:.1}x vs row walk)\n",
+        sim_cells_per_s / 1e6
+    );
+    derived.insert("sim_hybrid_s_mcells_per_s".into(), num(sim_cells_per_s / 1e6));
+    derived.insert("sim_fastforward_speedup".into(), num(sim_speedup));
 
     // 2. DSE end-to-end for one (kernel, iter)
-    results.push(bench("dse: explore jacobi2d iter=64", 3, 50, || {
+    results.push(bench("dse: explore jacobi2d iter=64", 3, dse_samples, || {
         std::hint::black_box(explore(&info, &platform, 64));
     }));
+    derived.insert("dse_latency_s".into(), num(results.last().unwrap().median_s));
 
     // 3. full Fig 10-17 single-kernel sweep (28 DSE + sim evaluations)
-    results.push(bench("report: fig10_17 one kernel", 1, 5, || {
+    results.push(bench("report: fig10_17 one kernel", 1, sweep_samples, || {
         std::hint::black_box(sasa::metrics::reports::fig10_17(&platform, "jacobi2d"));
     }));
+    derived.insert("fig10_17_sweep_s".into(), num(results.last().unwrap().median_s));
 
-    // 4. partitioning geometry
+    // 4. interpreter Mcell-iters/s: tiered engine vs the naive per-cell
+    //    oracle (identical algorithm to the pre-PR interpreter)
+    let mut rng = Prng::new(7);
+    for (kernel, src) in [("jacobi2d", b::JACOBI2D_DSL), ("hotspot", b::HOTSPOT_DSL)] {
+        let prog = parse(&b::with_dims(src, &[irows as u64, icols as u64], iiter)).unwrap();
+        let kinfo = analyze(&prog);
+        let inputs: Vec<Grid> = (0..kinfo.n_inputs)
+            .map(|_| Grid::from_vec(irows, icols, rng.grid(irows, icols, 0.0, 1.0)))
+            .collect();
+        // sanity: the engine must be bit-identical to the oracle
+        assert_eq!(
+            interpret(&prog, &inputs, irows, iiter),
+            interpret_naive(&prog, &inputs, irows, iiter),
+            "tiered engine diverged from the naive oracle on {kernel}"
+        );
+        let cell_iters = (irows * icols) as f64 * iiter as f64;
+        results.push(bench(
+            &format!("interp: naive {kernel} {irows}x{icols} iter={iiter}"),
+            1,
+            interp_samples,
+            || {
+                std::hint::black_box(interpret_naive(&prog, &inputs, irows, iiter));
+            },
+        ));
+        let naive = results.last().unwrap().clone();
+        results.push(bench(
+            &format!("interp: tiered {kernel} {irows}x{icols} iter={iiter}"),
+            1,
+            interp_samples,
+            || {
+                std::hint::black_box(interpret(&prog, &inputs, irows, iiter));
+            },
+        ));
+        let tiered = results.last().unwrap().clone();
+        let naive_rate = cell_iters / naive.median_s / 1e6;
+        let tiered_rate = cell_iters / tiered.median_s / 1e6;
+        let speedup = naive.median_s / tiered.median_s;
+        println!(
+            "interp {kernel}: naive {naive_rate:.1} -> tiered {tiered_rate:.1} \
+             Mcell-iters/s ({speedup:.1}x)\n"
+        );
+        derived.insert(format!("interp_naive_{kernel}_mcells_per_s"), num(naive_rate));
+        derived.insert(format!("interp_tiered_{kernel}_mcells_per_s"), num(tiered_rate));
+        derived.insert(format!("interp_speedup_{kernel}"), num(speedup));
+    }
+
+    // 5. partitioning geometry
     results.push(bench("grid: partition 9720 rows / 15 PEs", 10, 1000, || {
         std::hint::black_box(partition(9720, 15, 64));
     }));
 
-    // 5. grid row copies (the coordinator's halo slices)
-    let mut rng = Prng::new(7);
+    // 6. grid row copies: the old allocating slice-then-write round trip
+    //    vs the borrowed row-window copy the coordinator now uses (both
+    //    write 256 rows into a pre-allocated destination)
     let g = Grid::from_vec(768, 1024, rng.grid(768, 1024, 0.0, 1.0));
-    results.push(bench("grid: slice+write 2x256 rows of 1024", 10, 500, || {
+    let mut h = g.clone();
+    results.push(bench("grid: slice+write 256 rows of 1024 (alloc)", 10, 500, || {
         let s = g.slice_rows(128, 384);
-        let mut h = g.clone();
         h.write_rows(0, &s);
-        std::hint::black_box(h);
+        std::hint::black_box(&mut h);
+    }));
+    results.push(bench("grid: copy_rows_from 256 rows of 1024", 10, 500, || {
+        h.copy_rows_from(0, &g, 128, 256);
+        std::hint::black_box(&mut h);
     }));
 
-    // 6. manifest JSON parse
+    // 7. manifest JSON parse
     let manifest_path = default_artifact_dir().join("manifest.json");
     if let Ok(text) = std::fs::read_to_string(&manifest_path) {
         results.push(bench("json: parse manifest", 10, 500, || {
@@ -71,7 +157,7 @@ fn main() {
         }));
     }
 
-    // 7. the real request path: one PJRT tile execution (64x64, 1 step)
+    // 8. the real request path: one PJRT tile execution (64x64, 1 step)
     if manifest_path.exists() {
         let rt = Runtime::new(Manifest::load(default_artifact_dir()).unwrap()).unwrap();
         let entry = rt.manifest().find("jacobi2d", 64, 96).unwrap().clone();
@@ -89,4 +175,20 @@ fn main() {
     let t = results_table("L3 hot paths", &results);
     println!("{}", t.to_markdown());
     let _ = t.save_csv("hotpath");
+
+    // machine-readable series for cross-PR perf tracking
+    let mut series: BTreeMap<String, Json> = BTreeMap::new();
+    for m in &results {
+        series.insert(m.name.clone(), series_json(m));
+    }
+    let json = obj(vec![
+        ("version", num(1.0)),
+        ("smoke", Json::Bool(smoke)),
+        ("series", Json::Obj(series)),
+        ("derived", Json::Obj(derived)),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", json.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

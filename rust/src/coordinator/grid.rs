@@ -7,6 +7,8 @@
 //! `n` iterations contaminate `pad_r·n` rows inward from a cut edge, so a
 //! tile extended by that much yields bit-correct owned rows.
 
+use crate::reference::Grid;
+
 /// A PE group's owned row range [start, end) plus the extended range
 /// [ext_start, ext_end) it actually processes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +57,45 @@ pub fn partition(rows: usize, k: usize, ext: usize) -> Vec<Tile> {
     tiles
 }
 
+/// Exchange `depth` owned-edge rows between neighbouring resident tiles,
+/// in place (the on-chip border streams of Fig 5b / Fig 6b). Each adjacent
+/// pair is split with `split_at_mut` and the row windows copied directly —
+/// no channels and no intermediate `slice_rows` allocations, so the
+/// steady-state exchange moves bytes and nothing else. Semantics match the
+/// old channel implementation: every outgoing band reads the pre-exchange
+/// state. That requires each tile's owned band to hold at least `depth`
+/// rows — then every source is an owned row, which no exchange ever
+/// writes, so the copies never alias. Thinner tiles are rejected loudly
+/// (the old channel code panicked on their out-of-bounds band slices; an
+/// in-place copy would instead silently forward a neighbour's freshly
+/// written halo). Returns the number of halo rows moved.
+pub fn exchange_borders(tiles: &[Tile], state: &mut [Grid], depth: usize) -> u64 {
+    assert_eq!(tiles.len(), state.len());
+    let k = tiles.len();
+    if k < 2 || depth == 0 {
+        return 0;
+    }
+    assert!(
+        tiles.iter().all(|t| t.owned_rows() >= depth),
+        "halo depth {depth} exceeds a tile's owned rows — shrink k or the halo"
+    );
+    let mut exchanged = 0u64;
+    for i in 0..k - 1 {
+        let (upper, lower) = state.split_at_mut(i + 1);
+        let up = &mut upper[i];
+        let dn = &mut lower[0];
+        let (_ua, ub) = tiles[i].owned_local();
+        let (da, _db) = tiles[i + 1].owned_local();
+        assert!(da >= depth && ub + depth <= up.rows, "halo exceeds tile extension");
+        // upper tile's bottom owned rows -> lower tile's top halo
+        dn.copy_rows_from(da - depth, up, ub - depth, depth);
+        // lower tile's top owned rows -> upper tile's bottom halo
+        up.copy_rows_from(ub, dn, da, depth);
+        exchanged += 2 * depth as u64;
+    }
+    exchanged
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +126,60 @@ mod tests {
             assert_eq!(t.ext_start + a, t.start);
             assert_eq!(t.ext_start + b, t.end);
         }
+    }
+
+    #[test]
+    fn exchange_borders_matches_channel_semantics() {
+        // the in-place split_at_mut exchange must equal the old
+        // channel-based one: all sends read the pre-exchange state
+        let mut rng = Prng::new(0xBEEF);
+        let (rows, cols, k, depth) = (48usize, 6usize, 4usize, 2usize);
+        let tiles = partition(rows, k, depth);
+        let global = Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0));
+        let mut state: Vec<Grid> = tiles
+            .iter()
+            .map(|t| {
+                // shift each tile so stale halo is distinguishable
+                let mut g = global.slice_rows(t.ext_start, t.ext_end);
+                for v in &mut g.data {
+                    *v += t.index as f32;
+                }
+                g
+            })
+            .collect();
+        let pre = state.clone();
+        let moved = exchange_borders(&tiles, &mut state, depth);
+        assert_eq!(moved, 2 * depth as u64 * (k as u64 - 1));
+        for (i, t) in tiles.iter().enumerate() {
+            let (a, b) = t.owned_local();
+            if i > 0 {
+                let (_pa, pb) = tiles[i - 1].owned_local();
+                let want = pre[i - 1].slice_rows(pb - depth, pb);
+                assert_eq!(state[i].slice_rows(a - depth, a), want, "tile {i} top halo");
+            }
+            if i + 1 < tiles.len() {
+                let (na, _nb) = tiles[i + 1].owned_local();
+                let want = pre[i + 1].slice_rows(na, na + depth);
+                assert_eq!(state[i].slice_rows(b, b + depth), want, "tile {i} bottom halo");
+            }
+            // owned rows are never written by an exchange
+            assert_eq!(state[i].slice_rows(a, b), pre[i].slice_rows(a, b), "tile {i} owned");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "owned rows")]
+    fn exchange_borders_rejects_thin_tiles() {
+        // owned band thinner than the halo depth: an in-place copy would
+        // silently forward a neighbour's freshly written halo, so the
+        // exchange must reject the geometry loudly (the old channel code
+        // panicked on these configs via out-of-bounds band slices)
+        let (rows, k, depth) = (100usize, 13usize, 8usize);
+        let tiles = partition(rows, k, depth);
+        assert!(tiles.iter().any(|t| t.owned_rows() < depth));
+        let mut state: Vec<Grid> =
+            tiles.iter().map(|t| Grid::new(t.ext_rows(), 4)).collect();
+        exchange_borders(&tiles, &mut state, depth);
     }
 
     #[test]

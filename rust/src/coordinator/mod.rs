@@ -10,8 +10,8 @@
 //!   iterations with zero communication; the redundant halo absorbs the
 //!   cut-edge contamination.
 //! * **Spatial_S** — k resident tiles extended by `pad_r`; after every
-//!   iteration neighbours exchange `pad_r` border rows over channels (the
-//!   on-chip border streams).
+//!   iteration neighbours exchange `pad_r` border rows in place (the
+//!   on-chip border streams, `grid::exchange_borders`).
 //! * **Hybrid_R** — ⌈iter/s⌉ rounds; each round re-reads an extended tile
 //!   (`pad_r·s`) from the global grid — the HBM re-read of Fig 6a.
 //! * **Hybrid_S** — k resident tiles extended by `pad_r·s`; one batched
@@ -32,7 +32,25 @@ use crate::model::{Config, Parallelism};
 use crate::reference::Grid;
 use crate::runtime::{ArtifactEntry, Runtime};
 
-use grid::{partition, Tile};
+use grid::{exchange_borders, partition, Tile};
+
+/// Border-streaming schemes need every tile's owned band to cover the
+/// exchange depth (see `grid::exchange_borders`); reject the geometry
+/// through the `Result` chain instead of panicking mid-batch.
+fn check_exchange_geometry(tiles: &[Tile], depth: usize, scheme: &str) -> Result<()> {
+    if tiles.len() < 2 {
+        return Ok(());
+    }
+    let min_owned = tiles.iter().map(Tile::owned_rows).min().unwrap();
+    if min_owned < depth {
+        bail!(
+            "{scheme} with k={}: halo depth {depth} exceeds the smallest tile's \
+             {min_owned} owned rows — reduce k (or s)",
+            tiles.len()
+        );
+    }
+    Ok(())
+}
 
 /// A stencil workload: parsed program + concrete input grids.
 pub struct StencilJob {
@@ -121,8 +139,7 @@ impl<'rt> Coordinator<'rt> {
         let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
         for (i, g) in job.inputs.iter().enumerate() {
             let src = if i == upd { state } else { g };
-            let slice = src.slice_rows(tile.ext_start, tile.ext_end);
-            canvases.push(self.runtime.pad_to_canvas(entry, &slice));
+            canvases.push(self.runtime.pad_rows_to_canvas(entry, src, tile.ext_start, tile.ext_end));
         }
         self.runtime
             .run_stencil(entry, &canvases, tile.ext_rows() as u64, nsteps)
@@ -162,7 +179,7 @@ impl<'rt> Coordinator<'rt> {
         while remaining > 0 {
             let steps = remaining.min(s);
             let canvas = self.run_tile(job, entry, &tile, &state, steps)?;
-            state = canvas.slice_rows(0, job.rows());
+            state.copy_rows_from(0, &canvas, 0, job.rows());
             remaining -= steps;
             rounds += 1;
         }
@@ -179,7 +196,7 @@ impl<'rt> Coordinator<'rt> {
         for tile in &tiles {
             let canvas = self.run_tile(job, entry, tile, state, job.iter)?;
             let (a, b) = tile.owned_local();
-            out.write_rows(tile.start, &canvas.slice_rows(a, b));
+            out.copy_rows_from(tile.start, &canvas, a, b - a);
         }
         Ok((out, 1, k, 0))
     }
@@ -187,6 +204,9 @@ impl<'rt> Coordinator<'rt> {
     fn run_spatial_s(&self, job: &StencilJob, k: u64) -> Result<(Grid, u64, u64, u64)> {
         let pr = job.info.radius_rows as usize;
         let tiles = partition(job.rows(), k as usize, pr);
+        if job.iter > 0 {
+            check_exchange_geometry(&tiles, pr, "Spatial_S")?;
+        }
         let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
         let entry = self.artifact(job, max_rows)?;
         // resident per-PE state = extended tile of the iterated grid
@@ -204,7 +224,7 @@ impl<'rt> Coordinator<'rt> {
                     .enumerate()
                     .filter(|(i, _)| *i != job.update_idx())
                     .map(|(i, g)| {
-                        (i, self.runtime.pad_to_canvas(entry, &g.slice_rows(t.ext_start, t.ext_end)))
+                        (i, self.runtime.pad_rows_to_canvas(entry, g, t.ext_start, t.ext_end))
                     })
                     .collect()
             })
@@ -228,63 +248,20 @@ impl<'rt> Coordinator<'rt> {
                 let canvas =
                     self.runtime
                         .run_stencil(entry, &canvases, t.ext_rows() as u64, 1)?;
-                *st = canvas.slice_rows(0, t.ext_rows());
+                st.copy_rows_from(0, &canvas, 0, t.ext_rows());
                 invocations += 1;
             }
-            // border streaming: each PE sends its owned edge rows to its
-            // neighbours over channels, then installs what it received
-            halo_rows += self.exchange_borders(&tiles, &mut state, pr)?;
+            // border streaming: each PE's owned edge rows land in its
+            // neighbours' halo bands (in-place split_at_mut row windows)
+            halo_rows += exchange_borders(&tiles, &mut state, pr);
         }
         // assemble owned regions
         let mut out = job.inputs[job.update_idx()].clone();
         for (t, st) in tiles.iter().zip(&state) {
             let (a, b) = t.owned_local();
-            out.write_rows(t.start, &st.slice_rows(a, b));
+            out.copy_rows_from(t.start, st, a, b - a);
         }
         Ok((out, job.iter, invocations, halo_rows))
-    }
-
-    /// Exchange `depth` owned-edge rows between neighbouring resident tiles
-    /// via mpsc channels (the on-chip border streams of Fig 5b / Fig 6b).
-    fn exchange_borders(
-        &self,
-        tiles: &[Tile],
-        state: &mut [Grid],
-        depth: usize,
-    ) -> Result<u64> {
-        use std::sync::mpsc;
-        let k = tiles.len();
-        let mut exchanged = 0u64;
-        // channels[i] carries rows into PE i
-        let (txs, rxs): (Vec<_>, Vec<_>) =
-            (0..k).map(|_| mpsc::channel::<(bool, Grid)>()).unzip();
-        // send phase: PE i streams its owned top rows to i-1, bottom to i+1
-        for (i, (t, st)) in tiles.iter().zip(state.iter()).enumerate() {
-            let (a, b) = t.owned_local();
-            if i > 0 {
-                let rows = st.slice_rows(a, a + depth);
-                txs[i - 1].send((false, rows)).expect("channel open");
-            }
-            if i + 1 < k {
-                let rows = st.slice_rows(b - depth, b);
-                txs[i + 1].send((true, rows)).expect("channel open");
-            }
-        }
-        drop(txs);
-        // receive phase: install halo bands
-        for (i, (t, st)) in tiles.iter().zip(state.iter_mut()).enumerate() {
-            let (a, b) = t.owned_local();
-            while let Ok((from_above, rows)) = rxs[i].try_recv() {
-                if from_above {
-                    // neighbour above sent its bottom rows -> our top halo
-                    st.write_rows(a - depth, &rows);
-                } else {
-                    st.write_rows(b, &rows);
-                }
-                exchanged += rows.rows as u64;
-            }
-        }
-        Ok(exchanged)
     }
 
     fn run_hybrid_r(&self, job: &StencilJob, k: u64, s: u64) -> Result<(Grid, u64, u64, u64)> {
@@ -304,7 +281,7 @@ impl<'rt> Coordinator<'rt> {
             for tile in &tiles {
                 let canvas = self.run_tile_state(job, entry, tile, &global, steps)?;
                 let (a, b) = tile.owned_local();
-                next.write_rows(tile.start, &canvas.slice_rows(a, b));
+                next.copy_rows_from(tile.start, &canvas, a, b - a);
                 invocations += 1;
             }
             global = next;
@@ -318,6 +295,11 @@ impl<'rt> Coordinator<'rt> {
         let pr = job.info.radius_rows as usize;
         let ext = pr * s as usize;
         let tiles = partition(job.rows(), k as usize, ext);
+        // a single round (iter <= s) never exchanges: the pr·s extension
+        // absorbs all contamination, so any tile geometry is fine
+        if job.iter > s {
+            check_exchange_geometry(&tiles, ext, "Hybrid_S")?;
+        }
         let max_rows = tiles.iter().map(Tile::ext_rows).max().unwrap();
         let entry = self.artifact(job, max_rows)?;
         let mut state: Vec<Grid> = tiles
@@ -332,23 +314,22 @@ impl<'rt> Coordinator<'rt> {
             // batched exchange of all ext rows at round start (first-stage
             // PEs only, §3.4); the initial slices already carry fresh halo
             if !first {
-                halo_rows += self.exchange_borders(&tiles, &mut state, ext)?;
+                halo_rows += exchange_borders(&tiles, &mut state, ext);
             }
             first = false;
             for (t, st) in tiles.iter().zip(state.iter_mut()) {
                 let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
                 for (i, g) in job.inputs.iter().enumerate() {
-                    let slice = if i == job.update_idx() {
-                        st.clone()
+                    canvases.push(if i == job.update_idx() {
+                        self.runtime.pad_to_canvas(entry, st)
                     } else {
-                        g.slice_rows(t.ext_start, t.ext_end)
-                    };
-                    canvases.push(self.runtime.pad_to_canvas(entry, &slice));
+                        self.runtime.pad_rows_to_canvas(entry, g, t.ext_start, t.ext_end)
+                    });
                 }
                 let canvas =
                     self.runtime
                         .run_stencil(entry, &canvases, t.ext_rows() as u64, steps)?;
-                *st = canvas.slice_rows(0, t.ext_rows());
+                st.copy_rows_from(0, &canvas, 0, t.ext_rows());
                 invocations += 1;
             }
             remaining -= steps;
@@ -357,7 +338,7 @@ impl<'rt> Coordinator<'rt> {
         let mut out = job.inputs[job.update_idx()].clone();
         for (t, st) in tiles.iter().zip(&state) {
             let (a, b) = t.owned_local();
-            out.write_rows(t.start, &st.slice_rows(a, b));
+            out.copy_rows_from(t.start, st, a, b - a);
         }
         Ok((out, rounds, invocations, halo_rows))
     }

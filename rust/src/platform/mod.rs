@@ -11,5 +11,8 @@
 pub mod spec;
 pub mod resources;
 
-pub use resources::{bottleneck, max_pe_by_resource, pe_resources, DesignStyle, Resources};
+pub use resources::{
+    bottleneck, max_pe_by_resource, pe_resources, DesignStyle, Resources,
+    RESOURCE_MODEL_VERSION,
+};
 pub use spec::FpgaPlatform;

@@ -17,6 +17,13 @@
 use crate::dsl::KernelInfo;
 use crate::platform::FpgaPlatform;
 
+/// Version of the resource/cost model in this module. Bump on ANY change
+/// to the anchors, structural formulas, BRAM costing, or style deltas:
+/// the persistent DSE plan cache (`service::cache`) stamps its entries
+/// with this constant and drops plans priced under an older model instead
+/// of serving stale configurations (ROADMAP "cache eviction/versioning").
+pub const RESOURCE_MODEL_VERSION: u64 = 1;
+
 /// FPGA resource vector.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Resources {

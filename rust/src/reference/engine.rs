@@ -1,0 +1,765 @@
+//! Tiered stencil execution engine.
+//!
+//! The pre-PR interpreter (preserved below as [`interpret_naive`], the
+//! bit-exact oracle) evaluated a stack-machine bytecode per cell with
+//! edge-clamped bounds checks on *every* tap, cloned the full grid every
+//! iteration, and spawned fresh scoped threads per statement per step.
+//! This engine keeps the same bytecode but executes it in two tiers:
+//!
+//! * **Interior** — cells where every tap is statically in bounds are
+//!   evaluated by an unclamped *row sweep*: each bytecode op runs
+//!   elementwise over a whole row window of operand buffers (loads become
+//!   `memcpy`s at constant flat offsets, arithmetic becomes tight
+//!   SIMD-friendly loops) — a software analogue of SODA/SASA line-buffer
+//!   reuse, where the per-cell dispatch cost is amortized over the row.
+//! * **Border** — the thin frame where clamping can trigger keeps the
+//!   per-cell clamped path.
+//!
+//! Iteration is double-buffered (`cur`/`next` swap instead of a clone per
+//! step), local-statement grids live in an arena allocated once per run,
+//! and row bands are fanned out over the persistent [`Pool`] instead of
+//! per-call thread spawns. Results are bit-identical to the naive oracle:
+//! the op sequence, operand order, and n-ary min/max fold order are
+//! exactly the per-cell VM's (see `tests/property_engine.rs`).
+
+use std::collections::HashMap;
+
+use crate::dsl::{analyze, BinOp, Expr, StencilProgram, StmtKind};
+use crate::util::pool::Pool;
+
+use super::Grid;
+
+/// The flattened column offset of a tap: (dp, dq) on dims (R, P, Q)
+/// reaches dp·Q + dq columns.
+fn flatten_offsets(offsets: &[i64], dims: &[u64]) -> (i64, i64) {
+    let tail = &dims[1..];
+    let mut stride = vec![1i64; tail.len()];
+    for i in (0..tail.len().saturating_sub(1)).rev() {
+        stride[i] = stride[i + 1] * tail[i + 1] as i64;
+    }
+    let dc = offsets[1..]
+        .iter()
+        .zip(&stride)
+        .map(|(o, s)| o * s)
+        .sum::<i64>();
+    (offsets[0], dc)
+}
+
+/// Compiled stencil expression: stack bytecode with pre-resolved grid
+/// slots and flattened tap offsets. ~6× faster than walking the AST with
+/// name lookups per cell (EXPERIMENTS.md §Perf L3-1).
+#[derive(Debug, Clone)]
+enum Op {
+    Const(f32),
+    /// Tap read from grids[slot] at (r+dr, c+dc) — clamped on the border
+    /// path, a direct slice window on the interior path.
+    Load { slot: usize, dr: i64, dc: i64 },
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    MaxN(usize),
+    MinN(usize),
+    Sqrt,
+    Abs,
+}
+
+#[derive(Debug, Clone)]
+struct Compiled {
+    ops: Vec<Op>,
+    /// Exact peak operand-stack depth (push/pop balance tracked during
+    /// compile — no longer the conservative `ops.len()` bound).
+    max_stack: usize,
+    /// Signed tap-offset extents over all loads: a cell (r, c) is
+    /// *interior* iff r+min_dr ≥ 0, r+max_dr < rows, c+min_dc ≥ 0 and
+    /// c+max_dc < cols — no clamping can trigger there.
+    min_dr: i64,
+    max_dr: i64,
+    min_dc: i64,
+    max_dc: i64,
+}
+
+fn compile_into(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64], ops: &mut Vec<Op>) {
+    match expr {
+        Expr::Num(n) => ops.push(Op::Const(*n as f32)),
+        Expr::Ref { array, offsets } => {
+            let (dr, dc) = flatten_offsets(offsets, dims);
+            ops.push(Op::Load { slot: slots[array.as_str()], dr, dc });
+        }
+        Expr::Bin { op, lhs, rhs } => {
+            compile_into(lhs, slots, dims, ops);
+            compile_into(rhs, slots, dims, ops);
+            ops.push(match op {
+                BinOp::Add => Op::Add,
+                BinOp::Sub => Op::Sub,
+                BinOp::Mul => Op::Mul,
+                BinOp::Div => Op::Div,
+            });
+        }
+        Expr::Neg(e) => {
+            compile_into(e, slots, dims, ops);
+            ops.push(Op::Neg);
+        }
+        Expr::Call { name, args } => {
+            for a in args {
+                compile_into(a, slots, dims, ops);
+            }
+            ops.push(match name.as_str() {
+                "max" => Op::MaxN(args.len()),
+                "min" => Op::MinN(args.len()),
+                "sqrt" => Op::Sqrt,
+                "abs" => Op::Abs,
+                other => panic!("unknown intrinsic {other}"),
+            });
+        }
+    }
+}
+
+fn compile(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64]) -> Compiled {
+    let mut ops = Vec::new();
+    compile_into(expr, slots, dims, &mut ops);
+    let mut depth = 0usize;
+    let mut max_stack = 0usize;
+    let (mut min_dr, mut max_dr, mut min_dc, mut max_dc) = (0i64, 0i64, 0i64, 0i64);
+    for op in &ops {
+        match op {
+            Op::Const(_) => depth += 1,
+            Op::Load { dr, dc, .. } => {
+                min_dr = min_dr.min(*dr);
+                max_dr = max_dr.max(*dr);
+                min_dc = min_dc.min(*dc);
+                max_dc = max_dc.max(*dc);
+                depth += 1;
+            }
+            Op::Add | Op::Sub | Op::Mul | Op::Div => depth -= 1,
+            Op::MaxN(n) | Op::MinN(n) => {
+                assert!(*n >= 1, "n-ary intrinsic needs at least one argument");
+                depth -= n - 1;
+            }
+            Op::Neg | Op::Sqrt | Op::Abs => {}
+        }
+        max_stack = max_stack.max(depth);
+    }
+    assert_eq!(depth, 1, "expression must leave exactly one value");
+    Compiled { ops, max_stack, min_dr, max_dr, min_dc, max_dc }
+}
+
+impl Compiled {
+    /// Per-cell clamped evaluation (border tier and the naive oracle).
+    #[inline]
+    fn eval(&self, grids: &[&Grid], r: i64, c: i64, stack: &mut Vec<f32>) -> f32 {
+        stack.clear();
+        for op in &self.ops {
+            match *op {
+                Op::Const(v) => stack.push(v),
+                Op::Load { slot, dr, dc } => {
+                    stack.push(grids[slot].at_clamped(r + dr, c + dc))
+                }
+                Op::Add => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a + b);
+                }
+                Op::Sub => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a - b);
+                }
+                Op::Mul => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a * b);
+                }
+                Op::Div => {
+                    let b = stack.pop().unwrap();
+                    let a = stack.pop().unwrap();
+                    stack.push(a / b);
+                }
+                Op::Neg => {
+                    let a = stack.pop().unwrap();
+                    stack.push(-a);
+                }
+                Op::MaxN(n) => {
+                    let mut acc = f32::NEG_INFINITY;
+                    for _ in 0..n {
+                        acc = acc.max(stack.pop().unwrap());
+                    }
+                    stack.push(acc);
+                }
+                Op::MinN(n) => {
+                    let mut acc = f32::INFINITY;
+                    for _ in 0..n {
+                        acc = acc.min(stack.pop().unwrap());
+                    }
+                    stack.push(acc);
+                }
+                Op::Sqrt => {
+                    let a = stack.pop().unwrap();
+                    stack.push(a.sqrt());
+                }
+                Op::Abs => {
+                    let a = stack.pop().unwrap();
+                    stack.push(a.abs());
+                }
+            }
+        }
+        stack.pop().expect("expression leaves one value")
+    }
+
+    /// Evaluate over a row range into `out` (naive row-parallel worker) —
+    /// the same per-cell loop the border tier runs (`eval_cells_clamped`).
+    fn eval_rows(
+        &self,
+        grids: &[&Grid],
+        rows: std::ops::Range<usize>,
+        col_range: (usize, usize),
+        cols: usize,
+        out: &mut [f32],
+        out_base_row: usize,
+    ) {
+        let mut stack = Vec::with_capacity(self.max_stack);
+        eval_cells_clamped(self, grids, rows, col_range, cols, out, out_base_row, &mut stack);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tiered evaluation
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch: operand row buffers for the interior sweep plus one
+/// reusable scalar stack for clamped border cells. Buffers only grow, so
+/// steady state performs no grid- or row-sized allocation.
+struct Scratch {
+    rows: Vec<Vec<f32>>,
+    stack: Vec<f32>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch { rows: Vec::new(), stack: Vec::new() }
+    }
+
+    fn ensure_rows(&mut self, depth: usize, w: usize) {
+        if self.rows.len() < depth {
+            self.rows.resize_with(depth, Vec::new);
+        }
+        for b in &mut self.rows[..depth] {
+            if b.len() < w {
+                b.resize(w, 0.0);
+            }
+        }
+    }
+}
+
+/// One scratch per parallel row band, reused across statements and steps.
+struct ScratchPool {
+    per_worker: Vec<Scratch>,
+}
+
+impl ScratchPool {
+    fn new() -> ScratchPool {
+        ScratchPool { per_worker: Vec::new() }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.per_worker.len() < n {
+            self.per_worker.resize_with(n, Scratch::new);
+        }
+    }
+}
+
+/// Elementwise binary op over the top two stack buffers, matching the
+/// per-cell VM's operand order (`a op b` with `b` on top).
+#[inline]
+fn bin(bufs: &mut [Vec<f32>], sp: usize, w: usize, f: impl Fn(f32, f32) -> f32) {
+    let (lo, hi) = bufs.split_at_mut(sp - 1);
+    let dst = &mut lo[sp - 2][..w];
+    let src = &hi[0][..w];
+    for (x, y) in dst.iter_mut().zip(src) {
+        *x = f(*x, *y);
+    }
+}
+
+/// N-ary max/min fold matching the per-cell VM exactly: seeded with the
+/// identity, operands consumed top-of-stack first — bit-identical results
+/// even around NaN.
+#[inline]
+fn fold_nary(
+    bufs: &mut [Vec<f32>],
+    sp: usize,
+    n: usize,
+    w: usize,
+    seed: f32,
+    f: impl Fn(f32, f32) -> f32,
+) {
+    let base = sp - n;
+    let (lo, hi) = bufs.split_at_mut(base + 1);
+    let dst = &mut lo[base][..w];
+    for (i, d) in dst.iter_mut().enumerate() {
+        let mut acc = seed;
+        for k in (0..n - 1).rev() {
+            acc = f(acc, hi[k][i]);
+        }
+        *d = f(acc, *d);
+    }
+}
+
+/// Unclamped row sweep: run the bytecode once over a `w`-cell window of
+/// row `r` starting at absolute column `c0`, with every load a direct
+/// slice window (all taps statically in bounds).
+fn sweep_row(
+    prog: &Compiled,
+    grids: &[&Grid],
+    r: usize,
+    c0: usize,
+    w: usize,
+    cols: usize,
+    bufs: &mut [Vec<f32>],
+    out: &mut [f32],
+) {
+    let mut sp = 0usize;
+    for op in &prog.ops {
+        match *op {
+            Op::Const(v) => {
+                bufs[sp][..w].fill(v);
+                sp += 1;
+            }
+            Op::Load { slot, dr, dc } => {
+                let rr = (r as i64 + dr) as usize;
+                let cc = (c0 as i64 + dc) as usize;
+                let base = rr * cols + cc;
+                bufs[sp][..w].copy_from_slice(&grids[slot].data[base..base + w]);
+                sp += 1;
+            }
+            Op::Add => {
+                bin(bufs, sp, w, |a, b| a + b);
+                sp -= 1;
+            }
+            Op::Sub => {
+                bin(bufs, sp, w, |a, b| a - b);
+                sp -= 1;
+            }
+            Op::Mul => {
+                bin(bufs, sp, w, |a, b| a * b);
+                sp -= 1;
+            }
+            Op::Div => {
+                bin(bufs, sp, w, |a, b| a / b);
+                sp -= 1;
+            }
+            Op::Neg => {
+                for x in &mut bufs[sp - 1][..w] {
+                    *x = -*x;
+                }
+            }
+            Op::Sqrt => {
+                for x in &mut bufs[sp - 1][..w] {
+                    *x = x.sqrt();
+                }
+            }
+            Op::Abs => {
+                for x in &mut bufs[sp - 1][..w] {
+                    *x = x.abs();
+                }
+            }
+            Op::MaxN(n) => {
+                fold_nary(bufs, sp, n, w, f32::NEG_INFINITY, f32::max);
+                sp -= n - 1;
+            }
+            Op::MinN(n) => {
+                fold_nary(bufs, sp, n, w, f32::INFINITY, f32::min);
+                sp -= n - 1;
+            }
+        }
+    }
+    debug_assert_eq!(sp, 1);
+    out.copy_from_slice(&bufs[0][..w]);
+}
+
+/// Per-cell clamped loop over a rectangle (the border tier).
+fn eval_cells_clamped(
+    prog: &Compiled,
+    grids: &[&Grid],
+    rows: std::ops::Range<usize>,
+    col_range: (usize, usize),
+    cols: usize,
+    out: &mut [f32],
+    out_base: usize,
+    stack: &mut Vec<f32>,
+) {
+    for r in rows {
+        for c in col_range.0..col_range.1 {
+            out[(r - out_base) * cols + c] = prog.eval(grids, r as i64, c as i64, stack);
+        }
+    }
+}
+
+/// Evaluate one statement over a band of rows: interior via row sweeps,
+/// the clamped frame via the per-cell path.
+#[allow(clippy::too_many_arguments)]
+fn eval_band(
+    prog: &Compiled,
+    grids: &[&Grid],
+    rows: std::ops::Range<usize>,
+    col_range: (usize, usize),
+    cols: usize,
+    out: &mut [f32],
+    out_base: usize,
+    sc: &mut Scratch,
+) {
+    let (c0, c1) = col_range;
+    let nrows_total = grids[0].rows;
+    let int_r0 = rows.start.max((-prog.min_dr).max(0) as usize);
+    let int_r1 = rows
+        .end
+        .min((nrows_total as i64 - prog.max_dr.max(0)).max(0) as usize);
+    let int_c0 = c0.max((-prog.min_dc).max(0) as usize);
+    let int_c1 = c1.min((cols as i64 - prog.max_dc.max(0)).max(0) as usize);
+    if int_r0 >= int_r1 || int_c0 >= int_c1 {
+        eval_cells_clamped(prog, grids, rows, col_range, cols, out, out_base, &mut sc.stack);
+        return;
+    }
+    if rows.start < int_r0 {
+        eval_cells_clamped(
+            prog, grids, rows.start..int_r0, col_range, cols, out, out_base, &mut sc.stack,
+        );
+    }
+    if int_r1 < rows.end {
+        eval_cells_clamped(
+            prog, grids, int_r1..rows.end, col_range, cols, out, out_base, &mut sc.stack,
+        );
+    }
+    if c0 < int_c0 {
+        eval_cells_clamped(
+            prog, grids, int_r0..int_r1, (c0, int_c0), cols, out, out_base, &mut sc.stack,
+        );
+    }
+    if int_c1 < c1 {
+        eval_cells_clamped(
+            prog, grids, int_r0..int_r1, (int_c1, c1), cols, out, out_base, &mut sc.stack,
+        );
+    }
+    let w = int_c1 - int_c0;
+    sc.ensure_rows(prog.max_stack, w);
+    for r in int_r0..int_r1 {
+        let at = (r - out_base) * cols + int_c0;
+        sweep_row(prog, grids, r, int_c0, w, cols, &mut sc.rows, &mut out[at..at + w]);
+    }
+}
+
+/// Work below this many cells runs inline — the pool round trip costs more
+/// than the evaluation itself.
+const PARALLEL_THRESHOLD_CELLS: usize = 32_768;
+
+/// Evaluate one statement over a row/column region of `out`, fanning row
+/// bands out over the persistent worker pool.
+fn eval_region(
+    prog: &Compiled,
+    grids: &[&Grid],
+    rows: std::ops::Range<usize>,
+    col_range: (usize, usize),
+    out: &mut Grid,
+    scratch: &mut ScratchPool,
+) {
+    let total = rows.len();
+    if total == 0 || col_range.0 >= col_range.1 {
+        return;
+    }
+    let cols = out.cols;
+    let base = rows.start;
+    let pool = Pool::global();
+    let work = total * (col_range.1 - col_range.0);
+    let n_tasks = if work < PARALLEL_THRESHOLD_CELLS {
+        1
+    } else {
+        pool.workers().min(total).max(1)
+    };
+    scratch.ensure(n_tasks);
+    let band = &mut out.data[base * cols..rows.end * cols];
+    if n_tasks == 1 {
+        eval_band(
+            prog, grids, base..rows.end, col_range, cols, band, base,
+            &mut scratch.per_worker[0],
+        );
+        return;
+    }
+    let chunk = total.div_ceil(n_tasks);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
+    for ((ci, slab), sc) in band
+        .chunks_mut(chunk * cols)
+        .enumerate()
+        .zip(scratch.per_worker.iter_mut())
+    {
+        let start = base + ci * chunk;
+        let end = start + slab.len() / cols;
+        tasks.push(Box::new(move || {
+            eval_band(prog, grids, start..end, col_range, cols, slab, start, sc);
+        }));
+    }
+    pool.run(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// A compiled, reusable stencil program: immutable after construction, so
+/// runtimes cache it (`Arc<Engine>`) and run it concurrently.
+pub struct Engine {
+    n_inputs: usize,
+    /// Which input carries state between iterations (the last one).
+    upd: usize,
+    local_progs: Vec<Compiled>,
+    out_prog: Compiled,
+    /// Kernel radii (live-region geometry, after local-chain composition).
+    pr: usize,
+    pc: usize,
+}
+
+impl Engine {
+    pub fn new(prog: &StencilProgram) -> Engine {
+        let info = analyze(prog);
+        let outputs: Vec<_> = prog.outputs().collect();
+        assert_eq!(outputs.len(), 1, "interpreter supports one output grid");
+        let mut slots: HashMap<&str, usize> = HashMap::new();
+        for (i, decl) in prog.inputs.iter().enumerate() {
+            slots.insert(&decl.name, i);
+        }
+        let locals: Vec<_> = prog.stmts.iter().filter(|s| s.kind == StmtKind::Local).collect();
+        let mut local_progs: Vec<Compiled> = Vec::new();
+        for (j, stmt) in locals.iter().enumerate() {
+            local_progs.push(compile(&stmt.expr, &slots, prog.dims()));
+            slots.insert(&stmt.name, prog.inputs.len() + j);
+        }
+        let out_prog = compile(&outputs[0].expr, &slots, prog.dims());
+        Engine {
+            n_inputs: prog.inputs.len(),
+            upd: super::update_index(prog),
+            local_progs,
+            out_prog,
+            pr: info.radius_rows as usize,
+            pc: info.radius_cols as usize,
+        }
+    }
+
+    fn collect_grids<'a>(
+        &self,
+        inputs: &'a [Grid],
+        cur: &'a Grid,
+        locals: &'a [Grid],
+    ) -> Vec<&'a Grid> {
+        let mut grids: Vec<&Grid> = Vec::with_capacity(self.n_inputs + locals.len());
+        for (i, g) in inputs.iter().enumerate() {
+            grids.push(if i == self.upd { cur } else { g });
+        }
+        grids.extend(locals.iter());
+        grids
+    }
+
+    /// Run `nsteps` masked stencil iterations (same contract as
+    /// [`interpret_naive`]; bit-identical results).
+    pub fn run(&self, inputs: &[Grid], nrows: usize, nsteps: u64) -> Grid {
+        assert_eq!(inputs.len(), self.n_inputs, "input count mismatch");
+        let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
+        for g in inputs {
+            assert_eq!((g.rows, g.cols), (maxr, cols), "input shapes must agree");
+        }
+        let mut cur = inputs[self.upd].clone();
+        if nsteps == 0 {
+            return cur;
+        }
+        // double buffer + local arena: all grid-sized allocation happens
+        // here, before the first step — steady state allocates nothing
+        let mut next = cur.clone();
+        let mut arena: Vec<Grid> =
+            (0..self.local_progs.len()).map(|_| Grid::new(maxr, cols)).collect();
+        let mut scratch = ScratchPool::new();
+        let live_top = self.pr;
+        let live_bot = nrows.saturating_sub(self.pr).min(maxr);
+        let (c0, c1) = (self.pc, cols.saturating_sub(self.pc));
+        for _ in 0..nsteps {
+            for j in 0..self.local_progs.len() {
+                let (done, rest) = arena.split_at_mut(j);
+                let grids = self.collect_grids(inputs, &cur, done);
+                eval_region(
+                    &self.local_progs[j], &grids, 0..maxr, (0, cols), &mut rest[0],
+                    &mut scratch,
+                );
+            }
+            if live_top < live_bot && c0 < c1 {
+                let grids = self.collect_grids(inputs, &cur, &arena);
+                eval_region(
+                    &self.out_prog, &grids, live_top..live_bot, (c0, c1), &mut next,
+                    &mut scratch,
+                );
+                // the cells outside the evaluated region are identical in
+                // both buffers (copy-through borders are never written)
+                std::mem::swap(&mut cur, &mut next);
+            }
+        }
+        cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the naive oracle (the pre-PR interpreter, preserved verbatim)
+// ---------------------------------------------------------------------------
+
+/// The pre-PR per-cell interpreter: clamped stack-VM evaluation for every
+/// cell, a full-grid clone per iteration, and fresh scoped threads per
+/// statement per step (hard `min(8)` thread cap). Kept as the bit-exact
+/// oracle the tiered engine is property-tested against, and as the honest
+/// pre-PR baseline in `benches/hotpath.rs`.
+pub fn interpret_naive(
+    prog: &StencilProgram,
+    inputs: &[Grid],
+    nrows: usize,
+    nsteps: u64,
+) -> Grid {
+    let info = analyze(prog);
+    assert_eq!(inputs.len(), prog.inputs.len(), "input count mismatch");
+    let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
+    for g in inputs {
+        assert_eq!((g.rows, g.cols), (maxr, cols), "input shapes must agree");
+    }
+    let (pr, pc) = (info.radius_rows as usize, info.radius_cols as usize);
+    let upd = super::update_index(prog);
+    let mut cur = inputs[upd].clone();
+
+    let outputs: Vec<_> = prog.outputs().collect();
+    assert_eq!(outputs.len(), 1, "interpreter supports one output grid");
+    let out_stmt = outputs[0];
+
+    // Compile every statement once: grid slots are [inputs..., locals...].
+    let mut slots: HashMap<&str, usize> = HashMap::new();
+    for (i, decl) in prog.inputs.iter().enumerate() {
+        slots.insert(&decl.name, i);
+    }
+    let locals: Vec<_> = prog.stmts.iter().filter(|s| s.kind == StmtKind::Local).collect();
+    let mut local_progs: Vec<Compiled> = Vec::new();
+    for (j, stmt) in locals.iter().enumerate() {
+        local_progs.push(compile(&stmt.expr, &slots, prog.dims()));
+        slots.insert(&stmt.name, prog.inputs.len() + j);
+    }
+    let out_prog = compile(&out_stmt.expr, &slots, prog.dims());
+
+    // Row-parallel evaluation: split the live band into chunks per thread.
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let eval_grid = |prog_c: &Compiled,
+                     grids: &[&Grid],
+                     row_range: std::ops::Range<usize>,
+                     col_range: (usize, usize),
+                     out: &mut Grid| {
+        let rows_total = row_range.len();
+        if rows_total == 0 {
+            return;
+        }
+        let base = row_range.start;
+        let chunk = rows_total.div_ceil(n_threads);
+        let out_cols = out.cols;
+        // split the output band into disjoint row chunks
+        let band = &mut out.data[base * out_cols..row_range.end * out_cols];
+        std::thread::scope(|scope| {
+            for (ci, slab) in band.chunks_mut(chunk * out_cols).enumerate() {
+                let start = base + ci * chunk;
+                let end = start + slab.len() / out_cols;
+                scope.spawn(move || {
+                    prog_c.eval_rows(grids, start..end, col_range, out_cols, slab, start);
+                });
+            }
+        });
+    };
+
+    for _ in 0..nsteps {
+        // grids vector: inputs (iterated slot = cur) then materialized locals
+        let mut local_storage: Vec<Grid> = Vec::with_capacity(locals.len());
+        for prog_c in &local_progs {
+            let mut g = Grid::new(maxr, cols);
+            {
+                let mut grids: Vec<&Grid> = prog
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
+                    .collect();
+                grids.extend(local_storage.iter());
+                eval_grid(prog_c, &grids, 0..maxr, (0, cols), &mut g);
+            }
+            local_storage.push(g);
+        }
+
+        let mut next = cur.clone();
+        let live_top = pr;
+        let live_bot = nrows.saturating_sub(pr).min(maxr);
+        {
+            let mut grids: Vec<&Grid> = prog
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
+                .collect();
+            grids.extend(local_storage.iter());
+            if live_top < live_bot {
+                eval_grid(
+                    &out_prog,
+                    &grids,
+                    live_top..live_bot,
+                    (pc, cols.saturating_sub(pc)),
+                    &mut next,
+                );
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
+/// Run `nsteps` masked stencil iterations of a DSL program over the given
+/// input grids (flattened 2-D). `nrows` is the live-row count (rows beyond
+/// it are inert — the tile contract the coordinator relies on). Returns the
+/// iterated grid. Executes through the tiered [`Engine`]; results are
+/// bit-identical to [`interpret_naive`].
+pub fn interpret(prog: &StencilProgram, inputs: &[Grid], nrows: usize, nsteps: u64) -> Grid {
+    Engine::new(prog).run(inputs, nrows, nsteps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{analyze, benchmarks as b, parse};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn max_stack_is_exact_not_conservative() {
+        let prog = parse(b::JACOBI2D_DSL).unwrap();
+        let mut slots: HashMap<&str, usize> = HashMap::new();
+        slots.insert("in_1", 0);
+        let c = compile(&prog.outputs().next().unwrap().expr, &slots, prog.dims());
+        // ((((a+b)+c)+d)+e)/5: peak depth 2 operands + divisor = 3 at most
+        assert!(c.max_stack <= 3, "got {}", c.max_stack);
+        assert!(c.max_stack < c.ops.len(), "must beat the ops.len() bound");
+        // extents of the 5-point star
+        assert_eq!((c.min_dr, c.max_dr, c.min_dc, c.max_dc), (-1, 1, -1, 1));
+    }
+
+    #[test]
+    fn engine_matches_naive_smoke() {
+        let mut rng = Prng::new(77);
+        for (_, src) in b::ALL {
+            let base = parse(src).unwrap();
+            let dims: Vec<u64> =
+                if base.dims().len() == 3 { vec![12, 4, 4] } else { vec![12, 16] };
+            let prog = parse(&b::with_dims(src, &dims, 2)).unwrap();
+            let info = analyze(&prog);
+            let rows = dims[0] as usize;
+            let cols: usize = dims[1..].iter().product::<u64>() as usize;
+            let inputs: Vec<Grid> = (0..info.n_inputs)
+                .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, -1.0, 1.0)))
+                .collect();
+            let fast = interpret(&prog, &inputs, rows, 2);
+            let slow = interpret_naive(&prog, &inputs, rows, 2);
+            assert_eq!(fast, slow, "{}", info.name);
+        }
+    }
+}

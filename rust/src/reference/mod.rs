@@ -7,10 +7,20 @@
 //! Same semantics everywhere: edge padding for taps, copy-through
 //! (Dirichlet) borders of width (radius_rows, radius_cols) around the live
 //! region, the last input is the iterated grid.
+//!
+//! Two execution paths share one bytecode (see `engine`):
+//!
+//! * [`interpret`] — the tiered engine: unclamped SIMD-friendly row sweeps
+//!   over the interior, the clamped per-cell path only on the thin border,
+//!   double-buffered iteration, and a persistent worker pool.
+//! * [`interpret_naive`] — the pre-PR per-cell interpreter, preserved as
+//!   the bit-exact oracle and the hot-path benchmark baseline.
 
-use std::collections::HashMap;
+pub mod engine;
 
-use crate::dsl::{analyze, BinOp, Expr, StencilProgram, StmtKind};
+pub use engine::{interpret, interpret_naive, Engine};
+
+use crate::dsl::StencilProgram;
 
 /// A row-major f32 grid.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,171 +74,25 @@ impl Grid {
         let a = start * self.cols;
         self.data[a..a + src.data.len()].copy_from_slice(&src.data);
     }
-}
 
-/// The flattened column offset of a tap: (dp, dq) on dims (R, P, Q)
-/// reaches dp·Q + dq columns.
-fn flatten_offsets(offsets: &[i64], dims: &[u64]) -> (i64, i64) {
-    let tail = &dims[1..];
-    let mut stride = vec![1i64; tail.len()];
-    for i in (0..tail.len().saturating_sub(1)).rev() {
-        stride[i] = stride[i + 1] * tail[i + 1] as i64;
-    }
-    let dc = offsets[1..]
-        .iter()
-        .zip(&stride)
-        .map(|(o, s)| o * s)
-        .sum::<i64>();
-    (offsets[0], dc)
-}
-
-/// Compiled stencil expression: stack bytecode with pre-resolved grid
-/// slots and flattened tap offsets. ~6× faster than walking the AST with
-/// name lookups per cell (EXPERIMENTS.md §Perf L3-1).
-#[derive(Debug, Clone)]
-enum Op {
-    Const(f32),
-    /// Clamped tap read from grids[slot] at (r+dr, c+dc).
-    Load { slot: usize, dr: i64, dc: i64 },
-    Add,
-    Sub,
-    Mul,
-    Div,
-    Neg,
-    MaxN(usize),
-    MinN(usize),
-    Sqrt,
-    Abs,
-}
-
-#[derive(Debug, Clone)]
-struct Compiled {
-    ops: Vec<Op>,
-    max_stack: usize,
-}
-
-fn compile_into(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64], ops: &mut Vec<Op>) {
-    match expr {
-        Expr::Num(n) => ops.push(Op::Const(*n as f32)),
-        Expr::Ref { array, offsets } => {
-            let (dr, dc) = flatten_offsets(offsets, dims);
-            ops.push(Op::Load { slot: slots[array.as_str()], dr, dc });
-        }
-        Expr::Bin { op, lhs, rhs } => {
-            compile_into(lhs, slots, dims, ops);
-            compile_into(rhs, slots, dims, ops);
-            ops.push(match op {
-                BinOp::Add => Op::Add,
-                BinOp::Sub => Op::Sub,
-                BinOp::Mul => Op::Mul,
-                BinOp::Div => Op::Div,
-            });
-        }
-        Expr::Neg(e) => {
-            compile_into(e, slots, dims, ops);
-            ops.push(Op::Neg);
-        }
-        Expr::Call { name, args } => {
-            for a in args {
-                compile_into(a, slots, dims, ops);
-            }
-            ops.push(match name.as_str() {
-                "max" => Op::MaxN(args.len()),
-                "min" => Op::MinN(args.len()),
-                "sqrt" => Op::Sqrt,
-                "abs" => Op::Abs,
-                other => panic!("unknown intrinsic {other}"),
-            });
-        }
-    }
-}
-
-fn compile(expr: &Expr, slots: &HashMap<&str, usize>, dims: &[u64]) -> Compiled {
-    let mut ops = Vec::new();
-    compile_into(expr, slots, dims, &mut ops);
-    // conservative stack bound: every op pushes at most one value
-    let max_stack = ops.len().max(4);
-    Compiled { ops, max_stack }
-}
-
-impl Compiled {
-    #[inline]
-    fn eval(&self, grids: &[&Grid], r: i64, c: i64, stack: &mut Vec<f32>) -> f32 {
-        stack.clear();
-        for op in &self.ops {
-            match *op {
-                Op::Const(v) => stack.push(v),
-                Op::Load { slot, dr, dc } => {
-                    stack.push(grids[slot].at_clamped(r + dr, c + dc))
-                }
-                Op::Add => {
-                    let b = stack.pop().unwrap();
-                    let a = stack.pop().unwrap();
-                    stack.push(a + b);
-                }
-                Op::Sub => {
-                    let b = stack.pop().unwrap();
-                    let a = stack.pop().unwrap();
-                    stack.push(a - b);
-                }
-                Op::Mul => {
-                    let b = stack.pop().unwrap();
-                    let a = stack.pop().unwrap();
-                    stack.push(a * b);
-                }
-                Op::Div => {
-                    let b = stack.pop().unwrap();
-                    let a = stack.pop().unwrap();
-                    stack.push(a / b);
-                }
-                Op::Neg => {
-                    let a = stack.pop().unwrap();
-                    stack.push(-a);
-                }
-                Op::MaxN(n) => {
-                    let mut acc = f32::NEG_INFINITY;
-                    for _ in 0..n {
-                        acc = acc.max(stack.pop().unwrap());
-                    }
-                    stack.push(acc);
-                }
-                Op::MinN(n) => {
-                    let mut acc = f32::INFINITY;
-                    for _ in 0..n {
-                        acc = acc.min(stack.pop().unwrap());
-                    }
-                    stack.push(acc);
-                }
-                Op::Sqrt => {
-                    let a = stack.pop().unwrap();
-                    stack.push(a.sqrt());
-                }
-                Op::Abs => {
-                    let a = stack.pop().unwrap();
-                    stack.push(a.abs());
-                }
-            }
-        }
-        stack.pop().expect("expression leaves one value")
+    /// Copy `n` rows of `src` starting at `src_row` into `self` at
+    /// `dst_row` — the allocation-free row-window primitive the
+    /// coordinator's halo exchange and tile assembly are built on
+    /// (replaces `slice_rows` + `write_rows` round trips).
+    pub fn copy_rows_from(&mut self, dst_row: usize, src: &Grid, src_row: usize, n: usize) {
+        assert_eq!(self.cols, src.cols, "column widths must agree");
+        let c = self.cols;
+        self.data[dst_row * c..(dst_row + n) * c]
+            .copy_from_slice(&src.data[src_row * c..(src_row + n) * c]);
     }
 
-    /// Evaluate over a row range into `out` (row-parallel worker body).
-    fn eval_rows(
-        &self,
-        grids: &[&Grid],
-        rows: std::ops::Range<usize>,
-        col_range: (usize, usize),
-        cols: usize,
-        out: &mut [f32],
-        out_base_row: usize,
-    ) {
-        let mut stack = Vec::with_capacity(self.max_stack);
-        for r in rows {
-            for c in col_range.0..col_range.1 {
-                out[(r - out_base_row) * cols + c] =
-                    self.eval(grids, r as i64, c as i64, &mut stack);
-            }
-        }
+    /// A `rows`×`cols` zero grid whose top rows hold rows [start, end) of
+    /// `src` — tile-to-canvas padding without the intermediate row slice
+    /// (shared by both runtime backends).
+    pub fn from_padded_rows(rows: usize, cols: usize, src: &Grid, start: usize, end: usize) -> Grid {
+        let mut canvas = Grid::new(rows, cols);
+        canvas.copy_rows_from(0, src, start, end - start);
+        canvas
     }
 }
 
@@ -236,109 +100,6 @@ impl Compiled {
 /// iterates temperature = in_2; single-input kernels iterate their input).
 pub fn update_index(prog: &StencilProgram) -> usize {
     prog.inputs.len() - 1
-}
-
-/// Run `nsteps` masked stencil iterations of a DSL program over the given
-/// input grids (flattened 2-D). `nrows` is the live-row count (rows beyond
-/// it are inert — the tile contract the coordinator relies on). Returns the
-/// iterated grid.
-pub fn interpret(prog: &StencilProgram, inputs: &[Grid], nrows: usize, nsteps: u64) -> Grid {
-    let info = analyze(prog);
-    assert_eq!(inputs.len(), prog.inputs.len(), "input count mismatch");
-    let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
-    for g in inputs {
-        assert_eq!((g.rows, g.cols), (maxr, cols), "input shapes must agree");
-    }
-    let (pr, pc) = (info.radius_rows as usize, info.radius_cols as usize);
-    let upd = update_index(prog);
-    let mut cur = inputs[upd].clone();
-
-    let outputs: Vec<_> = prog.outputs().collect();
-    assert_eq!(outputs.len(), 1, "interpreter supports one output grid");
-    let out_stmt = outputs[0];
-
-    // Compile every statement once: grid slots are [inputs..., locals...].
-    let mut slots: HashMap<&str, usize> = HashMap::new();
-    for (i, decl) in prog.inputs.iter().enumerate() {
-        slots.insert(&decl.name, i);
-    }
-    let locals: Vec<_> = prog.stmts.iter().filter(|s| s.kind == StmtKind::Local).collect();
-    let mut local_progs: Vec<Compiled> = Vec::new();
-    for (j, stmt) in locals.iter().enumerate() {
-        local_progs.push(compile(&stmt.expr, &slots, prog.dims()));
-        slots.insert(&stmt.name, prog.inputs.len() + j);
-    }
-    let out_prog = compile(&out_stmt.expr, &slots, prog.dims());
-
-    // Row-parallel evaluation: split the live band into chunks per thread.
-    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-    let eval_grid = |prog_c: &Compiled,
-                     grids: &[&Grid],
-                     row_range: std::ops::Range<usize>,
-                     col_range: (usize, usize),
-                     out: &mut Grid| {
-        let rows_total = row_range.len();
-        if rows_total == 0 {
-            return;
-        }
-        let base = row_range.start;
-        let chunk = rows_total.div_ceil(n_threads);
-        let out_cols = out.cols;
-        // split the output band into disjoint row chunks
-        let band = &mut out.data[base * out_cols..row_range.end * out_cols];
-        std::thread::scope(|scope| {
-            for (ci, slab) in band.chunks_mut(chunk * out_cols).enumerate() {
-                let start = base + ci * chunk;
-                let end = start + slab.len() / out_cols;
-                scope.spawn(move || {
-                    prog_c.eval_rows(grids, start..end, col_range, out_cols, slab, start);
-                });
-            }
-        });
-    };
-
-    for _ in 0..nsteps {
-        // grids vector: inputs (iterated slot = cur) then materialized locals
-        let mut local_storage: Vec<Grid> = Vec::with_capacity(locals.len());
-        for prog_c in &local_progs {
-            let mut g = Grid::new(maxr, cols);
-            {
-                let mut grids: Vec<&Grid> = prog
-                    .inputs
-                    .iter()
-                    .enumerate()
-                    .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
-                    .collect();
-                grids.extend(local_storage.iter());
-                eval_grid(prog_c, &grids, 0..maxr, (0, cols), &mut g);
-            }
-            local_storage.push(g);
-        }
-
-        let mut next = cur.clone();
-        let live_top = pr;
-        let live_bot = nrows.saturating_sub(pr).min(maxr);
-        {
-            let mut grids: Vec<&Grid> = prog
-                .inputs
-                .iter()
-                .enumerate()
-                .map(|(i, _)| if i == upd { &cur } else { &inputs[i] })
-                .collect();
-            grids.extend(local_storage.iter());
-            if live_top < live_bot {
-                eval_grid(
-                    &out_prog,
-                    &grids,
-                    live_top..live_bot,
-                    (pc, cols.saturating_sub(pc)),
-                    &mut next,
-                );
-            }
-        }
-        cur = next;
-    }
-    cur
 }
 
 #[cfg(test)]
@@ -465,5 +226,16 @@ mod tests {
         h.write_rows(2, &s);
         assert_eq!(h.at(2, 0), 2.0);
         assert_eq!(h.at(3, 1), 5.0);
+    }
+
+    #[test]
+    fn copy_rows_from_matches_slice_write() {
+        let mut rng = Prng::new(21);
+        let src = rand_grid(&mut rng, 8, 5);
+        let mut a = rand_grid(&mut rng, 8, 5);
+        let mut b2 = a.clone();
+        a.write_rows(2, &src.slice_rows(3, 6));
+        b2.copy_rows_from(2, &src, 3, 3);
+        assert_eq!(a, b2);
     }
 }

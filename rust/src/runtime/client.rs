@@ -153,4 +153,16 @@ impl Runtime {
         canvas.write_rows(0, tile);
         canvas
     }
+
+    /// Pad rows [start, end) of `src` onto the artifact's [maxr, c] canvas
+    /// without materializing the intermediate row slice.
+    pub fn pad_rows_to_canvas(
+        &self,
+        entry: &ArtifactEntry,
+        src: &Grid,
+        start: usize,
+        end: usize,
+    ) -> Grid {
+        Grid::from_padded_rows(entry.maxr as usize, entry.c as usize, src, start, end)
+    }
 }

@@ -3,8 +3,9 @@
 //!
 //! Implements the exact artifact contract of the PJRT backend — full-size
 //! `[maxr, c]` canvases, `nrows` live rows, copy-through borders, last
-//! input iterates — by dispatching to `reference::interpret` on the builtin
-//! DSL program named by the artifact entry. The coordinator, scheduler, and
+//! input iterates — by dispatching to the tiered `reference::Engine`
+//! (compiled once per artifact, cached) on the builtin DSL program named
+//! by the artifact entry. The coordinator, scheduler, and
 //! CLI are backend-agnostic: the same dataflow (tiling, halo exchange,
 //! round structure) runs either way, only the per-tile executor changes.
 //!
@@ -15,13 +16,13 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::dsl::{analyze, benchmarks as b, parse, StencilProgram};
-use crate::reference::{interpret, Grid};
+use crate::dsl::{analyze, benchmarks as b, parse};
+use crate::reference::{Engine, Grid};
 
 use super::artifact::{ArtifactEntry, Manifest};
 use super::RuntimeStats;
@@ -85,8 +86,9 @@ pub fn builtin_manifest(dir: PathBuf) -> Manifest {
 /// The interpreter-backed runtime (same public surface as `client::Runtime`).
 pub struct Runtime {
     manifest: Manifest,
-    /// Instantiated DSL programs per artifact name ("compiled" kernels).
-    cache: Mutex<HashMap<String, StencilProgram>>,
+    /// Compiled tiered engines per artifact name. `Arc` so concurrent
+    /// `run_stencil` calls execute outside the cache lock.
+    cache: Mutex<HashMap<String, Arc<Engine>>>,
     stats: Mutex<RuntimeStats>,
 }
 
@@ -154,11 +156,12 @@ impl Runtime {
         };
         let prog = parse(&b::with_dims(src, &dims, 1))
             .with_context(|| format!("instantiating '{}' at {dims:?}", entry.kernel))?;
+        let engine = Arc::new(Engine::new(&prog));
         let mut stats = self.stats.lock().unwrap();
         stats.compiles += 1;
         stats.compile_seconds += t0.elapsed().as_secs_f64();
         drop(stats);
-        cache.insert(entry.name.clone(), prog);
+        cache.insert(entry.name.clone(), engine);
         Ok(())
     }
 
@@ -201,7 +204,7 @@ impl Runtime {
         }
         self.ensure_compiled(entry)?;
 
-        let prog = self
+        let engine = self
             .cache
             .lock()
             .unwrap()
@@ -209,7 +212,7 @@ impl Runtime {
             .expect("compiled above")
             .clone();
         let t0 = Instant::now();
-        let out = interpret(&prog, inputs, nrows as usize, nsteps);
+        let out = engine.run(inputs, nrows as usize, nsteps);
         let mut stats = self.stats.lock().unwrap();
         stats.executions += 1;
         stats.execute_seconds += t0.elapsed().as_secs_f64();
@@ -224,11 +227,24 @@ impl Runtime {
         canvas.write_rows(0, tile);
         canvas
     }
+
+    /// Pad rows [start, end) of `src` onto the artifact's [maxr, c] canvas
+    /// without materializing the intermediate row slice.
+    pub fn pad_rows_to_canvas(
+        &self,
+        entry: &ArtifactEntry,
+        src: &Grid,
+        start: usize,
+        end: usize,
+    ) -> Grid {
+        Grid::from_padded_rows(entry.maxr as usize, entry.c as usize, src, start, end)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::reference::interpret;
     use crate::util::prng::Prng;
 
     fn rt() -> Runtime {

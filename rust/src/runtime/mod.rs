@@ -1,7 +1,7 @@
 //! Execution runtimes for AOT stencil artifacts.
 //!
 //! Two interchangeable backends expose the same API (`Runtime::from_dir`,
-//! `run_stencil`, `pad_to_canvas`, `stats`):
+//! `run_stencil`, `pad_to_canvas`, `pad_rows_to_canvas`, `stats`):
 //!
 //! * **`client`** (feature `pjrt`) — loads the HLO text produced by
 //!   `python/compile/aot.py`, compiles it once on the XLA PJRT CPU client,

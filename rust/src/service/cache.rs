@@ -18,8 +18,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::dsl::KernelInfo;
 use crate::model::{explore, Bounds, Config, DseChoice, DseResult, ModelParams, Parallelism};
-use crate::platform::{DesignStyle, FpgaPlatform, Resources};
+use crate::platform::{DesignStyle, FpgaPlatform, Resources, RESOURCE_MODEL_VERSION};
 use crate::util::json::{num, obj, s, Json};
+use crate::util::pool::Pool;
 
 /// Hit/miss counters for one cache lifetime.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -75,6 +76,11 @@ impl PlanCache {
                      delete it to rebuild"
                 );
             }
+            // plans priced under a different resource model are stale, not
+            // corrupt: start empty and re-explore on demand
+            if j.u64_or("resource_model_version", 0) != RESOURCE_MODEL_VERSION {
+                return Ok(cache);
+            }
             let plans = j
                 .get("plans")
                 .and_then(Json::as_obj)
@@ -123,6 +129,63 @@ impl PlanCache {
         (r, false)
     }
 
+    /// Memoized batch exploration: hits resolve from the cache, misses fan
+    /// out over the persistent worker pool (`explore` is a pure function of
+    /// its arguments), and results come back in request order. Duplicate
+    /// keys within one batch explore once — the later occurrences count as
+    /// hits, exactly as a sequential `get_or_explore` loop would.
+    pub fn get_or_explore_batch(
+        &mut self,
+        platform: &FpgaPlatform,
+        reqs: &[(&KernelInfo, u64)],
+    ) -> Vec<(DseResult, bool)> {
+        let keys: Vec<String> = reqs
+            .iter()
+            .map(|(info, iter)| Self::key(info, platform, *iter, DesignStyle::Sasa))
+            .collect();
+        let mut run = vec![false; reqs.len()];
+        {
+            let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+            for (idx, key) in keys.iter().enumerate() {
+                if !self.entries.contains_key(key) && seen.insert(key.as_str()) {
+                    run[idx] = true;
+                }
+            }
+        }
+        let mut fresh: Vec<Option<DseResult>> = (0..reqs.len()).map(|_| None).collect();
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for ((&(info, iter), slot), do_run) in
+                reqs.iter().zip(fresh.iter_mut()).zip(&run)
+            {
+                if !*do_run {
+                    continue;
+                }
+                tasks.push(Box::new(move || {
+                    *slot = Some(explore(info, platform, iter));
+                }));
+            }
+            Pool::global().run(tasks);
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (idx, key) in keys.iter().enumerate() {
+            if let Some(r) = fresh[idx].take() {
+                self.stats.misses += 1;
+                self.entries.insert(key.clone(), r.clone());
+                out.push((r, false));
+            } else {
+                let r = self
+                    .entries
+                    .get(key)
+                    .expect("every batch key is either cached or freshly explored")
+                    .clone();
+                self.stats.hits += 1;
+                out.push((r, true));
+            }
+        }
+        out
+    }
+
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
@@ -165,7 +228,11 @@ impl PlanCache {
             .iter()
             .map(|(k, v)| (k.clone(), result_to_json(v)))
             .collect();
-        obj(vec![("version", num(CACHE_VERSION as f64)), ("plans", Json::Obj(plans))])
+        obj(vec![
+            ("version", num(CACHE_VERSION as f64)),
+            ("resource_model_version", num(RESOURCE_MODEL_VERSION as f64)),
+            ("plans", Json::Obj(plans)),
+        ])
     }
 }
 
@@ -344,5 +411,54 @@ mod tests {
         let path = dir.join("plans.json");
         std::fs::write(&path, "{ nope").unwrap();
         assert!(PlanCache::at_path(&path).is_err());
+    }
+
+    #[test]
+    fn resource_model_version_mismatch_reexplores() {
+        let dir = std::env::temp_dir().join("sasa_plan_cache_rmv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let p = FpgaPlatform::u280();
+        let info = info_at(b::JACOBI2D_DSL, &[720, 1024], 8);
+        let mut cold = PlanCache::at_path(&path).unwrap();
+        cold.get_or_explore(&info, &p, 8);
+        cold.save().unwrap();
+
+        // forge a cache written under an older resource model
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stamp = format!("\"resource_model_version\":{RESOURCE_MODEL_VERSION}");
+        assert!(text.contains(&stamp), "stamp must be persisted: {text}");
+        std::fs::write(&path, text.replace(&stamp, "\"resource_model_version\":0")).unwrap();
+
+        let mut stale = PlanCache::at_path(&path).unwrap();
+        assert!(stale.is_empty(), "plans priced under an old model must be dropped");
+        let (_, hit) = stale.get_or_explore(&info, &p, 8);
+        assert!(!hit, "mismatch must re-explore, not serve the stale plan");
+        // saving re-stamps the file with the current model version
+        stale.save().unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains(&stamp));
+    }
+
+    #[test]
+    fn batch_explore_matches_sequential() {
+        let p = FpgaPlatform::u280();
+        let i1 = info_at(b::JACOBI2D_DSL, &[720, 1024], 8);
+        let i2 = info_at(b::BLUR_DSL, &[720, 1024], 8);
+        let mut seq = PlanCache::in_memory();
+        let (r1, _) = seq.get_or_explore(&i1, &p, 8);
+        let (r2, _) = seq.get_or_explore(&i2, &p, 8);
+
+        let mut batch = PlanCache::in_memory();
+        let reqs = [(&i1, 8u64), (&i2, 8u64), (&i1, 8u64)];
+        let out = batch.get_or_explore_batch(&p, &reqs);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].0, r1);
+        assert_eq!(out[1].0, r2);
+        assert_eq!(out[2].0, r1);
+        assert!(!out[0].1 && !out[1].1);
+        assert!(out[2].1, "duplicate key within one batch is a hit");
+        assert_eq!(batch.stats(), CacheStats { hits: 1, misses: 2 });
     }
 }

@@ -6,7 +6,9 @@
 //! this job mix do on a U280"; `execute_real` answers "does the chosen
 //! configuration actually compute the right grid", by running the same
 //! `Config` through the coordinator's multi-PE dataflow against the DSL
-//! interpreter oracle.
+//! interpreter oracle. Independent admitted jobs are explored and
+//! simulated in parallel on the worker pool (see `scheduler::prepare_all`)
+//! — a batch of N tenants costs max-of-sims wall time, not sum.
 
 use std::collections::BTreeMap;
 

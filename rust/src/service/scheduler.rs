@@ -22,6 +22,10 @@
 //!
 //! Durations come from the cycle simulator (`sim::simulate`) at the modeled
 //! post-P&R frequency, so the timeline is the one the U280 would exhibit.
+//! Plan resolution and per-candidate simulation are batched up front and
+//! fanned out over the persistent worker pool (`util::pool`): independent
+//! jobs explore and simulate concurrently, and the FIFO admission loop is
+//! reduced to pure lookups — its decisions are unchanged.
 
 use std::collections::VecDeque;
 
@@ -31,6 +35,7 @@ use crate::dsl::KernelInfo;
 use crate::model::{Config, DseChoice};
 use crate::platform::FpgaPlatform;
 use crate::sim::{simulate, SimResult};
+use crate::util::pool::Pool;
 
 use super::cache::PlanCache;
 use super::jobs::JobSpec;
@@ -96,6 +101,9 @@ struct Prepared {
     /// Admission candidates, best first: `dse.best`, then the remaining
     /// per-scheme survivors by predicted latency.
     candidates: Vec<DseChoice>,
+    /// Cycle simulation of each candidate, index-parallel to `candidates`
+    /// (pre-computed concurrently; the admission loop only looks up).
+    sims: Vec<SimResult>,
     cache_hit: bool,
 }
 
@@ -114,38 +122,72 @@ impl<'p> Scheduler<'p> {
         self.pool_banks
     }
 
-    fn prepare(&self, spec: &JobSpec, cache: &mut PlanCache) -> Result<Prepared> {
-        let info = spec.info()?;
-        let (dse, cache_hit) = cache.get_or_explore(&info, self.platform, spec.iter);
-        let mut rest: Vec<DseChoice> = dse
-            .per_scheme
-            .iter()
-            .filter(|c| c.config != dse.best.config)
-            .cloned()
-            .collect();
-        rest.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
-        let mut candidates = Vec::with_capacity(rest.len() + 1);
-        candidates.push(dse.best.clone());
-        candidates.extend(rest);
-        let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
-        if min_banks > self.pool_banks {
-            bail!(
-                "job '{}' ({}): smallest configuration needs {min_banks} banks \
-                 but the pool has {}",
-                spec.kernel,
-                spec.dims_label(),
-                self.pool_banks
-            );
+    /// Resolve plans (batch DSE: cache hits immediate, misses explored
+    /// concurrently on the worker pool) and pre-simulate every admission
+    /// candidate in parallel — independent jobs' simulations no longer run
+    /// one after another on the admission path.
+    fn prepare_all(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Vec<Prepared>> {
+        let infos: Vec<KernelInfo> = specs.iter().map(JobSpec::info).collect::<Result<_>>()?;
+        let reqs: Vec<(&KernelInfo, u64)> =
+            infos.iter().zip(specs).map(|(i, s)| (i, s.iter)).collect();
+        let plans = cache.get_or_explore_batch(self.platform, &reqs);
+
+        let mut prepared = Vec::with_capacity(specs.len());
+        for ((spec, info), (dse, cache_hit)) in specs.iter().zip(infos).zip(plans) {
+            let mut rest: Vec<DseChoice> = dse
+                .per_scheme
+                .iter()
+                .filter(|c| c.config != dse.best.config)
+                .cloned()
+                .collect();
+            rest.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
+            let mut candidates = Vec::with_capacity(rest.len() + 1);
+            candidates.push(dse.best.clone());
+            candidates.extend(rest);
+            let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
+            if min_banks > self.pool_banks {
+                bail!(
+                    "job '{}' ({}): smallest configuration needs {min_banks} banks \
+                     but the pool has {}",
+                    spec.kernel,
+                    spec.dims_label(),
+                    self.pool_banks
+                );
+            }
+            prepared.push(Prepared {
+                spec: spec.clone(),
+                info,
+                candidates,
+                sims: Vec::new(),
+                cache_hit,
+            });
         }
-        Ok(Prepared { spec: spec.clone(), info, candidates, cache_hit })
+
+        // fan the per-candidate cycle simulations out over the pool:
+        // `simulate` is a pure function of (info, iter, config)
+        let platform = self.platform;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = prepared
+            .iter_mut()
+            .map(|p| {
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    p.sims = p
+                        .candidates
+                        .iter()
+                        .map(|c| simulate(&p.info, platform, p.spec.iter, c.config))
+                        .collect();
+                });
+                b
+            })
+            .collect();
+        Pool::global().run(tasks);
+        Ok(prepared)
     }
 
     /// Schedule `specs` over the bank pool. Plans come from (and new
     /// explorations go into) `cache`.
     pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
         let stats0 = cache.stats();
-        let mut prepared: Vec<Prepared> =
-            specs.iter().map(|s| self.prepare(s, cache)).collect::<Result<_>>()?;
+        let mut prepared: Vec<Prepared> = self.prepare_all(specs, cache)?;
         // FIFO by arrival time; equal arrivals keep submission order
         // (sort_by is stable).
         prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
@@ -173,7 +215,7 @@ impl<'p> Scheduler<'p> {
 
             if let Some((rank, choice)) = admit {
                 let head = pending.pop_front().unwrap();
-                let sim = simulate(&head.info, self.platform, head.spec.iter, choice.config);
+                let sim = head.sims[rank].clone();
                 let duration = sim.seconds.max(1e-12);
                 free -= choice.hbm_banks;
                 running.push((clock + duration, choice.hbm_banks));

@@ -7,6 +7,19 @@
 //! capturing the pipeline-fill behaviour that Eq 4 models with the
 //! `d·(s-1)` term, plus the first/last-stage memory-rate asymmetry the
 //! analytical model ignores (its error budget, Fig 9).
+//!
+//! Two implementations of the same recurrence:
+//!
+//! * [`chain_cycles`] — closed-form steady-state fast-forward: after the
+//!   pipeline-fill transient, per-row completion times form straight
+//!   (affine) segments, so each stage is solved per segment instead of per
+//!   row — O(s²) total instead of O(rows·s). This is what `sim::simulate`
+//!   (and through it every Fig 10–17 sweep, `sasa batch`, and the
+//!   multi-tenant scheduler) runs.
+//! * [`chain_cycles_walk`] — the original explicit row walk, kept as the
+//!   verification reference; the fast-forward must reproduce its totals
+//!   (up to f64 rounding — the walk accumulates by repeated addition, the
+//!   fast path by multiplication; see `fast_forward_matches_walk_*`).
 
 /// Per-stage row counts may differ (Hybrid_R/Hybrid_S: earlier stages
 /// process extra halo rows that shrink stage by stage, §3.4).
@@ -22,10 +35,163 @@ pub struct ChainSpec {
     pub row_compute: f64,
 }
 
-/// Simulate the chain; returns total cycles until *every* stage finishes
-/// (in hybrid mode the first stage processes the most rows, so the round
-/// is not over when the last stage drains).
+// ---------------------------------------------------------------------------
+// closed-form fast-forward
+// ---------------------------------------------------------------------------
+
+/// An affine run of row-completion times: row `start` completes at `t0`,
+/// each following row `slope` later.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    start: usize,
+    t0: f64,
+    slope: f64,
+}
+
+/// One stage's output-row completion times in compressed form: affine
+/// segments only — after the pipeline-fill transient the per-row times
+/// are straight lines, and the fill itself is piecewise affine too (the
+/// first stage is exactly linear, and each later stage's bound/unbound
+/// runs resolve to affine pieces).
+#[derive(Debug, Clone)]
+struct RowTimes {
+    n: usize,
+    segs: Vec<Seg>,
+}
+
+impl RowTimes {
+    fn at(&self, i: usize) -> f64 {
+        debug_assert!(i < self.n);
+        let k = self.segs.partition_point(|s| s.start <= i) - 1;
+        let s = self.segs[k];
+        s.t0 + s.slope * (i - s.start) as f64
+    }
+
+    fn last(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.at(self.n - 1)
+        }
+    }
+
+    /// Index of the segment covering row `i`.
+    fn seg_index(&self, i: usize) -> usize {
+        self.segs.partition_point(|s| s.start <= i) - 1
+    }
+
+    /// Last row covered by segment `k`.
+    fn seg_end(&self, k: usize) -> usize {
+        if k + 1 < self.segs.len() {
+            self.segs[k + 1].start - 1
+        } else {
+            self.n - 1
+        }
+    }
+
+    fn push_seg(&mut self, start: usize, t0: f64, slope: f64) {
+        self.segs.push(Seg { start, t0, slope });
+    }
+}
+
+/// The first stage streams unconditionally: row i completes at (i+1)·rate.
+fn first_stage(n: usize, rate: f64) -> RowTimes {
+    let mut rt = RowTimes { n, segs: Vec::new() };
+    if n > 0 {
+        rt.push_seg(0, rate, rate);
+    }
+    rt
+}
+
+/// Solve one stage of the recurrence
+/// `t_i = max(t_{i-1}, prev[min(i+d, prev_n-1)]) + rate`
+/// segment by segment instead of row by row: the dependency is affine
+/// within each segment of `prev`, so each bound/unbound run closes in O(1).
+fn stage(prev: &RowTimes, n: usize, d: usize, rate: f64) -> RowTimes {
+    let mut out = RowTimes { n, segs: Vec::new() };
+    if n == 0 {
+        return out;
+    }
+    if prev.n == 0 {
+        // no producer rows: the dependency is 0, pure streaming
+        out.push_seg(0, rate, rate);
+        return out;
+    }
+    let mut t = 0.0f64; // completion time of the previously emitted row
+    let mut i = 0usize;
+    while i < n {
+        let dep_idx = (i + d).min(prev.n - 1);
+        let (d0, slope, j_max) = if i + d >= prev.n - 1 {
+            // clipped: the dependency is pinned to prev's last row
+            (prev.at(prev.n - 1), 0.0, n - 1)
+        } else {
+            let k = prev.seg_index(dep_idx);
+            let s = prev.segs[k];
+            // rows j with j+d inside this segment (and unclipped); the
+            // clipped tail re-enters the loop via the branch above
+            let end = prev.seg_end(k).min(prev.n - 2);
+            let j_max = (end - d).min(n - 1);
+            (s.t0 + s.slope * (dep_idx - s.start) as f64, s.slope, j_max)
+        };
+        debug_assert!(j_max >= i);
+        let len = j_max - i; // rows past row i inside this dependency run
+        if t >= d0 {
+            // unbound at row i (t_{i-1} already covers the dependency)
+            let x_cross = if rate >= slope {
+                usize::MAX // the dependency never catches up
+            } else {
+                let x = ((t - d0) / (slope - rate)).floor();
+                if x >= len as f64 { usize::MAX } else { x as usize + 1 }
+            };
+            if x_cross > len {
+                out.push_seg(i, t + rate, rate);
+                t += rate * (len + 1) as f64;
+            } else {
+                // linear until the dependency overtakes at i + x_cross,
+                // then bound to it (slope > rate keeps it bound)
+                out.push_seg(i, t + rate, rate);
+                let j_star = i + x_cross;
+                out.push_seg(j_star, d0 + slope * x_cross as f64 + rate, slope);
+                t = d0 + slope * len as f64 + rate;
+            }
+        } else if slope > rate {
+            // bound at row i and the dependency outpaces the stage: bound
+            // through the whole run
+            out.push_seg(i, d0 + rate, slope);
+            t = d0 + slope * len as f64 + rate;
+        } else {
+            // binds exactly once, then the stage outruns the dependency:
+            // emit row i alone and re-classify from i+1
+            out.push_seg(i, d0 + rate, rate);
+            t = d0 + rate;
+            i += 1;
+            continue;
+        }
+        i = j_max + 1;
+    }
+    out
+}
+
+/// Fast chain simulation: identical recurrence to [`chain_cycles_walk`],
+/// solved in closed form per steady-state segment. Returns total cycles
+/// until *every* stage finishes (in hybrid mode the first stage processes
+/// the most rows, so the round is not over when the last stage drains).
 pub fn chain_cycles(spec: &ChainSpec) -> f64 {
+    let s = spec.stage_rows.len();
+    assert!(s >= 1, "chain needs at least one stage");
+    let mut done = first_stage(spec.stage_rows[0] as usize, spec.row_mem);
+    let mut finish = done.last();
+    for (j, &rows) in spec.stage_rows.iter().enumerate().skip(1) {
+        let rate = if j == s - 1 { spec.row_mem } else { spec.row_compute };
+        done = stage(&done, rows as usize, spec.d as usize, rate);
+        finish = finish.max(done.last());
+    }
+    finish
+}
+
+/// The original explicit O(rows·s) row walk — the reference the
+/// fast-forward is verified against.
+pub fn chain_cycles_walk(spec: &ChainSpec) -> f64 {
     let s = spec.stage_rows.len();
     assert!(s >= 1, "chain needs at least one stage");
     let n0 = spec.stage_rows[0] as usize;
@@ -59,6 +225,7 @@ pub fn chain_cycles(spec: &ChainSpec) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     #[test]
     fn single_stage_is_stream_time() {
@@ -114,5 +281,52 @@ mod tests {
             row_compute: 64.0,
         });
         assert!(slow_mem > fast);
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() / a.abs().max(b.abs()).max(1.0) < 1e-9
+    }
+
+    #[test]
+    fn fast_forward_matches_walk_structured() {
+        // equal stages (temporal), shrinking stages (hybrid), degenerate
+        // single-row and empty stages, clipped dependencies
+        let cases: Vec<ChainSpec> = vec![
+            ChainSpec { stage_rows: vec![9720; 7], d: 2, row_mem: 66.1, row_compute: 64.0 },
+            ChainSpec { stage_rows: vec![3246, 3244, 3242], d: 4, row_mem: 70.0, row_compute: 64.0 },
+            ChainSpec { stage_rows: vec![1, 1, 1], d: 2, row_mem: 5.0, row_compute: 3.0 },
+            ChainSpec { stage_rows: vec![10, 0, 10], d: 1, row_mem: 5.0, row_compute: 3.0 },
+            ChainSpec { stage_rows: vec![5, 500], d: 3, row_mem: 9.0, row_compute: 2.0 },
+            // adversarial: interior stages slower than memory stages
+            ChainSpec { stage_rows: vec![800; 5], d: 2, row_mem: 10.0, row_compute: 30.0 },
+            ChainSpec { stage_rows: vec![300, 900, 300], d: 0, row_mem: 7.5, row_compute: 12.25 },
+        ];
+        for (i, spec) in cases.iter().enumerate() {
+            let fast = chain_cycles(spec);
+            let walk = chain_cycles_walk(spec);
+            assert!(close(fast, walk), "case {i}: fast {fast} vs walk {walk}");
+        }
+    }
+
+    #[test]
+    fn fast_forward_matches_walk_randomized() {
+        let mut rng = Prng::new(0xFA57);
+        for case in 0..300 {
+            let s = rng.range(1, 9) as usize;
+            let d = rng.range(0, 5);
+            let row_mem = 1.0 + rng.range(0, 200) as f64 / 7.0;
+            // sometimes faster, sometimes slower than row_mem (adversarial)
+            let row_compute = 1.0 + rng.range(0, 200) as f64 / 9.0;
+            let stage_rows: Vec<u64> = (0..s).map(|_| rng.range(0, 500)).collect();
+            let spec = ChainSpec { stage_rows, d, row_mem, row_compute };
+            let fast = chain_cycles(&spec);
+            let walk = chain_cycles_walk(&spec);
+            assert!(
+                close(fast, walk),
+                "case {case} (rows {:?}, d {d}, mem {row_mem}, cmp {row_compute}): \
+                 fast {fast} vs walk {walk}",
+                spec.stage_rows
+            );
+        }
     }
 }

@@ -8,6 +8,11 @@
 //! predicts `kernel_cycles` within a few percent (Fig 9); the wall-clock
 //! estimate additionally carries launch overheads, which is what depresses
 //! small-input throughput in Figs 10–17 (§5.3.5).
+//!
+//! Chain rounds are evaluated with a closed-form steady-state fast-forward
+//! (`dataflow::chain_cycles`) instead of walking every row of every
+//! iteration; `simulate_walk` keeps the explicit row walk for
+//! verification.
 
 pub mod dataflow;
 pub mod hbm;
@@ -16,7 +21,7 @@ use crate::dsl::KernelInfo;
 use crate::model::{frequency_mhz, latency_cycles, Config, ModelParams, Parallelism};
 use crate::platform::{pe_resources, DesignStyle, FpgaPlatform};
 
-use dataflow::{chain_cycles, ChainSpec};
+use dataflow::{chain_cycles, chain_cycles_walk, ChainSpec};
 use hbm::{row_compute_cycles, row_stream_cycles};
 
 /// Cycles charged per FPGA kernel launch (host → device round trip).
@@ -43,12 +48,36 @@ pub struct SimResult {
     pub hbm_bytes: u64,
 }
 
-/// Simulate one configuration of a kernel on a platform.
+/// Simulate one configuration of a kernel on a platform. Chain rounds run
+/// through the steady-state fast-forward (`dataflow::chain_cycles`);
+/// [`simulate_walk`] drives the explicit row walk for verification.
 pub fn simulate(
     info: &KernelInfo,
     platform: &FpgaPlatform,
     iter: u64,
     cfg: Config,
+) -> SimResult {
+    simulate_with(info, platform, iter, cfg, chain_cycles)
+}
+
+/// [`simulate`] with the O(rows) row-walk chain simulation — the reference
+/// the closed-form fast-forward is verified against (identical totals up
+/// to f64 rounding; see `tests/property_engine.rs`).
+pub fn simulate_walk(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    iter: u64,
+    cfg: Config,
+) -> SimResult {
+    simulate_with(info, platform, iter, cfg, chain_cycles_walk)
+}
+
+fn simulate_with(
+    info: &KernelInfo,
+    platform: &FpgaPlatform,
+    iter: u64,
+    cfg: Config,
+    chain: fn(&ChainSpec) -> f64,
 ) -> SimResult {
     let u = platform.unroll_factor(info.cell_bytes);
     let p = ModelParams::from_kernel(info, iter, u);
@@ -62,7 +91,7 @@ pub fn simulate(
     let (kernel_cycles, rounds, extra_reads): (f64, u64, u64) = match cfg.parallelism {
         Parallelism::Temporal => {
             let rounds = iter.div_ceil(cfg.s);
-            let per_round = chain_cycles(&ChainSpec {
+            let per_round = chain(&ChainSpec {
                 stage_rows: vec![rows; cfg.s as usize],
                 d,
                 row_mem,
@@ -105,7 +134,7 @@ pub fn simulate(
                     .map(|j| owned + base_ext.saturating_sub(halo * j))
                     .collect();
                 redundant_rows += stage_rows.iter().map(|r| r - owned).sum::<u64>();
-                total += chain_cycles(&ChainSpec {
+                total += chain(&ChainSpec {
                     stage_rows,
                     d,
                     row_mem,
@@ -122,7 +151,7 @@ pub fn simulate(
             let stage_rows: Vec<u64> = (0..cfg.s)
                 .map(|j| owned + halo * (cfg.s - 1 - j))
                 .collect();
-            let per_round = chain_cycles(&ChainSpec {
+            let per_round = chain(&ChainSpec {
                 stage_rows,
                 d,
                 row_mem,

@@ -1,7 +1,9 @@
 //! Small self-contained substrates: JSON (no serde in the offline vendor
-//! set), a deterministic PRNG for property tests, and misc helpers.
+//! set), a deterministic PRNG for property tests, a persistent worker
+//! pool, and misc helpers.
 
 pub mod json;
+pub mod pool;
 pub mod prng;
 
 /// Integer ceiling division (the ⌈x/y⌉ that appears all over Eqs 4–8).

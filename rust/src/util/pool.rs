@@ -1,0 +1,223 @@
+//! Persistent worker pool shared by the crate's data-parallel hot paths
+//! (the tiered stencil engine's row bands, batch DSE exploration, the
+//! scheduler's candidate pre-simulation).
+//!
+//! The pre-PR interpreter spawned fresh scoped threads per statement per
+//! iteration — tens of microseconds of spawn/join latency on every
+//! `eval_grid`. This pool spawns its threads once per process and hands
+//! them closures; `run` blocks until every submitted task has finished, so
+//! tasks may safely borrow caller-local data (a "reusable scope").
+//!
+//! Thread count: `SASA_THREADS` env var if set (≥ 1), otherwise
+//! `available_parallelism()` — replacing the old hard `min(8)` cap.
+//!
+//! Nesting: `run` called from inside a pool worker executes the tasks
+//! inline on that worker instead of re-enqueueing them, so nested use
+//! cannot deadlock the pool.
+
+use std::cell::Cell;
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// The pool: a shared job queue drained by long-lived worker threads.
+pub struct Pool {
+    tx: mpsc::Sender<Job>,
+    workers: usize,
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("SASA_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Completion latch for one `run` call.
+struct Latch {
+    done: Mutex<usize>,
+    cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Pool {
+    /// The process-wide pool, created on first use.
+    pub fn global() -> &'static Pool {
+        GLOBAL.get_or_init(|| Pool::with_threads(configured_threads()))
+    }
+
+    fn with_threads(n: usize) -> Pool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("sasa-worker-{i}"))
+                .spawn(move || {
+                    IN_WORKER.with(|c| c.set(true));
+                    loop {
+                        // holding the lock while blocked in recv is fine:
+                        // the holder wakes, takes one job, releases.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(j) => j(),
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawning pool worker");
+        }
+        Pool { tx, workers: n }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute every task, blocking until all have completed. Tasks may
+    /// borrow from the caller's stack; a panicking task is re-raised here
+    /// after the rest of the batch drains (no deadlock, no lost panic).
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        // inline paths: trivial batches, a 1-thread pool, or a call from
+        // inside a worker (nested `run` must not wait on its own queue)
+        if n == 1 || self.workers <= 1 || IN_WORKER.with(|c| c.get()) {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch {
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        for t in tasks {
+            // SAFETY: `run` never unwinds past this loop (a failed send
+            // aborts, below) and does not return until the latch has
+            // counted every task, so borrows captured by the task strictly
+            // outlive its execution — the lifetime erasure is never
+            // observable.
+            let t: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(t)
+            };
+            let latch = Arc::clone(&latch);
+            let send = self.tx.send(Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+                if let Err(p) = r {
+                    let mut slot = latch.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+                let mut g = latch.done.lock().unwrap();
+                *g += 1;
+                latch.cv.notify_all();
+            }));
+            if send.is_err() {
+                // Workers only vanish if the pool was torn down — the
+                // global pool never is. Unwinding here would let already
+                // queued tasks' transmuted borrows outlive this frame
+                // (and a closed channel drops queued tasks unexecuted, so
+                // the latch could never settle) — die without unwinding.
+                eprintln!("sasa worker pool: workers unavailable mid-batch");
+                std::process::abort();
+            }
+        }
+        let mut g = latch.done.lock().unwrap();
+        while *g < n {
+            g = latch.cv.wait(g).unwrap();
+        }
+        drop(g);
+        if let Some(p) = latch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_tasks_with_borrows() {
+        let pool = Pool::global();
+        let mut out = vec![0usize; 64];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || *slot = i + 1);
+                b
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        let pool = Pool::global();
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let hits = &hits;
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    // nested batch runs inline on the worker
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let b2: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                hits.fetch_add(1, Ordering::SeqCst);
+                            });
+                            b2
+                        })
+                        .collect();
+                    Pool::global().run(inner);
+                });
+                b
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let pool = Pool::global();
+        let r = std::panic::catch_unwind(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|i| {
+                    let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        if i == 1 {
+                            panic!("boom");
+                        }
+                    });
+                    b
+                })
+                .collect();
+            pool.run(tasks);
+        });
+        assert!(r.is_err(), "worker panic must surface in the caller");
+        // the pool stays usable afterwards
+        let mut x = 0u64;
+        let t: Box<dyn FnOnce() + Send + '_> = Box::new(|| x = 7);
+        pool.run(vec![t]);
+        assert_eq!(x, 7);
+    }
+}

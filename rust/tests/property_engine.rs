@@ -1,0 +1,121 @@
+//! Property tests for the ISSUE 2 tiered execution engine and the
+//! simulator's steady-state fast-forward:
+//!
+//! * the interior/border-split row-sweep engine must be **bit-identical**
+//!   to the naive per-cell interpreter oracle for every benchmark kernel,
+//!   across random grids, odd tile shapes (1×N, N×1, rows < radius), dead
+//!   rows, and multi-input / local-chain programs;
+//! * `simulate` (closed-form fast-forward) must reproduce
+//!   `simulate_walk` (explicit row walk) for all five parallelism schemes.
+
+use sasa::dsl::{analyze, benchmarks as b, parse};
+use sasa::model::explore;
+use sasa::platform::FpgaPlatform;
+use sasa::reference::{interpret, interpret_naive, Grid};
+use sasa::sim::{simulate, simulate_walk};
+use sasa::util::prng::Prng;
+
+fn random_inputs(rng: &mut Prng, n_inputs: u64, rows: usize, cols: usize) -> Vec<Grid> {
+    (0..n_inputs)
+        .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, -2.0, 2.0)))
+        .collect()
+}
+
+#[test]
+fn tiered_engine_bit_identical_on_all_kernels() {
+    // odd shapes on purpose: single-row, single-column, rows smaller than
+    // the stencil radius (dilate has r=2, blur-jacobi2d r=(2,3)), narrow
+    // tiles, plus regular squares
+    let shapes_2d: [[u64; 2]; 7] =
+        [[1, 17], [17, 1], [2, 5], [5, 2], [3, 64], [16, 16], [7, 33]];
+    let shapes_3d: [[u64; 3]; 4] = [[1, 3, 3], [5, 2, 2], [9, 4, 4], [2, 8, 2]];
+    let mut rng = Prng::new(0xE2E2);
+    let mut cases = 0u32;
+    let all: Vec<(&str, &str)> = b::ALL
+        .iter()
+        .copied()
+        .chain(std::iter::once(("blur-jacobi2d", b::BLUR_JACOBI2D_DSL)))
+        .collect();
+    for (name, src) in all {
+        let is3d = parse(src).unwrap().dims().len() == 3;
+        let dim_sets: Vec<Vec<u64>> = if is3d {
+            shapes_3d.iter().map(|d| d.to_vec()).collect()
+        } else {
+            shapes_2d.iter().map(|d| d.to_vec()).collect()
+        };
+        for dims in dim_sets {
+            let prog = parse(&b::with_dims(src, &dims, 3)).unwrap();
+            let info = analyze(&prog);
+            let rows = dims[0] as usize;
+            let cols = dims[1..].iter().product::<u64>() as usize;
+            for steps in [0u64, 1, 3] {
+                for nrows in [rows, rows.div_ceil(2)] {
+                    let inputs = random_inputs(&mut rng, info.n_inputs, rows, cols);
+                    let fast = interpret(&prog, &inputs, nrows, steps);
+                    let naive = interpret_naive(&prog, &inputs, nrows, steps);
+                    assert_eq!(
+                        fast, naive,
+                        "{name} dims={dims:?} nrows={nrows} steps={steps}"
+                    );
+                    cases += 1;
+                }
+            }
+        }
+    }
+    assert!(cases > 200, "coverage shrank: only {cases} cases");
+}
+
+#[test]
+fn tiered_engine_bit_identical_on_tile_contract_grids() {
+    // the coordinator's tile contract: dead rows beyond nrows, canvases
+    // larger than the live band — bigger grids so the engine actually
+    // takes its parallel path
+    let mut rng = Prng::new(0xC0DE);
+    for (src, dims) in [
+        (b::JACOBI2D_DSL, vec![96u64, 64]),
+        (b::HOTSPOT_DSL, vec![96, 64]),
+        (b::DILATE_DSL, vec![80, 48]),
+        (b::BLUR_JACOBI2D_DSL, vec![96, 64]),
+        (b::JACOBI3D_DSL, vec![96, 8, 8]),
+    ] {
+        let prog = parse(&b::with_dims(src, &dims, 4)).unwrap();
+        let info = analyze(&prog);
+        let rows = dims[0] as usize;
+        let cols = dims[1..].iter().product::<u64>() as usize;
+        for nrows in [rows, rows - 7, rows / 3] {
+            let inputs = random_inputs(&mut rng, info.n_inputs, rows, cols);
+            let fast = interpret(&prog, &inputs, nrows, 4);
+            let naive = interpret_naive(&prog, &inputs, nrows, 4);
+            assert_eq!(fast, naive, "{} nrows={nrows}", info.name);
+        }
+    }
+}
+
+#[test]
+fn sim_fastforward_equals_row_walk_all_five_schemes() {
+    // per_scheme carries the DSE survivor of each of the five parallelism
+    // schemes; fast-forward and row walk must agree on every one of them
+    // (up to f64 rounding: the walk accumulates by repeated addition)
+    let p = FpgaPlatform::u280();
+    for (name, src) in b::ALL {
+        let info = analyze(&parse(src).unwrap());
+        for iter in [1u64, 3, 16, 64] {
+            let r = explore(&info, &p, iter);
+            for c in &r.per_scheme {
+                let fast = simulate(&info, &p, iter, c.config);
+                let walk = simulate_walk(&info, &p, iter, c.config);
+                let rel = (fast.kernel_cycles - walk.kernel_cycles).abs()
+                    / walk.kernel_cycles.max(1.0);
+                assert!(
+                    rel < 1e-9,
+                    "{name} iter={iter} {}: fast {} vs walk {} (rel {rel:e})",
+                    c.config,
+                    fast.kernel_cycles,
+                    walk.kernel_cycles
+                );
+                assert_eq!(fast.rounds, walk.rounds);
+                assert_eq!(fast.hbm_bytes, walk.hbm_bytes);
+            }
+        }
+    }
+}
