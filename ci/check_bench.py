@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for BENCH_hotpath.json.
+
+The hotpath bench (rust/benches/hotpath.rs) emits derived speedups of the
+two PR-2 optimizations:
+
+* ``sim_fastforward_speedup``     — closed-form steady-state fast-forward
+                                    vs the explicit row walk;
+* ``interp_speedup_<kernel>``     — tiered interior/border engine vs the
+                                    naive per-cell oracle.
+
+This script fails (exit 1) when any of them regresses below a conservative
+floor, so an accidental revert of either hot path can never land silently.
+Floors are deliberately far below the typical measured speedups: CI runners
+are noisy and the smoke run uses reduced sizes — the gate is for "the
+optimization stopped working", not for small variance.
+
+Usage: ci/check_bench.py [BENCH_hotpath.json] [--floor NAME=VALUE ...]
+"""
+
+import json
+import sys
+
+# name -> conservative floor (dimensionless speedup, >= 1.0 means "not
+# slower than the baseline it replaced")
+DEFAULT_FLOORS = {
+    "sim_fastforward_speedup": 2.0,
+    "interp_speedup_jacobi2d": 1.1,
+    "interp_speedup_hotspot": 1.1,
+}
+
+
+def main(argv):
+    path = "BENCH_hotpath.json"
+    floors = dict(DEFAULT_FLOORS)
+    args = list(argv[1:])
+    while args:
+        a = args.pop(0)
+        if a == "--floor":
+            name, _, value = args.pop(0).partition("=")
+            floors[name] = float(value)
+        else:
+            path = a
+
+    with open(path) as f:
+        bench = json.load(f)
+    derived = bench.get("derived", {})
+
+    failures = []
+    for name, floor in sorted(floors.items()):
+        if name not in derived:
+            failures.append(f"{name}: missing from {path} (bench series renamed?)")
+            continue
+        actual = float(derived[name])
+        status = "ok" if actual >= floor else "REGRESSED"
+        print(f"{name}: {actual:.2f}x (floor {floor:.2f}x) {status}")
+        if actual < floor:
+            failures.append(f"{name}: {actual:.2f}x fell below the {floor:.2f}x floor")
+
+    if failures:
+        print("\nbench-regression guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench-regression guard passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

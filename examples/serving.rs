@@ -1,12 +1,15 @@
 //! Serving walkthrough: the `sasa::service` layer end to end.
 //!
-//! 1. three tenants queue seven stencil jobs (the `examples/jobs.json` mix);
-//! 2. the scheduler packs them onto the U280's 32 HBM banks — concurrent
-//!    admission on disjoint bank subsets, next-best fallback when the best
-//!    design doesn't fit the remaining pool, FIFO so nothing starves;
+//! 1. three tenants queue seven stencil jobs (the demo mix);
+//! 2. the fleet scheduler packs them onto the U280's 32 HBM banks —
+//!    concurrent admission on disjoint bank subsets, next-best fallback
+//!    when the best design doesn't fit the remaining pool, priority-aware
+//!    event-driven admission so nothing starves;
 //! 3. the plan cache persists every DSE result, so a second identical batch
 //!    runs with zero exploration;
-//! 4. one admitted configuration is executed for real through the
+//! 4. the same contended mix is scheduled on a two-board fleet, shrinking
+//!    the makespan;
+//! 5. one admitted configuration is executed for real through the
 //!    coordinator and verified against the DSL interpreter.
 //!
 //! Run: `cargo run --release --example serving`
@@ -37,6 +40,19 @@ fn main() -> anyhow::Result<()> {
         report2.schedule.cache_hits, report2.schedule.explorations, cache_path
     );
     assert_eq!(report2.schedule.explorations, 0);
+
+    // --- fleet: a contended mix on one board vs two ----------------------
+    let mut contended = demo_jobs();
+    contended.push(JobSpec::new("dave", "jacobi2d", vec![9720, 1024], 2));
+    contended.push(JobSpec::new("dave", "jacobi2d", vec![9720, 1024], 2));
+    let one = exec.run(&contended, &mut warm)?;
+    let two = BatchExecutor::new(&platform).with_boards(2).run(&contended, &mut warm)?;
+    println!(
+        "fleet: makespan {:.3} ms on 1 board -> {:.3} ms on 2 boards",
+        one.schedule.makespan_s * 1e3,
+        two.schedule.makespan_s * 1e3
+    );
+    println!("{}", two.board_table().to_markdown());
 
     // --- real execution: one admitted config through the coordinator -----
     let runtime = Runtime::from_dir(default_artifact_dir())?;

@@ -139,7 +139,9 @@ impl<'rt> Coordinator<'rt> {
         let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
         for (i, g) in job.inputs.iter().enumerate() {
             let src = if i == upd { state } else { g };
-            canvases.push(self.runtime.pad_rows_to_canvas(entry, src, tile.ext_start, tile.ext_end));
+            canvases.push(
+                self.runtime.pad_rows_to_canvas(entry, src, tile.ext_start, tile.ext_end),
+            );
         }
         self.runtime
             .run_stencil(entry, &canvases, tile.ext_rows() as u64, nsteps)

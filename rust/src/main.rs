@@ -6,7 +6,7 @@
 //! sasa codegen --kernel hotspot --iter 64 -o d/ emit TAPA HLS C++ + host + plan
 //! sasa run --kernel jacobi2d --dims 64x64 --iter 8   execute for real via PJRT
 //! sasa sim --kernel blur --iter 16             cycle-simulate all five schemes
-//! sasa serve --jobs jobs.json                  schedule a multi-tenant job batch
+//! sasa serve --jobs jobs.json --boards 2       schedule a multi-tenant job batch on a fleet
 //! sasa batch --iter 8 [--real]                 run the whole suite as one batch
 //! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
 //! ```
@@ -146,7 +146,8 @@ fn print_help() {
          sasa codegen --kernel <name> --iter <n> [--out <dir>]\n  \
          sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
-         sasa serve --jobs <jobs.json> [--cache <plans.json>] [--banks <n>]\n  \
+         sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
+         [--banks <n>] [--boards <n>] [--aging-ms <x>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d"
@@ -218,9 +219,17 @@ fn cmd_dse_sweep(src: &str, args: &Args, platform: &FpgaPlatform) -> Result<()> 
         let prog = parse(&b::with_dims(src, &dims, iter))?;
         let info = analyze(&prog);
         let r = explore(&info, platform, iter);
-        println!("iter={iter:<3} -> {} ({:.2} GCell/s, {} banks)",
-            r.best.config, r.best.gcell_per_s, r.best.hbm_banks);
-        plans.push(Plan::from_choice(&info.name.to_lowercase(), info.rows, info.cols, iter, &r.best));
+        println!(
+            "iter={iter:<3} -> {} ({:.2} GCell/s, {} banks)",
+            r.best.config, r.best.gcell_per_s, r.best.hbm_banks
+        );
+        plans.push(Plan::from_choice(
+            &info.name.to_lowercase(),
+            info.rows,
+            info.cols,
+            iter,
+            &r.best,
+        ));
     }
     if let Some(path) = args.get("plans") {
         std::fs::write(path, plans_to_json(&plans).to_string())?;
@@ -257,7 +266,10 @@ fn cmd_codegen(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         }
         None => {
             println!("{hls}\n// ================= host =================\n{host}");
-            println!("// ============ connectivity ============\n{}", generate_connectivity(&prog, r.best.config));
+            println!(
+                "// ============ connectivity ============\n{}",
+                generate_connectivity(&prog, r.best.config)
+            );
             println!("// plan: {}", plan.to_json());
         }
     }
@@ -375,14 +387,19 @@ fn print_batch_report(
 ) {
     println!("{}", report.job_table().to_markdown());
     println!("{}", report.tenant_table().to_markdown());
+    println!("{}", report.class_table().to_markdown());
+    println!("{}", report.board_table().to_markdown());
     println!("{}", report.summary_table().to_markdown());
     let s = &report.schedule;
     println!(
-        "scheduled {} jobs, {} concurrent at peak, {:.1}% bank utilization over {:.3} ms",
+        "scheduled {} jobs on {} board(s), {} concurrent at peak, \
+         {:.1}% bank utilization over {:.3} ms, {} preemption(s)",
         s.jobs.len(),
+        s.boards.len(),
         s.peak_concurrency,
         s.bank_utilization() * 100.0,
-        s.makespan_s * 1e3
+        s.makespan_s * 1e3,
+        s.preemptions
     );
     println!(
         "plan cache: {} hits, {} explorations ({} plans in {cache_path})",
@@ -392,17 +409,37 @@ fn print_batch_report(
     );
 }
 
-/// `sasa serve --jobs jobs.json [--cache plans.json] [--banks n]`:
-/// schedule a multi-tenant job batch over the platform's HBM bank pool.
+/// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
+/// [--banks n] [--boards n] [--aging-ms x]`: schedule a multi-tenant job
+/// batch over a fleet of boards' HBM bank pools.
 fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     use sasa::service::{load_jobs, BatchExecutor, PlanCache};
     let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
     let specs = load_jobs(jobs_path)?;
     let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
     let mut cache = PlanCache::at_path(cache_path)?;
+    if let Some(cap) = args.get("cache-cap") {
+        let cap: usize = cap.parse().context("--cache-cap must be an integer")?;
+        if cap == 0 {
+            bail!("--cache-cap must be >= 1 (0 would disable the plan cache)");
+        }
+        cache = cache.with_max_entries(cap);
+    }
     let mut exec = BatchExecutor::new(platform);
     if let Some(banks) = args.get("banks") {
         exec = exec.with_pool_banks(banks.parse().context("--banks must be an integer")?);
+    }
+    let boards = args.u64_or("boards", 1)?;
+    if boards == 0 {
+        bail!("--boards must be >= 1");
+    }
+    exec = exec.with_boards(boards as usize);
+    if let Some(ms) = args.get("aging-ms") {
+        let ms: f64 = ms.parse().context("--aging-ms must be a number")?;
+        if !ms.is_finite() || ms < 0.0 {
+            bail!("--aging-ms must be finite and >= 0");
+        }
+        exec = exec.with_aging_s(ms / 1e3);
     }
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
     print_batch_report(&report, &cache, cache_path);

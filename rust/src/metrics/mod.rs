@@ -4,6 +4,8 @@
 //! the bench harness.
 
 pub mod reports;
+pub mod stats;
 pub mod table;
 
+pub use stats::percentile;
 pub use table::Table;

@@ -60,7 +60,13 @@ pub fn fig1() -> (Table, Table) {
 pub fn table1() -> Table {
     let mut t = Table::new(
         "Table 1 - stencil acceleration framework comparison",
-        &["framework", "multi-PE parallelism", "pre-processing free", "automatic optimization", "on-chip data reuse"],
+        &[
+            "framework",
+            "multi-PE parallelism",
+            "pre-processing free",
+            "automatic optimization",
+            "on-chip data reuse",
+        ],
     );
     for (fw, par, pre, auto, reuse) in [
         ("Natale/Cattaneo [2,20]", "temporal", "yes", "yes", "streaming"),

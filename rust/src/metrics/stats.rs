@@ -1,0 +1,33 @@
+//! Small deterministic statistics helpers for report tables.
+
+/// Nearest-rank percentile of an unsorted sample (pct in [0, 100]).
+/// Deterministic: ties and ordering are resolved by a total sort on the
+/// values, and the result is always an element of the sample. Returns NaN
+/// for an empty sample.
+pub fn percentile(values: &[f64], pct: f64) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let rank = ((pct / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 90.0), 5.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        // single sample: every percentile is that sample
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

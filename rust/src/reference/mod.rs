@@ -89,7 +89,13 @@ impl Grid {
     /// A `rows`×`cols` zero grid whose top rows hold rows [start, end) of
     /// `src` — tile-to-canvas padding without the intermediate row slice
     /// (shared by both runtime backends).
-    pub fn from_padded_rows(rows: usize, cols: usize, src: &Grid, start: usize, end: usize) -> Grid {
+    pub fn from_padded_rows(
+        rows: usize,
+        cols: usize,
+        src: &Grid,
+        start: usize,
+        end: usize,
+    ) -> Grid {
         let mut canvas = Grid::new(rows, cols);
         canvas.copy_rows_from(0, src, start, end - start);
         canvas
@@ -164,8 +170,8 @@ mod tests {
         // zero power + ambient temp is a fixed point
         let zero_power = Grid::new(8, 8);
         let out = interpret(&prog, &[zero_power, temp.clone()], 8, 4);
-        for i in 0..64 {
-            assert!((out.data[i] - 80.0).abs() < 1e-4);
+        for v in &out.data {
+            assert!((v - 80.0).abs() < 1e-4);
         }
         // nonzero power heats the interior
         let out = interpret(&prog, &[power, temp.clone()], 8, 2);

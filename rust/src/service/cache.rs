@@ -32,12 +32,26 @@ pub struct CacheStats {
 
 /// Cache file schema version — bump when the resource model or the JSON
 /// layout changes incompatibly; stale files are rejected, not misread.
+/// (The `last_used` recency field is additive: files without it load with
+/// recency 0, ties broken by key order.)
 const CACHE_VERSION: u64 = 1;
 
-/// A memoizing, optionally file-backed store of exploration results.
+/// One cached plan plus its LRU recency stamp (monotonic per cache
+/// lifetime, persisted so long-lived files keep their use order).
+struct Entry {
+    result: DseResult,
+    last_used: u64,
+}
+
+/// A memoizing, optionally file-backed store of exploration results, with
+/// an optional LRU entry cap for long-lived cache files.
 pub struct PlanCache {
     path: Option<PathBuf>,
-    entries: BTreeMap<String, DseResult>,
+    entries: BTreeMap<String, Entry>,
+    /// Monotonic recency clock (>= every stored `last_used`).
+    seq: u64,
+    /// When set, inserts evict the least-recently-used entries over cap.
+    max_entries: Option<usize>,
     stats: CacheStats,
 }
 
@@ -52,7 +66,13 @@ fn style_name(style: DesignStyle) -> &'static str {
 impl PlanCache {
     /// A cache that lives only for this process.
     pub fn in_memory() -> PlanCache {
-        PlanCache { path: None, entries: BTreeMap::new(), stats: CacheStats::default() }
+        PlanCache {
+            path: None,
+            entries: BTreeMap::new(),
+            seq: 0,
+            max_entries: None,
+            stats: CacheStats::default(),
+        }
     }
 
     /// A file-backed cache: loads `path` if it exists (a missing file is an
@@ -62,6 +82,8 @@ impl PlanCache {
         let mut cache = PlanCache {
             path: Some(path.clone()),
             entries: BTreeMap::new(),
+            seq: 0,
+            max_entries: None,
             stats: CacheStats::default(),
         };
         if path.exists() {
@@ -88,16 +110,64 @@ impl PlanCache {
             for (key, val) in plans {
                 let r = result_from_json(val)
                     .with_context(|| format!("plan cache {path:?}, entry '{key}'"))?;
-                cache.entries.insert(key.clone(), r);
+                // pre-LRU files carry no recency: they load as 0 (oldest)
+                let last_used = val.u64_or("last_used", 0);
+                cache.seq = cache.seq.max(last_used);
+                cache.entries.insert(key.clone(), Entry { result: r, last_used });
             }
         }
         Ok(cache)
     }
 
+    /// Cap the cache at `cap` entries: inserts beyond it evict the
+    /// least-recently-used plan (ties broken by key order, so eviction is
+    /// deterministic even for pre-LRU files). An over-cap cache file that
+    /// was just loaded is trimmed immediately.
+    pub fn with_max_entries(mut self, cap: usize) -> PlanCache {
+        self.max_entries = Some(cap);
+        self.evict_to_cap();
+        self
+    }
+
+    pub fn max_entries(&self) -> Option<usize> {
+        self.max_entries
+    }
+
+    fn evict_to_cap(&mut self) {
+        let Some(cap) = self.max_entries else { return };
+        if self.entries.len() <= cap {
+            return;
+        }
+        // one sorted pass, not a min-scan per eviction: an over-cap file
+        // under a small cap trims in O(n log n)
+        let mut order: Vec<(u64, String)> = self
+            .entries
+            .iter()
+            .map(|(k, e)| (e.last_used, k.clone()))
+            .collect();
+        order.sort();
+        for (_, key) in order.iter().take(self.entries.len() - cap) {
+            self.entries.remove(key);
+        }
+    }
+
+    /// Store a fresh exploration, evicting over the cap.
+    fn insert(&mut self, key: String, result: DseResult) {
+        self.seq += 1;
+        let last_used = self.seq;
+        self.entries.insert(key, Entry { result, last_used });
+        self.evict_to_cap();
+    }
+
     /// The memoization key. `explore` always evaluates the SASA PE design
     /// style; the style is part of the key so future styles can coexist in
     /// one cache file.
-    pub fn key(info: &KernelInfo, platform: &FpgaPlatform, iter: u64, style: DesignStyle) -> String {
+    pub fn key(
+        info: &KernelInfo,
+        platform: &FpgaPlatform,
+        iter: u64,
+        style: DesignStyle,
+    ) -> String {
         let dims: Vec<String> = info.dims.iter().map(u64::to_string).collect();
         format!(
             "{}|{}|iter{}|{}|{}",
@@ -110,8 +180,8 @@ impl PlanCache {
     }
 
     /// Memoized exploration: returns the cached `DseResult` when present
-    /// (recording a hit), otherwise runs `explore` and stores its result.
-    /// The `bool` is true on a cache hit.
+    /// (recording a hit and refreshing its LRU recency), otherwise runs
+    /// `explore` and stores its result. The `bool` is true on a cache hit.
     pub fn get_or_explore(
         &mut self,
         info: &KernelInfo,
@@ -119,13 +189,16 @@ impl PlanCache {
         iter: u64,
     ) -> (DseResult, bool) {
         let key = Self::key(info, platform, iter, DesignStyle::Sasa);
-        if let Some(r) = self.entries.get(&key) {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_used = seq;
             self.stats.hits += 1;
-            return (r.clone(), true);
+            return (e.result.clone(), true);
         }
         self.stats.misses += 1;
         let r = explore(info, platform, iter);
-        self.entries.insert(key, r.clone());
+        self.insert(key, r.clone());
         (r, false)
     }
 
@@ -133,7 +206,9 @@ impl PlanCache {
     /// out over the persistent worker pool (`explore` is a pure function of
     /// its arguments), and results come back in request order. Duplicate
     /// keys within one batch explore once — the later occurrences count as
-    /// hits, exactly as a sequential `get_or_explore` loop would.
+    /// hits, exactly as a sequential `get_or_explore` loop would. Hit
+    /// values are captured before any insert so a tight LRU cap can never
+    /// evict a plan this batch still needs.
     pub fn get_or_explore_batch(
         &mut self,
         platform: &FpgaPlatform,
@@ -143,11 +218,24 @@ impl PlanCache {
             .iter()
             .map(|(info, iter)| Self::key(info, platform, *iter, DesignStyle::Sasa))
             .collect();
+        let mut out: Vec<Option<(DseResult, bool)>> = Vec::with_capacity(reqs.len());
+        for key in &keys {
+            self.seq += 1;
+            let seq = self.seq;
+            match self.entries.get_mut(key) {
+                Some(e) => {
+                    e.last_used = seq;
+                    self.stats.hits += 1;
+                    out.push(Some((e.result.clone(), true)));
+                }
+                None => out.push(None),
+            }
+        }
         let mut run = vec![false; reqs.len()];
         {
             let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
             for (idx, key) in keys.iter().enumerate() {
-                if !self.entries.contains_key(key) && seen.insert(key.as_str()) {
+                if out[idx].is_none() && seen.insert(key.as_str()) {
                     run[idx] = true;
                 }
             }
@@ -167,23 +255,39 @@ impl PlanCache {
             }
             Pool::global().run(tasks);
         }
-        let mut out = Vec::with_capacity(reqs.len());
+        // resolve fresh explorations and their duplicates from a local map
+        // (entries may evict under the cap as inserts land)
+        let mut explored: BTreeMap<&str, DseResult> = BTreeMap::new();
         for (idx, key) in keys.iter().enumerate() {
             if let Some(r) = fresh[idx].take() {
-                self.stats.misses += 1;
-                self.entries.insert(key.clone(), r.clone());
-                out.push((r, false));
-            } else {
-                let r = self
-                    .entries
-                    .get(key)
-                    .expect("every batch key is either cached or freshly explored")
-                    .clone();
-                self.stats.hits += 1;
-                out.push((r, true));
+                explored.insert(key.as_str(), r);
             }
         }
-        out
+        for (idx, key) in keys.iter().enumerate() {
+            if out[idx].is_some() {
+                continue;
+            }
+            let r = explored
+                .get(key.as_str())
+                .expect("every batch key is either cached or freshly explored")
+                .clone();
+            if run[idx] {
+                self.stats.misses += 1;
+                self.insert(key.clone(), r.clone());
+                out[idx] = Some((r, false));
+            } else {
+                // duplicate of a fresh exploration: a hit, recency-bumped
+                // when the entry survived the cap
+                self.seq += 1;
+                let seq = self.seq;
+                if let Some(e) = self.entries.get_mut(key.as_str()) {
+                    e.last_used = seq;
+                }
+                self.stats.hits += 1;
+                out[idx] = Some((r, true));
+            }
+        }
+        out.into_iter().map(|o| o.expect("every slot resolved")).collect()
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -226,7 +330,13 @@ impl PlanCache {
         let plans: BTreeMap<String, Json> = self
             .entries
             .iter()
-            .map(|(k, v)| (k.clone(), result_to_json(v)))
+            .map(|(k, e)| {
+                let mut j = result_to_json(&e.result);
+                if let Json::Obj(o) = &mut j {
+                    o.insert("last_used".to_string(), num(e.last_used as f64));
+                }
+                (k.clone(), j)
+            })
             .collect();
         obj(vec![
             ("version", num(CACHE_VERSION as f64)),
@@ -439,6 +549,69 @@ mod tests {
         // saving re-stamps the file with the current model version
         stale.save().unwrap();
         assert!(std::fs::read_to_string(&path).unwrap().contains(&stamp));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_used_on_insert() {
+        let p = FpgaPlatform::u280();
+        let a = info_at(b::JACOBI2D_DSL, &[720, 1024], 4);
+        let bb = info_at(b::BLUR_DSL, &[720, 1024], 4);
+        let c = info_at(b::HOTSPOT_DSL, &[720, 1024], 4);
+        let mut cache = PlanCache::in_memory().with_max_entries(2);
+        cache.get_or_explore(&a, &p, 4);
+        cache.get_or_explore(&bb, &p, 4);
+        // touch `a`: it becomes the most recently used of the two
+        let (_, hit) = cache.get_or_explore(&a, &p, 4);
+        assert!(hit);
+        // inserting `c` must evict `b` (oldest-used), not `a`
+        cache.get_or_explore(&c, &p, 4);
+        assert_eq!(cache.len(), 2);
+        let (_, hit_a) = cache.get_or_explore(&a, &p, 4);
+        assert!(hit_a, "recently used entry survives the cap");
+        let (_, hit_b) = cache.get_or_explore(&bb, &p, 4);
+        assert!(!hit_b, "oldest-used entry was evicted");
+    }
+
+    #[test]
+    fn over_cap_file_loads_evicts_and_roundtrips() {
+        let dir = std::env::temp_dir().join("sasa_plan_cache_lru");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let p = FpgaPlatform::u280();
+        let a = info_at(b::JACOBI2D_DSL, &[720, 1024], 4);
+        let bb = info_at(b::BLUR_DSL, &[720, 1024], 4);
+        let c = info_at(b::HOTSPOT_DSL, &[720, 1024], 4);
+        let fresh_a = explore(&a, &p, 4);
+        let fresh_c = explore(&c, &p, 4);
+
+        // an uncapped process writes three plans, with `a` touched last
+        let mut cold = PlanCache::at_path(&path).unwrap();
+        cold.get_or_explore(&a, &p, 4);
+        cold.get_or_explore(&bb, &p, 4);
+        cold.get_or_explore(&c, &p, 4);
+        cold.get_or_explore(&a, &p, 4);
+        cold.save().unwrap();
+
+        // a capped process loads the over-cap file: the oldest-used plan
+        // (`b`) is trimmed immediately, the survivors round-trip exactly
+        let mut capped = PlanCache::at_path(&path).unwrap().with_max_entries(2);
+        assert_eq!(capped.len(), 2);
+        let (ra, hit_a) = capped.get_or_explore(&a, &p, 4);
+        let (rc, hit_c) = capped.get_or_explore(&c, &p, 4);
+        assert!(hit_a && hit_c, "recently used plans survive the trim");
+        assert_eq!(ra, fresh_a);
+        assert_eq!(rc, fresh_c);
+        let (_, hit_b) = capped.get_or_explore(&bb, &p, 4);
+        assert!(!hit_b, "oldest-used plan was evicted at load");
+        capped.save().unwrap();
+
+        // re-exploring `b` under the cap evicted the then-oldest survivor,
+        // so the saved file holds exactly `cap` plans with recency stamps
+        let reloaded = PlanCache::at_path(&path).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert!(reloaded.to_json().to_string().contains("last_used"));
     }
 
     #[test]

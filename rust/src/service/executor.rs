@@ -2,11 +2,11 @@
 //! optionally drives admitted configurations through the real
 //! `Coordinator` path for numeric verification.
 //!
-//! The simulated timeline (bank pool + cycle simulator) answers "what does
-//! this job mix do on a U280"; `execute_real` answers "does the chosen
-//! configuration actually compute the right grid", by running the same
-//! `Config` through the coordinator's multi-PE dataflow against the DSL
-//! interpreter oracle. Independent admitted jobs are explored and
+//! The simulated timeline (bank pools + cycle simulator) answers "what does
+//! this job mix do on a fleet of U280s"; `execute_real` answers "does the
+//! chosen configuration actually compute the right grid", by running the
+//! same `Config` through the coordinator's multi-PE dataflow against the
+//! DSL interpreter oracle. Independent admitted jobs are explored and
 //! simulated in parallel on the worker pool (see `scheduler::prepare_all`)
 //! — a batch of N tenants costs max-of-sims wall time, not sum.
 
@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{verify::max_abs_diff, Coordinator, ExecReport, StencilJob};
 use crate::dsl::{benchmarks as b, parse};
-use crate::metrics::Table;
+use crate::metrics::{percentile, Table};
 use crate::model::Config;
 use crate::platform::FpgaPlatform;
 use crate::reference::{interpret, Grid};
@@ -24,8 +24,9 @@ use crate::runtime::Runtime;
 use crate::util::prng::Prng;
 
 use super::cache::PlanCache;
-use super::jobs::JobSpec;
-use super::scheduler::{Schedule, Scheduler};
+use super::fleet::Fleet;
+use super::jobs::{JobSpec, Priority};
+use super::scheduler::Schedule;
 
 /// Aggregated per-tenant service metrics.
 #[derive(Debug, Clone)]
@@ -41,38 +42,78 @@ pub struct TenantStats {
     pub mean_wait_s: f64,
 }
 
-/// A scheduling pass plus its derived per-tenant aggregation.
+/// Per-priority-class latency aggregates (over timeline entries of that
+/// class): queue-wait and turnaround (arrival → finish) percentiles.
+///
+/// Entries are *segments*: a preempted job contributes its cut segment
+/// and its resumed remainder separately, the latter measured from the
+/// preemption boundary (its re-enqueue arrival), not the original
+/// submission — so these are per-admission service latencies, not
+/// end-to-end job latencies across preemption splits.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub class: Priority,
+    pub jobs: usize,
+    pub p50_wait_s: f64,
+    pub p95_wait_s: f64,
+    pub max_wait_s: f64,
+    pub p50_turnaround_s: f64,
+    pub p95_turnaround_s: f64,
+}
+
+/// A scheduling pass plus its derived aggregations.
 #[derive(Debug, Clone)]
 pub struct BatchReport {
     pub schedule: Schedule,
     pub tenants: Vec<TenantStats>,
+    pub classes: Vec<ClassStats>,
 }
 
-/// Runs job batches through the scheduler and renders reports.
+/// Runs job batches through the fleet scheduler and renders reports.
 pub struct BatchExecutor<'p> {
     platform: &'p FpgaPlatform,
     pool_banks: Option<u64>,
+    boards: usize,
+    aging_s: Option<f64>,
 }
 
 impl<'p> BatchExecutor<'p> {
     pub fn new(platform: &'p FpgaPlatform) -> BatchExecutor<'p> {
-        BatchExecutor { platform, pool_banks: None }
+        BatchExecutor { platform, pool_banks: None, boards: 1, aging_s: None }
     }
 
+    /// Restrict every board's pool to fewer banks than the platform
+    /// exposes.
     pub fn with_pool_banks(mut self, banks: u64) -> BatchExecutor<'p> {
         self.pool_banks = Some(banks);
         self
     }
 
-    /// Schedule the batch and aggregate tenant statistics.
+    /// Schedule over `n` boards instead of one.
+    pub fn with_boards(mut self, n: usize) -> BatchExecutor<'p> {
+        self.boards = n.max(1);
+        self
+    }
+
+    /// Override the batch-aging bound (seconds).
+    pub fn with_aging_s(mut self, aging_s: f64) -> BatchExecutor<'p> {
+        self.aging_s = Some(aging_s);
+        self
+    }
+
+    /// Schedule the batch over the fleet and aggregate statistics.
     pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
-        let mut scheduler = Scheduler::new(self.platform);
+        let mut fleet = Fleet::new(self.platform, self.boards);
         if let Some(banks) = self.pool_banks {
-            scheduler = scheduler.with_pool_banks(banks);
+            fleet = fleet.with_board_banks(vec![banks; self.boards]);
         }
-        let schedule = scheduler.schedule(specs, cache)?;
+        if let Some(aging) = self.aging_s {
+            fleet = fleet.with_aging_s(aging);
+        }
+        let schedule = fleet.schedule(specs, cache)?;
         let tenants = aggregate_tenants(&schedule);
-        Ok(BatchReport { schedule, tenants })
+        let classes = aggregate_classes(&schedule);
+        Ok(BatchReport { schedule, tenants, classes })
     }
 
     /// Execute one admitted configuration for real through the coordinator
@@ -135,18 +176,47 @@ fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
         .collect()
 }
 
+fn aggregate_classes(schedule: &Schedule) -> Vec<ClassStats> {
+    [Priority::Interactive, Priority::Batch]
+        .into_iter()
+        .filter_map(|class| {
+            let entries: Vec<&super::scheduler::ScheduledJob> = schedule
+                .jobs
+                .iter()
+                .filter(|j| j.spec.priority == class)
+                .collect();
+            if entries.is_empty() {
+                return None;
+            }
+            let waits: Vec<f64> = entries.iter().map(|j| j.queue_wait_s).collect();
+            let turns: Vec<f64> =
+                entries.iter().map(|j| j.finish_s - j.spec.arrival_s).collect();
+            Some(ClassStats {
+                class,
+                jobs: entries.len(),
+                p50_wait_s: percentile(&waits, 50.0),
+                p95_wait_s: percentile(&waits, 95.0),
+                max_wait_s: waits.iter().copied().fold(0.0f64, f64::max),
+                p50_turnaround_s: percentile(&turns, 50.0),
+                p95_turnaround_s: percentile(&turns, 95.0),
+            })
+        })
+        .collect()
+}
+
 fn ms(seconds: f64) -> String {
     format!("{:.3}", seconds * 1e3)
 }
 
 impl BatchReport {
-    /// One row per scheduled job, in admission order.
+    /// One row per timeline entry, in admission order.
     pub fn job_table(&self) -> Table {
         let mut t = Table::new(
-            "Scheduled jobs (FIFO admission over the HBM bank pool)",
+            "Scheduled jobs (event-driven admission over per-board bank pools)",
             &[
-                "tenant", "kernel", "dims", "iter", "config", "banks", "plan",
-                "fallback", "wait ms", "start ms", "finish ms", "GCell/s",
+                "tenant", "kernel", "dims", "iter", "prio", "board", "config",
+                "banks", "plan", "fallback", "seg", "wait ms", "start ms",
+                "finish ms", "GCell/s",
             ],
         );
         for j in &self.schedule.jobs {
@@ -155,6 +225,8 @@ impl BatchReport {
                 j.spec.kernel.clone(),
                 j.spec.dims_label(),
                 j.spec.iter.to_string(),
+                j.spec.priority.name().to_string(),
+                j.board.to_string(),
                 j.config.to_string(),
                 j.hbm_banks.to_string(),
                 if j.cache_hit { "hit".into() } else { "explored".into() },
@@ -162,6 +234,11 @@ impl BatchReport {
                     "best".into()
                 } else {
                     format!("alt{}", j.fallback_rank)
+                },
+                match (j.preempted, j.resumed) {
+                    (true, _) => "cut".into(),
+                    (false, true) => "resume".into(),
+                    (false, false) => "-".into(),
                 },
                 ms(j.queue_wait_s),
                 ms(j.start_s),
@@ -190,22 +267,66 @@ impl BatchReport {
         t
     }
 
+    /// Per-priority-class wait/turnaround percentiles (nearest-rank).
+    pub fn class_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-class latency",
+            &[
+                "class", "jobs", "p50 wait ms", "p95 wait ms", "max wait ms",
+                "p50 turn ms", "p95 turn ms",
+            ],
+        );
+        for c in &self.classes {
+            t.row(vec![
+                c.class.name().to_string(),
+                c.jobs.to_string(),
+                ms(c.p50_wait_s),
+                ms(c.p95_wait_s),
+                ms(c.max_wait_s),
+                ms(c.p50_turnaround_s),
+                ms(c.p95_turnaround_s),
+            ]);
+        }
+        t
+    }
+
+    /// Per-board bank utilization over the fleet makespan.
+    pub fn board_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-board utilization",
+            &["board", "banks", "jobs", "peak banks", "bank util %"],
+        );
+        for (i, b) in self.schedule.boards.iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                b.banks.to_string(),
+                b.jobs.to_string(),
+                b.peak_banks.to_string(),
+                format!("{:.1}", b.utilization(self.schedule.makespan_s) * 100.0),
+            ]);
+        }
+        t
+    }
+
     pub fn summary_table(&self) -> Table {
         let s = &self.schedule;
         let mut t = Table::new(
             "Service summary",
             &[
-                "jobs", "pool banks", "makespan ms", "peak concurrency",
-                "peak banks", "bank util %", "cache hits", "explorations",
+                "jobs", "boards", "pool banks", "makespan ms", "peak concurrency",
+                "peak banks", "bank util %", "preemptions", "cache hits",
+                "explorations",
             ],
         );
         t.row(vec![
             s.jobs.len().to_string(),
+            s.boards.len().to_string(),
             s.pool_banks.to_string(),
             ms(s.makespan_s),
             s.peak_concurrency.to_string(),
             s.peak_banks_in_use.to_string(),
             format!("{:.1}", s.bank_utilization() * 100.0),
+            s.preemptions.to_string(),
             s.cache_hits.to_string(),
             s.explorations.to_string(),
         ]);
@@ -231,10 +352,32 @@ mod tests {
         assert!(tenant_md.contains("carol"));
         let summary_md = report.summary_table().to_markdown();
         assert!(summary_md.contains("bank util"));
+        // all-default mix: one batch class row covering every job
+        assert_eq!(report.classes.len(), 1);
+        assert_eq!(report.classes[0].class, Priority::Batch);
+        assert_eq!(report.classes[0].jobs, 7);
+        assert!(report.class_table().to_markdown().contains("batch"));
+        // single board: one utilization row
+        assert!(report.board_table().to_markdown().contains("Per-board"));
+        assert_eq!(report.schedule.boards.len(), 1);
         // every tenant delivered nonzero throughput
         for t in &report.tenants {
             assert!(t.gcell_per_s > 0.0, "{}", t.tenant);
         }
+    }
+
+    #[test]
+    fn two_boards_report_two_rows() {
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_boards(2)
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        assert_eq!(report.schedule.boards.len(), 2);
+        assert_eq!(report.schedule.pool_banks, 64);
+        let rows = report.board_table().rows.len();
+        assert_eq!(rows, 2);
     }
 
     #[test]

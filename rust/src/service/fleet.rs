@@ -1,0 +1,415 @@
+//! `sasa::service::fleet` — event-driven multi-board scheduling.
+//!
+//! Generalizes the single-board FIFO loop three ways (the ROADMAP's
+//! "async admission, preemption/priority classes, multi-board pool"):
+//!
+//! * **Event queue.** Arrivals and completions are explicit timeline
+//!   events: jobs stream in via `arrival_s` instead of being pre-sorted
+//!   into one batch, and the clock only ever jumps to the next event. The
+//!   loop is fully deterministic — identical inputs replay identical
+//!   schedules byte for byte (CI diffs two runs to hold this).
+//! * **Priority classes.** `interactive` jobs outrank `batch` jobs at
+//!   admission. An *aging bound* promotes any batch job that has waited
+//!   `aging_s` to interactive rank, so a stream of interactive arrivals
+//!   can delay batch work by at most the bound plus one drain. Admission
+//!   stays head-of-line on the priority-ordered queue: only the top job is
+//!   ever tried, which keeps every class starvation-free. An interactive
+//!   arrival that cannot start anywhere may additionally *preempt* one
+//!   running batch job at its next kernel-launch round boundary: the
+//!   victim's segment ends at the boundary (its partial-round work beyond
+//!   the retired iterations is charged to the timeline), and the remainder
+//!   is re-enqueued as a fresh arrival with the remaining iterations —
+//!   re-planned, since the DSE optimum depends on the iteration count.
+//! * **Multi-board placement.** `Fleet { boards }` holds one bank pool per
+//!   U280 (Zohouri-style heterogeneous configs welcome: each job lands on
+//!   the board whose free banks best match its DSE-chosen candidate).
+//!   Placement is candidate-major best-fit: the best candidate that fits
+//!   *any* board wins, and among fitting boards the fullest one is chosen
+//!   so large holes stay open for bank-hungry configs. Per-board timelines
+//!   merge into one [`Schedule`] with per-board stats.
+//!
+//! With one board and all-default priorities the loop reproduces
+//! [`Scheduler::schedule_fifo_walk`] decision for decision (same configs,
+//! fallback ranks, and start/finish times) — the ordering key degenerates
+//! to (arrival, submission) and neither priorities nor preemption can
+//! fire. `tests/service_fleet.rs` locks this equivalence.
+//!
+//! [`Scheduler::schedule_fifo_walk`]: super::scheduler::Scheduler::schedule_fifo_walk
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::platform::FpgaPlatform;
+
+use super::cache::PlanCache;
+use super::jobs::{JobSpec, Priority};
+use super::scheduler::{
+    prepare_all, prepare_remainder, BoardStats, Prepared, Schedule, ScheduledJob,
+};
+
+/// Default aging bound: a batch job that has waited this long is promoted
+/// to interactive rank. Timelines here are milliseconds (demo jobs run
+/// 0.3–8 ms), so 5 ms bounds batch delay to a handful of job drains.
+pub const DEFAULT_AGING_S: f64 = 0.005;
+
+/// One board's share of the fleet: an HBM bank pool (U280 = 32
+/// pseudo-channels, possibly restricted to model a partial reservation).
+#[derive(Debug, Clone, Copy)]
+pub struct BoardPool {
+    pub banks: u64,
+}
+
+/// A pool of boards sharing one admission queue.
+pub struct Fleet<'p> {
+    platform: &'p FpgaPlatform,
+    boards: Vec<BoardPool>,
+    aging_s: f64,
+}
+
+/// A job waiting for admission (arrived, not yet placed).
+struct Waiting {
+    prep: Prepared,
+    /// Submission-order tie-break, monotonic across re-enqueues.
+    index: usize,
+}
+
+/// One admitted segment occupying banks on a board.
+struct Running {
+    board: usize,
+    /// Index of this segment's entry in the output `jobs` vec.
+    job: usize,
+    start_s: f64,
+    finish_s: f64,
+    banks: u64,
+    /// Kernel-launch rounds of the admitted sim — the preemption
+    /// granularity (a launch cannot be stopped mid-flight).
+    rounds: u64,
+    /// Iterations retired per round (the admitted config's `s` for chain
+    /// schemes; spatial designs have `rounds == 1` and are unpreemptible).
+    iters_per_round: u64,
+    preempted: bool,
+}
+
+/// A preemption decision: which running segment to cut, and where.
+struct Victim {
+    running_idx: usize,
+    boundary_s: f64,
+    rounds_done: u64,
+}
+
+impl<'p> Fleet<'p> {
+    /// `n_boards` identical boards exposing the platform's full bank pool.
+    pub fn new(platform: &'p FpgaPlatform, n_boards: usize) -> Fleet<'p> {
+        Fleet {
+            platform,
+            boards: vec![BoardPool { banks: platform.hbm_banks }; n_boards.max(1)],
+            aging_s: DEFAULT_AGING_S,
+        }
+    }
+
+    /// Heterogeneous pools: one entry per board.
+    pub fn with_board_banks(mut self, banks: Vec<u64>) -> Fleet<'p> {
+        assert!(!banks.is_empty(), "a fleet needs at least one board");
+        self.boards = banks.into_iter().map(|b| BoardPool { banks: b }).collect();
+        self
+    }
+
+    /// Override the batch-aging bound (seconds).
+    pub fn with_aging_s(mut self, aging_s: f64) -> Fleet<'p> {
+        self.aging_s = aging_s;
+        self
+    }
+
+    pub fn boards(&self) -> &[BoardPool] {
+        &self.boards
+    }
+
+    pub fn total_banks(&self) -> u64 {
+        self.boards.iter().map(|b| b.banks).sum()
+    }
+
+    /// Ordering key of a waiting job at time `now`: effective class rank
+    /// (interactive = 0; batch ages into 0 after `aging_s`), then arrival,
+    /// then submission index. With all-batch input this is exactly
+    /// (arrival, submission) — the FIFO order — because every job at a
+    /// given arrival ages at the same instant.
+    fn queue_key(&self, w: &Waiting, now: f64) -> (u8, f64, usize) {
+        let spec = &w.prep.spec;
+        let aged =
+            spec.priority == Priority::Batch && now - spec.arrival_s >= self.aging_s;
+        let class = if aged { Priority::Interactive.rank() } else { spec.priority.rank() };
+        (class, spec.arrival_s, w.index)
+    }
+
+    /// Index of the queue head (the only job admission ever tries).
+    fn queue_top(&self, waiting: &[Waiting], now: f64) -> Option<usize> {
+        (0..waiting.len()).min_by(|&a, &b| {
+            self.queue_key(&waiting[a], now)
+                .partial_cmp(&self.queue_key(&waiting[b], now))
+                .unwrap()
+        })
+    }
+
+    /// Schedule `specs` over the fleet. Plans come from (and new
+    /// explorations go into) `cache`.
+    pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
+        let max_board = self.boards.iter().map(|b| b.banks).max().unwrap();
+        let total_banks = self.total_banks();
+        let stats0 = cache.stats();
+
+        let mut prepared = prepare_all(self.platform, max_board, specs, cache)?;
+        // arrival order; equal arrivals keep submission order (stable sort)
+        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        let mut next_index = prepared.len();
+        let mut future: VecDeque<Waiting> = prepared
+            .into_iter()
+            .enumerate()
+            .map(|(index, prep)| Waiting { prep, index })
+            .collect();
+
+        let mut waiting: Vec<Waiting> = Vec::new();
+        let mut running: Vec<Running> = Vec::new();
+        let mut free: Vec<u64> = self.boards.iter().map(|b| b.banks).collect();
+        let mut peak_per_board: Vec<u64> = vec![0; self.boards.len()];
+
+        let mut clock = 0.0f64;
+        let mut jobs: Vec<ScheduledJob> = Vec::new();
+        // actual occupancy span per jobs[] entry (duration as admitted, or
+        // start→boundary for preempted segments)
+        let mut durations: Vec<f64> = Vec::new();
+        let mut peak_concurrency = 0usize;
+        let mut peak_banks = 0u64;
+        let mut preemptions = 0u64;
+
+        loop {
+            // 1. fire every event at `clock`: completions free their
+            //    board's banks, arrivals join the wait queue
+            running.retain(|r| {
+                if r.finish_s <= clock {
+                    free[r.board] += r.banks;
+                    false
+                } else {
+                    true
+                }
+            });
+            while future.front().is_some_and(|w| w.prep.spec.arrival_s <= clock) {
+                waiting.push(future.pop_front().unwrap());
+            }
+
+            // 2. admission: try only the head of the priority-ordered
+            //    queue (head-of-line blocking keeps every class
+            //    starvation-free), as many times as it keeps succeeding
+            while let Some(top) = self.queue_top(&waiting, clock) {
+                let Some((rank, board)) = try_admit(&waiting[top].prep, &free) else {
+                    break;
+                };
+                let w = waiting.swap_remove(top);
+                let choice = w.prep.candidates[rank].clone();
+                let sim = w.prep.sims[rank].clone();
+                let duration = sim.seconds.max(1e-12);
+                free[board] -= choice.hbm_banks;
+                running.push(Running {
+                    board,
+                    job: jobs.len(),
+                    start_s: clock,
+                    finish_s: clock + duration,
+                    banks: choice.hbm_banks,
+                    rounds: sim.rounds,
+                    iters_per_round: if sim.rounds > 1 {
+                        choice.config.s.max(1)
+                    } else {
+                        w.prep.spec.iter
+                    },
+                    preempted: false,
+                });
+                peak_concurrency = peak_concurrency.max(running.len());
+                let in_use = total_banks - free.iter().sum::<u64>();
+                peak_banks = peak_banks.max(in_use);
+                peak_per_board[board] =
+                    peak_per_board[board].max(self.boards[board].banks - free[board]);
+                durations.push(duration);
+                jobs.push(ScheduledJob {
+                    config: choice.config,
+                    hbm_banks: choice.hbm_banks,
+                    fallback_rank: rank,
+                    cache_hit: w.prep.cache_hit,
+                    board,
+                    preempted: false,
+                    resumed: w.prep.resumed,
+                    queue_wait_s: clock - w.prep.spec.arrival_s,
+                    start_s: clock,
+                    finish_s: clock + duration,
+                    cells: w.prep.spec.total_cells(),
+                    choice,
+                    sim,
+                    spec: w.prep.spec,
+                });
+            }
+
+            // 3. preemption: a (real) interactive head that cannot start
+            //    anywhere may cut one running batch job at its next round
+            //    boundary; the freed banks admit it at that event. At most
+            //    one cut may be outstanding fleet-wide — otherwise every
+            //    event between the request and the boundary would claim a
+            //    fresh victim for the same stuck head.
+            if let Some(top) = self.queue_top(&waiting, clock) {
+                let head = &waiting[top].prep;
+                if head.spec.priority == Priority::Interactive
+                    && try_admit(head, &free).is_none()
+                    && !running.iter().any(|r| r.preempted)
+                {
+                    if let Some(v) = pick_victim(head, &free, &running, &jobs, clock) {
+                        let (job_idx, start_s, iters_per_round) = {
+                            let r = &mut running[v.running_idx];
+                            r.preempted = true;
+                            r.finish_s = v.boundary_s;
+                            (r.job, r.start_s, r.iters_per_round)
+                        };
+                        let done_iters = v.rounds_done * iters_per_round;
+                        let seg = &mut jobs[job_idx];
+                        let remaining = seg.spec.iter - done_iters;
+                        seg.preempted = true;
+                        seg.finish_s = v.boundary_s;
+                        seg.spec.iter = done_iters;
+                        seg.cells = seg.spec.total_cells();
+                        durations[job_idx] = v.boundary_s - start_s;
+                        preemptions += 1;
+
+                        let mut rem_spec = seg.spec.clone();
+                        rem_spec.iter = remaining;
+                        rem_spec.arrival_s = v.boundary_s;
+                        let rem =
+                            prepare_remainder(self.platform, max_board, &rem_spec, cache)?;
+                        let pos = future
+                            .partition_point(|w| w.prep.spec.arrival_s <= v.boundary_s);
+                        future.insert(pos, Waiting { prep: rem, index: next_index });
+                        next_index += 1;
+                    }
+                }
+            }
+
+            // 4. advance to the next event (earliest completion or arrival)
+            let next_finish =
+                running.iter().map(|r| r.finish_s).fold(f64::INFINITY, f64::min);
+            let next_arrival =
+                future.front().map_or(f64::INFINITY, |w| w.prep.spec.arrival_s);
+            let next = next_finish.min(next_arrival);
+            if !next.is_finite() {
+                if waiting.is_empty() {
+                    break; // drained: no events left, nothing waiting
+                }
+                // Unreachable: prepare guarantees some candidate fits an
+                // empty board, and no events left means no board is busy.
+                bail!("fleet stalled with {} job(s) waiting", waiting.len());
+            }
+            clock = next;
+        }
+
+        let boards: Vec<BoardStats> = self
+            .boards
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let mut bank_seconds = 0.0f64;
+                let mut n = 0usize;
+                for (j, d) in jobs.iter().zip(&durations) {
+                    if j.board == bi {
+                        bank_seconds += j.hbm_banks as f64 * d;
+                        n += 1;
+                    }
+                }
+                BoardStats {
+                    banks: b.banks,
+                    jobs: n,
+                    peak_banks: peak_per_board[bi],
+                    bank_seconds,
+                }
+            })
+            .collect();
+        // fleet-wide bank-seconds: per-board sums accumulate in admission
+        // order, so the single-board total matches the reference walk's
+        let bank_seconds_used: f64 = boards.iter().map(|b| b.bank_seconds).sum();
+
+        let makespan_s = jobs.iter().map(|j| j.finish_s).fold(0.0f64, f64::max);
+        let stats1 = cache.stats();
+        Ok(Schedule {
+            jobs,
+            pool_banks: total_banks,
+            makespan_s,
+            peak_concurrency,
+            peak_banks_in_use: peak_banks,
+            bank_seconds_used,
+            cache_hits: stats1.hits - stats0.hits,
+            explorations: stats1.misses - stats0.misses,
+            boards,
+            preemptions,
+        })
+    }
+}
+
+/// Candidate-major best-fit placement: walk the job's candidates best
+/// first; the first one that fits *any* board wins, placed on the fitting
+/// board with the fewest free banks (tightest fit — keeps large holes open
+/// for bank-hungry configs). Returns (candidate rank, board index). On a
+/// single board this is exactly the reference walk's fallback scan.
+fn try_admit(prep: &Prepared, free: &[u64]) -> Option<(usize, usize)> {
+    for (rank, c) in prep.candidates.iter().enumerate() {
+        let fit = free
+            .iter()
+            .enumerate()
+            .filter(|&(_, f)| *f >= c.hbm_banks)
+            .min_by_key(|&(board, f)| (*f, board));
+        if let Some((board, _)) = fit {
+            return Some((rank, board));
+        }
+    }
+    None
+}
+
+/// Choose the batch segment to preempt for `head`: among running,
+/// not-already-cut batch segments with more than one round whose freed
+/// banks would let some candidate of `head` start on their board, the one
+/// with the earliest next round boundary (ties: lowest board, then oldest
+/// admission). Returns None when no preemption can help.
+fn pick_victim(
+    head: &Prepared,
+    free: &[u64],
+    running: &[Running],
+    jobs: &[ScheduledJob],
+    now: f64,
+) -> Option<Victim> {
+    let mut best: Option<(Victim, (f64, usize, usize))> = None;
+    for (running_idx, r) in running.iter().enumerate() {
+        if r.preempted || r.rounds < 2 || jobs[r.job].spec.priority != Priority::Batch {
+            continue;
+        }
+        // boundary arithmetic assumes uniform round durations; redundant
+        // schemes (hybrid_r) shrink their halo extension round by round,
+        // so an equal split would cut mid-launch — skip them
+        if jobs[r.job].config.parallelism.redundant() {
+            continue;
+        }
+        let freed = free[r.board] + r.banks;
+        if !head.candidates.iter().any(|c| c.hbm_banks <= freed) {
+            continue;
+        }
+        let round_s = (r.finish_s - r.start_s) / r.rounds as f64;
+        let rounds_done = (((now - r.start_s) / round_s).ceil() as u64).clamp(1, r.rounds);
+        // nothing left to split off: the cut would land at (or past) the
+        // natural finish, or every iteration is already retired by then
+        let iters_done = rounds_done * r.iters_per_round;
+        if rounds_done >= r.rounds || iters_done >= jobs[r.job].spec.iter {
+            continue;
+        }
+        let boundary_s = r.start_s + rounds_done as f64 * round_s;
+        let key = (boundary_s, r.board, r.job);
+        if best
+            .as_ref()
+            .is_none_or(|(_, k)| key.partial_cmp(k).unwrap() == std::cmp::Ordering::Less)
+        {
+            best = Some((Victim { running_idx, boundary_s, rounds_done }, key));
+        }
+    }
+    best.map(|(v, _)| v)
+}

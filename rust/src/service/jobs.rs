@@ -7,13 +7,14 @@
 //! ```json
 //! {"jobs": [
 //!   {"tenant": "alice", "kernel": "jacobi2d", "dims": [9720, 1024], "iter": 64},
-//!   {"tenant": "bob",   "kernel": "hotspot",  "iter": 64, "arrival_s": 0.002}
+//!   {"tenant": "bob",   "kernel": "hotspot",  "iter": 64, "arrival_s": 0.002,
+//!    "priority": "interactive"}
 //! ]}
 //! ```
 //!
 //! `dims` defaults to the kernel's headline size, `arrival_s` to 0 (all
-//! jobs queued up front), `tenant` to `"default"`. A bare top-level array
-//! is accepted too.
+//! jobs queued up front), `tenant` to `"default"`, `priority` to
+//! `"batch"`. A bare top-level array is accepted too.
 
 use std::path::Path;
 
@@ -21,6 +22,45 @@ use anyhow::{bail, Context, Result};
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
 use crate::util::json::{num, obj, s, Json};
+
+/// Admission priority class (`service::fleet`). `Interactive` jobs are
+/// admitted ahead of `Batch` jobs and may preempt a running batch job at a
+/// round boundary; an aging bound promotes long-waiting batch jobs so they
+/// never starve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    Interactive,
+    #[default]
+    Batch,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Admission rank: lower admits first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+    fn from_str(text: &str) -> Result<Self, Self::Err> {
+        match text.to_lowercase().as_str() {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(format!("unknown priority '{other}' (interactive, batch)")),
+        }
+    }
+}
 
 /// One tenant request: a kernel at a shape for `iter` iterations.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +72,8 @@ pub struct JobSpec {
     pub iter: u64,
     /// Arrival time in seconds relative to queue start (0 = queued up front).
     pub arrival_s: f64,
+    /// Admission class; `Batch` unless the job asks for `interactive`.
+    pub priority: Priority,
 }
 
 impl JobSpec {
@@ -42,7 +84,20 @@ impl JobSpec {
             dims,
             iter,
             arrival_s: 0.0,
+            priority: Priority::Batch,
         }
+    }
+
+    /// Builder-style arrival time (seconds relative to queue start).
+    pub fn arriving_at(mut self, arrival_s: f64) -> JobSpec {
+        self.arrival_s = arrival_s;
+        self
+    }
+
+    /// Builder-style priority class.
+    pub fn with_priority(mut self, priority: Priority) -> JobSpec {
+        self.priority = priority;
+        self
     }
 
     /// Resolve to the analyzed kernel at this job's shape.
@@ -76,6 +131,7 @@ impl JobSpec {
             ("dims", Json::Arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
             ("iter", num(self.iter as f64)),
             ("arrival_s", num(self.arrival_s)),
+            ("priority", s(self.priority.name())),
         ])
     }
 
@@ -122,7 +178,16 @@ impl JobSpec {
                 .with_context(|| format!("job '{kernel}': 'tenant' must be a string"))?
                 .to_string(),
         };
-        Ok(JobSpec { tenant, kernel, dims, iter, arrival_s })
+        let priority = match j.get("priority") {
+            None => Priority::Batch,
+            Some(v) => v
+                .as_str()
+                .with_context(|| format!("job '{kernel}': 'priority' must be a string"))?
+                .parse()
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("job '{kernel}'"))?,
+        };
+        Ok(JobSpec { tenant, kernel, dims, iter, arrival_s, priority })
     }
 }
 
@@ -177,13 +242,28 @@ mod tests {
         let back = jobs_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, specs);
 
-        // defaults: dims from the builtin, iter 8, tenant "default"
+        // defaults: dims from the builtin, iter 8, tenant "default",
+        // priority batch
         let j = Json::parse(r#"[{"kernel": "JACOBI2D"}]"#).unwrap();
         let spec = &jobs_from_json(&j).unwrap()[0];
         assert_eq!(spec.kernel, "jacobi2d");
         assert_eq!(spec.dims, vec![9720, 1024]);
         assert_eq!(spec.iter, 8);
         assert_eq!(spec.tenant, "default");
+        assert_eq!(spec.priority, Priority::Batch);
+    }
+
+    #[test]
+    fn priority_roundtrip() {
+        let spec = JobSpec::new("t", "blur", vec![720, 1024], 8)
+            .with_priority(Priority::Interactive)
+            .arriving_at(0.25);
+        let back = JobSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.priority, Priority::Interactive);
+        // case-insensitive wire form
+        let j = Json::parse(r#"[{"kernel": "blur", "priority": "INTERACTIVE"}]"#).unwrap();
+        assert_eq!(jobs_from_json(&j).unwrap()[0].priority, Priority::Interactive);
     }
 
     #[test]
@@ -200,6 +280,8 @@ mod tests {
             r#"[{"kernel": "blur", "arrival_s": 1e999}]"#,
             r#"[{"kernel": "blur", "arrival_s": "0.5"}]"#,
             r#"[{"kernel": "blur", "tenant": 7}]"#,
+            r#"[{"kernel": "blur", "priority": "urgent"}]"#,
+            r#"[{"kernel": "blur", "priority": 3}]"#,
             r#"[]"#,
             r#"{"no_jobs": 1}"#,
         ] {

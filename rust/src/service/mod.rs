@@ -5,35 +5,42 @@
 //! design. This subsystem is the layer that makes the reproduction behave
 //! like a service instead of a one-shot compiler: many tenants submit
 //! stencil jobs, and the system amortizes design-space exploration across
-//! requests while time-sharing the board's HBM banks across jobs.
+//! requests while time-sharing a fleet of boards' HBM banks across jobs.
 //!
 //! * [`cache`] — a persistent **plan cache** keyed by (kernel, dims, iter,
 //!   platform, style). DSE is deterministic, so repeat requests skip
 //!   exploration entirely; plans survive process restarts as JSON
-//!   (`util::json`, no serde).
-//! * [`jobs`] — tenant job specs and the `jobs.json` wire format consumed
-//!   by `sasa serve --jobs`.
-//! * [`scheduler`] — FIFO admission over a per-platform **bank pool**
-//!   (U280 = 32 HBM pseudo-channels). Compatible jobs pack concurrently on
-//!   disjoint bank subsets; when the head job's best design doesn't fit the
-//!   remaining pool it falls back to its next-best `per_scheme`
-//!   configuration, and head-of-line blocking keeps admission
-//!   starvation-free.
-//! * [`executor`] — drives a batch through the scheduler, aggregates
-//!   per-tenant throughput (GCell/s), queue wait, and bank utilization into
-//!   `metrics::Table` reports, and can execute admitted configurations for
-//!   real through the `Coordinator` against the interpreter oracle.
+//!   (`util::json`, no serde), with optional LRU size capping for
+//!   long-lived cache files.
+//! * [`jobs`] — tenant job specs (kernel, shape, `arrival_s`, priority
+//!   class) and the `jobs.json` wire format consumed by `sasa serve
+//!   --jobs`.
+//! * [`fleet`] — the admission engine: an event-driven loop over arrival
+//!   and completion events, priority classes with an aging bound,
+//!   round-boundary preemption of batch jobs by interactive arrivals, and
+//!   best-fit placement across a multi-board pool (`--boards N`).
+//! * [`scheduler`] — timeline types ([`Schedule`], [`ScheduledJob`]) and
+//!   the single-board facade; the pre-fleet FIFO loop survives as
+//!   `schedule_fifo_walk`, the decision oracle the fleet's
+//!   single-board/default-priority path is tested against.
+//! * [`executor`] — drives a batch through the fleet, aggregates
+//!   per-tenant throughput (GCell/s), per-class wait/turnaround
+//!   percentiles, and per-board bank utilization into `metrics::Table`
+//!   reports, and can execute admitted configurations for real through the
+//!   `Coordinator` against the interpreter oracle.
 //!
-//! CLI entry points: `sasa serve --jobs <jobs.json>` and `sasa batch`; see
-//! `examples/serving.rs` for the library-level walkthrough and DESIGN.md §4
-//! for the architecture.
+//! CLI entry points: `sasa serve --jobs <jobs.json> [--boards N]` and
+//! `sasa batch`; see `examples/serving.rs` for the library-level
+//! walkthrough and DESIGN.md §4 for the architecture.
 
 pub mod cache;
 pub mod executor;
+pub mod fleet;
 pub mod jobs;
 pub mod scheduler;
 
 pub use cache::{CacheStats, PlanCache};
-pub use executor::{BatchExecutor, BatchReport, TenantStats};
-pub use jobs::{demo_jobs, jobs_from_json, jobs_to_json, load_jobs, JobSpec};
-pub use scheduler::{Schedule, ScheduledJob, Scheduler};
+pub use executor::{BatchExecutor, BatchReport, ClassStats, TenantStats};
+pub use fleet::{BoardPool, Fleet, DEFAULT_AGING_S};
+pub use jobs::{demo_jobs, jobs_from_json, jobs_to_json, load_jobs, JobSpec, Priority};
+pub use scheduler::{BoardStats, Schedule, ScheduledJob, Scheduler};

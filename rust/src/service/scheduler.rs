@@ -1,12 +1,16 @@
-//! FIFO bank-pool scheduler: admits a queue of jobs onto a shared pool of
-//! HBM pseudo-channels ("banks", 32 on the U280).
+//! Bank-pool scheduling types and the single-board scheduler facade.
 //!
 //! Every design the DSE emits owns `hbm_banks = k × banks_per_pe` channels
 //! exclusively (§3.1: one AXI port per input/output per PE group), so banks
 //! are the natural unit of multi-tenant sharing: jobs whose combined bank
-//! demand fits the pool run concurrently on disjoint channel subsets.
+//! demand fits a board's pool run concurrently on disjoint channel subsets.
 //!
-//! Admission policy (deterministic, starvation-free):
+//! Since the fleet layer landed, the actual admission engine lives in
+//! [`super::fleet`]: an event-driven loop over arrivals and completions
+//! with priority classes, aging, preemption, and multi-board placement.
+//! [`Scheduler::schedule`] is the single-board facade over it — one board,
+//! and with all-default (batch) priorities its decisions are exactly the
+//! original FIFO head-of-line policy:
 //!
 //! 1. **FIFO by arrival.** Only the head of the queue is ever admitted —
 //!    later jobs never jump ahead, so a large job is delayed at most by the
@@ -20,11 +24,17 @@
 //!    clock advances to the next completion and frees banks; the head is
 //!    retried, never skipped.
 //!
+//! The pre-fleet admission loop is preserved verbatim as
+//! [`Scheduler::schedule_fifo_walk`] — the decision oracle the fleet's
+//! single-board/default-priority path is property-tested against
+//! (`tests/service_fleet.rs`), exactly as `reference::interpret_naive`
+//! anchors the tiered engine.
+//!
 //! Durations come from the cycle simulator (`sim::simulate`) at the modeled
 //! post-P&R frequency, so the timeline is the one the U280 would exhibit.
 //! Plan resolution and per-candidate simulation are batched up front and
 //! fanned out over the persistent worker pool (`util::pool`): independent
-//! jobs explore and simulate concurrently, and the FIFO admission loop is
+//! jobs explore and simulate concurrently, and the admission loop is
 //! reduced to pure lookups — its decisions are unchanged.
 
 use std::collections::VecDeque;
@@ -32,17 +42,22 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::dsl::KernelInfo;
-use crate::model::{Config, DseChoice};
+use crate::model::{Config, DseChoice, DseResult};
 use crate::platform::FpgaPlatform;
 use crate::sim::{simulate, SimResult};
 use crate::util::pool::Pool;
 
 use super::cache::PlanCache;
+use super::fleet::Fleet;
 use super::jobs::JobSpec;
 
-/// A job as placed on the timeline.
+/// A job (or, after a preemption, one segment of a job) as placed on the
+/// timeline.
 #[derive(Debug, Clone)]
 pub struct ScheduledJob {
+    /// The work this timeline entry covers. For a preempted segment,
+    /// `spec.iter` is the iterations actually retired before the cut; the
+    /// re-enqueued remainder appears as its own entry with the rest.
     pub spec: JobSpec,
     /// The configuration actually admitted (== `choice.config`).
     pub config: Config,
@@ -53,29 +68,66 @@ pub struct ScheduledJob {
     /// Whether the plan came from the cache (no exploration run).
     pub cache_hit: bool,
     pub hbm_banks: u64,
+    /// Fleet board index this entry ran on (0 on a single board).
+    pub board: usize,
+    /// True if this segment was cut short at a round boundary by an
+    /// interactive arrival.
+    pub preempted: bool,
+    /// True if this entry is the re-enqueued remainder of a preempted job.
+    pub resumed: bool,
     pub queue_wait_s: f64,
     pub start_s: f64,
     pub finish_s: f64,
-    /// Cycle-simulation of the admitted configuration.
+    /// Cycle-simulation of the admitted configuration. For a preempted
+    /// segment this is the sim of the full admission (the segment ends
+    /// early at a round boundary of it).
     pub sim: SimResult,
-    /// Total cells processed (grid cells × iterations).
+    /// Total cells processed by this entry (grid cells × iterations).
     pub cells: u64,
 }
 
-/// The full timeline produced by one scheduling pass.
+/// Per-board aggregates of one scheduling pass.
+#[derive(Debug, Clone)]
+pub struct BoardStats {
+    /// Banks this board contributed to the fleet pool.
+    pub banks: u64,
+    /// Timeline entries that ran on this board.
+    pub jobs: usize,
+    pub peak_banks: u64,
+    /// Integral of banks-in-use over time on this board (bank-seconds).
+    pub bank_seconds: f64,
+}
+
+impl BoardStats {
+    /// Time-averaged fraction of this board's banks in use over `span_s`.
+    pub fn utilization(&self, span_s: f64) -> f64 {
+        if span_s <= 0.0 || self.banks == 0 {
+            return 0.0;
+        }
+        self.bank_seconds / (self.banks as f64 * span_s)
+    }
+}
+
+/// The full timeline produced by one scheduling pass (fleet-wide: per-board
+/// timelines merged into one, ordered by admission).
 #[derive(Debug, Clone)]
 pub struct Schedule {
     pub jobs: Vec<ScheduledJob>,
+    /// Total banks across every board of the fleet.
     pub pool_banks: u64,
     pub makespan_s: f64,
-    /// Max number of jobs in flight at once.
+    /// Max number of jobs in flight at once, fleet-wide.
     pub peak_concurrency: usize,
     pub peak_banks_in_use: u64,
-    /// Integral of banks-in-use over time (bank-seconds).
+    /// Integral of banks-in-use over time (bank-seconds), fleet-wide.
     pub bank_seconds_used: f64,
     /// Plan-cache hits/explorations attributable to this pass.
     pub cache_hits: u64,
     pub explorations: u64,
+    /// Per-board utilization breakdown (one entry on a single board).
+    pub boards: Vec<BoardStats>,
+    /// Batch jobs cut at a round boundary for an interactive arrival.
+    pub preemptions: u64,
 }
 
 impl Schedule {
@@ -88,23 +140,128 @@ impl Schedule {
     }
 }
 
-/// The scheduler: a platform plus its bank pool size (overridable to model
-/// a partially reserved board).
+/// The single-board scheduler: a platform plus its bank pool size
+/// (overridable to model a partially reserved board).
 pub struct Scheduler<'p> {
     platform: &'p FpgaPlatform,
     pool_banks: u64,
 }
 
-struct Prepared {
-    spec: JobSpec,
+/// A job resolved for admission: its plan, candidate order, and
+/// pre-computed per-candidate simulations.
+pub(super) struct Prepared {
+    pub(super) spec: JobSpec,
     info: KernelInfo,
     /// Admission candidates, best first: `dse.best`, then the remaining
     /// per-scheme survivors by predicted latency.
-    candidates: Vec<DseChoice>,
+    pub(super) candidates: Vec<DseChoice>,
     /// Cycle simulation of each candidate, index-parallel to `candidates`
     /// (pre-computed concurrently; the admission loop only looks up).
-    sims: Vec<SimResult>,
-    cache_hit: bool,
+    pub(super) sims: Vec<SimResult>,
+    pub(super) cache_hit: bool,
+    /// True for the re-enqueued remainder of a preempted job.
+    pub(super) resumed: bool,
+}
+
+/// The fleet admission order over a plan: the DSE's best first, then the
+/// per-scheme alternatives by predicted latency.
+fn admission_candidates(dse: &DseResult) -> Vec<DseChoice> {
+    let mut rest: Vec<DseChoice> = dse
+        .per_scheme
+        .iter()
+        .filter(|c| c.config != dse.best.config)
+        .cloned()
+        .collect();
+    rest.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
+    let mut candidates = Vec::with_capacity(rest.len() + 1);
+    candidates.push(dse.best.clone());
+    candidates.extend(rest);
+    candidates
+}
+
+/// Resolve plans (batch DSE: cache hits immediate, misses explored
+/// concurrently on the worker pool) and pre-simulate every admission
+/// candidate in parallel — independent jobs' simulations never run one
+/// after another on the admission path. `max_banks` is the largest single
+/// board pool a job could land on: a job whose smallest candidate exceeds
+/// it can never run anywhere in the fleet.
+pub(super) fn prepare_all(
+    platform: &FpgaPlatform,
+    max_banks: u64,
+    specs: &[JobSpec],
+    cache: &mut PlanCache,
+) -> Result<Vec<Prepared>> {
+    let infos: Vec<KernelInfo> = specs.iter().map(JobSpec::info).collect::<Result<_>>()?;
+    let reqs: Vec<(&KernelInfo, u64)> =
+        infos.iter().zip(specs).map(|(i, s)| (i, s.iter)).collect();
+    let plans = cache.get_or_explore_batch(platform, &reqs);
+
+    let mut prepared = Vec::with_capacity(specs.len());
+    for ((spec, info), (dse, cache_hit)) in specs.iter().zip(infos).zip(plans) {
+        let candidates = admission_candidates(&dse);
+        check_fits_somewhere(spec, &candidates, max_banks)?;
+        prepared.push(Prepared {
+            spec: spec.clone(),
+            info,
+            candidates,
+            sims: Vec::new(),
+            cache_hit,
+            resumed: false,
+        });
+    }
+
+    // fan the per-candidate cycle simulations out over the pool:
+    // `simulate` is a pure function of (info, iter, config)
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = prepared
+        .iter_mut()
+        .map(|p| {
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                p.sims = p
+                    .candidates
+                    .iter()
+                    .map(|c| simulate(&p.info, platform, p.spec.iter, c.config))
+                    .collect();
+            });
+            b
+        })
+        .collect();
+    Pool::global().run(tasks);
+    Ok(prepared)
+}
+
+/// Resolve one job synchronously — used for the re-enqueued remainder of a
+/// preempted job, whose shrunken iteration count needs its own plan (and
+/// marks the result `resumed`). Candidate sims run inline: they are
+/// closed-form fast-forwards (PR 2), so one remainder costs microseconds
+/// and pool fan-out would be overhead.
+pub(super) fn prepare_remainder(
+    platform: &FpgaPlatform,
+    max_banks: u64,
+    spec: &JobSpec,
+    cache: &mut PlanCache,
+) -> Result<Prepared> {
+    let info = spec.info()?;
+    let (dse, cache_hit) = cache.get_or_explore(&info, platform, spec.iter);
+    let candidates = admission_candidates(&dse);
+    check_fits_somewhere(spec, &candidates, max_banks)?;
+    let sims = candidates
+        .iter()
+        .map(|c| simulate(&info, platform, spec.iter, c.config))
+        .collect();
+    Ok(Prepared { spec: spec.clone(), info, candidates, sims, cache_hit, resumed: true })
+}
+
+fn check_fits_somewhere(spec: &JobSpec, candidates: &[DseChoice], max_banks: u64) -> Result<()> {
+    let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
+    if min_banks > max_banks {
+        bail!(
+            "job '{}' ({}): smallest configuration needs {min_banks} banks \
+             but the pool has {max_banks}",
+            spec.kernel,
+            spec.dims_label(),
+        );
+    }
+    Ok(())
 }
 
 impl<'p> Scheduler<'p> {
@@ -122,72 +279,28 @@ impl<'p> Scheduler<'p> {
         self.pool_banks
     }
 
-    /// Resolve plans (batch DSE: cache hits immediate, misses explored
-    /// concurrently on the worker pool) and pre-simulate every admission
-    /// candidate in parallel — independent jobs' simulations no longer run
-    /// one after another on the admission path.
-    fn prepare_all(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Vec<Prepared>> {
-        let infos: Vec<KernelInfo> = specs.iter().map(JobSpec::info).collect::<Result<_>>()?;
-        let reqs: Vec<(&KernelInfo, u64)> =
-            infos.iter().zip(specs).map(|(i, s)| (i, s.iter)).collect();
-        let plans = cache.get_or_explore_batch(self.platform, &reqs);
-
-        let mut prepared = Vec::with_capacity(specs.len());
-        for ((spec, info), (dse, cache_hit)) in specs.iter().zip(infos).zip(plans) {
-            let mut rest: Vec<DseChoice> = dse
-                .per_scheme
-                .iter()
-                .filter(|c| c.config != dse.best.config)
-                .cloned()
-                .collect();
-            rest.sort_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap());
-            let mut candidates = Vec::with_capacity(rest.len() + 1);
-            candidates.push(dse.best.clone());
-            candidates.extend(rest);
-            let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
-            if min_banks > self.pool_banks {
-                bail!(
-                    "job '{}' ({}): smallest configuration needs {min_banks} banks \
-                     but the pool has {}",
-                    spec.kernel,
-                    spec.dims_label(),
-                    self.pool_banks
-                );
-            }
-            prepared.push(Prepared {
-                spec: spec.clone(),
-                info,
-                candidates,
-                sims: Vec::new(),
-                cache_hit,
-            });
-        }
-
-        // fan the per-candidate cycle simulations out over the pool:
-        // `simulate` is a pure function of (info, iter, config)
-        let platform = self.platform;
-        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = prepared
-            .iter_mut()
-            .map(|p| {
-                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    p.sims = p
-                        .candidates
-                        .iter()
-                        .map(|c| simulate(&p.info, platform, p.spec.iter, c.config))
-                        .collect();
-                });
-                b
-            })
-            .collect();
-        Pool::global().run(tasks);
-        Ok(prepared)
+    /// Schedule `specs` over the bank pool. Plans come from (and new
+    /// explorations go into) `cache`. Delegates to a single-board
+    /// [`Fleet`]; with all-default priorities the decisions reproduce
+    /// [`Scheduler::schedule_fifo_walk`] exactly.
+    pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
+        Fleet::new(self.platform, 1)
+            .with_board_banks(vec![self.pool_banks])
+            .schedule(specs, cache)
     }
 
-    /// Schedule `specs` over the bank pool. Plans come from (and new
-    /// explorations go into) `cache`.
-    pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
+    /// The pre-fleet FIFO admission loop, kept verbatim as the decision
+    /// oracle: one board, arrival-ordered queue, head-of-line blocking,
+    /// next-best fallback. `tests/service_fleet.rs` holds the fleet's
+    /// single-board/default-priority schedules equal to this one,
+    /// decision for decision.
+    pub fn schedule_fifo_walk(
+        &self,
+        specs: &[JobSpec],
+        cache: &mut PlanCache,
+    ) -> Result<Schedule> {
         let stats0 = cache.stats();
-        let mut prepared: Vec<Prepared> = self.prepare_all(specs, cache)?;
+        let mut prepared = prepare_all(self.platform, self.pool_banks, specs, cache)?;
         // FIFO by arrival time; equal arrivals keep submission order
         // (sort_by is stable).
         prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
@@ -227,6 +340,9 @@ impl<'p> Scheduler<'p> {
                     hbm_banks: choice.hbm_banks,
                     fallback_rank: rank,
                     cache_hit: head.cache_hit,
+                    board: 0,
+                    preempted: false,
+                    resumed: false,
                     queue_wait_s: clock - arrival,
                     start_s: clock,
                     finish_s: clock + duration,
@@ -262,6 +378,12 @@ impl<'p> Scheduler<'p> {
         let makespan_s = jobs.iter().map(|j| j.finish_s).fold(0.0f64, f64::max);
         let stats1 = cache.stats();
         Ok(Schedule {
+            boards: vec![BoardStats {
+                banks: self.pool_banks,
+                jobs: jobs.len(),
+                peak_banks,
+                bank_seconds,
+            }],
             jobs,
             pool_banks: self.pool_banks,
             makespan_s,
@@ -270,6 +392,7 @@ impl<'p> Scheduler<'p> {
             bank_seconds_used: bank_seconds,
             cache_hits: stats1.hits - stats0.hits,
             explorations: stats1.misses - stats0.misses,
+            preemptions: 0,
         })
     }
 }
@@ -290,6 +413,10 @@ mod tests {
         assert!(schedule.peak_banks_in_use <= 32);
         let util = schedule.bank_utilization();
         assert!(util > 0.0 && util <= 1.0, "{util}");
+        // single-board delegation: one board entry carrying the whole pass
+        assert_eq!(schedule.boards.len(), 1);
+        assert_eq!(schedule.boards[0].jobs, 7);
+        assert_eq!(schedule.preemptions, 0);
     }
 
     #[test]

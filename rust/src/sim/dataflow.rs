@@ -293,7 +293,12 @@ mod tests {
         // single-row and empty stages, clipped dependencies
         let cases: Vec<ChainSpec> = vec![
             ChainSpec { stage_rows: vec![9720; 7], d: 2, row_mem: 66.1, row_compute: 64.0 },
-            ChainSpec { stage_rows: vec![3246, 3244, 3242], d: 4, row_mem: 70.0, row_compute: 64.0 },
+            ChainSpec {
+                stage_rows: vec![3246, 3244, 3242],
+                d: 4,
+                row_mem: 70.0,
+                row_compute: 64.0,
+            },
             ChainSpec { stage_rows: vec![1, 1, 1], d: 2, row_mem: 5.0, row_compute: 3.0 },
             ChainSpec { stage_rows: vec![10, 0, 10], d: 1, row_mem: 5.0, row_compute: 3.0 },
             ChainSpec { stage_rows: vec![5, 500], d: 3, row_mem: 9.0, row_compute: 2.0 },

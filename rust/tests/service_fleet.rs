@@ -1,0 +1,287 @@
+//! Integration tests for `sasa::service::fleet`: the ISSUE-3 acceptance
+//! checklist — single-board/default-priority equivalence against the
+//! pre-fleet FIFO reference walk, priority ordering, the aging bound,
+//! preemption accounting, multi-board makespan reduction, and
+//! deterministic replay.
+
+use sasa::platform::FpgaPlatform;
+use sasa::service::{
+    demo_jobs, load_jobs, Fleet, JobSpec, PlanCache, Priority, Schedule, Scheduler,
+};
+
+fn u280() -> FpgaPlatform {
+    FpgaPlatform::u280()
+}
+
+/// Decision-for-decision equality: same specs, configs, fallback ranks,
+/// and (bit-exact) start/finish times.
+fn assert_same_decisions(a: &Schedule, b: &Schedule) {
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.spec, y.spec);
+        assert_eq!(x.config, y.config, "{}", x.spec.kernel);
+        assert_eq!(x.fallback_rank, y.fallback_rank, "{}", x.spec.kernel);
+        assert_eq!(x.hbm_banks, y.hbm_banks);
+        assert_eq!(x.board, y.board);
+        assert!(
+            x.start_s == y.start_s
+                && x.finish_s == y.finish_s
+                && x.queue_wait_s == y.queue_wait_s,
+            "{}: ({}, {}, {}) vs ({}, {}, {})",
+            x.spec.kernel,
+            x.start_s,
+            x.finish_s,
+            x.queue_wait_s,
+            y.start_s,
+            y.finish_s,
+            y.queue_wait_s
+        );
+    }
+    assert_eq!(a.pool_banks, b.pool_banks);
+    assert!(a.makespan_s == b.makespan_s, "{} != {}", a.makespan_s, b.makespan_s);
+    assert_eq!(a.peak_concurrency, b.peak_concurrency);
+    assert_eq!(a.peak_banks_in_use, b.peak_banks_in_use);
+}
+
+// ---------------------------------------------------------------------------
+// equivalence: single board + default priorities == the pre-fleet FIFO loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_board_default_priority_matches_fifo_reference() {
+    let p = u280();
+    // the demo mix, and the same mix arriving as a staggered stream
+    let batch = demo_jobs();
+    let stream: Vec<JobSpec> = demo_jobs()
+        .into_iter()
+        .enumerate()
+        .map(|(i, j)| j.arriving_at(i as f64 * 0.0004))
+        .collect();
+    for specs in [&batch, &stream] {
+        for pool in [32u64, 16, 8, 4] {
+            let mut c_walk = PlanCache::in_memory();
+            let walk = Scheduler::new(&p)
+                .with_pool_banks(pool)
+                .schedule_fifo_walk(specs, &mut c_walk)
+                .unwrap();
+            let mut c_fleet = PlanCache::in_memory();
+            let fleet = Scheduler::new(&p)
+                .with_pool_banks(pool)
+                .schedule(specs, &mut c_fleet)
+                .unwrap();
+            assert_same_decisions(&walk, &fleet);
+            assert_eq!(fleet.preemptions, 0, "all-batch input can never preempt");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// priority classes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interactive_outranks_batch_at_equal_arrival() {
+    let p = u280();
+    // a 2-bank board serializes; the interactive job submitted second must
+    // still run first
+    let jobs = vec![
+        JobSpec::new("bulk", "jacobi2d", vec![720, 1024], 4),
+        JobSpec::new("ann", "jacobi2d", vec![720, 1024], 4)
+            .with_priority(Priority::Interactive),
+    ];
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1)
+        .with_board_banks(vec![2])
+        .schedule(&jobs, &mut cache)
+        .unwrap();
+    assert_eq!(s.jobs[0].spec.tenant, "ann");
+    assert_eq!(s.jobs[0].start_s, 0.0);
+    assert_eq!(s.jobs[1].spec.tenant, "bulk");
+    assert!(s.jobs[1].start_s >= s.jobs[0].finish_s - 1e-12);
+    assert_eq!(s.jobs[1].queue_wait_s, s.jobs[1].start_s);
+}
+
+#[test]
+fn aging_bound_prevents_batch_starvation() {
+    let p = u280();
+    let small = |t: &str| JobSpec::new(t, "jacobi2d", vec![720, 1024], 4);
+    // duration of one such job alone on the 2-bank board
+    let mut probe_cache = PlanCache::in_memory();
+    let alone = Fleet::new(&p, 1)
+        .with_board_banks(vec![2])
+        .schedule(&[small("probe")], &mut probe_cache)
+        .unwrap();
+    let d = alone.jobs[0].finish_s;
+    assert!(d > 0.0);
+
+    // an interactive stream arriving twice as fast as the board drains,
+    // with one batch job (queued first, submitted last) underneath it
+    let mut jobs: Vec<JobSpec> = (0..9)
+        .map(|k| {
+            small(&format!("i{k}"))
+                .with_priority(Priority::Interactive)
+                .arriving_at(k as f64 * 0.5 * d)
+        })
+        .collect();
+    jobs.push(small("starved"));
+
+    // tight aging bound: the batch job is promoted after 0.75·d and wins
+    // the very next drain (its arrival predates every later interactive)
+    let mut c1 = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1)
+        .with_board_banks(vec![2])
+        .with_aging_s(0.75 * d)
+        .schedule(&jobs, &mut c1)
+        .unwrap();
+    let pos = s.jobs.iter().position(|j| j.spec.tenant == "starved").unwrap();
+    assert_eq!(pos, 1, "aged batch job admitted at the first completion");
+    assert!(s.jobs[pos].start_s <= 1.25 * d, "{} > {}", s.jobs[pos].start_s, 1.25 * d);
+
+    // effectively no aging: the stream starves the batch job to the end
+    let mut c2 = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1)
+        .with_board_banks(vec![2])
+        .with_aging_s(1e9)
+        .schedule(&jobs, &mut c2)
+        .unwrap();
+    assert_eq!(s.jobs.last().unwrap().spec.tenant, "starved");
+}
+
+// ---------------------------------------------------------------------------
+// preemption accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preemption_splits_batch_job_and_conserves_iterations() {
+    let p = u280();
+    // a 6-bank board running jacobi2d@64's best (hybrid_s k=3 s=7, 6
+    // banks, 10 launch rounds) end to end
+    let victim = JobSpec::new("victim", "jacobi2d", vec![9720, 1024], 64);
+    let mut probe_cache = PlanCache::in_memory();
+    let alone = Fleet::new(&p, 1)
+        .with_board_banks(vec![6])
+        .schedule(std::slice::from_ref(&victim), &mut probe_cache)
+        .unwrap();
+    assert_eq!(alone.jobs[0].fallback_rank, 0);
+    assert!(alone.jobs[0].sim.rounds > 1, "preemption needs a multi-round design");
+    let d = alone.jobs[0].finish_s;
+
+    // an interactive arrival mid-run finds zero free banks and preempts
+    let urgent = JobSpec::new("urgent", "jacobi2d", vec![9720, 1024], 64)
+        .with_priority(Priority::Interactive)
+        .arriving_at(0.35 * d);
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1)
+        .with_board_banks(vec![6])
+        .schedule(&[victim.clone(), urgent.clone()], &mut cache)
+        .unwrap();
+
+    assert_eq!(s.preemptions, 1);
+    assert_eq!(s.jobs.len(), 3, "cut segment + interactive + resumed remainder");
+    let seg1 = &s.jobs[0];
+    assert_eq!(seg1.spec.tenant, "victim");
+    assert!(seg1.preempted && !seg1.resumed);
+    let intr = s.jobs.iter().find(|j| j.spec.tenant == "urgent").unwrap();
+    let seg2 = s.jobs.iter().find(|j| j.resumed).unwrap();
+    assert!(!intr.resumed && !intr.preempted);
+
+    // iteration and cell conservation across the split
+    assert!(seg1.spec.iter >= 1 && seg2.spec.iter >= 1);
+    assert_eq!(seg1.spec.iter + seg2.spec.iter, 64);
+    assert_eq!(seg1.cells + seg2.cells, 9720 * 1024 * 64);
+
+    // the cut lands strictly inside the original run, the interactive job
+    // starts exactly at the freed boundary, and the remainder resumes only
+    // after the board drains
+    assert!(seg1.finish_s > seg1.start_s && seg1.finish_s < d);
+    assert!(intr.start_s == seg1.finish_s, "{} != {}", intr.start_s, seg1.finish_s);
+    assert!(seg2.start_s >= intr.finish_s - 1e-12);
+    assert_eq!(seg2.spec.arrival_s, seg1.finish_s);
+    // the cut is round-granular: the segment runs through the boundary of
+    // the round in progress when the interactive arrived (the partial
+    // round between request and boundary stays on the timeline), and the
+    // remainder was re-planned rather than resumed mid-flight
+    assert!(seg1.finish_s >= urgent.arrival_s, "cut cannot precede the request");
+    assert!(seg2.sim.rounds >= 1 && seg2.config.total_pes() >= 1);
+    assert_eq!(s.jobs.len(), 2 + s.preemptions as usize);
+}
+
+// ---------------------------------------------------------------------------
+// multi-board placement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn second_board_strictly_reduces_contended_makespan() {
+    let p = u280();
+    // two jacobi2d@iter=2 jobs: each's best is Spatial_R(k=15) = 30 banks,
+    // so one board can only host one at its best
+    let jobs = vec![
+        JobSpec::new("a", "jacobi2d", vec![9720, 1024], 2),
+        JobSpec::new("b", "jacobi2d", vec![9720, 1024], 2),
+    ];
+    let mut c1 = PlanCache::in_memory();
+    let one = Fleet::new(&p, 1).schedule(&jobs, &mut c1).unwrap();
+    let mut c2 = PlanCache::in_memory();
+    let two = Fleet::new(&p, 2).schedule(&jobs, &mut c2).unwrap();
+
+    assert!(
+        one.jobs.iter().any(|j| j.fallback_rank > 0),
+        "one board must force a fallback"
+    );
+    assert!(two.jobs.iter().all(|j| j.fallback_rank == 0), "two boards: both run best");
+    assert_eq!(two.jobs[0].board, 0);
+    assert_eq!(two.jobs[1].board, 1);
+    assert_eq!(two.boards.len(), 2);
+    assert_eq!(two.pool_banks, 64);
+    assert!(
+        two.makespan_s < one.makespan_s,
+        "{} !< {}",
+        two.makespan_s,
+        one.makespan_s
+    );
+    for b in &two.boards {
+        assert!(b.peak_banks <= b.banks);
+        assert!(b.utilization(two.makespan_s) <= 1.0);
+    }
+}
+
+#[test]
+fn example_jobs_stream_benefits_from_second_board() {
+    // the shipped examples/jobs.json stream (priorities + staggered
+    // arrivals + the contended jacobi2d pair): a second board strictly
+    // shrinks the makespan — the acceptance scenario behind
+    // `sasa serve --jobs examples/jobs.json --boards 2`
+    let p = u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    assert!(specs.iter().any(|j| j.priority == Priority::Interactive));
+    assert!(specs.iter().any(|j| j.arrival_s > 0.0));
+    let mut c1 = PlanCache::in_memory();
+    let one = Fleet::new(&p, 1).schedule(&specs, &mut c1).unwrap();
+    let mut c2 = PlanCache::in_memory();
+    let two = Fleet::new(&p, 2).schedule(&specs, &mut c2).unwrap();
+    assert!(
+        two.makespan_s < one.makespan_s,
+        "{} !< {}",
+        two.makespan_s,
+        one.makespan_s
+    );
+}
+
+// ---------------------------------------------------------------------------
+// deterministic replay (the in-tree twin of the CI determinism gate)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replay_is_deterministic() {
+    let p = u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    let run = || {
+        let mut cache = PlanCache::in_memory();
+        Fleet::new(&p, 2).schedule(&specs, &mut cache).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_same_decisions(&a, &b);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert!(a.bank_seconds_used == b.bank_seconds_used);
+}
