@@ -9,14 +9,19 @@
 //!    runs with zero exploration;
 //! 4. the same contended mix is scheduled on a two-board fleet, shrinking
 //!    the makespan;
-//! 5. one admitted configuration is executed for real through the
+//! 5. the shipped `examples/jobs.json` stream runs on a *heterogeneous*
+//!    U280+U50 fleet: each board is planned by its own platform's DSE, the
+//!    per-board table names both models, and the mixed fleet beats two
+//!    U50s on the same stream (the compute-bound tail job lands on the
+//!    U280 and finishes sooner);
+//! 6. one admitted configuration is executed for real through the
 //!    coordinator and verified against the DSL interpreter.
 //!
 //! Run: `cargo run --release --example serving`
 
 use sasa::platform::FpgaPlatform;
 use sasa::runtime::{artifact::default_artifact_dir, Runtime};
-use sasa::service::{demo_jobs, BatchExecutor, JobSpec, PlanCache};
+use sasa::service::{demo_jobs, load_jobs, BatchExecutor, JobSpec, PlanCache};
 
 fn main() -> anyhow::Result<()> {
     let platform = FpgaPlatform::u280();
@@ -53,6 +58,25 @@ fn main() -> anyhow::Result<()> {
         two.schedule.makespan_s * 1e3
     );
     println!("{}", two.board_table().to_markdown());
+
+    // --- heterogeneous fleet: U280+U50 vs two U50s -----------------------
+    let stream = load_jobs("examples/jobs.json")?;
+    let mixed = BatchExecutor::new(&platform)
+        .with_fleet(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+        .run(&stream, &mut warm)?;
+    let twin_u50 = BatchExecutor::new(&platform)
+        .with_fleet(vec![FpgaPlatform::u50(), FpgaPlatform::u50()])
+        .run(&stream, &mut warm)?;
+    println!(
+        "heterogeneous: makespan {:.3} ms on u280:1,u50:1 vs {:.3} ms on u50:2",
+        mixed.schedule.makespan_s * 1e3,
+        twin_u50.schedule.makespan_s * 1e3
+    );
+    println!("{}", mixed.board_table().to_markdown());
+    anyhow::ensure!(
+        mixed.schedule.makespan_s < twin_u50.schedule.makespan_s,
+        "a U280 in the fleet must beat an all-U50 fleet of equal size"
+    );
 
     // --- real execution: one admitted config through the coordinator -----
     let runtime = Runtime::from_dir(default_artifact_dir())?;

@@ -14,10 +14,31 @@
 //!   coordinator that executes the five parallelism schemes for real
 //!   (through the PJRT CPU client with the `pjrt` feature, or the
 //!   interpreter-backed runtime by default), and the `service` layer that
-//!   schedules multi-tenant job batches over the HBM bank pool with a
-//!   persistent DSE plan cache.
+//!   schedules multi-tenant job batches over a — possibly heterogeneous —
+//!   fleet of boards' HBM bank pools with a persistent DSE plan cache.
 //!
-//! See DESIGN.md for the architecture and the per-experiment index.
+//! # Architecture map (dependency order)
+//!
+//! | Module | Role |
+//! |--------|------|
+//! | [`util`] | offline JSON codec, PRNG, math helpers, persistent worker pool |
+//! | [`dsl`] | stencil DSL lexer/parser/analysis + the eight builtin benchmarks |
+//! | [`platform`] | board specs (U280/U50/small-DDR, [`platform::FpgaPlatform::by_name`] registry) and the structural resource model |
+//! | [`model`] | the analytical model (Eqs 1–9) and per-platform DSE ([`model::explore`], [`model::explore_per_platform`]) |
+//! | [`sim`] | cycle-level simulator with closed-form steady-state fast-forward |
+//! | [`reference`] | tiered DSL interpreter — the bit-exact numeric oracle |
+//! | [`runtime`] | artifact execution: interpreter-backed by default, PJRT behind `pjrt` |
+//! | [`coordinator`] | multi-PE execution of the five parallelism schemes (Figs 4–6) |
+//! | [`codegen`] | TAPA HLS kernel/host/connectivity + execution-plan emission |
+//! | [`metrics`] | tables/percentiles + one function per paper artifact |
+//! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, batch executor |
+//! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
+//!
+//! The serving entry points most callers want are
+//! [`service::Fleet`] (heterogeneous scheduling), [`service::JobSpec`]
+//! (the `jobs.json` wire format) and [`service::PlanCache`] (persistent
+//! memoized DSE). See README.md for the CLI, DESIGN.md for the
+//! architecture and the per-experiment index.
 
 pub mod util;
 pub mod dsl;

@@ -114,12 +114,10 @@ fn run() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
-    let platform = match args.get("platform").unwrap_or("u280") {
-        "u280" => FpgaPlatform::u280(),
-        "u50" => FpgaPlatform::u50(),
-        "small-ddr" => FpgaPlatform::small_ddr(),
-        other => bail!("unknown platform '{other}' (u280, u50, small-ddr)"),
-    };
+    let name = args.get("platform").unwrap_or("u280");
+    let platform = FpgaPlatform::by_name(name).with_context(|| {
+        format!("unknown platform '{name}' (known: {})", FpgaPlatform::KNOWN.join(", "))
+    })?;
 
     match cmd.as_str() {
         "parse" => cmd_parse(&args),
@@ -147,11 +145,60 @@ fn print_help() {
          sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
          sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
-         [--banks <n>] [--boards <n>] [--aging-ms <x>]\n  \
+         [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
-         Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d"
+         FLAGS (serve):\n  \
+         --boards <mix>    fleet composition: a count (`--boards 2` = that many\n                    \
+         boards of --platform, default u280) or a heterogeneous\n                    \
+         mix `model:count[,model:count...]`, e.g. `u280:2,u50:1`\n                    \
+         (a bare model name means one board; known models:\n                    \
+         {known})\n  \
+         --cache-cap <n>   LRU cap on the persisted plan cache: inserts beyond\n                    \
+         <n> plans evict the least-recently-used entry (>= 1)\n\n\
+         Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d",
+        known = FpgaPlatform::KNOWN.join(", ")
     );
+}
+
+/// Parse the `--boards` fleet spec: either a plain count (`2` — that many
+/// boards of `default_platform`) or a comma-separated heterogeneous mix
+/// (`u280:2,u50:1`; a bare model name means one board). Unknown board
+/// models (e.g. `u55c`) are an error naming the supported set.
+fn parse_boards(spec: &str, default_platform: &FpgaPlatform) -> Result<Vec<FpgaPlatform>> {
+    if let Ok(n) = spec.parse::<u64>() {
+        if n == 0 {
+            bail!("--boards must be >= 1");
+        }
+        return Ok(vec![default_platform.clone(); n as usize]);
+    }
+    let mut boards = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("--boards '{spec}': empty board entry");
+        }
+        let (name, count) = match part.split_once(':') {
+            Some((name, count)) => {
+                let count: u64 = count
+                    .parse()
+                    .with_context(|| format!("--boards '{part}': count must be an integer"))?;
+                (name, count)
+            }
+            None => (part, 1),
+        };
+        if count == 0 {
+            bail!("--boards '{part}': count must be >= 1");
+        }
+        let platform = FpgaPlatform::by_name(name).with_context(|| {
+            format!(
+                "--boards: unknown board model '{name}' (known: {})",
+                FpgaPlatform::KNOWN.join(", ")
+            )
+        })?;
+        boards.extend(std::iter::repeat_with(|| platform.clone()).take(count as usize));
+    }
+    Ok(boards)
 }
 
 fn cmd_parse(args: &Args) -> Result<()> {
@@ -410,8 +457,10 @@ fn print_batch_report(
 }
 
 /// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
-/// [--banks n] [--boards n] [--aging-ms x]`: schedule a multi-tenant job
-/// batch over a fleet of boards' HBM bank pools.
+/// [--banks n] [--boards mix] [--aging-ms x]`: schedule a multi-tenant job
+/// batch over a fleet of boards' HBM bank pools. `--boards` takes a count
+/// (identical `--platform` boards) or a heterogeneous mix like
+/// `u280:1,u50:1` — each board is planned by its own platform's DSE.
 fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     use sasa::service::{load_jobs, BatchExecutor, PlanCache};
     let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
@@ -429,11 +478,8 @@ fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     if let Some(banks) = args.get("banks") {
         exec = exec.with_pool_banks(banks.parse().context("--banks must be an integer")?);
     }
-    let boards = args.u64_or("boards", 1)?;
-    if boards == 0 {
-        bail!("--boards must be >= 1");
-    }
-    exec = exec.with_boards(boards as usize);
+    let boards = parse_boards(args.get("boards").unwrap_or("1"), platform)?;
+    exec = exec.with_fleet(boards);
     if let Some(ms) = args.get("aging-ms") {
         let ms: f64 = ms.parse().context("--aging-ms must be a number")?;
         if !ms.is_finite() || ms < 0.0 {
@@ -604,5 +650,41 @@ mod tests {
     fn bare_dash_is_a_value() {
         let a = args(&["--file", "-"]);
         assert_eq!(a.get("file"), Some("-"));
+    }
+
+    #[test]
+    fn boards_count_shorthand_uses_default_platform() {
+        let u280 = FpgaPlatform::u280();
+        let boards = parse_boards("2", &u280).unwrap();
+        assert_eq!(boards.len(), 2);
+        assert!(boards.iter().all(|b| b.name == u280.name));
+        // the shorthand follows --platform, not a hardcoded U280
+        let u50 = FpgaPlatform::u50();
+        let boards = parse_boards("3", &u50).unwrap();
+        assert_eq!(boards.len(), 3);
+        assert!(boards.iter().all(|b| b.name == u50.name));
+    }
+
+    #[test]
+    fn boards_mix_syntax_expands_in_order() {
+        let u280 = FpgaPlatform::u280();
+        let boards = parse_boards("u280:2,u50:1", &u280).unwrap();
+        let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
+        assert_eq!(models, ["u280", "u280", "u50"]);
+        // a bare model name means one board; spaces around commas are fine
+        let boards = parse_boards("u50, u280:1", &u280).unwrap();
+        let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
+        assert_eq!(models, ["u50", "u280"]);
+    }
+
+    #[test]
+    fn boards_rejects_unknown_model_and_bad_counts() {
+        let u280 = FpgaPlatform::u280();
+        let err = parse_boards("u55c:1", &u280).unwrap_err().to_string();
+        assert!(err.contains("u55c"), "{err}");
+        assert!(err.contains("u280") && err.contains("u50"), "names the known set: {err}");
+        for bad in ["0", "u280:0", "u280:x", "", ",", "u280:1,,u50:1"] {
+            assert!(parse_boards(bad, &u280).is_err(), "{bad:?} must be rejected");
+        }
     }
 }

@@ -1,4 +1,4 @@
-//! One function per paper table/figure (DESIGN.md §5 experiment index).
+//! One function per paper table/figure (DESIGN.md §6 experiment index).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
 use crate::model::{explore, Parallelism};

@@ -98,6 +98,21 @@ fn best_spatial_k(
     None
 }
 
+/// Per-platform exploration: one [`DseResult`] per platform, in input
+/// order. The DSE is platform-parameterized (Eqs 1–3 size against each
+/// board's resources and SLR count), so a heterogeneous fleet must run it
+/// once per *distinct* board model — a U50 plan is not a down-clamped U280
+/// plan but its own optimum. The serving layer batches this through the
+/// plan cache (`service::cache::PlanCache::get_or_explore_batch`, one
+/// batch per platform); this entry point is the uncached equivalent.
+pub fn explore_per_platform(
+    info: &KernelInfo,
+    platforms: &[FpgaPlatform],
+    iter: u64,
+) -> Vec<DseResult> {
+    platforms.iter().map(|p| explore(info, p, iter)).collect()
+}
+
 /// Run the full exploration for a kernel at a given iteration count.
 pub fn explore(info: &KernelInfo, platform: &FpgaPlatform, iter: u64) -> DseResult {
     let unroll = platform.unroll_factor(info.cell_bytes);
@@ -311,6 +326,18 @@ mod tests {
         let ss = r.scheme(Parallelism::SpatialS).unwrap();
         let hs = r.scheme(Parallelism::HybridS).unwrap();
         assert!(ss.config.total_pes() < hs.config.total_pes());
+    }
+
+    #[test]
+    fn per_platform_exploration_matches_individual_runs() {
+        let info = analyze(&parse(b::JACOBI2D_DSL).unwrap());
+        let boards = [FpgaPlatform::u280(), FpgaPlatform::u50()];
+        let per = explore_per_platform(&info, &boards, 64);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0], explore(&info, &boards[0], 64));
+        assert_eq!(per[1], explore(&info, &boards[1], 64));
+        // the smaller board's optimum is its own, not a clamped U280 plan
+        assert!(per[1].best.config.total_pes() <= per[0].best.config.total_pes());
     }
 
     #[test]

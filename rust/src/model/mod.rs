@@ -6,7 +6,7 @@ pub mod latency;
 pub mod timing;
 pub mod dse;
 
-pub use dse::{explore, DseChoice, DseResult};
+pub use dse::{explore, explore_per_platform, DseChoice, DseResult};
 pub use latency::{latency_cycles, max_pe, Bounds};
 pub use params::{Config, ModelParams, Parallelism};
 pub use timing::{build_ok, frequency_mhz};

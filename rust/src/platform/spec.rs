@@ -1,6 +1,20 @@
 //! FPGA platform specification (the second input to the SASA flow, Fig 7).
+//!
+//! SASA's analytical model is platform-parameterized: §5.1 evaluates the
+//! Alveo U280 and §4.3 claims performance portability to other HBM boards.
+//! Every consumer of a platform (the DSE, the cycle simulator, the plan
+//! cache, the fleet scheduler) therefore takes an [`FpgaPlatform`] value
+//! rather than assuming one board. [`FpgaPlatform::by_name`] is the
+//! registry the CLI parses board names through (`--platform u50`,
+//! `--boards u280:2,u50:1`).
 
 /// Static description of an HBM-based FPGA platform.
+///
+/// Constructed via the named factories ([`FpgaPlatform::u280`],
+/// [`FpgaPlatform::u50`], [`FpgaPlatform::small_ddr`]) or looked up from a
+/// CLI-style name with [`FpgaPlatform::by_name`]. The `name` field is the
+/// platform's identity: plan-cache keys and fleet plan sharing treat two
+/// specs with the same name as the same platform.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FpgaPlatform {
     pub name: String,
@@ -28,6 +42,36 @@ pub struct FpgaPlatform {
 }
 
 impl FpgaPlatform {
+    /// Board model names [`FpgaPlatform::by_name`] accepts, in registry
+    /// order — the vocabulary of `--platform` and the `--boards` mix
+    /// syntax (`u280:2,u50:1`).
+    pub const KNOWN: [&'static str; 3] = ["u280", "u50", "small-ddr"];
+
+    /// Look a platform up by its short model name (case-insensitive; the
+    /// full `xilinx-*` names are accepted too). Returns `None` for unknown
+    /// boards so callers can report the supported set ([`FpgaPlatform::KNOWN`]).
+    ///
+    /// ```
+    /// use sasa::platform::FpgaPlatform;
+    /// assert_eq!(FpgaPlatform::by_name("u50"), Some(FpgaPlatform::u50()));
+    /// assert_eq!(FpgaPlatform::by_name("U280"), Some(FpgaPlatform::u280()));
+    /// assert_eq!(FpgaPlatform::by_name("u55c"), None);
+    /// ```
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_lowercase().as_str() {
+            "u280" | "xilinx-u280" => Some(Self::u280()),
+            "u50" | "xilinx-u50" => Some(Self::u50()),
+            "small-ddr" => Some(Self::small_ddr()),
+            _ => None,
+        }
+    }
+
+    /// Short model label for tables and CLI output: the `name` without its
+    /// vendor prefix (`"xilinx-u280"` → `"u280"`).
+    pub fn model(&self) -> &str {
+        self.name.strip_prefix("xilinx-").unwrap_or(&self.name)
+    }
+
     /// Xilinx Alveo U280 (the paper's evaluation board, §5.1).
     pub fn u280() -> Self {
         FpgaPlatform {
@@ -106,6 +150,24 @@ mod tests {
         assert_eq!(p.slrs, 3);
         assert!((p.bank_gbps() - 14.4).abs() < 1e-9);
         assert_eq!(p.unroll_factor(4), 16);
+    }
+
+    #[test]
+    fn registry_covers_every_known_name() {
+        for name in FpgaPlatform::KNOWN {
+            let p = FpgaPlatform::by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(FpgaPlatform::by_name(&p.name), Some(p.clone()), "{name}: full name");
+            assert_eq!(FpgaPlatform::by_name(&name.to_uppercase()), Some(p), "{name}: case");
+        }
+        assert_eq!(FpgaPlatform::by_name("u55c"), None);
+        assert_eq!(FpgaPlatform::by_name(""), None);
+    }
+
+    #[test]
+    fn model_labels_drop_vendor_prefix() {
+        assert_eq!(FpgaPlatform::u280().model(), "u280");
+        assert_eq!(FpgaPlatform::u50().model(), "u50");
+        assert_eq!(FpgaPlatform::small_ddr().model(), "small-ddr");
     }
 
     #[test]

@@ -45,6 +45,24 @@ struct Entry {
 
 /// A memoizing, optionally file-backed store of exploration results, with
 /// an optional LRU entry cap for long-lived cache files.
+///
+/// The key includes `platform.name`, so one cache serves a heterogeneous
+/// fleet: every distinct board model gets (and shares) its own plan per
+/// (kernel, dims, iter).
+///
+/// ```
+/// use sasa::dsl::{analyze, benchmarks as b, parse};
+/// use sasa::platform::FpgaPlatform;
+/// use sasa::service::PlanCache;
+///
+/// let info = analyze(&parse(&b::with_dims(b::JACOBI2D_DSL, &[64, 64], 4)).unwrap());
+/// let mut cache = PlanCache::in_memory();
+/// let (first, hit) = cache.get_or_explore(&info, &FpgaPlatform::u280(), 4);
+/// assert!(!hit, "cold cache explores");
+/// let (again, hit) = cache.get_or_explore(&info, &FpgaPlatform::u280(), 4);
+/// assert!(hit, "repeat request skips exploration");
+/// assert_eq!(first, again, "a hit is bit-identical to the fresh explore");
+/// ```
 pub struct PlanCache {
     path: Option<PathBuf>,
     entries: BTreeMap<String, Entry>,

@@ -3,7 +3,9 @@
 //! `Coordinator` path for numeric verification.
 //!
 //! The simulated timeline (bank pools + cycle simulator) answers "what does
-//! this job mix do on a fleet of U280s"; `execute_real` answers "does the
+//! this job mix do on a fleet of HBM boards" — homogeneous (`with_boards`)
+//! or mixing board models (`with_fleet`, e.g. U280 + U50, each board
+//! planned by its own platform's DSE); `execute_real` answers "does the
 //! chosen configuration actually compute the right grid", by running the
 //! same `Config` through the coordinator's multi-PE dataflow against the
 //! DSL interpreter oracle. Independent admitted jobs are explored and
@@ -74,24 +76,42 @@ pub struct BatchExecutor<'p> {
     platform: &'p FpgaPlatform,
     pool_banks: Option<u64>,
     boards: usize,
+    /// Heterogeneous fleet: one platform per board. Overrides `boards` /
+    /// `platform` for fleet construction when set.
+    board_platforms: Option<Vec<FpgaPlatform>>,
     aging_s: Option<f64>,
 }
 
 impl<'p> BatchExecutor<'p> {
     pub fn new(platform: &'p FpgaPlatform) -> BatchExecutor<'p> {
-        BatchExecutor { platform, pool_banks: None, boards: 1, aging_s: None }
+        BatchExecutor {
+            platform,
+            pool_banks: None,
+            boards: 1,
+            board_platforms: None,
+            aging_s: None,
+        }
     }
 
-    /// Restrict every board's pool to fewer banks than the platform
+    /// Restrict every board's pool to fewer banks than its platform
     /// exposes.
     pub fn with_pool_banks(mut self, banks: u64) -> BatchExecutor<'p> {
         self.pool_banks = Some(banks);
         self
     }
 
-    /// Schedule over `n` boards instead of one.
+    /// Schedule over `n` identical boards instead of one.
     pub fn with_boards(mut self, n: usize) -> BatchExecutor<'p> {
         self.boards = n.max(1);
+        self
+    }
+
+    /// Schedule over a heterogeneous fleet: one entry per board, e.g.
+    /// `[u280, u50]` for `sasa serve --boards u280:1,u50:1`. Takes
+    /// precedence over [`BatchExecutor::with_boards`].
+    pub fn with_fleet(mut self, boards: Vec<FpgaPlatform>) -> BatchExecutor<'p> {
+        assert!(!boards.is_empty(), "a fleet needs at least one board");
+        self.board_platforms = Some(boards);
         self
     }
 
@@ -103,9 +123,13 @@ impl<'p> BatchExecutor<'p> {
 
     /// Schedule the batch over the fleet and aggregate statistics.
     pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
-        let mut fleet = Fleet::new(self.platform, self.boards);
+        let mut fleet = match &self.board_platforms {
+            Some(boards) => Fleet::heterogeneous(boards.clone()),
+            None => Fleet::new(self.platform, self.boards),
+        };
         if let Some(banks) = self.pool_banks {
-            fleet = fleet.with_board_banks(vec![banks; self.boards]);
+            let n = fleet.boards().len();
+            fleet = fleet.with_board_banks(vec![banks; n]);
         }
         if let Some(aging) = self.aging_s {
             fleet = fleet.with_aging_s(aging);
@@ -290,15 +314,18 @@ impl BatchReport {
         t
     }
 
-    /// Per-board bank utilization over the fleet makespan.
+    /// Per-board bank utilization over the fleet makespan, labeled with
+    /// each board's platform model (a heterogeneous fleet shows e.g. both
+    /// `u280` and `u50` rows).
     pub fn board_table(&self) -> Table {
         let mut t = Table::new(
             "Per-board utilization",
-            &["board", "banks", "jobs", "peak banks", "bank util %"],
+            &["board", "model", "banks", "jobs", "peak banks", "bank util %"],
         );
         for (i, b) in self.schedule.boards.iter().enumerate() {
             t.row(vec![
                 i.to_string(),
+                b.model.clone(),
                 b.banks.to_string(),
                 b.jobs.to_string(),
                 b.peak_banks.to_string(),
@@ -378,6 +405,22 @@ mod tests {
         assert_eq!(report.schedule.pool_banks, 64);
         let rows = report.board_table().rows.len();
         assert_eq!(rows, 2);
+    }
+
+    #[test]
+    fn mixed_fleet_reports_both_models() {
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_fleet(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        assert_eq!(report.schedule.boards.len(), 2);
+        assert_eq!(report.schedule.pool_banks, 64);
+        assert_eq!(report.schedule.boards[0].model, "u280");
+        assert_eq!(report.schedule.boards[1].model, "u50");
+        let md = report.board_table().to_markdown();
+        assert!(md.contains("u280") && md.contains("u50"), "{md}");
     }
 
     #[test]

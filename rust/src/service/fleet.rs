@@ -1,7 +1,9 @@
-//! `sasa::service::fleet` — event-driven multi-board scheduling.
+//! `sasa::service::fleet` — event-driven scheduling over a heterogeneous
+//! board fleet.
 //!
-//! Generalizes the single-board FIFO loop three ways (the ROADMAP's
-//! "async admission, preemption/priority classes, multi-board pool"):
+//! Generalizes the single-board FIFO loop four ways (the ROADMAP's
+//! "async admission, preemption/priority classes, multi-board pool,
+//! heterogeneous fleets"):
 //!
 //! * **Event queue.** Arrivals and completions are explicit timeline
 //!   events: jobs stream in via `arrival_s` instead of being pre-sorted
@@ -20,13 +22,29 @@
 //!   the retired iterations is charged to the timeline), and the remainder
 //!   is re-enqueued as a fresh arrival with the remaining iterations —
 //!   re-planned, since the DSE optimum depends on the iteration count.
-//! * **Multi-board placement.** `Fleet { boards }` holds one bank pool per
-//!   U280 (Zohouri-style heterogeneous configs welcome: each job lands on
-//!   the board whose free banks best match its DSE-chosen candidate).
-//!   Placement is candidate-major best-fit: the best candidate that fits
-//!   *any* board wins, and among fitting boards the fullest one is chosen
-//!   so large holes stay open for bank-hungry configs. Per-board timelines
-//!   merge into one [`Schedule`] with per-board stats.
+//! * **Multi-board placement.** [`Fleet`] holds one [`BoardPool`] per
+//!   board. Placement is candidate-rank best-fit: the best-ranked
+//!   candidate that fits *any* board wins, and among fitting boards the
+//!   fullest one is chosen so large holes stay open for bank-hungry
+//!   configs. Per-board timelines merge into one [`Schedule`] with
+//!   per-board stats.
+//! * **Heterogeneous platforms.** Each board carries its own
+//!   `FpgaPlatform` (mix U280 and U50 pools: `--boards u280:1,u50:1`).
+//!   Plans are resolved once per *distinct* platform — the plan-cache key
+//!   includes `platform.name`, so same-platform boards share one warm plan
+//!   — and a board is only ever offered candidates sized by *its own*
+//!   platform's DSE: a U280-sized design can never land on a U50. At a
+//!   given candidate rank, boards whose candidate fits are scored by that
+//!   board's cycle-simulated latency first — the very seconds the timeline
+//!   charges, so faster boards attract the job and the score can never
+//!   disagree with the resulting duration — then tightest fit, then index.
+//!   On a single-platform fleet every
+//!   board shares one candidate list, so the score degenerates to the
+//!   pre-heterogeneity first-fit-any-board scan — preserved verbatim as
+//!   [`Fleet::schedule_homogeneous_walk`], the decision oracle
+//!   `tests/service_fleet.rs` holds the general loop equal to, byte for
+//!   byte, exactly as [`Scheduler::schedule_fifo_walk`] anchors the
+//!   single-board case.
 //!
 //! With one board and all-default priorities the loop reproduces
 //! [`Scheduler::schedule_fifo_walk`] decision for decision (same configs,
@@ -53,16 +71,34 @@ use super::scheduler::{
 /// 0.3–8 ms), so 5 ms bounds batch delay to a handful of job drains.
 pub const DEFAULT_AGING_S: f64 = 0.005;
 
-/// One board's share of the fleet: an HBM bank pool (U280 = 32
-/// pseudo-channels, possibly restricted to model a partial reservation).
-#[derive(Debug, Clone, Copy)]
+/// One board of the fleet: its platform spec plus the HBM bank pool it
+/// contributes (U280 = 32 pseudo-channels, possibly restricted to model a
+/// partial reservation). The platform decides which plan the board is
+/// offered: plans are explored per distinct `platform.name`.
+#[derive(Debug, Clone)]
 pub struct BoardPool {
+    pub platform: FpgaPlatform,
     pub banks: u64,
 }
 
 /// A pool of boards sharing one admission queue.
-pub struct Fleet<'p> {
-    platform: &'p FpgaPlatform,
+///
+/// Boards may mix platforms; plans are resolved once per distinct platform
+/// and each board only sees candidates sized by its own board model.
+///
+/// ```
+/// use sasa::platform::FpgaPlatform;
+/// use sasa::service::{Fleet, JobSpec, PlanCache};
+///
+/// let jobs = vec![JobSpec::new("alice", "jacobi2d", vec![64, 64], 4)];
+/// let mut cache = PlanCache::in_memory();
+/// let fleet = Fleet::heterogeneous(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]);
+/// let schedule = fleet.schedule(&jobs, &mut cache).unwrap();
+/// assert_eq!(schedule.boards.len(), 2);
+/// assert_eq!(schedule.boards[0].model, "u280");
+/// assert_eq!(schedule.boards[1].model, "u50");
+/// ```
+pub struct Fleet {
     boards: Vec<BoardPool>,
     aging_s: f64,
 }
@@ -98,25 +134,64 @@ struct Victim {
     rounds_done: u64,
 }
 
-impl<'p> Fleet<'p> {
+impl Fleet {
     /// `n_boards` identical boards exposing the platform's full bank pool.
-    pub fn new(platform: &'p FpgaPlatform, n_boards: usize) -> Fleet<'p> {
+    pub fn new(platform: &FpgaPlatform, n_boards: usize) -> Fleet {
         Fleet {
-            platform,
-            boards: vec![BoardPool { banks: platform.hbm_banks }; n_boards.max(1)],
+            boards: vec![
+                BoardPool { platform: platform.clone(), banks: platform.hbm_banks };
+                n_boards.max(1)
+            ],
             aging_s: DEFAULT_AGING_S,
         }
     }
 
-    /// Heterogeneous pools: one entry per board.
-    pub fn with_board_banks(mut self, banks: Vec<u64>) -> Fleet<'p> {
+    /// A heterogeneous fleet: one board per entry, each exposing its own
+    /// platform's full bank pool (`sasa serve --boards u280:1,u50:1`).
+    pub fn heterogeneous(platforms: Vec<FpgaPlatform>) -> Fleet {
+        assert!(!platforms.is_empty(), "a fleet needs at least one board");
+        Fleet {
+            boards: platforms
+                .into_iter()
+                .map(|platform| {
+                    let banks = platform.hbm_banks;
+                    BoardPool { platform, banks }
+                })
+                .collect(),
+            aging_s: DEFAULT_AGING_S,
+        }
+    }
+
+    /// Override the per-board bank pools (to model partial reservations),
+    /// index-parallel to the current boards. On a single-platform fleet a
+    /// different length resizes the fleet to one board per entry (the
+    /// pre-heterogeneity behavior); on a mixed fleet a length mismatch is
+    /// a caller bug — silently rebuilding would discard board models — and
+    /// panics.
+    pub fn with_board_banks(mut self, banks: Vec<u64>) -> Fleet {
         assert!(!banks.is_empty(), "a fleet needs at least one board");
-        self.boards = banks.into_iter().map(|b| BoardPool { banks: b }).collect();
+        if banks.len() == self.boards.len() {
+            for (board, banks) in self.boards.iter_mut().zip(banks) {
+                board.banks = banks;
+            }
+        } else {
+            assert!(
+                self.boards.iter().all(|b| b.platform.name == self.boards[0].platform.name),
+                "with_board_banks: {} bank entries for {} boards on a mixed-platform fleet",
+                banks.len(),
+                self.boards.len()
+            );
+            let platform = self.boards[0].platform.clone();
+            self.boards = banks
+                .into_iter()
+                .map(|banks| BoardPool { platform: platform.clone(), banks })
+                .collect();
+        }
         self
     }
 
     /// Override the batch-aging bound (seconds).
-    pub fn with_aging_s(mut self, aging_s: f64) -> Fleet<'p> {
+    pub fn with_aging_s(mut self, aging_s: f64) -> Fleet {
         self.aging_s = aging_s;
         self
     }
@@ -127,6 +202,35 @@ impl<'p> Fleet<'p> {
 
     pub fn total_banks(&self) -> u64 {
         self.boards.iter().map(|b| b.banks).sum()
+    }
+
+    /// The fleet's distinct platforms in first-appearance order (identity
+    /// is `platform.name`, matching the plan-cache key), plus the mapping
+    /// from board index to distinct-platform index. Deterministic: board
+    /// order decides plan order.
+    fn distinct_platforms(&self) -> (Vec<FpgaPlatform>, Vec<usize>) {
+        let mut platforms: Vec<FpgaPlatform> = Vec::new();
+        let mut plan_of_board = Vec::with_capacity(self.boards.len());
+        for b in &self.boards {
+            match platforms.iter().position(|p| p.name == b.platform.name) {
+                Some(i) => plan_of_board.push(i),
+                None => {
+                    platforms.push(b.platform.clone());
+                    plan_of_board.push(platforms.len() - 1);
+                }
+            }
+        }
+        (platforms, plan_of_board)
+    }
+
+    /// Largest board pool per distinct platform — the fit horizon
+    /// `prepare_all` checks jobs against.
+    fn max_banks_per_platform(&self, plan_of_board: &[usize], n_platforms: usize) -> Vec<u64> {
+        let mut max_banks = vec![0u64; n_platforms];
+        for (board, &pi) in self.boards.iter().zip(plan_of_board) {
+            max_banks[pi] = max_banks[pi].max(board.banks);
+        }
+        max_banks
     }
 
     /// Ordering key of a waiting job at time `now`: effective class rank
@@ -152,13 +256,14 @@ impl<'p> Fleet<'p> {
     }
 
     /// Schedule `specs` over the fleet. Plans come from (and new
-    /// explorations go into) `cache`.
+    /// explorations go into) `cache`, one batch per distinct platform.
     pub fn schedule(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<Schedule> {
-        let max_board = self.boards.iter().map(|b| b.banks).max().unwrap();
+        let (platforms, plan_of_board) = self.distinct_platforms();
+        let max_banks = self.max_banks_per_platform(&plan_of_board, platforms.len());
         let total_banks = self.total_banks();
         let stats0 = cache.stats();
 
-        let mut prepared = prepare_all(self.platform, max_board, specs, cache)?;
+        let mut prepared = prepare_all(&platforms, &max_banks, specs, cache)?;
         // arrival order; equal arrivals keep submission order (stable sort)
         prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
         let mut next_index = prepared.len();
@@ -201,12 +306,15 @@ impl<'p> Fleet<'p> {
             //    queue (head-of-line blocking keeps every class
             //    starvation-free), as many times as it keeps succeeding
             while let Some(top) = self.queue_top(&waiting, clock) {
-                let Some((rank, board)) = try_admit(&waiting[top].prep, &free) else {
+                let Some((rank, board)) = try_admit(&waiting[top].prep, &free, &plan_of_board)
+                else {
                     break;
                 };
                 let w = waiting.swap_remove(top);
-                let choice = w.prep.candidates[rank].clone();
-                let sim = w.prep.sims[rank].clone();
+                let plan = &w.prep.plans[plan_of_board[board]];
+                let choice = plan.candidates[rank].clone();
+                let sim = plan.sims[rank].clone();
+                let cache_hit = plan.cache_hit;
                 let duration = sim.seconds.max(1e-12);
                 free[board] -= choice.hbm_banks;
                 running.push(Running {
@@ -233,7 +341,7 @@ impl<'p> Fleet<'p> {
                     config: choice.config,
                     hbm_banks: choice.hbm_banks,
                     fallback_rank: rank,
-                    cache_hit: w.prep.cache_hit,
+                    cache_hit,
                     board,
                     preempted: false,
                     resumed: w.prep.resumed,
@@ -256,10 +364,12 @@ impl<'p> Fleet<'p> {
             if let Some(top) = self.queue_top(&waiting, clock) {
                 let head = &waiting[top].prep;
                 if head.spec.priority == Priority::Interactive
-                    && try_admit(head, &free).is_none()
+                    && try_admit(head, &free, &plan_of_board).is_none()
                     && !running.iter().any(|r| r.preempted)
                 {
-                    if let Some(v) = pick_victim(head, &free, &running, &jobs, clock) {
+                    if let Some(v) =
+                        pick_victim(head, &free, &running, &jobs, &plan_of_board, clock)
+                    {
                         let (job_idx, start_s, iters_per_round) = {
                             let r = &mut running[v.running_idx];
                             r.preempted = true;
@@ -280,7 +390,7 @@ impl<'p> Fleet<'p> {
                         rem_spec.iter = remaining;
                         rem_spec.arrival_s = v.boundary_s;
                         let rem =
-                            prepare_remainder(self.platform, max_board, &rem_spec, cache)?;
+                            prepare_remainder(&platforms, &max_banks, &rem_spec, cache)?;
                         let pos = future
                             .partition_point(|w| w.prep.spec.arrival_s <= v.boundary_s);
                         future.insert(pos, Waiting { prep: rem, index: next_index });
@@ -306,27 +416,7 @@ impl<'p> Fleet<'p> {
             clock = next;
         }
 
-        let boards: Vec<BoardStats> = self
-            .boards
-            .iter()
-            .enumerate()
-            .map(|(bi, b)| {
-                let mut bank_seconds = 0.0f64;
-                let mut n = 0usize;
-                for (j, d) in jobs.iter().zip(&durations) {
-                    if j.board == bi {
-                        bank_seconds += j.hbm_banks as f64 * d;
-                        n += 1;
-                    }
-                }
-                BoardStats {
-                    banks: b.banks,
-                    jobs: n,
-                    peak_banks: peak_per_board[bi],
-                    bank_seconds,
-                }
-            })
-            .collect();
+        let boards = self.board_stats(&jobs, &durations, &peak_per_board);
         // fleet-wide bank-seconds: per-board sums accumulate in admission
         // order, so the single-board total matches the reference walk's
         let bank_seconds_used: f64 = boards.iter().map(|b| b.bank_seconds).sum();
@@ -346,15 +436,270 @@ impl<'p> Fleet<'p> {
             preemptions,
         })
     }
+
+    /// The pre-heterogeneity fleet loop, kept verbatim as the decision
+    /// oracle for single-platform fleets: one candidate list shared by
+    /// every board, first-fit-any-board placement with the fullest-board
+    /// tie-break. `tests/service_fleet.rs` holds the general loop's
+    /// homogeneous schedules equal to this one byte for byte, exactly as
+    /// `Scheduler::schedule_fifo_walk` anchors the single-board case.
+    /// Errors if the fleet mixes platforms.
+    pub fn schedule_homogeneous_walk(
+        &self,
+        specs: &[JobSpec],
+        cache: &mut PlanCache,
+    ) -> Result<Schedule> {
+        let (platforms, _) = self.distinct_platforms();
+        if platforms.len() != 1 {
+            bail!(
+                "schedule_homogeneous_walk is the single-platform oracle; \
+                 this fleet mixes {} platforms",
+                platforms.len()
+            );
+        }
+        let max_board = self.boards.iter().map(|b| b.banks).max().unwrap();
+        let total_banks = self.total_banks();
+        let stats0 = cache.stats();
+
+        let mut prepared = prepare_all(&platforms, &[max_board], specs, cache)?;
+        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        let mut next_index = prepared.len();
+        let mut future: VecDeque<Waiting> = prepared
+            .into_iter()
+            .enumerate()
+            .map(|(index, prep)| Waiting { prep, index })
+            .collect();
+
+        let mut waiting: Vec<Waiting> = Vec::new();
+        let mut running: Vec<Running> = Vec::new();
+        let mut free: Vec<u64> = self.boards.iter().map(|b| b.banks).collect();
+        let mut peak_per_board: Vec<u64> = vec![0; self.boards.len()];
+
+        let mut clock = 0.0f64;
+        let mut jobs: Vec<ScheduledJob> = Vec::new();
+        let mut durations: Vec<f64> = Vec::new();
+        let mut peak_concurrency = 0usize;
+        let mut peak_banks = 0u64;
+        let mut preemptions = 0u64;
+
+        loop {
+            running.retain(|r| {
+                if r.finish_s <= clock {
+                    free[r.board] += r.banks;
+                    false
+                } else {
+                    true
+                }
+            });
+            while future.front().is_some_and(|w| w.prep.spec.arrival_s <= clock) {
+                waiting.push(future.pop_front().unwrap());
+            }
+
+            while let Some(top) = self.queue_top(&waiting, clock) {
+                let Some((rank, board)) = try_admit_single_list(&waiting[top].prep, &free)
+                else {
+                    break;
+                };
+                let w = waiting.swap_remove(top);
+                let plan = &w.prep.plans[0];
+                let choice = plan.candidates[rank].clone();
+                let sim = plan.sims[rank].clone();
+                let cache_hit = plan.cache_hit;
+                let duration = sim.seconds.max(1e-12);
+                free[board] -= choice.hbm_banks;
+                running.push(Running {
+                    board,
+                    job: jobs.len(),
+                    start_s: clock,
+                    finish_s: clock + duration,
+                    banks: choice.hbm_banks,
+                    rounds: sim.rounds,
+                    iters_per_round: if sim.rounds > 1 {
+                        choice.config.s.max(1)
+                    } else {
+                        w.prep.spec.iter
+                    },
+                    preempted: false,
+                });
+                peak_concurrency = peak_concurrency.max(running.len());
+                let in_use = total_banks - free.iter().sum::<u64>();
+                peak_banks = peak_banks.max(in_use);
+                peak_per_board[board] =
+                    peak_per_board[board].max(self.boards[board].banks - free[board]);
+                durations.push(duration);
+                jobs.push(ScheduledJob {
+                    config: choice.config,
+                    hbm_banks: choice.hbm_banks,
+                    fallback_rank: rank,
+                    cache_hit,
+                    board,
+                    preempted: false,
+                    resumed: w.prep.resumed,
+                    queue_wait_s: clock - w.prep.spec.arrival_s,
+                    start_s: clock,
+                    finish_s: clock + duration,
+                    cells: w.prep.spec.total_cells(),
+                    choice,
+                    sim,
+                    spec: w.prep.spec,
+                });
+            }
+
+            if let Some(top) = self.queue_top(&waiting, clock) {
+                let head = &waiting[top].prep;
+                if head.spec.priority == Priority::Interactive
+                    && try_admit_single_list(head, &free).is_none()
+                    && !running.iter().any(|r| r.preempted)
+                {
+                    if let Some(v) =
+                        pick_victim_single_list(head, &free, &running, &jobs, clock)
+                    {
+                        let (job_idx, start_s, iters_per_round) = {
+                            let r = &mut running[v.running_idx];
+                            r.preempted = true;
+                            r.finish_s = v.boundary_s;
+                            (r.job, r.start_s, r.iters_per_round)
+                        };
+                        let done_iters = v.rounds_done * iters_per_round;
+                        let seg = &mut jobs[job_idx];
+                        let remaining = seg.spec.iter - done_iters;
+                        seg.preempted = true;
+                        seg.finish_s = v.boundary_s;
+                        seg.spec.iter = done_iters;
+                        seg.cells = seg.spec.total_cells();
+                        durations[job_idx] = v.boundary_s - start_s;
+                        preemptions += 1;
+
+                        let mut rem_spec = seg.spec.clone();
+                        rem_spec.iter = remaining;
+                        rem_spec.arrival_s = v.boundary_s;
+                        let rem =
+                            prepare_remainder(&platforms, &[max_board], &rem_spec, cache)?;
+                        let pos = future
+                            .partition_point(|w| w.prep.spec.arrival_s <= v.boundary_s);
+                        future.insert(pos, Waiting { prep: rem, index: next_index });
+                        next_index += 1;
+                    }
+                }
+            }
+
+            let next_finish =
+                running.iter().map(|r| r.finish_s).fold(f64::INFINITY, f64::min);
+            let next_arrival =
+                future.front().map_or(f64::INFINITY, |w| w.prep.spec.arrival_s);
+            let next = next_finish.min(next_arrival);
+            if !next.is_finite() {
+                if waiting.is_empty() {
+                    break;
+                }
+                bail!("fleet stalled with {} job(s) waiting", waiting.len());
+            }
+            clock = next;
+        }
+
+        let boards = self.board_stats(&jobs, &durations, &peak_per_board);
+        let bank_seconds_used: f64 = boards.iter().map(|b| b.bank_seconds).sum();
+
+        let makespan_s = jobs.iter().map(|j| j.finish_s).fold(0.0f64, f64::max);
+        let stats1 = cache.stats();
+        Ok(Schedule {
+            jobs,
+            pool_banks: total_banks,
+            makespan_s,
+            peak_concurrency,
+            peak_banks_in_use: peak_banks,
+            bank_seconds_used,
+            cache_hits: stats1.hits - stats0.hits,
+            explorations: stats1.misses - stats0.misses,
+            boards,
+            preemptions,
+        })
+    }
+
+    /// Per-board aggregates of a finished pass, labeled with each board's
+    /// platform model.
+    fn board_stats(
+        &self,
+        jobs: &[ScheduledJob],
+        durations: &[f64],
+        peak_per_board: &[u64],
+    ) -> Vec<BoardStats> {
+        self.boards
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let mut bank_seconds = 0.0f64;
+                let mut n = 0usize;
+                for (j, d) in jobs.iter().zip(durations) {
+                    if j.board == bi {
+                        bank_seconds += j.hbm_banks as f64 * d;
+                        n += 1;
+                    }
+                }
+                BoardStats {
+                    model: b.platform.model().to_string(),
+                    banks: b.banks,
+                    jobs: n,
+                    peak_banks: peak_per_board[bi],
+                    bank_seconds,
+                }
+            })
+            .collect()
+    }
 }
 
-/// Candidate-major best-fit placement: walk the job's candidates best
-/// first; the first one that fits *any* board wins, placed on the fitting
-/// board with the fewest free banks (tightest fit — keeps large holes open
-/// for bank-hungry configs). Returns (candidate rank, board index). On a
-/// single board this is exactly the reference walk's fallback scan.
-fn try_admit(prep: &Prepared, free: &[u64]) -> Option<(usize, usize)> {
-    for (rank, c) in prep.candidates.iter().enumerate() {
+/// Best-fit placement over a (possibly heterogeneous) fleet. Candidate
+/// ranks are walked best first; at rank `r`, a board is feasible when *its
+/// own platform's* rank-`r` candidate fits its free banks. The first
+/// non-empty rank wins, and among its feasible boards the job goes to the
+/// one whose candidate *cycle-simulates* fastest under that board's
+/// platform — the same `sims[rank].seconds` the timeline charges, so the
+/// score and the resulting duration can never disagree — then the fullest
+/// (tightest fit — keeps large holes open for bank-hungry configs), then
+/// the lowest index. Rank-major order preserves each platform's DSE
+/// preference (including its fewer-banks tie-break); the latency score is
+/// what routes a job to a faster board model when both could run it.
+/// Returns (candidate rank, board index).
+///
+/// On a single-platform fleet every board shares one candidate list and
+/// one latency per rank, so this reduces to
+/// [`try_admit_single_list`] — the preserved pre-heterogeneity scan.
+fn try_admit(prep: &Prepared, free: &[u64], plan_of_board: &[usize]) -> Option<(usize, usize)> {
+    let max_ranks = prep.plans.iter().map(|p| p.candidates.len()).max().unwrap_or(0);
+    for rank in 0..max_ranks {
+        let fit = free
+            .iter()
+            .enumerate()
+            .filter_map(|(board, &f)| {
+                let plan = &prep.plans[plan_of_board[board]];
+                let c = plan.candidates.get(rank)?;
+                if c.hbm_banks <= f {
+                    Some((board, plan.sims[rank].seconds, f))
+                } else {
+                    None
+                }
+            })
+            .min_by(|a, b| {
+                a.1.partial_cmp(&b.1)
+                    .unwrap()
+                    .then_with(|| a.2.cmp(&b.2))
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+        if let Some((board, ..)) = fit {
+            return Some((rank, board));
+        }
+    }
+    None
+}
+
+/// The pre-heterogeneity placement scan, verbatim: walk the single shared
+/// candidate list best first; the first candidate that fits *any* board
+/// wins, placed on the fitting board with the fewest free banks. Only
+/// valid when every board shares plan 0 (single-platform fleets); the
+/// general [`try_admit`] provably degenerates to this, and
+/// [`Fleet::schedule_homogeneous_walk`] keeps it alive as the oracle.
+fn try_admit_single_list(prep: &Prepared, free: &[u64]) -> Option<(usize, usize)> {
+    for (rank, c) in prep.plans[0].candidates.iter().enumerate() {
         let fit = free
             .iter()
             .enumerate()
@@ -369,15 +714,50 @@ fn try_admit(prep: &Prepared, free: &[u64]) -> Option<(usize, usize)> {
 
 /// Choose the batch segment to preempt for `head`: among running,
 /// not-already-cut batch segments with more than one round whose freed
-/// banks would let some candidate of `head` start on their board, the one
-/// with the earliest next round boundary (ties: lowest board, then oldest
-/// admission). Returns None when no preemption can help.
+/// banks would let some candidate of `head` — *from the victim board's own
+/// platform plan* — start on their board, the one with the earliest next
+/// round boundary (ties: lowest board, then oldest admission). Returns
+/// None when no preemption can help.
 fn pick_victim(
     head: &Prepared,
     free: &[u64],
     running: &[Running],
     jobs: &[ScheduledJob],
+    plan_of_board: &[usize],
     now: f64,
+) -> Option<Victim> {
+    pick_victim_by(head, free, running, jobs, now, |prep, board, freed| {
+        prep.plans[plan_of_board[board]]
+            .candidates
+            .iter()
+            .any(|c| c.hbm_banks <= freed)
+    })
+}
+
+/// Pre-heterogeneity victim choice: `head`'s single shared candidate list
+/// decides whether freeing a board helps (the oracle twin of
+/// [`try_admit_single_list`]).
+fn pick_victim_single_list(
+    head: &Prepared,
+    free: &[u64],
+    running: &[Running],
+    jobs: &[ScheduledJob],
+    now: f64,
+) -> Option<Victim> {
+    pick_victim_by(head, free, running, jobs, now, |prep, _board, freed| {
+        prep.plans[0].candidates.iter().any(|c| c.hbm_banks <= freed)
+    })
+}
+
+/// Shared victim scan: `would_help(head, board, freed_banks)` is the only
+/// policy point that differs between the general and the oracle loop.
+fn pick_victim_by(
+    head: &Prepared,
+    free: &[u64],
+    running: &[Running],
+    jobs: &[ScheduledJob],
+    now: f64,
+    would_help: impl Fn(&Prepared, usize, u64) -> bool,
 ) -> Option<Victim> {
     let mut best: Option<(Victim, (f64, usize, usize))> = None;
     for (running_idx, r) in running.iter().enumerate() {
@@ -391,7 +771,7 @@ fn pick_victim(
             continue;
         }
         let freed = free[r.board] + r.banks;
-        if !head.candidates.iter().any(|c| c.hbm_banks <= freed) {
+        if !would_help(head, r.board, freed) {
             continue;
         }
         let round_s = (r.finish_s - r.start_s) / r.rounds as f64;

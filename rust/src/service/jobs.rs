@@ -63,6 +63,15 @@ impl std::str::FromStr for Priority {
 }
 
 /// One tenant request: a kernel at a shape for `iter` iterations.
+///
+/// ```
+/// use sasa::service::JobSpec;
+///
+/// let job = JobSpec::new("alice", "jacobi2d", vec![720, 1024], 8).arriving_at(0.001);
+/// assert_eq!(job.total_cells(), 720 * 1024 * 8);
+/// assert_eq!(job.dims_label(), "720x1024");
+/// assert!(job.info().is_ok(), "resolves to an analyzed builtin kernel");
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     pub tenant: String,

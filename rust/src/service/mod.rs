@@ -18,7 +18,10 @@
 //! * [`fleet`] — the admission engine: an event-driven loop over arrival
 //!   and completion events, priority classes with an aging bound,
 //!   round-boundary preemption of batch jobs by interactive arrivals, and
-//!   best-fit placement across a multi-board pool (`--boards N`).
+//!   best-fit placement across a multi-board pool that may mix board
+//!   models (`--boards 2`, or heterogeneous `--boards u280:1,u50:1` —
+//!   every board is planned by its own platform's DSE and same-platform
+//!   boards share warm plans).
 //! * [`scheduler`] — timeline types ([`Schedule`], [`ScheduledJob`]) and
 //!   the single-board facade; the pre-fleet FIFO loop survives as
 //!   `schedule_fifo_walk`, the decision oracle the fleet's

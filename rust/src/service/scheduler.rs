@@ -7,7 +7,9 @@
 //!
 //! Since the fleet layer landed, the actual admission engine lives in
 //! [`super::fleet`]: an event-driven loop over arrivals and completions
-//! with priority classes, aging, preemption, and multi-board placement.
+//! with priority classes, aging, preemption, and multi-board placement
+//! across boards that may mix platforms (each board planned by its own
+//! platform's DSE — one `PlatformPlan` per distinct board model).
 //! [`Scheduler::schedule`] is the single-board facade over it — one board,
 //! and with all-default (batch) priorities its decisions are exactly the
 //! original FIFO head-of-line policy:
@@ -89,6 +91,10 @@ pub struct ScheduledJob {
 /// Per-board aggregates of one scheduling pass.
 #[derive(Debug, Clone)]
 pub struct BoardStats {
+    /// Board model label (`FpgaPlatform::model`, e.g. `"u280"`) — on a
+    /// heterogeneous fleet the utilization table names each board's
+    /// platform.
+    pub model: String,
     /// Banks this board contributed to the fleet pool.
     pub banks: u64,
     /// Timeline entries that ran on this board.
@@ -147,18 +153,30 @@ pub struct Scheduler<'p> {
     pool_banks: u64,
 }
 
-/// A job resolved for admission: its plan, candidate order, and
-/// pre-computed per-candidate simulations.
-pub(super) struct Prepared {
-    pub(super) spec: JobSpec,
-    info: KernelInfo,
+/// One platform's admission view of a job: the candidate order that
+/// platform's DSE produced, plus per-candidate cycle simulations under
+/// that platform's latency model. A heterogeneous fleet carries one
+/// `PlatformPlan` per *distinct* board model; same-platform boards share
+/// it (exactly as they share the plan-cache entry, whose key includes
+/// `platform.name`).
+pub(super) struct PlatformPlan {
     /// Admission candidates, best first: `dse.best`, then the remaining
-    /// per-scheme survivors by predicted latency.
+    /// per-scheme survivors by predicted latency — all sized and priced
+    /// against this plan's platform.
     pub(super) candidates: Vec<DseChoice>,
     /// Cycle simulation of each candidate, index-parallel to `candidates`
     /// (pre-computed concurrently; the admission loop only looks up).
     pub(super) sims: Vec<SimResult>,
+    /// Whether this platform's plan came from the cache.
     pub(super) cache_hit: bool,
+}
+
+/// A job resolved for admission: one [`PlatformPlan`] per distinct fleet
+/// platform (index-parallel to the fleet's platform list).
+pub(super) struct Prepared {
+    pub(super) spec: JobSpec,
+    info: KernelInfo,
+    pub(super) plans: Vec<PlatformPlan>,
     /// True for the re-enqueued remainder of a preempted job.
     pub(super) resumed: bool,
 }
@@ -179,52 +197,62 @@ fn admission_candidates(dse: &DseResult) -> Vec<DseChoice> {
     candidates
 }
 
-/// Resolve plans (batch DSE: cache hits immediate, misses explored
-/// concurrently on the worker pool) and pre-simulate every admission
-/// candidate in parallel — independent jobs' simulations never run one
-/// after another on the admission path. `max_banks` is the largest single
-/// board pool a job could land on: a job whose smallest candidate exceeds
-/// it can never run anywhere in the fleet.
+/// Resolve plans (batch DSE per distinct platform: cache hits immediate,
+/// misses explored concurrently on the worker pool) and pre-simulate every
+/// admission candidate in parallel — independent jobs' simulations never
+/// run one after another on the admission path. `platforms` is the fleet's
+/// distinct-platform list and `max_banks` is index-parallel to it: the
+/// largest single board pool of that platform a job could land on. A job
+/// whose smallest candidate exceeds every platform's largest pool can
+/// never run anywhere in the fleet.
 pub(super) fn prepare_all(
-    platform: &FpgaPlatform,
-    max_banks: u64,
+    platforms: &[FpgaPlatform],
+    max_banks: &[u64],
     specs: &[JobSpec],
     cache: &mut PlanCache,
 ) -> Result<Vec<Prepared>> {
     let infos: Vec<KernelInfo> = specs.iter().map(JobSpec::info).collect::<Result<_>>()?;
     let reqs: Vec<(&KernelInfo, u64)> =
         infos.iter().zip(specs).map(|(i, s)| (i, s.iter)).collect();
-    let plans = cache.get_or_explore_batch(platform, &reqs);
+    // one batched lookup per distinct platform, in fleet platform order —
+    // the cache key includes `platform.name`, so same-platform boards
+    // share one exploration and warm plans stay shared across runs
+    let plan_batches: Vec<Vec<(DseResult, bool)>> =
+        platforms.iter().map(|p| cache.get_or_explore_batch(p, &reqs)).collect();
 
     let mut prepared = Vec::with_capacity(specs.len());
-    for ((spec, info), (dse, cache_hit)) in specs.iter().zip(infos).zip(plans) {
-        let candidates = admission_candidates(&dse);
-        check_fits_somewhere(spec, &candidates, max_banks)?;
-        prepared.push(Prepared {
-            spec: spec.clone(),
-            info,
-            candidates,
-            sims: Vec::new(),
-            cache_hit,
-            resumed: false,
-        });
+    for (ji, (spec, info)) in specs.iter().zip(infos).enumerate() {
+        let plans: Vec<PlatformPlan> = plan_batches
+            .iter()
+            .map(|batch| {
+                let (dse, cache_hit) = &batch[ji];
+                PlatformPlan {
+                    candidates: admission_candidates(dse),
+                    sims: Vec::new(),
+                    cache_hit: *cache_hit,
+                }
+            })
+            .collect();
+        check_fits_somewhere(spec, &plans, max_banks)?;
+        prepared.push(Prepared { spec: spec.clone(), info, plans, resumed: false });
     }
 
-    // fan the per-candidate cycle simulations out over the pool:
-    // `simulate` is a pure function of (info, iter, config)
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = prepared
-        .iter_mut()
-        .map(|p| {
-            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                p.sims = p
+    // fan the per-(job, platform) cycle simulations out over the pool:
+    // `simulate` is a pure function of (info, platform, iter, config)
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for p in prepared.iter_mut() {
+        let iter = p.spec.iter;
+        let info: &KernelInfo = &p.info;
+        for (plan, platform) in p.plans.iter_mut().zip(platforms) {
+            tasks.push(Box::new(move || {
+                plan.sims = plan
                     .candidates
                     .iter()
-                    .map(|c| simulate(&p.info, platform, p.spec.iter, c.config))
+                    .map(|c| simulate(info, platform, iter, c.config))
                     .collect();
-            });
-            b
-        })
-        .collect();
+            }));
+        }
+    }
     Pool::global().run(tasks);
     Ok(prepared)
 }
@@ -235,28 +263,45 @@ pub(super) fn prepare_all(
 /// closed-form fast-forwards (PR 2), so one remainder costs microseconds
 /// and pool fan-out would be overhead.
 pub(super) fn prepare_remainder(
-    platform: &FpgaPlatform,
-    max_banks: u64,
+    platforms: &[FpgaPlatform],
+    max_banks: &[u64],
     spec: &JobSpec,
     cache: &mut PlanCache,
 ) -> Result<Prepared> {
     let info = spec.info()?;
-    let (dse, cache_hit) = cache.get_or_explore(&info, platform, spec.iter);
-    let candidates = admission_candidates(&dse);
-    check_fits_somewhere(spec, &candidates, max_banks)?;
-    let sims = candidates
+    let plans: Vec<PlatformPlan> = platforms
         .iter()
-        .map(|c| simulate(&info, platform, spec.iter, c.config))
+        .map(|platform| {
+            let (dse, cache_hit) = cache.get_or_explore(&info, platform, spec.iter);
+            let candidates = admission_candidates(&dse);
+            let sims = candidates
+                .iter()
+                .map(|c| simulate(&info, platform, spec.iter, c.config))
+                .collect();
+            PlatformPlan { candidates, sims, cache_hit }
+        })
         .collect();
-    Ok(Prepared { spec: spec.clone(), info, candidates, sims, cache_hit, resumed: true })
+    check_fits_somewhere(spec, &plans, max_banks)?;
+    Ok(Prepared { spec: spec.clone(), info, plans, resumed: true })
 }
 
-fn check_fits_somewhere(spec: &JobSpec, candidates: &[DseChoice], max_banks: u64) -> Result<()> {
-    let min_banks = candidates.iter().map(|c| c.hbm_banks).min().unwrap();
-    if min_banks > max_banks {
+/// A job is schedulable iff, on some platform present in the fleet, some
+/// candidate fits that platform's largest board pool.
+fn check_fits_somewhere(spec: &JobSpec, plans: &[PlatformPlan], max_banks: &[u64]) -> Result<()> {
+    let fits = plans
+        .iter()
+        .zip(max_banks)
+        .any(|(plan, &mb)| plan.candidates.iter().any(|c| c.hbm_banks <= mb));
+    if !fits {
+        // report the shortfall on the roomiest pool: the per-platform check
+        // above rejected even that pool against its own platform's plan, so
+        // the printed demand always exceeds the printed capacity
+        let (plan, &pool) =
+            plans.iter().zip(max_banks).max_by_key(|&(_, &mb)| mb).unwrap();
+        let min_banks = plan.candidates.iter().map(|c| c.hbm_banks).min().unwrap();
         bail!(
             "job '{}' ({}): smallest configuration needs {min_banks} banks \
-             but the pool has {max_banks}",
+             but the pool has {pool}",
             spec.kernel,
             spec.dims_label(),
         );
@@ -300,7 +345,12 @@ impl<'p> Scheduler<'p> {
         cache: &mut PlanCache,
     ) -> Result<Schedule> {
         let stats0 = cache.stats();
-        let mut prepared = prepare_all(self.platform, self.pool_banks, specs, cache)?;
+        let mut prepared = prepare_all(
+            std::slice::from_ref(self.platform),
+            &[self.pool_banks],
+            specs,
+            cache,
+        )?;
         // FIFO by arrival time; equal arrivals keep submission order
         // (sort_by is stable).
         prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
@@ -317,7 +367,8 @@ impl<'p> Scheduler<'p> {
         while let Some(head) = pending.front() {
             let arrival = head.spec.arrival_s;
             let admit = if arrival <= clock {
-                head.candidates
+                head.plans[0]
+                    .candidates
                     .iter()
                     .enumerate()
                     .find(|(_, c)| c.hbm_banks <= free)
@@ -328,7 +379,7 @@ impl<'p> Scheduler<'p> {
 
             if let Some((rank, choice)) = admit {
                 let head = pending.pop_front().unwrap();
-                let sim = head.sims[rank].clone();
+                let sim = head.plans[0].sims[rank].clone();
                 let duration = sim.seconds.max(1e-12);
                 free -= choice.hbm_banks;
                 running.push((clock + duration, choice.hbm_banks));
@@ -339,7 +390,7 @@ impl<'p> Scheduler<'p> {
                     config: choice.config,
                     hbm_banks: choice.hbm_banks,
                     fallback_rank: rank,
-                    cache_hit: head.cache_hit,
+                    cache_hit: head.plans[0].cache_hit,
                     board: 0,
                     preempted: false,
                     resumed: false,
@@ -379,6 +430,7 @@ impl<'p> Scheduler<'p> {
         let stats1 = cache.stats();
         Ok(Schedule {
             boards: vec![BoardStats {
+                model: self.platform.model().to_string(),
                 banks: self.pool_banks,
                 jobs: jobs.len(),
                 peak_banks,

@@ -1,13 +1,18 @@
 //! Integration tests for `sasa::service::fleet`: the ISSUE-3 acceptance
 //! checklist — single-board/default-priority equivalence against the
 //! pre-fleet FIFO reference walk, priority ordering, the aging bound,
-//! preemption accounting, multi-board makespan reduction, and
-//! deterministic replay.
+//! preemption accounting, multi-board makespan reduction, deterministic
+//! replay — plus the ISSUE-4 heterogeneous-fleet checklist: per-board
+//! platform plans, U50 resource safety on mixed fleets, byte-identical
+//! homogeneous schedules against the preserved pre-heterogeneity walk,
+//! and the mixed-beats-all-U50 makespan win.
 
+use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::service::{
     demo_jobs, load_jobs, Fleet, JobSpec, PlanCache, Priority, Schedule, Scheduler,
 };
+use sasa::sim::simulate;
 
 fn u280() -> FpgaPlatform {
     FpgaPlatform::u280()
@@ -265,6 +270,164 @@ fn example_jobs_stream_benefits_from_second_board() {
         two.makespan_s,
         one.makespan_s
     );
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous fleets (ISSUE 4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_fleet_plans_each_board_with_its_own_platform() {
+    // two 30-bank jacobi2d@2 jobs on u280:1,u50:1: the first takes the
+    // U280 at the *U280 plan's* best; the second cannot fit there and
+    // falls to the U50 — at the *U50 plan's* best, not a down-clamped
+    // U280 design
+    let u280 = u280();
+    let u50 = FpgaPlatform::u50();
+    let jobs = vec![
+        JobSpec::new("a", "jacobi2d", vec![9720, 1024], 2),
+        JobSpec::new("b", "jacobi2d", vec![9720, 1024], 2),
+    ];
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::heterogeneous(vec![u280.clone(), u50.clone()])
+        .schedule(&jobs, &mut cache)
+        .unwrap();
+    assert_eq!(s.jobs.len(), 2);
+
+    let info = jobs[0].info().unwrap();
+    let best280 = explore(&info, &u280, 2).best;
+    let best50 = explore(&info, &u50, 2).best;
+    assert_eq!(s.jobs[0].board, 0);
+    assert_eq!(s.jobs[0].config, best280.config);
+    assert_eq!(s.jobs[0].fallback_rank, 0);
+    assert_eq!(s.jobs[1].board, 1);
+    assert_eq!(s.jobs[1].config, best50.config, "U50 board runs the U50 optimum");
+    assert_eq!(s.jobs[1].fallback_rank, 0, "the U50 plan's rank 0, not a fallback");
+    // the timeline duration comes from the board's own latency model
+    assert_eq!(
+        s.jobs[1].sim.seconds,
+        simulate(&info, &u50, 2, best50.config).seconds,
+        "U50 placement simulated under the U50 model"
+    );
+    // per-board stats carry the model labels, warm plans exist per platform
+    assert_eq!(s.boards[0].model, "u280");
+    assert_eq!(s.boards[1].model, "u50");
+    assert_eq!(s.explorations, 2, "one exploration per distinct platform");
+}
+
+#[test]
+fn mixed_fleet_never_exceeds_u50_resources_on_the_u50_board() {
+    // every entry placed on the U50 board of a u280:1,u50:1 fleet must be
+    // drawn from the U50's own exploration (and so fit the smaller board's
+    // resource bounds); U280-only designs can never leak onto it
+    let u280 = u280();
+    let u50 = FpgaPlatform::u50();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::heterogeneous(vec![u280.clone(), u50.clone()])
+        .schedule(&specs, &mut cache)
+        .unwrap();
+
+    let mut on_u50 = 0;
+    for j in &s.jobs {
+        if j.board != 1 || j.preempted {
+            // a preempted segment's spec.iter is rewritten to the retired
+            // count, so its plan key is no longer reconstructible here
+            continue;
+        }
+        on_u50 += 1;
+        let info = j.spec.info().unwrap();
+        let dse50 = explore(&info, &u50, j.spec.iter);
+        let member = dse50.best.config == j.config
+            || dse50.per_scheme.iter().any(|c| c.config == j.config);
+        assert!(
+            member,
+            "{} on the U50 board runs {}, which the U50 DSE never emitted",
+            j.spec.kernel, j.config
+        );
+        assert!(
+            j.config.total_pes() <= dse50.bounds.pe_res,
+            "{}: {} exceeds the U50 PE bound {}",
+            j.spec.kernel,
+            j.config,
+            dse50.bounds.pe_res
+        );
+    }
+    assert!(on_u50 > 0, "the stream must actually exercise the U50 board");
+}
+
+#[test]
+fn homogeneous_two_boards_byte_identical_to_pre_heterogeneity_walk() {
+    // oracle equivalence: on an all-U280 fleet the generalized placement
+    // must reproduce the preserved pre-heterogeneity loop decision for
+    // decision — rendered with the CLI's precision, the schedules are
+    // byte-identical
+    let p = u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    for n_boards in [1usize, 2, 3] {
+        let mut c1 = PlanCache::in_memory();
+        let general = Fleet::new(&p, n_boards).schedule(&specs, &mut c1).unwrap();
+        let mut c2 = PlanCache::in_memory();
+        let walk =
+            Fleet::new(&p, n_boards).schedule_homogeneous_walk(&specs, &mut c2).unwrap();
+        assert_same_decisions(&general, &walk);
+        assert_eq!(general.preemptions, walk.preemptions);
+        let render = |s: &Schedule| -> String {
+            s.jobs
+                .iter()
+                .map(|j| {
+                    format!(
+                        "{}|{}|{}|{}|{}|{:.3}|{:.3}|{:.3}",
+                        j.spec.tenant,
+                        j.config,
+                        j.board,
+                        j.hbm_banks,
+                        j.fallback_rank,
+                        j.queue_wait_s * 1e3,
+                        j.start_s * 1e3,
+                        j.finish_s * 1e3
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(render(&general), render(&walk), "{n_boards} board(s)");
+    }
+    // the oracle refuses mixed fleets: it is a single-platform loop
+    let mut c = PlanCache::in_memory();
+    let err = Fleet::heterogeneous(vec![u280(), FpgaPlatform::u50()])
+        .schedule_homogeneous_walk(&specs, &mut c)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("single-platform"), "{err}");
+}
+
+#[test]
+fn mixed_fleet_beats_two_u50s_on_example_stream() {
+    // the acceptance scenario behind `sasa serve --boards u280:1,u50:1`:
+    // the compute-bound tail job runs on whichever board model is faster,
+    // so swapping one U50 for a U280 strictly shrinks the makespan
+    let u50 = FpgaPlatform::u50();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    let mut c1 = PlanCache::in_memory();
+    let mixed = Fleet::heterogeneous(vec![u280(), u50.clone()])
+        .schedule(&specs, &mut c1)
+        .unwrap();
+    let mut c2 = PlanCache::in_memory();
+    let twin50 = Fleet::heterogeneous(vec![u50.clone(), u50])
+        .schedule(&specs, &mut c2)
+        .unwrap();
+    assert!(
+        mixed.makespan_s < twin50.makespan_s,
+        "{} !< {}",
+        mixed.makespan_s,
+        twin50.makespan_s
+    );
+    // both board models show up in the per-board breakdown
+    let models: Vec<&str> = mixed.boards.iter().map(|b| b.model.as_str()).collect();
+    assert_eq!(models, ["u280", "u50"]);
+    let models: Vec<&str> = twin50.boards.iter().map(|b| b.model.as_str()).collect();
+    assert_eq!(models, ["u50", "u50"]);
 }
 
 // ---------------------------------------------------------------------------
