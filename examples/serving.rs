@@ -14,14 +14,22 @@
 //!    per-board table names both models, and the mixed fleet beats two
 //!    U50s on the same stream (the compute-bound tail job lands on the
 //!    U280 and finishes sooner);
-//! 6. one admitted configuration is executed for real through the
+//! 6. the stream's hog-vs-light tail (one tenant dumping four 30-bank
+//!    jobs just ahead of two small ones) replays under
+//!    `--tenant-weights hog:1,light:4`: weighted fair queuing lets the
+//!    light tenant jump the hog's backlog, strictly improving its p95
+//!    queue wait while the hog still gets every iteration;
+//! 7. one admitted configuration is executed for real through the
 //!    coordinator and verified against the DSL interpreter.
 //!
 //! Run: `cargo run --release --example serving`
 
+use sasa::metrics::percentile;
 use sasa::platform::FpgaPlatform;
 use sasa::runtime::{artifact::default_artifact_dir, Runtime};
-use sasa::service::{demo_jobs, load_jobs, BatchExecutor, JobSpec, PlanCache};
+use sasa::service::{
+    demo_jobs, load_jobs, BatchExecutor, BatchReport, FairnessPolicy, JobSpec, PlanCache,
+};
 
 fn main() -> anyhow::Result<()> {
     let platform = FpgaPlatform::u280();
@@ -76,6 +84,41 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         mixed.schedule.makespan_s < twin_u50.schedule.makespan_s,
         "a U280 in the fleet must beat an all-U50 fleet of equal size"
+    );
+
+    // --- fairness: weights shift the hog-vs-light wait split -------------
+    // a 3-bank slice of one board (the smallest pool every kernel in the
+    // stream fits) admits one job at a time, so FIFO makes the light
+    // tenant's late arrivals queue behind the hog's whole backlog
+    let light_p95_ms = |r: &BatchReport| {
+        let waits: Vec<f64> = r
+            .schedule
+            .jobs
+            .iter()
+            .filter(|j| j.spec.tenant == "light")
+            .map(|j| j.queue_wait_s)
+            .collect();
+        percentile(&waits, 95.0) * 1e3
+    };
+    let fifo = BatchExecutor::new(&platform).with_pool_banks(3).run(&stream, &mut warm)?;
+    let weighted = BatchExecutor::new(&platform)
+        .with_pool_banks(3)
+        .with_policy(FairnessPolicy::new().with_weight("hog", 1).with_weight("light", 4))
+        .run(&stream, &mut warm)?;
+    println!(
+        "fairness (--banks 3): light tenant p95 wait {:.3} ms under FIFO -> {:.3} ms \
+         under --tenant-weights hog:1,light:4",
+        light_p95_ms(&fifo),
+        light_p95_ms(&weighted)
+    );
+    println!("{}", weighted.fairness_table().expect("weighted run").to_markdown());
+    anyhow::ensure!(
+        light_p95_ms(&weighted) < light_p95_ms(&fifo),
+        "weighting the light tenant 4:1 must strictly improve its p95 wait"
+    );
+    anyhow::ensure!(
+        fifo.fairness_table().is_none(),
+        "the unweighted run stays byte-identical to the pre-fairness output"
     );
 
     // --- real execution: one admitted config through the coordinator -----

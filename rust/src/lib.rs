@@ -31,7 +31,7 @@
 //! | [`coordinator`] | multi-PE execution of the five parallelism schemes (Figs 4–6) |
 //! | [`codegen`] | TAPA HLS kernel/host/connectivity + execution-plan emission |
 //! | [`metrics`] | tables/percentiles + one function per paper artifact |
-//! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, batch executor |
+//! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor |
 //! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
 //!
 //! The serving entry points most callers want are

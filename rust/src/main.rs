@@ -145,7 +145,8 @@ fn print_help() {
          sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
          sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
-         [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n  \
+         [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n             \
+         [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
          FLAGS (serve):\n  \
@@ -155,7 +156,15 @@ fn print_help() {
          (a bare model name means one board; known models:\n                    \
          {known})\n  \
          --cache-cap <n>   LRU cap on the persisted plan cache: inserts beyond\n                    \
-         <n> plans evict the least-recently-used entry (>= 1)\n\n\
+         <n> plans evict the least-recently-used entry (>= 1)\n  \
+         --tenant-weights <spec>  per-tenant weighted-fair-queuing shares within\n                    \
+         each priority class, e.g. `hog:1,light:4` (default\n                    \
+         weight 1; all-equal weights keep the pre-fairness\n                    \
+         FIFO order byte for byte)\n  \
+         --quota <bank-s>  give every tenant a token bucket of this many\n                    \
+         HBM-bank-seconds; exhausted tenants are parked until\n                    \
+         the bucket refills (never dropped)\n  \
+         --quota-window-ms <x>  refill horizon of a drained bucket (default 5)\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d",
         known = FpgaPlatform::KNOWN.join(", ")
     );
@@ -163,32 +172,42 @@ fn print_help() {
 
 /// Parse the `--boards` fleet spec: either a plain count (`2` — that many
 /// boards of `default_platform`) or a comma-separated heterogeneous mix
-/// (`u280:2,u50:1`; a bare model name means one board). Unknown board
-/// models (e.g. `u55c`) are an error naming the supported set.
+/// (`u280:2,u50:1`; a bare model name means one board). Whitespace around
+/// entries, names, and counts is tolerated; every malformed shape —
+/// trailing commas, empty entries, missing model names, `model:0` counts,
+/// non-integer counts, unknown models — is rejected with a message naming
+/// the offending piece (and, for unknown models, the supported set).
 fn parse_boards(spec: &str, default_platform: &FpgaPlatform) -> Result<Vec<FpgaPlatform>> {
-    if let Ok(n) = spec.parse::<u64>() {
+    let trimmed = spec.trim();
+    if let Ok(n) = trimmed.parse::<u64>() {
         if n == 0 {
             bail!("--boards must be >= 1");
         }
         return Ok(vec![default_platform.clone(); n as usize]);
     }
     let mut boards = Vec::new();
-    for part in spec.split(',') {
+    for part in trimmed.split(',') {
         let part = part.trim();
         if part.is_empty() {
-            bail!("--boards '{spec}': empty board entry");
+            bail!(
+                "--boards '{spec}': empty board entry \
+                 (trailing comma or ',,'? expected model:count[,model:count...])"
+            );
         }
         let (name, count) = match part.split_once(':') {
             Some((name, count)) => {
-                let count: u64 = count
-                    .parse()
-                    .with_context(|| format!("--boards '{part}': count must be an integer"))?;
-                (name, count)
+                let count: u64 = count.trim().parse().with_context(|| {
+                    format!("--boards '{part}': count must be a positive integer")
+                })?;
+                (name.trim(), count)
             }
             None => (part, 1),
         };
+        if name.is_empty() {
+            bail!("--boards '{part}': missing board model name before ':'");
+        }
         if count == 0 {
-            bail!("--boards '{part}': count must be >= 1");
+            bail!("--boards '{part}': count must be >= 1 (drop the entry to mean zero boards)");
         }
         let platform = FpgaPlatform::by_name(name).with_context(|| {
             format!(
@@ -199,6 +218,40 @@ fn parse_boards(spec: &str, default_platform: &FpgaPlatform) -> Result<Vec<FpgaP
         boards.extend(std::iter::repeat_with(|| platform.clone()).take(count as usize));
     }
     Ok(boards)
+}
+
+/// Parse the `--tenant-weights` spec: `tenant:weight[,tenant:weight...]`,
+/// e.g. `hog:1,light:4`. Weights are integers >= 1; duplicate tenants are
+/// rejected (silently keeping one would hide a typo'd split weight).
+fn parse_tenant_weights(spec: &str) -> Result<Vec<(String, u64)>> {
+    let mut weights: Vec<(String, u64)> = Vec::new();
+    for part in spec.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!(
+                "--tenant-weights '{spec}': empty entry \
+                 (trailing comma? expected tenant:weight[,tenant:weight...])"
+            );
+        }
+        let Some((tenant, weight)) = part.split_once(':') else {
+            bail!("--tenant-weights '{part}': expected tenant:weight (e.g. hog:1,light:4)");
+        };
+        let tenant = tenant.trim();
+        if tenant.is_empty() {
+            bail!("--tenant-weights '{part}': missing tenant name before ':'");
+        }
+        let weight: u64 = weight.trim().parse().with_context(|| {
+            format!("--tenant-weights '{part}': weight must be a positive integer")
+        })?;
+        if weight == 0 {
+            bail!("--tenant-weights '{part}': weight must be >= 1");
+        }
+        if weights.iter().any(|(t, _)| t == tenant) {
+            bail!("--tenant-weights '{spec}': duplicate tenant '{tenant}'");
+        }
+        weights.push((tenant.to_string(), weight));
+    }
+    Ok(weights)
 }
 
 fn cmd_parse(args: &Args) -> Result<()> {
@@ -434,6 +487,11 @@ fn print_batch_report(
 ) {
     println!("{}", report.job_table().to_markdown());
     println!("{}", report.tenant_table().to_markdown());
+    // present exactly when a non-trivial fairness policy ran — default
+    // serves stay byte-identical to the pre-fairness output
+    if let Some(fairness) = report.fairness_table() {
+        println!("{}", fairness.to_markdown());
+    }
     println!("{}", report.class_table().to_markdown());
     println!("{}", report.board_table().to_markdown());
     println!("{}", report.summary_table().to_markdown());
@@ -457,12 +515,15 @@ fn print_batch_report(
 }
 
 /// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
-/// [--banks n] [--boards mix] [--aging-ms x]`: schedule a multi-tenant job
+/// [--banks n] [--boards mix] [--aging-ms x] [--tenant-weights a:4,b:1]
+/// [--quota bank-s] [--quota-window-ms x]`: schedule a multi-tenant job
 /// batch over a fleet of boards' HBM bank pools. `--boards` takes a count
 /// (identical `--platform` boards) or a heterogeneous mix like
 /// `u280:1,u50:1` — each board is planned by its own platform's DSE.
+/// Weights turn within-class admission into weighted fair queuing;
+/// `--quota` caps every tenant with a bank-second token bucket.
 fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
-    use sasa::service::{load_jobs, BatchExecutor, PlanCache};
+    use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, PlanCache};
     let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
     let specs = load_jobs(jobs_path)?;
     let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
@@ -487,6 +548,51 @@ fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         }
         exec = exec.with_aging_s(ms / 1e3);
     }
+    // fairness: weights/quotas declared on the jobs themselves, then CLI
+    // overrides on top. A policy that ends up trivial (no quotas, all
+    // weights equal) leaves the schedule byte-identical to the
+    // pre-fairness loop, so passing it unconditionally is safe.
+    let mut policy = FairnessPolicy::from_specs(&specs)?;
+    if let Some(spec) = args.get("tenant-weights") {
+        for (tenant, weight) in parse_tenant_weights(spec)? {
+            // a typo'd tenant would otherwise be silently inert (the
+            // policy could detect as trivial and run plain FIFO)
+            if !specs.iter().any(|s| s.tenant == tenant) {
+                let mut known: Vec<&str> = specs.iter().map(|s| s.tenant.as_str()).collect();
+                known.sort_unstable();
+                known.dedup();
+                bail!(
+                    "--tenant-weights: tenant '{tenant}' is not in the job stream \
+                     (stream tenants: {})",
+                    known.join(", ")
+                );
+            }
+            policy = policy.with_weight(&tenant, weight);
+        }
+    }
+    if let Some(q) = args.get("quota") {
+        let q: f64 = q.parse().context("--quota must be a number (bank-seconds)")?;
+        if !q.is_finite() || q <= 0.0 {
+            bail!("--quota must be finite and > 0 bank-seconds");
+        }
+        policy = policy.with_quota_all(q);
+    }
+    if let Some(ms) = args.get("quota-window-ms") {
+        let ms: f64 = ms.parse().context("--quota-window-ms must be a number")?;
+        if !ms.is_finite() || ms <= 0.0 {
+            bail!("--quota-window-ms must be finite and > 0");
+        }
+        // a window with no bucket anywhere would be silently inert —
+        // same guard as the typo'd-tenant check above
+        if args.get("quota").is_none() && specs.iter().all(|s| s.quota_bank_s.is_none()) {
+            bail!(
+                "--quota-window-ms has no effect without --quota \
+                 (or a quota_bank_s field in the jobs file)"
+            );
+        }
+        policy = policy.with_quota_window_s(ms / 1e3);
+    }
+    exec = exec.with_policy(policy);
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
     print_batch_report(&report, &cache, cache_path);
     cache.save()
@@ -678,13 +784,79 @@ mod tests {
     }
 
     #[test]
+    fn boards_tolerates_whitespace() {
+        // table-driven accepts: whitespace around the spec, entries,
+        // names, and counts never changes the parsed fleet
+        let u280 = FpgaPlatform::u280();
+        for (spec, expect) in [
+            ("  2  ", vec!["u280", "u280"]),
+            (" u280 : 2 , u50 : 1 ", vec!["u280", "u280", "u50"]),
+            ("u50 ,u280", vec!["u50", "u280"]),
+            ("\tu50:1\t", vec!["u50"]),
+        ] {
+            let boards = parse_boards(spec, &u280)
+                .unwrap_or_else(|e| panic!("{spec:?} must parse: {e}"));
+            let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
+            assert_eq!(models, expect, "{spec:?}");
+        }
+    }
+
+    #[test]
     fn boards_rejects_unknown_model_and_bad_counts() {
         let u280 = FpgaPlatform::u280();
         let err = parse_boards("u55c:1", &u280).unwrap_err().to_string();
         assert!(err.contains("u55c"), "{err}");
         assert!(err.contains("u280") && err.contains("u50"), "names the known set: {err}");
-        for bad in ["0", "u280:0", "u280:x", "", ",", "u280:1,,u50:1"] {
-            assert!(parse_boards(bad, &u280).is_err(), "{bad:?} must be rejected");
+        // table-driven rejects: each malformed shape gets a message
+        // naming what was wrong with it
+        for (bad, msg) in [
+            ("0", "must be >= 1"),
+            ("u280:0", "count must be >= 1"),
+            ("u50:0,u280:1", "count must be >= 1"),
+            ("u280:x", "count must be a positive integer"),
+            ("u280:-1", "count must be a positive integer"),
+            ("u280:2.5", "count must be a positive integer"),
+            ("u280:", "count must be a positive integer"),
+            ("", "empty board entry"),
+            (",", "empty board entry"),
+            ("u280:1,", "empty board entry"),
+            ("u280:1,,u50:1", "empty board entry"),
+            (" , u280:1", "empty board entry"),
+            (":2", "missing board model name"),
+            (" : 2", "missing board model name"),
+        ] {
+            let err = match parse_boards(bad, &u280) {
+                Ok(_) => panic!("{bad:?} must be rejected"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
+        }
+    }
+
+    #[test]
+    fn tenant_weights_parse_and_reject() {
+        let ok = parse_tenant_weights("hog:1,light:4").unwrap();
+        assert_eq!(ok, vec![("hog".to_string(), 1), ("light".to_string(), 4)]);
+        // whitespace tolerated everywhere
+        let ok = parse_tenant_weights(" hog : 2 , light : 3 ").unwrap();
+        assert_eq!(ok, vec![("hog".to_string(), 2), ("light".to_string(), 3)]);
+
+        for (bad, msg) in [
+            ("", "empty entry"),
+            ("hog:1,", "empty entry"),
+            ("hog", "expected tenant:weight"),
+            (":4", "missing tenant name"),
+            ("hog:0", "weight must be >= 1"),
+            ("hog:x", "weight must be a positive integer"),
+            ("hog:1.5", "weight must be a positive integer"),
+            ("hog:-2", "weight must be a positive integer"),
+            ("hog:1,hog:4", "duplicate tenant"),
+        ] {
+            let err = match parse_tenant_weights(bad) {
+                Ok(_) => panic!("{bad:?} must be rejected"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
         }
     }
 }

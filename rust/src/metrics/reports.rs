@@ -1,4 +1,5 @@
-//! One function per paper table/figure (DESIGN.md §6 experiment index).
+//! One function per paper table/figure (DESIGN.md §7 experiment index),
+//! plus the serving layer's fairness table ([`fairness_table`]).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
 use crate::model::{explore, Parallelism};
@@ -6,6 +7,61 @@ use crate::platform::{pe_resources, DesignStyle, FpgaPlatform};
 use crate::sim::{model_error, simulate};
 
 use super::Table;
+
+/// One row of the serving layer's per-tenant fairness table: the weight
+/// and quota a scheduling pass ran with, against what it delivered.
+/// Defined here (not in `service`) so the renderer stays a pure
+/// data-to-`Table` function like every other report in this module;
+/// `service::BatchReport::fairness_table` does the conversion.
+#[derive(Debug, Clone)]
+pub struct FairnessRow {
+    pub tenant: String,
+    /// Weighted-fair-queuing weight in effect.
+    pub weight: u64,
+    /// Token-bucket capacity in bank-seconds (`None` = no quota).
+    pub quota_bank_s: Option<f64>,
+    /// Bank-seconds of board occupancy the tenant received.
+    pub delivered_bank_s: f64,
+    /// Time the tenant spent parked on an exhausted bucket.
+    pub parked_s: f64,
+    /// Number of times the bucket went into deficit.
+    pub parks: u64,
+}
+
+/// Per-tenant fairness report: configured weight share vs delivered
+/// bank-second share, plus quota-throttle accounting. Shares are over the
+/// rows given (the tenants of one scheduling pass).
+pub fn fairness_table(rows: &[FairnessRow]) -> Table {
+    let total_weight: u64 = rows.iter().map(|r| r.weight).sum();
+    let total_bank_s: f64 = rows.iter().map(|r| r.delivered_bank_s).sum();
+    let mut t = Table::new(
+        "Per-tenant fairness (weighted fair queuing + bank-second quotas)",
+        &[
+            "tenant", "weight", "weight %", "bank-ms", "delivered %", "quota bank-ms",
+            "parks", "parked ms",
+        ],
+    );
+    for r in rows {
+        let weight_pct = if total_weight == 0 {
+            0.0
+        } else {
+            100.0 * r.weight as f64 / total_weight as f64
+        };
+        let delivered_pct =
+            if total_bank_s <= 0.0 { 0.0 } else { 100.0 * r.delivered_bank_s / total_bank_s };
+        t.row(vec![
+            r.tenant.clone(),
+            r.weight.to_string(),
+            format!("{weight_pct:.1}"),
+            format!("{:.3}", r.delivered_bank_s * 1e3),
+            format!("{delivered_pct:.1}"),
+            r.quota_bank_s.map_or_else(|| "-".into(), |q| format!("{:.3}", q * 1e3)),
+            r.parks.to_string(),
+            format!("{:.3}", r.parked_s * 1e3),
+        ]);
+    }
+    t
+}
 
 /// 2-D kernels take SIZES_2D, 3-D kernels SIZES_3D (§5.1).
 pub fn sizes_for(name: &str) -> Vec<Vec<u64>> {
@@ -313,6 +369,43 @@ mod tests {
 
     fn u280() -> FpgaPlatform {
         FpgaPlatform::u280()
+    }
+
+    #[test]
+    fn fairness_table_shares_sum_sane() {
+        let rows = vec![
+            FairnessRow {
+                tenant: "hog".into(),
+                weight: 1,
+                quota_bank_s: Some(0.002),
+                delivered_bank_s: 0.006,
+                parked_s: 0.004,
+                parks: 2,
+            },
+            FairnessRow {
+                tenant: "light".into(),
+                weight: 4,
+                quota_bank_s: None,
+                delivered_bank_s: 0.002,
+                parked_s: 0.0,
+                parks: 0,
+            },
+        ];
+        let t = fairness_table(&rows);
+        assert_eq!(t.rows.len(), 2);
+        // weight shares: 1/5 and 4/5
+        assert_eq!(t.rows[0][2], "20.0");
+        assert_eq!(t.rows[1][2], "80.0");
+        // delivered shares: 6/8 and 2/8
+        assert_eq!(t.rows[0][4], "75.0");
+        assert_eq!(t.rows[1][4], "25.0");
+        // quota column: bank-ms for the capped tenant, '-' otherwise
+        assert_eq!(t.rows[0][5], "2.000");
+        assert_eq!(t.rows[1][5], "-");
+        assert!(t.to_markdown().contains("parked ms"));
+        // degenerate inputs render zeros, not NaN
+        let none = fairness_table(&[]);
+        assert_eq!(none.rows.len(), 0);
     }
 
     #[test]

@@ -1,13 +1,28 @@
 //! Small deterministic statistics helpers for report tables.
 
-/// Nearest-rank percentile of an unsorted sample (pct in [0, 100]).
-/// Deterministic: ties and ordering are resolved by a total sort on the
-/// values, and the result is always an element of the sample. Returns NaN
-/// for an empty sample.
+/// Nearest-rank percentile of an unsorted sample.
+///
+/// The rule, spelled out (there is **no interpolation** — the result is
+/// always an element of the sample, so percentile tables can never show
+/// a value no job actually exhibited):
+///
+/// 1. sort the sample ascending (total order; ties keep duplicates);
+/// 2. clamp `pct` into `[0, 100]` — out-of-range requests mean the
+///    extremes, not an error;
+/// 3. take the element at rank `ceil(pct/100 × n)`, 1-based, clamped to
+///    `[1, n]` (so `pct = 0` is the minimum and `pct = 100` the maximum).
+///
+/// Boundary cases: an **empty** sample has no elements to return, so the
+/// result is `NaN` — callers that render tables filter empty groups
+/// first (`service::executor` does). A **single-element** sample returns
+/// that element for every `pct`. `pct` itself must be a real number;
+/// a `NaN` percentile is a caller bug (debug-asserted).
 pub fn percentile(values: &[f64], pct: f64) -> f64 {
+    debug_assert!(!pct.is_nan(), "percentile of a NaN pct is meaningless");
     if values.is_empty() {
         return f64::NAN;
     }
+    let pct = pct.clamp(0.0, 100.0);
     let mut sorted = values.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = sorted.len();
@@ -26,8 +41,54 @@ mod tests {
         assert_eq!(percentile(&v, 50.0), 3.0);
         assert_eq!(percentile(&v, 90.0), 5.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
-        // single sample: every percentile is that sample
-        assert_eq!(percentile(&[7.5], 50.0), 7.5);
-        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn empty_sample_is_nan() {
+        // an empty sample has no nearest rank: NaN, for every pct
+        for pct in [0.0, 50.0, 95.0, 100.0] {
+            assert!(percentile(&[], pct).is_nan(), "pct {pct}");
+        }
+    }
+
+    #[test]
+    fn single_element_is_every_percentile() {
+        for pct in [0.0, 1.0, 50.0, 95.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[7.5], pct), 7.5, "pct {pct}");
+        }
+    }
+
+    #[test]
+    fn two_element_rank_threshold() {
+        // rank = ceil(pct/100 × 2): the first element up to p50 exactly,
+        // the second strictly above — the nearest-rank rule, no
+        // interpolation (p50 of [1, 2] is 1.0, never 1.5)
+        let v = [2.0, 1.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 1.0);
+        assert_eq!(percentile(&v, 50.1), 2.0);
+        assert_eq!(percentile(&v, 95.0), 2.0);
+        assert_eq!(percentile(&v, 100.0), 2.0);
+    }
+
+    #[test]
+    fn out_of_range_pct_clamps_to_extremes() {
+        let v = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&v, -10.0), 1.0);
+        assert_eq!(percentile(&v, 250.0), 5.0);
+        assert_eq!(percentile(&v, f64::NEG_INFINITY), 1.0);
+        assert_eq!(percentile(&v, f64::INFINITY), 5.0);
+    }
+
+    #[test]
+    fn result_is_always_a_sample_element() {
+        let v = [0.25, 0.5, 0.125, 0.75, 1.0, 0.875, 0.0625];
+        for pct in 0..=100 {
+            let p = percentile(&v, pct as f64);
+            assert!(v.contains(&p), "pct {pct} -> {p} not in sample");
+        }
+        // duplicates are kept, not collapsed: p50 of four equal values
+        // is that value
+        assert_eq!(percentile(&[2.0, 2.0, 2.0, 2.0], 50.0), 2.0);
     }
 }

@@ -18,6 +18,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{verify::max_abs_diff, Coordinator, ExecReport, StencilJob};
 use crate::dsl::{benchmarks as b, parse};
+use crate::metrics::reports::{fairness_table, FairnessRow};
 use crate::metrics::{percentile, Table};
 use crate::model::Config;
 use crate::platform::FpgaPlatform;
@@ -26,6 +27,7 @@ use crate::runtime::Runtime;
 use crate::util::prng::Prng;
 
 use super::cache::PlanCache;
+use super::fairness::FairnessPolicy;
 use super::fleet::Fleet;
 use super::jobs::{JobSpec, Priority};
 use super::scheduler::Schedule;
@@ -42,6 +44,18 @@ pub struct TenantStats {
     /// cells / span — the tenant's delivered throughput.
     pub gcell_per_s: f64,
     pub mean_wait_s: f64,
+    /// Weighted-fair-queuing weight the pass ran with (1 on the trivial
+    /// policy).
+    pub weight: u64,
+    /// Bank-seconds of board occupancy delivered to this tenant.
+    pub delivered_bank_s: f64,
+    /// This tenant's share of all delivered bank-seconds, in percent —
+    /// the number weighted fair queuing steers toward the weight share.
+    pub fair_share_pct: f64,
+    /// Time the tenant spent parked on an exhausted quota bucket.
+    pub throttled_s: f64,
+    /// Number of times the quota bucket went into deficit.
+    pub parks: u64,
 }
 
 /// Per-priority-class latency aggregates (over timeline entries of that
@@ -80,6 +94,7 @@ pub struct BatchExecutor<'p> {
     /// `platform` for fleet construction when set.
     board_platforms: Option<Vec<FpgaPlatform>>,
     aging_s: Option<f64>,
+    policy: Option<FairnessPolicy>,
 }
 
 impl<'p> BatchExecutor<'p> {
@@ -90,6 +105,7 @@ impl<'p> BatchExecutor<'p> {
             boards: 1,
             board_platforms: None,
             aging_s: None,
+            policy: None,
         }
     }
 
@@ -121,6 +137,13 @@ impl<'p> BatchExecutor<'p> {
         self
     }
 
+    /// Set the per-tenant fairness policy (weights + quotas). A trivial
+    /// policy leaves schedules byte-identical to the pre-fairness loop.
+    pub fn with_policy(mut self, policy: FairnessPolicy) -> BatchExecutor<'p> {
+        self.policy = Some(policy);
+        self
+    }
+
     /// Schedule the batch over the fleet and aggregate statistics.
     pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
         let mut fleet = match &self.board_platforms {
@@ -133,6 +156,9 @@ impl<'p> BatchExecutor<'p> {
         }
         if let Some(aging) = self.aging_s {
             fleet = fleet.with_aging_s(aging);
+        }
+        if let Some(policy) = &self.policy {
+            fleet = fleet.with_policy(policy.clone());
         }
         let schedule = fleet.schedule(specs, cache)?;
         let tenants = aggregate_tenants(&schedule);
@@ -179,6 +205,8 @@ fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
     for j in &schedule.jobs {
         by_tenant.entry(j.spec.tenant.as_str()).or_default().push(j);
     }
+    // the same occupancy integral board_stats already summed fleet-wide
+    let total_bank_s: f64 = schedule.bank_seconds_used;
     by_tenant
         .into_iter()
         .map(|(tenant, jobs)| {
@@ -188,6 +216,16 @@ fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
             let span = (last - first).max(1e-12);
             let mean_wait =
                 jobs.iter().map(|j| j.queue_wait_s).sum::<f64>() / jobs.len() as f64;
+            // a preempted segment's span is its actual occupancy (finish
+            // was moved to the cut boundary), so this sums real bank time
+            let delivered_bank_s: f64 = jobs
+                .iter()
+                .map(|j| j.hbm_banks as f64 * (j.finish_s - j.start_s))
+                .sum();
+            let fair = schedule
+                .fairness
+                .as_ref()
+                .and_then(|f| f.iter().find(|t| t.tenant == tenant));
             TenantStats {
                 tenant: tenant.to_string(),
                 jobs: jobs.len(),
@@ -195,6 +233,15 @@ fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
                 span_s: span,
                 gcell_per_s: cells as f64 / span / 1e9,
                 mean_wait_s: mean_wait,
+                weight: fair.map_or(1, |f| f.weight),
+                delivered_bank_s,
+                fair_share_pct: if total_bank_s <= 0.0 {
+                    0.0
+                } else {
+                    100.0 * delivered_bank_s / total_bank_s
+                },
+                throttled_s: fair.map_or(0.0, |f| f.parked_s),
+                parks: fair.map_or(0, |f| f.parks),
             }
         })
         .collect()
@@ -273,20 +320,36 @@ impl BatchReport {
         t
     }
 
+    /// Per-tenant throughput. On a weighted pass (non-trivial
+    /// `FairnessPolicy`) the table grows the fair-share and quota-throttle
+    /// columns; on the trivial path it renders the pre-fairness six
+    /// columns byte for byte.
     pub fn tenant_table(&self) -> Table {
-        let mut t = Table::new(
-            "Per-tenant throughput",
-            &["tenant", "jobs", "GCells", "span ms", "GCell/s", "mean wait ms"],
-        );
+        let fair = self.schedule.fairness.is_some();
+        let mut cols =
+            vec!["tenant", "jobs", "GCells", "span ms", "GCell/s", "mean wait ms"];
+        if fair {
+            cols.extend(["weight", "share %", "throttled ms", "parks"]);
+        }
+        let mut t = Table::new("Per-tenant throughput", &cols);
         for s in &self.tenants {
-            t.row(vec![
+            let mut row = vec![
                 s.tenant.clone(),
                 s.jobs.to_string(),
                 format!("{:.3}", s.cells as f64 / 1e9),
                 ms(s.span_s),
                 format!("{:.2}", s.gcell_per_s),
                 ms(s.mean_wait_s),
-            ]);
+            ];
+            if fair {
+                row.extend([
+                    s.weight.to_string(),
+                    format!("{:.1}", s.fair_share_pct),
+                    ms(s.throttled_s),
+                    s.parks.to_string(),
+                ]);
+            }
+            t.row(row);
         }
         t
     }
@@ -312,6 +375,27 @@ impl BatchReport {
             ]);
         }
         t
+    }
+
+    /// Per-tenant fairness table: configured weight share vs delivered
+    /// bank-second share, plus quota parks. Present exactly when the pass
+    /// ran with a non-trivial `FairnessPolicy` — the trivial path prints
+    /// nothing extra, keeping default `sasa serve` output byte-identical
+    /// to the pre-fairness scheduler.
+    pub fn fairness_table(&self) -> Option<Table> {
+        let fairness = self.schedule.fairness.as_ref()?;
+        let rows: Vec<FairnessRow> = fairness
+            .iter()
+            .map(|t| FairnessRow {
+                tenant: t.tenant.clone(),
+                weight: t.weight,
+                quota_bank_s: t.quota_bank_s,
+                delivered_bank_s: t.delivered_bank_s,
+                parked_s: t.parked_s,
+                parks: t.parks,
+            })
+            .collect();
+        Some(fairness_table(&rows))
     }
 
     /// Per-board bank utilization over the fleet makespan, labeled with
@@ -391,6 +475,42 @@ mod tests {
         for t in &report.tenants {
             assert!(t.gcell_per_s > 0.0, "{}", t.tenant);
         }
+    }
+
+    #[test]
+    fn fairness_table_present_only_with_policy() {
+        let p = FpgaPlatform::u280();
+        // trivial policy (none set): no fairness block, default columns
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap();
+        assert!(report.schedule.fairness.is_none());
+        assert!(report.fairness_table().is_none());
+        for t in &report.tenants {
+            assert_eq!(t.weight, 1);
+            assert_eq!(t.parks, 0);
+            assert_eq!(t.throttled_s, 0.0);
+            assert!(t.delivered_bank_s > 0.0, "{}", t.tenant);
+        }
+        let total: f64 = report.tenants.iter().map(|t| t.fair_share_pct).sum();
+        assert!((total - 100.0).abs() < 1e-6, "{total}");
+        // the trivial tenant table keeps the pre-fairness six columns
+        assert!(!report.tenant_table().to_markdown().contains("share %"));
+
+        // weighted policy: fairness aggregates + table appear
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_policy(FairnessPolicy::new().with_weight("alice", 4))
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        let fair = report.schedule.fairness.as_ref().unwrap();
+        assert_eq!(fair.len(), 3, "one row per tenant");
+        let md = report.fairness_table().unwrap().to_markdown();
+        assert!(md.contains("alice") && md.contains("weight"), "{md}");
+        let alice = report.tenants.iter().find(|t| t.tenant == "alice").unwrap();
+        assert_eq!(alice.weight, 4);
+        // the weighted tenant table grows the fair-share/throttle columns
+        let md = report.tenant_table().to_markdown();
+        assert!(md.contains("share %") && md.contains("parks"), "{md}");
     }
 
     #[test]

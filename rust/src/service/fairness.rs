@@ -1,0 +1,632 @@
+//! `sasa::service::fairness` — per-tenant weighted fair scheduling and
+//! HBM-bank-second quotas for the fleet admission loop.
+//!
+//! The fleet layer (ISSUE 3–4) is event-driven, priority-aware, and
+//! heterogeneous, but inside a priority class admission is plain FIFO: a
+//! tenant streaming jacobi2d jobs monopolizes every bank pool and every
+//! other tenant queues behind it. This module adds the two controls the
+//! ROADMAP names as the next step on top of priority classes:
+//!
+//! * **Weights** ([`FairnessPolicy::with_weight`], CLI
+//!   `--tenant-weights a:4,b:1`): admission *within* each priority class
+//!   becomes stride-style weighted fair queuing. Every tenant carries a
+//!   virtual **pass**; admitting a job of cost `C` bank-seconds advances
+//!   the tenant's pass by `C / weight`, and the loop always picks the
+//!   waiting job whose key `(effective class, tenant pass, arrival,
+//!   submission)` is smallest. Delivered bank-seconds therefore converge
+//!   to the weight proportions while a tenant stays backlogged, to within
+//!   one job's cost (the classic stride/WFQ quantum bound —
+//!   `tests/property_fairness.rs` asserts it). Interactive still outranks
+//!   batch and the aging bound is unchanged: fairness reorders *within* a
+//!   class, never across classes.
+//! * **Quotas** ([`FairnessPolicy::with_quota`], CLI `--quota <bank-s>`):
+//!   each tenant may carry a token bucket of HBM-bank-seconds, refilled
+//!   continuously on the event timeline (capacity `q`, rate
+//!   `q / quota_window_s`). Admission requires a non-negative bucket and
+//!   charges the job's full `banks × duration`; the bucket may go
+//!   negative (a deficit), so a job larger than the bucket capacity still
+//!   runs — once — and the tenant is then **parked** until the bucket
+//!   refills back to zero. Parking is a timeline event like arrivals and
+//!   completions: parked tenants are skipped by the pick, and the clock
+//!   jumps to the earliest unpark when nothing else is runnable. Quota
+//!   exhaustion delays work; it never drops it.
+//!
+//! **Oracle preservation.** Weighted fair queuing with all-equal weights
+//! is round-robin over tenants by delivered service — deliberately *not*
+//! FIFO — so a genuinely fair pick cannot reproduce the pre-fairness
+//! order. To keep default behavior byte-identical (the acceptance bar for
+//! every `sasa serve` run that sets no weights and no quotas), the fleet
+//! loop gates on [`FairnessPolicy::is_trivial`]: a trivial policy (all
+//! effective weights equal over the stream's tenants, no quota anywhere)
+//! routes admission through the preserved pre-fairness pick,
+//! `Fleet::pick_unweighted_walk`, verbatim — the same preservation
+//! pattern as `Scheduler::schedule_fifo_walk` and
+//! `Fleet::schedule_homogeneous_walk`. `tests/property_fairness.rs`
+//! renders trivial-policy schedules against both walks byte for byte.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::jobs::JobSpec;
+use super::scheduler::TenantFairness;
+
+/// Default refill horizon of a quota bucket: a drained bucket of capacity
+/// `q` refills completely in this many seconds (rate = `q / window`).
+/// Timelines here are milliseconds, so 5 ms — the same scale as the batch
+/// aging bound — keeps parked tenants on the schedule's time scale.
+pub const DEFAULT_QUOTA_WINDOW_S: f64 = 0.005;
+
+/// Per-tenant fairness knobs: a relative weight (default 1) and an
+/// optional bank-second token bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantPolicy {
+    /// Relative share of delivered bank-seconds within a priority class
+    /// while the tenant is backlogged (>= 1).
+    pub weight: u64,
+    /// Token-bucket capacity in HBM-bank-seconds; `None` = unlimited.
+    pub quota_bank_s: Option<f64>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { weight: 1, quota_bank_s: None }
+    }
+}
+
+/// The fleet's per-tenant weight and quota table.
+///
+/// Built from the job stream ([`FairnessPolicy::from_specs`] — jobs may
+/// declare `weight` / `quota_bank_s` in `jobs.json`) and then overridden
+/// by the CLI (`--tenant-weights`, `--quota`). Tenants absent from the
+/// table get weight 1 and no quota.
+///
+/// ```
+/// use sasa::service::FairnessPolicy;
+///
+/// let policy = FairnessPolicy::new().with_weight("hog", 1).with_weight("light", 4);
+/// assert_eq!(policy.weight_of("light"), 4);
+/// assert_eq!(policy.weight_of("unlisted"), 1);
+/// assert!(policy.quota_of("hog").is_none());
+/// // all-equal weights + no quotas over a tenant set = the trivial
+/// // policy: the fleet keeps the pre-fairness admission order verbatim
+/// assert!(!policy.is_trivial(["hog", "light"].into_iter()));
+/// assert!(policy.is_trivial(["light"].into_iter()));
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FairnessPolicy {
+    tenants: BTreeMap<String, TenantPolicy>,
+    /// Bucket capacity applied to every tenant without an explicit quota
+    /// (CLI `--quota`).
+    default_quota_bank_s: Option<f64>,
+    /// Refill horizon override; `None` = [`DEFAULT_QUOTA_WINDOW_S`].
+    quota_window_s: Option<f64>,
+}
+
+impl FairnessPolicy {
+    /// An empty (trivial) policy: every tenant weight 1, no quotas.
+    pub fn new() -> FairnessPolicy {
+        FairnessPolicy::default()
+    }
+
+    /// Collect the per-tenant weights and quotas declared on the job
+    /// specs themselves (`jobs.json` `weight` / `quota_bank_s` fields).
+    /// Distinct explicit values for one tenant are a spec bug and error —
+    /// silently picking one would make the schedule depend on job order
+    /// (an explicit `weight: 1` conflicts with an explicit `weight: 4`
+    /// just like 2 vs 4 would; only *absent* fields are don't-cares).
+    pub fn from_specs(specs: &[JobSpec]) -> Result<FairnessPolicy> {
+        let mut weights: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut quotas: BTreeMap<&str, f64> = BTreeMap::new();
+        for spec in specs {
+            if let Some(w) = spec.weight {
+                match weights.get(spec.tenant.as_str()) {
+                    Some(&prev) if prev != w => bail!(
+                        "tenant '{}' declares conflicting weights {prev} and {w}",
+                        spec.tenant
+                    ),
+                    _ => {
+                        weights.insert(&spec.tenant, w);
+                    }
+                }
+            }
+            if let Some(q) = spec.quota_bank_s {
+                match quotas.get(spec.tenant.as_str()) {
+                    Some(&prev) if prev != q => bail!(
+                        "tenant '{}' declares conflicting quotas {prev} and {q} bank-seconds",
+                        spec.tenant
+                    ),
+                    _ => {
+                        quotas.insert(&spec.tenant, q);
+                    }
+                }
+            }
+        }
+        let mut policy = FairnessPolicy::new();
+        for (tenant, w) in weights {
+            policy = policy.with_weight(tenant, w);
+        }
+        for (tenant, q) in quotas {
+            policy = policy.with_quota(tenant, q);
+        }
+        Ok(policy)
+    }
+
+    /// Set (or override) one tenant's weight. Panics on `weight == 0`: a
+    /// zero share is a config error, not a schedulable state.
+    pub fn with_weight(mut self, tenant: &str, weight: u64) -> FairnessPolicy {
+        assert!(weight >= 1, "tenant '{tenant}': weight must be >= 1");
+        self.tenants.entry(tenant.to_string()).or_default().weight = weight;
+        self
+    }
+
+    /// Set (or override) one tenant's bucket capacity in bank-seconds.
+    pub fn with_quota(mut self, tenant: &str, quota_bank_s: f64) -> FairnessPolicy {
+        assert!(
+            quota_bank_s.is_finite() && quota_bank_s > 0.0,
+            "tenant '{tenant}': quota must be finite and > 0"
+        );
+        self.tenants.entry(tenant.to_string()).or_default().quota_bank_s = Some(quota_bank_s);
+        self
+    }
+
+    /// Give **every** tenant this bucket capacity (the CLI's
+    /// `--quota <bank-seconds>`): an operator-level override that
+    /// replaces any per-tenant quota declared so far (e.g. a job file's
+    /// `quota_bank_s` fields) and applies to tenants not yet listed via
+    /// the default. Call order decides: a later [`FairnessPolicy::with_quota`]
+    /// re-raises one tenant above the cap.
+    pub fn with_quota_all(mut self, quota_bank_s: f64) -> FairnessPolicy {
+        assert!(
+            quota_bank_s.is_finite() && quota_bank_s > 0.0,
+            "quota must be finite and > 0"
+        );
+        for tenant in self.tenants.values_mut() {
+            tenant.quota_bank_s = Some(quota_bank_s);
+        }
+        self.default_quota_bank_s = Some(quota_bank_s);
+        self
+    }
+
+    /// Override the refill horizon (seconds a drained bucket takes to
+    /// refill completely; default [`DEFAULT_QUOTA_WINDOW_S`]).
+    pub fn with_quota_window_s(mut self, window_s: f64) -> FairnessPolicy {
+        assert!(window_s.is_finite() && window_s > 0.0, "quota window must be > 0");
+        self.quota_window_s = Some(window_s);
+        self
+    }
+
+    /// Effective weight of a tenant (1 when unlisted).
+    pub fn weight_of(&self, tenant: &str) -> u64 {
+        self.tenants.get(tenant).map_or(1, |t| t.weight)
+    }
+
+    /// Effective bucket capacity of a tenant (explicit, else the
+    /// `--quota` default, else none).
+    pub fn quota_of(&self, tenant: &str) -> Option<f64> {
+        self.tenants
+            .get(tenant)
+            .and_then(|t| t.quota_bank_s)
+            .or(self.default_quota_bank_s)
+    }
+
+    /// The refill horizon in effect.
+    pub fn quota_window_s(&self) -> f64 {
+        self.quota_window_s.unwrap_or(DEFAULT_QUOTA_WINDOW_S)
+    }
+
+    /// Whether this policy changes nothing for the given tenant set: no
+    /// tenant has a quota and every effective weight is equal (weighted
+    /// fair queuing with all-equal weights is round-robin by delivered
+    /// service, *not* FIFO, so the fleet keeps the preserved pre-fairness
+    /// pick — byte-identical schedules — exactly when this returns true).
+    pub fn is_trivial<'a>(&self, tenants: impl Iterator<Item = &'a str>) -> bool {
+        if self.default_quota_bank_s.is_some() {
+            return false;
+        }
+        let mut first_weight: Option<u64> = None;
+        for t in tenants {
+            if self.quota_of(t).is_some() {
+                return false;
+            }
+            let w = self.weight_of(t);
+            match first_weight {
+                None => first_weight = Some(w),
+                Some(fw) if fw != w => return false,
+                _ => {}
+            }
+        }
+        true
+    }
+}
+
+/// Live fairness state of one tenant inside a scheduling pass.
+#[derive(Debug, Clone)]
+struct TenantState {
+    weight: u64,
+    /// Stride pass: cumulative delivered bank-seconds divided by weight.
+    /// Clamped up to the contenders' minimum pass when the tenant
+    /// re-enters the backlog from idle ([`FairLedger::on_backlog`]) so
+    /// idling cannot bank unbounded credit.
+    pass: f64,
+    /// Token bucket: `None` = no quota. `tokens` may go negative (the
+    /// deficit model — a job larger than the bucket still runs once).
+    bucket: Option<Bucket>,
+    parked_until: f64,
+    delivered_bank_s: f64,
+    parked_s: f64,
+    parks: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens: f64,
+    cap: f64,
+    /// Refill rate in bank-seconds per second (cap / window, > 0).
+    rate: f64,
+    last_refill_s: f64,
+}
+
+impl Bucket {
+    fn refresh(&mut self, now: f64) {
+        self.tokens = (self.tokens + (now - self.last_refill_s) * self.rate).min(self.cap);
+        self.last_refill_s = now;
+    }
+}
+
+/// The per-pass bookkeeping behind weighted admission: stride passes,
+/// token buckets, park/unpark times, and the per-tenant aggregates that
+/// end up in `Schedule::fairness`. Constructed only for non-trivial
+/// policies — the trivial path carries no ledger and stays byte-identical
+/// to the pre-fairness loop.
+///
+/// Passes follow start-time fair queuing: a charge advances the admitted
+/// tenant's pass by `cost / weight` from its *own* pass — never from a
+/// global clock, so debt accrued between backlogged tenants survives
+/// cross-class admissions (an interactive burst cannot erase what the
+/// batch class owes a light tenant). The only clamp is at backlog entry
+/// ([`FairLedger::on_backlog`]): a tenant arriving with no work waiting
+/// or running restarts at the minimum pass of the currently contending
+/// tenants, so idling never banks credit.
+#[derive(Debug, Clone)]
+pub(super) struct FairLedger {
+    states: BTreeMap<String, TenantState>,
+}
+
+impl FairLedger {
+    /// One state per distinct tenant in the stream. Preemption remainders
+    /// keep their tenant, so the tenant set never grows mid-pass.
+    pub(super) fn new(policy: &FairnessPolicy, specs: &[JobSpec]) -> FairLedger {
+        let window = policy.quota_window_s();
+        let mut states = BTreeMap::new();
+        for spec in specs {
+            states.entry(spec.tenant.clone()).or_insert_with(|| TenantState {
+                weight: policy.weight_of(&spec.tenant),
+                pass: 0.0,
+                bucket: policy.quota_of(&spec.tenant).map(|cap| Bucket {
+                    tokens: cap,
+                    cap,
+                    rate: cap / window,
+                    last_refill_s: 0.0,
+                }),
+                parked_until: 0.0,
+                delivered_bank_s: 0.0,
+                parked_s: 0.0,
+                parks: 0,
+            });
+        }
+        FairLedger { states }
+    }
+
+    fn state(&self, tenant: &str) -> &TenantState {
+        self.states.get(tenant).expect("ledger covers every tenant in the stream")
+    }
+
+    /// Whether the tenant's bucket is still in deficit at `now`.
+    pub(super) fn parked(&self, tenant: &str, now: f64) -> bool {
+        self.state(tenant).parked_until > now
+    }
+
+    /// The tenant's stride pass (the WFQ component of the pick key).
+    pub(super) fn pass(&self, tenant: &str) -> f64 {
+        self.state(tenant).pass
+    }
+
+    /// Minimum pass among the given tenants (the backlog floor an idle
+    /// tenant re-enters at); infinite when the iterator is empty.
+    pub(super) fn min_pass<'a>(&self, tenants: impl Iterator<Item = &'a str>) -> f64 {
+        tenants.map(|t| self.state(t).pass).fold(f64::INFINITY, f64::min)
+    }
+
+    /// A tenant with no work waiting or running just re-entered the
+    /// backlog: clamp its pass up to `floor` (the minimum pass of the
+    /// tenants it now contends with) so time spent idle never banks
+    /// credit. A non-finite floor (no contenders) leaves the pass alone.
+    pub(super) fn on_backlog(&mut self, tenant: &str, floor: f64) {
+        if floor.is_finite() {
+            let st = self.states.get_mut(tenant).expect("ledger covers every tenant");
+            st.pass = st.pass.max(floor);
+        }
+    }
+
+    /// Charge an admission of `bank_s` bank-seconds at `now`: advance the
+    /// stride pass by `bank_s / weight` from the tenant's own pass, and
+    /// drain the token bucket, parking the tenant until the deficit
+    /// refills when it goes negative.
+    pub(super) fn charge(&mut self, tenant: &str, bank_s: f64, now: f64) {
+        let st = self.states.get_mut(tenant).expect("ledger covers every tenant");
+        st.pass += bank_s / st.weight as f64;
+        st.delivered_bank_s += bank_s;
+        if let Some(b) = st.bucket.as_mut() {
+            b.refresh(now);
+            b.tokens -= bank_s;
+            if b.tokens < 0.0 {
+                st.parked_until = now + (-b.tokens) / b.rate;
+                st.parked_s += st.parked_until - now;
+                st.parks += 1;
+            }
+        }
+    }
+
+    /// Refund the un-run tail of a preempted segment (`bank_s` of the
+    /// charge never occupied banks). Shrinks the stride pass and the
+    /// bucket deficit; a parked tenant's unpark time moves earlier.
+    pub(super) fn credit(&mut self, tenant: &str, bank_s: f64, now: f64) {
+        let st = self.states.get_mut(tenant).expect("ledger covers every tenant");
+        st.pass -= bank_s / st.weight as f64;
+        st.delivered_bank_s -= bank_s;
+        if let Some(b) = st.bucket.as_mut() {
+            // bring the bucket up to `now` first — crediting a stale
+            // token count would recompute the unpark from an already-paid
+            // deficit and could move it *later* instead of earlier
+            b.refresh(now);
+            b.tokens = (b.tokens + bank_s).min(b.cap);
+            if st.parked_until > now {
+                let new_until = if b.tokens >= 0.0 {
+                    now
+                } else {
+                    now + (-b.tokens) / b.rate
+                };
+                st.parked_s -= st.parked_until - new_until;
+                st.parked_until = new_until;
+            }
+        }
+    }
+
+    /// Earliest unpark among parked tenants that actually have a job
+    /// waiting — the timeline event that wakes a quota-throttled queue.
+    pub(super) fn next_unpark<'a>(
+        &self,
+        waiting_tenants: impl Iterator<Item = &'a str>,
+        now: f64,
+    ) -> f64 {
+        let mut next = f64::INFINITY;
+        for t in waiting_tenants {
+            let until = self.state(t).parked_until;
+            if until > now {
+                next = next.min(until);
+            }
+        }
+        next
+    }
+
+    /// Per-tenant aggregates for `Schedule::fairness`, tenant-sorted.
+    /// `horizon_s` is the schedule's end (makespan): a final park whose
+    /// refill horizon extends past it delayed nothing — parks are serial,
+    /// so only the *last* park can overhang — and the overhang is clipped
+    /// so the reported parked time is time the schedule actually saw.
+    pub(super) fn into_stats(self, horizon_s: f64) -> Vec<TenantFairness> {
+        self.states
+            .into_iter()
+            .map(|(tenant, st)| {
+                let overhang = (st.parked_until - horizon_s).max(0.0);
+                TenantFairness {
+                    tenant,
+                    weight: st.weight,
+                    quota_bank_s: st.bucket.as_ref().map(|b| b.cap),
+                    delivered_bank_s: st.delivered_bank_s,
+                    parked_s: (st.parked_s - overhang).max(0.0),
+                    parks: st.parks,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(tenant: &str) -> JobSpec {
+        JobSpec::new(tenant, "blur", vec![720, 1024], 4)
+    }
+
+    #[test]
+    fn trivial_detection_follows_the_tenant_set() {
+        let empty = FairnessPolicy::new();
+        assert!(empty.is_trivial(["a", "b"].into_iter()));
+
+        // all-equal non-default weights are still trivial for that set...
+        let p = FairnessPolicy::new().with_weight("a", 3).with_weight("b", 3);
+        assert!(p.is_trivial(["a", "b"].into_iter()));
+        // ...but an unlisted tenant (weight 1) breaks the equality
+        assert!(!p.is_trivial(["a", "b", "c"].into_iter()));
+
+        // any quota is non-trivial, whether per-tenant or the default
+        let q = FairnessPolicy::new().with_quota("a", 0.5);
+        assert!(!q.is_trivial(["a"].into_iter()));
+        let q = FairnessPolicy::new().with_quota_all(0.5);
+        assert!(!q.is_trivial(["a"].into_iter()));
+        assert!(!q.is_trivial(std::iter::empty()));
+    }
+
+    #[test]
+    fn quota_all_overrides_spec_declared_quotas() {
+        // the operator's --quota caps every tenant, including one whose
+        // job file declared a huge bucket for itself
+        let p = FairnessPolicy::new().with_quota("x", 1000.0).with_quota_all(0.01);
+        assert_eq!(p.quota_of("x"), Some(0.01));
+        assert_eq!(p.quota_of("unlisted"), Some(0.01));
+        // a later per-tenant call wins over the blanket cap
+        let p = FairnessPolicy::new().with_quota_all(0.01).with_quota("x", 2.0);
+        assert_eq!(p.quota_of("x"), Some(2.0));
+        assert_eq!(p.quota_of("y"), Some(0.01));
+    }
+
+    #[test]
+    fn from_specs_collects_and_rejects_conflicts() {
+        let mut jobs = vec![spec("a"), spec("a"), spec("b")];
+        jobs[0].weight = Some(4);
+        jobs[2].quota_bank_s = Some(0.25);
+        let p = FairnessPolicy::from_specs(&jobs).unwrap();
+        assert_eq!(p.weight_of("a"), 4);
+        assert_eq!(p.weight_of("b"), 1);
+        assert_eq!(p.quota_of("b"), Some(0.25));
+        assert_eq!(p.quota_of("a"), None);
+
+        // repeating the same value is fine; a different one is an error
+        jobs[1].weight = Some(4);
+        assert!(FairnessPolicy::from_specs(&jobs).is_ok());
+        jobs[1].weight = Some(2);
+        let err = FairnessPolicy::from_specs(&jobs).unwrap_err().to_string();
+        assert!(err.contains("conflicting weights"), "{err}");
+        // an explicit weight of 1 is a declaration too, not a don't-care
+        jobs[0].weight = Some(1);
+        jobs[1].weight = Some(4);
+        let err = FairnessPolicy::from_specs(&jobs).unwrap_err().to_string();
+        assert!(err.contains("conflicting weights 1 and 4"), "{err}");
+
+        let mut jobs = vec![spec("b"), spec("b")];
+        jobs[0].quota_bank_s = Some(0.25);
+        jobs[1].quota_bank_s = Some(0.5);
+        let err = FairnessPolicy::from_specs(&jobs).unwrap_err().to_string();
+        assert!(err.contains("conflicting quotas"), "{err}");
+    }
+
+    #[test]
+    fn stride_passes_track_weight_shares() {
+        // equal charges: the weight-4 tenant's pass advances 4x slower,
+        // so it wins 4 of 5 contested picks in the long run
+        let policy = FairnessPolicy::new().with_weight("heavy", 4).with_weight("light", 1);
+        let jobs = vec![spec("heavy"), spec("light")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        let mut picks = (0u64, 0u64);
+        for _ in 0..50 {
+            let (h, l) = (ledger.pass("heavy"), ledger.pass("light"));
+            if h <= l {
+                ledger.charge("heavy", 1.0, 0.0);
+                picks.0 += 1;
+            } else {
+                ledger.charge("light", 1.0, 0.0);
+                picks.1 += 1;
+            }
+        }
+        assert_eq!(picks.0, 40, "heavy takes 4/5 of 50 picks");
+        assert_eq!(picks.1, 10);
+    }
+
+    #[test]
+    fn bucket_parks_on_deficit_and_unparks_on_refill() {
+        let policy = FairnessPolicy::new().with_quota("t", 0.01).with_quota_window_s(0.01);
+        let jobs = vec![spec("t")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        assert!(!ledger.parked("t", 0.0));
+
+        // a 0.03 bank-s charge leaves a 0.02 deficit; rate = 1 bank-s/s
+        ledger.charge("t", 0.03, 0.0);
+        assert!(ledger.parked("t", 0.0));
+        assert!(ledger.parked("t", 0.0199));
+        assert!(!ledger.parked("t", 0.02));
+        assert!((ledger.next_unpark(["t"].into_iter(), 0.0) - 0.02).abs() < 1e-12);
+        assert_eq!(ledger.next_unpark(["t"].into_iter(), 0.03), f64::INFINITY);
+
+        let stats = ledger.into_stats(1.0);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].parks, 1);
+        assert!((stats[0].parked_s - 0.02).abs() < 1e-12);
+        assert_eq!(stats[0].quota_bank_s, Some(0.01));
+    }
+
+    #[test]
+    fn trailing_park_is_clipped_to_the_horizon() {
+        // a park whose refill stretches past the schedule's end delayed
+        // nothing out there: only the in-schedule slice is reported
+        let policy = FairnessPolicy::new().with_quota("t", 0.01).with_quota_window_s(0.01);
+        let jobs = vec![spec("t")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        ledger.charge("t", 0.03, 0.0); // parked until ~0.02
+        let stats = ledger.into_stats(0.005);
+        assert_eq!(stats[0].parks, 1);
+        assert!((stats[0].parked_s - 0.005).abs() < 1e-12, "{}", stats[0].parked_s);
+    }
+
+    #[test]
+    fn credit_moves_unpark_earlier() {
+        let policy = FairnessPolicy::new().with_quota("t", 0.01).with_quota_window_s(0.01);
+        let jobs = vec![spec("t")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        ledger.charge("t", 0.03, 0.0);
+        assert!(ledger.parked("t", 0.01));
+        // refunding the whole deficit unparks immediately
+        ledger.credit("t", 0.03, 0.0);
+        assert!(!ledger.parked("t", 0.0));
+        let stats = ledger.into_stats(1.0);
+        assert!(stats[0].parked_s.abs() < 1e-12);
+        assert_eq!(stats[0].delivered_bank_s, 0.0);
+    }
+
+    #[test]
+    fn credit_after_elapsed_time_accounts_for_refill() {
+        // cap 0.01, window 0.01 -> rate 1 bank-s/s. A 0.03 charge at t=0
+        // leaves a 0.02 deficit (unpark 0.02). By t=0.01 the bucket has
+        // refilled 0.01; a 0.005 refund then leaves a 0.005 deficit, so
+        // the unpark must move to 0.015 — a stale (unrefreshed) token
+        // count would instead push it LATER, to 0.025
+        let policy = FairnessPolicy::new().with_quota("t", 0.01).with_quota_window_s(0.01);
+        let jobs = vec![spec("t")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        ledger.charge("t", 0.03, 0.0);
+        let before = ledger.next_unpark(["t"].into_iter(), 0.0);
+        assert!((before - 0.02).abs() < 1e-12);
+        ledger.credit("t", 0.005, 0.01);
+        let after = ledger.next_unpark(["t"].into_iter(), 0.01);
+        assert!((after - 0.015).abs() < 1e-12, "unpark {after}, want 0.015");
+        assert!(after < before, "a refund may never delay the unpark");
+        let stats = ledger.into_stats(1.0);
+        assert!((stats[0].parked_s - 0.015).abs() < 1e-12, "parked_s {}", stats[0].parked_s);
+    }
+
+    #[test]
+    fn idle_tenant_cannot_bank_unbounded_credit() {
+        let policy = FairnessPolicy::new();
+        let jobs = vec![spec("busy"), spec("idle")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        for _ in 0..10 {
+            ledger.charge("busy", 1.0, 0.0);
+        }
+        // an idle tenant re-entering the backlog restarts at the floor
+        // (the contenders' minimum pass), not at its stale 0 — it gets
+        // fair treatment going forward, not ten quanta of back pay
+        assert!(ledger.pass("idle") < ledger.pass("busy"));
+        let floor = ledger.min_pass(["busy"].into_iter());
+        ledger.on_backlog("idle", floor);
+        assert_eq!(ledger.pass("idle"), ledger.pass("busy"));
+        // a non-finite floor (no contenders at all) leaves the pass alone
+        ledger.on_backlog("busy", f64::INFINITY);
+        assert_eq!(ledger.pass("busy"), 10.0);
+
+        // debt between two *backlogged* tenants survives a third party's
+        // charges: charge() never consults a global clock
+        let policy = FairnessPolicy::new();
+        let jobs = vec![spec("a"), spec("b"), spec("i")];
+        let mut ledger = FairLedger::new(&policy, &jobs);
+        for _ in 0..10 {
+            ledger.charge("a", 1.0, 0.0);
+        }
+        ledger.charge("b", 1.0, 0.0);
+        for _ in 0..50 {
+            ledger.charge("i", 1.0, 0.0); // e.g. an interactive burst
+        }
+        assert_eq!(ledger.pass("a") - ledger.pass("b"), 9.0, "debt intact");
+    }
+}

@@ -45,6 +45,17 @@
 //!   `tests/service_fleet.rs` holds the general loop equal to, byte for
 //!   byte, exactly as [`Scheduler::schedule_fifo_walk`] anchors the
 //!   single-board case.
+//! * **Per-tenant fairness and quotas.** With a non-trivial
+//!   [`FairnessPolicy`] ([`Fleet::with_policy`], CLI `--tenant-weights` /
+//!   `--quota`), admission *within* each priority class becomes
+//!   stride-style weighted fair queuing over tenants, and quota-exhausted
+//!   tenants are *parked* — skipped by the pick and woken by an unpark
+//!   timeline event when their bank-second token bucket refills — rather
+//!   than dropped. The pre-fairness pick survives verbatim as
+//!   `Fleet::pick_unweighted_walk` and is exactly what a trivial policy
+//!   (all weights equal, no quotas — the default) routes through, so
+//!   default schedules stay byte-identical to the pre-fairness scheduler.
+//!   See `service::fairness` for the algorithm and the oracle argument.
 //!
 //! With one board and all-default priorities the loop reproduces
 //! [`Scheduler::schedule_fifo_walk`] decision for decision (same configs,
@@ -61,6 +72,7 @@ use anyhow::{bail, Result};
 use crate::platform::FpgaPlatform;
 
 use super::cache::PlanCache;
+use super::fairness::{FairLedger, FairnessPolicy};
 use super::jobs::{JobSpec, Priority};
 use super::scheduler::{
     prepare_all, prepare_remainder, BoardStats, Prepared, Schedule, ScheduledJob,
@@ -101,10 +113,13 @@ pub struct BoardPool {
 pub struct Fleet {
     boards: Vec<BoardPool>,
     aging_s: f64,
+    policy: FairnessPolicy,
 }
 
-/// A job waiting for admission (arrived, not yet placed).
-struct Waiting {
+/// A job waiting for admission (arrived, not yet placed). Crate-internal:
+/// it only exists so the preserved `Fleet::pick_unweighted_walk` can keep
+/// its original signature.
+pub(crate) struct Waiting {
     prep: Prepared,
     /// Submission-order tie-break, monotonic across re-enqueues.
     index: usize,
@@ -143,6 +158,7 @@ impl Fleet {
                 n_boards.max(1)
             ],
             aging_s: DEFAULT_AGING_S,
+            policy: FairnessPolicy::new(),
         }
     }
 
@@ -159,6 +175,7 @@ impl Fleet {
                 })
                 .collect(),
             aging_s: DEFAULT_AGING_S,
+            policy: FairnessPolicy::new(),
         }
     }
 
@@ -193,6 +210,16 @@ impl Fleet {
     /// Override the batch-aging bound (seconds).
     pub fn with_aging_s(mut self, aging_s: f64) -> Fleet {
         self.aging_s = aging_s;
+        self
+    }
+
+    /// Set the per-tenant fairness policy (weights + quotas). A trivial
+    /// policy — all effective weights equal over the stream's tenants and
+    /// no quotas, which includes the default empty policy — leaves the
+    /// admission order byte-identical to the pre-fairness scheduler (it
+    /// routes through the preserved `Fleet::pick_unweighted_walk`).
+    pub fn with_policy(mut self, policy: FairnessPolicy) -> Fleet {
+        self.policy = policy;
         self
     }
 
@@ -246,13 +273,51 @@ impl Fleet {
         (class, spec.arrival_s, w.index)
     }
 
-    /// Index of the queue head (the only job admission ever tries).
-    fn queue_top(&self, waiting: &[Waiting], now: f64) -> Option<usize> {
+    /// The pre-fairness queue head: index of the waiting job with the
+    /// smallest `(effective class, arrival, submission)` key — the only
+    /// job admission ever tries. Preserved verbatim (this *is* the old
+    /// pick, renamed) as the byte-identity oracle: a trivial
+    /// [`FairnessPolicy`] — all weights equal, no quotas, including the
+    /// default — routes every pick through this walk, so default
+    /// schedules render byte-identically to the pre-fairness scheduler.
+    /// `tests/property_fairness.rs` holds that equivalence (via the
+    /// schedules themselves — `Waiting` is crate-internal, so the walk is
+    /// exercised through `Fleet::schedule` and the preserved oracle
+    /// walks, not called directly).
+    pub(crate) fn pick_unweighted_walk(&self, waiting: &[Waiting], now: f64) -> Option<usize> {
         (0..waiting.len()).min_by(|&a, &b| {
             self.queue_key(&waiting[a], now)
                 .partial_cmp(&self.queue_key(&waiting[b], now))
                 .unwrap()
         })
+    }
+
+    /// The weighted queue head: among waiting jobs whose tenant is not
+    /// parked on an exhausted quota bucket, the one with the smallest
+    /// `(effective class, tenant stride pass, arrival, submission)` key.
+    /// Class rank still dominates — fairness reorders *within* a class —
+    /// and aging works unchanged through the class component. Returns
+    /// `None` when every waiting tenant is parked (the event loop then
+    /// jumps to the earliest unpark).
+    fn pick_weighted(&self, waiting: &[Waiting], now: f64, ledger: &FairLedger) -> Option<usize> {
+        (0..waiting.len())
+            .filter(|&i| !ledger.parked(&waiting[i].prep.spec.tenant, now))
+            .min_by(|&a, &b| {
+                let key = |i: usize| {
+                    let (class, arrival, index) = self.queue_key(&waiting[i], now);
+                    (class, ledger.pass(&waiting[i].prep.spec.tenant), arrival, index)
+                };
+                key(a).partial_cmp(&key(b)).unwrap()
+            })
+    }
+
+    /// Dispatch to the weighted pick when a ledger is live, else to the
+    /// preserved pre-fairness walk.
+    fn pick(&self, waiting: &[Waiting], now: f64, ledger: &Option<FairLedger>) -> Option<usize> {
+        match ledger {
+            None => self.pick_unweighted_walk(waiting, now),
+            Some(l) => self.pick_weighted(waiting, now, l),
+        }
     }
 
     /// Schedule `specs` over the fleet. Plans come from (and new
@@ -262,6 +327,13 @@ impl Fleet {
         let max_banks = self.max_banks_per_platform(&plan_of_board, platforms.len());
         let total_banks = self.total_banks();
         let stats0 = cache.stats();
+
+        // fairness ledger only for a non-trivial policy: the trivial path
+        // (all weights equal, no quotas) must stay byte-identical to the
+        // pre-fairness loop, so it carries no ledger and picks through
+        // the preserved `pick_unweighted_walk`
+        let mut ledger = (!self.policy.is_trivial(specs.iter().map(|s| s.tenant.as_str())))
+            .then(|| FairLedger::new(&self.policy, specs));
 
         let mut prepared = prepare_all(&platforms, &max_banks, specs, cache)?;
         // arrival order; equal arrivals keep submission order (stable sort)
@@ -289,7 +361,11 @@ impl Fleet {
 
         loop {
             // 1. fire every event at `clock`: completions free their
-            //    board's banks, arrivals join the wait queue
+            //    board's banks, arrivals join the wait queue. A tenant
+            //    arriving with nothing waiting or running re-enters the
+            //    backlog at the contenders' pass floor (start-time fair
+            //    queuing: idling never banks credit, while debt between
+            //    tenants that stayed backlogged is untouched).
             running.retain(|r| {
                 if r.finish_s <= clock {
                     free[r.board] += r.banks;
@@ -299,13 +375,37 @@ impl Fleet {
                 }
             });
             while future.front().is_some_and(|w| w.prep.spec.arrival_s <= clock) {
-                waiting.push(future.pop_front().unwrap());
+                let w = future.pop_front().unwrap();
+                if let Some(l) = ledger.as_mut() {
+                    let tenant = &w.prep.spec.tenant;
+                    let active = waiting.iter().any(|x| x.prep.spec.tenant == *tenant)
+                        || running.iter().any(|r| jobs[r.job].spec.tenant == *tenant);
+                    // a preemption remainder re-arrives the instant its
+                    // cut segment ends, so its tenant looks idle here —
+                    // but it never idled, and clamping would erase the
+                    // refund the cut just credited
+                    if !active && !w.prep.resumed {
+                        let floor = l.min_pass(
+                            waiting
+                                .iter()
+                                .map(|x| x.prep.spec.tenant.as_str())
+                                .chain(
+                                    running.iter().map(|r| jobs[r.job].spec.tenant.as_str()),
+                                ),
+                        );
+                        l.on_backlog(tenant, floor);
+                    }
+                }
+                waiting.push(w);
             }
 
             // 2. admission: try only the head of the priority-ordered
             //    queue (head-of-line blocking keeps every class
-            //    starvation-free), as many times as it keeps succeeding
-            while let Some(top) = self.queue_top(&waiting, clock) {
+            //    starvation-free), as many times as it keeps succeeding.
+            //    With a ledger the head is the weighted-fair pick (parked
+            //    tenants skipped); without one it is the preserved
+            //    pre-fairness walk.
+            while let Some(top) = self.pick(&waiting, clock, &ledger) {
                 let Some((rank, board)) = try_admit(&waiting[top].prep, &free, &plan_of_board)
                 else {
                     break;
@@ -317,6 +417,11 @@ impl Fleet {
                 let cache_hit = plan.cache_hit;
                 let duration = sim.seconds.max(1e-12);
                 free[board] -= choice.hbm_banks;
+                if let Some(l) = ledger.as_mut() {
+                    // admission charges the full occupancy up front (a
+                    // preemption later refunds the un-run tail)
+                    l.charge(&w.prep.spec.tenant, choice.hbm_banks as f64 * duration, clock);
+                }
                 running.push(Running {
                     board,
                     job: jobs.len(),
@@ -361,7 +466,7 @@ impl Fleet {
             //    one cut may be outstanding fleet-wide — otherwise every
             //    event between the request and the boundary would claim a
             //    fresh victim for the same stuck head.
-            if let Some(top) = self.queue_top(&waiting, clock) {
+            if let Some(top) = self.pick(&waiting, clock, &ledger) {
                 let head = &waiting[top].prep;
                 if head.spec.priority == Priority::Interactive
                     && try_admit(head, &free, &plan_of_board).is_none()
@@ -370,11 +475,12 @@ impl Fleet {
                     if let Some(v) =
                         pick_victim(head, &free, &running, &jobs, &plan_of_board, clock)
                     {
-                        let (job_idx, start_s, iters_per_round) = {
+                        let (job_idx, start_s, iters_per_round, old_finish_s, banks) = {
                             let r = &mut running[v.running_idx];
+                            let old_finish_s = r.finish_s;
                             r.preempted = true;
                             r.finish_s = v.boundary_s;
-                            (r.job, r.start_s, r.iters_per_round)
+                            (r.job, r.start_s, r.iters_per_round, old_finish_s, r.banks)
                         };
                         let done_iters = v.rounds_done * iters_per_round;
                         let seg = &mut jobs[job_idx];
@@ -389,6 +495,15 @@ impl Fleet {
                         let mut rem_spec = seg.spec.clone();
                         rem_spec.iter = remaining;
                         rem_spec.arrival_s = v.boundary_s;
+                        if let Some(l) = ledger.as_mut() {
+                            // refund the victim's un-run tail: the cut
+                            // segment occupies banks only to the boundary
+                            l.credit(
+                                &rem_spec.tenant,
+                                banks as f64 * (old_finish_s - v.boundary_s),
+                                clock,
+                            );
+                        }
                         let rem =
                             prepare_remainder(&platforms, &max_banks, &rem_spec, cache)?;
                         let pos = future
@@ -399,18 +514,23 @@ impl Fleet {
                 }
             }
 
-            // 4. advance to the next event (earliest completion or arrival)
+            // 4. advance to the next event (earliest completion, arrival,
+            //    or quota unpark of a tenant with work waiting)
             let next_finish =
                 running.iter().map(|r| r.finish_s).fold(f64::INFINITY, f64::min);
             let next_arrival =
                 future.front().map_or(f64::INFINITY, |w| w.prep.spec.arrival_s);
-            let next = next_finish.min(next_arrival);
+            let next_unpark = ledger.as_ref().map_or(f64::INFINITY, |l| {
+                l.next_unpark(waiting.iter().map(|w| w.prep.spec.tenant.as_str()), clock)
+            });
+            let next = next_finish.min(next_arrival).min(next_unpark);
             if !next.is_finite() {
                 if waiting.is_empty() {
                     break; // drained: no events left, nothing waiting
                 }
                 // Unreachable: prepare guarantees some candidate fits an
-                // empty board, and no events left means no board is busy.
+                // empty board, no events left means no board is busy, and
+                // a parked tenant always has a finite unpark time.
                 bail!("fleet stalled with {} job(s) waiting", waiting.len());
             }
             clock = next;
@@ -434,6 +554,7 @@ impl Fleet {
             explorations: stats1.misses - stats0.misses,
             boards,
             preemptions,
+            fairness: ledger.map(|l| l.into_stats(makespan_s)),
         })
     }
 
@@ -495,7 +616,7 @@ impl Fleet {
                 waiting.push(future.pop_front().unwrap());
             }
 
-            while let Some(top) = self.queue_top(&waiting, clock) {
+            while let Some(top) = self.pick_unweighted_walk(&waiting, clock) {
                 let Some((rank, board)) = try_admit_single_list(&waiting[top].prep, &free)
                 else {
                     break;
@@ -545,7 +666,7 @@ impl Fleet {
                 });
             }
 
-            if let Some(top) = self.queue_top(&waiting, clock) {
+            if let Some(top) = self.pick_unweighted_walk(&waiting, clock) {
                 let head = &waiting[top].prep;
                 if head.spec.priority == Priority::Interactive
                     && try_admit_single_list(head, &free).is_none()
@@ -613,6 +734,7 @@ impl Fleet {
             explorations: stats1.misses - stats0.misses,
             boards,
             preemptions,
+            fairness: None,
         })
     }
 

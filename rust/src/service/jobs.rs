@@ -15,6 +15,12 @@
 //! `dims` defaults to the kernel's headline size, `arrival_s` to 0 (all
 //! jobs queued up front), `tenant` to `"default"`, `priority` to
 //! `"batch"`. A bare top-level array is accepted too.
+//!
+//! Two optional tenant-scoped fairness fields ride on each job (see
+//! `service::fairness`): `"weight"` (integer >= 1, default 1) sets the
+//! tenant's weighted-fair-queuing share, and `"quota_bank_s"` (number
+//! > 0) caps the tenant with an HBM-bank-second token bucket. All jobs
+//! of one tenant that declare these must agree on the value.
 
 use std::path::Path;
 
@@ -83,6 +89,14 @@ pub struct JobSpec {
     pub arrival_s: f64,
     /// Admission class; `Batch` unless the job asks for `interactive`.
     pub priority: Priority,
+    /// Declared fair-queuing weight of this job's tenant (`None` = the
+    /// default weight 1). Tenant-scoped: every job of a tenant that
+    /// declares a weight must declare the same one
+    /// (`service::FairnessPolicy::from_specs` rejects conflicts).
+    pub weight: Option<u64>,
+    /// Declared HBM-bank-second quota (token-bucket capacity) of this
+    /// job's tenant; `None` = unlimited. Tenant-scoped like `weight`.
+    pub quota_bank_s: Option<f64>,
 }
 
 impl JobSpec {
@@ -94,6 +108,8 @@ impl JobSpec {
             iter,
             arrival_s: 0.0,
             priority: Priority::Batch,
+            weight: None,
+            quota_bank_s: None,
         }
     }
 
@@ -106,6 +122,18 @@ impl JobSpec {
     /// Builder-style priority class.
     pub fn with_priority(mut self, priority: Priority) -> JobSpec {
         self.priority = priority;
+        self
+    }
+
+    /// Builder-style tenant weight (>= 1) for weighted fair queuing.
+    pub fn with_weight(mut self, weight: u64) -> JobSpec {
+        self.weight = Some(weight);
+        self
+    }
+
+    /// Builder-style tenant quota (token-bucket capacity, bank-seconds).
+    pub fn with_quota(mut self, quota_bank_s: f64) -> JobSpec {
+        self.quota_bank_s = Some(quota_bank_s);
         self
     }
 
@@ -134,14 +162,21 @@ impl JobSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("tenant", s(self.tenant.clone())),
             ("kernel", s(self.kernel.clone())),
             ("dims", Json::Arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
             ("iter", num(self.iter as f64)),
             ("arrival_s", num(self.arrival_s)),
             ("priority", s(self.priority.name())),
-        ])
+        ];
+        if let Some(w) = self.weight {
+            fields.push(("weight", num(w as f64)));
+        }
+        if let Some(q) = self.quota_bank_s {
+            fields.push(("quota_bank_s", num(q)));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<JobSpec> {
@@ -196,7 +231,31 @@ impl JobSpec {
                 .map_err(anyhow::Error::msg)
                 .with_context(|| format!("job '{kernel}'"))?,
         };
-        Ok(JobSpec { tenant, kernel, dims, iter, arrival_s, priority })
+        let weight = match j.get("weight") {
+            None => None,
+            Some(v) => {
+                let w = v
+                    .as_exact_u64()
+                    .with_context(|| format!("job '{kernel}': 'weight' must be an integer"))?;
+                if w == 0 {
+                    bail!("job '{kernel}': weight must be >= 1");
+                }
+                Some(w)
+            }
+        };
+        let quota_bank_s = match j.get("quota_bank_s") {
+            None => None,
+            Some(v) => {
+                let q = v
+                    .as_f64()
+                    .with_context(|| format!("job '{kernel}': 'quota_bank_s' must be a number"))?;
+                if !q.is_finite() || q <= 0.0 {
+                    bail!("job '{kernel}': quota_bank_s must be finite and > 0");
+                }
+                Some(q)
+            }
+        };
+        Ok(JobSpec { tenant, kernel, dims, iter, arrival_s, priority, weight, quota_bank_s })
     }
 }
 
@@ -260,6 +319,24 @@ mod tests {
         assert_eq!(spec.iter, 8);
         assert_eq!(spec.tenant, "default");
         assert_eq!(spec.priority, Priority::Batch);
+        assert_eq!(spec.weight, None, "weight defaults to the 1-share None");
+        assert_eq!(spec.quota_bank_s, None, "no quota unless declared");
+    }
+
+    #[test]
+    fn fairness_fields_roundtrip() {
+        let spec = JobSpec::new("hog", "blur", vec![720, 1024], 8)
+            .with_weight(4)
+            .with_quota(0.125);
+        let back = JobSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.weight, Some(4));
+        assert_eq!(back.quota_bank_s, Some(0.125));
+        // wire form
+        let j = Json::parse(r#"[{"kernel": "blur", "weight": 3, "quota_bank_s": 0.5}]"#).unwrap();
+        let spec = &jobs_from_json(&j).unwrap()[0];
+        assert_eq!(spec.weight, Some(3));
+        assert_eq!(spec.quota_bank_s, Some(0.5));
     }
 
     #[test]
@@ -291,6 +368,12 @@ mod tests {
             r#"[{"kernel": "blur", "tenant": 7}]"#,
             r#"[{"kernel": "blur", "priority": "urgent"}]"#,
             r#"[{"kernel": "blur", "priority": 3}]"#,
+            r#"[{"kernel": "blur", "weight": 0}]"#,
+            r#"[{"kernel": "blur", "weight": 2.5}]"#,
+            r#"[{"kernel": "blur", "weight": "4"}]"#,
+            r#"[{"kernel": "blur", "quota_bank_s": 0}]"#,
+            r#"[{"kernel": "blur", "quota_bank_s": -0.5}]"#,
+            r#"[{"kernel": "blur", "quota_bank_s": "0.5"}]"#,
             r#"[]"#,
             r#"{"no_jobs": 1}"#,
         ] {

@@ -22,6 +22,12 @@
 //!   models (`--boards 2`, or heterogeneous `--boards u280:1,u50:1` —
 //!   every board is planned by its own platform's DSE and same-platform
 //!   boards share warm plans).
+//! * [`fairness`] — per-tenant weighted fair queuing and bank-second
+//!   quotas on top of the priority classes: stride-style passes order
+//!   tenants *within* a class (`--tenant-weights a:4,b:1`), token buckets
+//!   park quota-exhausted tenants until they refill (`--quota`), and the
+//!   trivial policy keeps default schedules byte-identical to the
+//!   pre-fairness loop (`Fleet::pick_unweighted_walk`).
 //! * [`scheduler`] — timeline types ([`Schedule`], [`ScheduledJob`]) and
 //!   the single-board facade; the pre-fleet FIFO loop survives as
 //!   `schedule_fifo_walk`, the decision oracle the fleet's
@@ -38,12 +44,14 @@
 
 pub mod cache;
 pub mod executor;
+pub mod fairness;
 pub mod fleet;
 pub mod jobs;
 pub mod scheduler;
 
 pub use cache::{CacheStats, PlanCache};
 pub use executor::{BatchExecutor, BatchReport, ClassStats, TenantStats};
+pub use fairness::{FairnessPolicy, TenantPolicy, DEFAULT_QUOTA_WINDOW_S};
 pub use fleet::{BoardPool, Fleet, DEFAULT_AGING_S};
 pub use jobs::{demo_jobs, jobs_from_json, jobs_to_json, load_jobs, JobSpec, Priority};
-pub use scheduler::{BoardStats, Schedule, ScheduledJob, Scheduler};
+pub use scheduler::{BoardStats, Schedule, ScheduledJob, Scheduler, TenantFairness};

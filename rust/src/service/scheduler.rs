@@ -114,6 +114,28 @@ impl BoardStats {
     }
 }
 
+/// Per-tenant fairness aggregates of one weighted scheduling pass
+/// (`service::fairness`): the weight and quota in effect, the
+/// bank-seconds actually delivered, and how long quota exhaustion kept
+/// the tenant parked.
+#[derive(Debug, Clone)]
+pub struct TenantFairness {
+    pub tenant: String,
+    /// Weighted-fair-queuing share the pass ran with.
+    pub weight: u64,
+    /// Token-bucket capacity in bank-seconds (`None` = no quota).
+    pub quota_bank_s: Option<f64>,
+    /// Bank-seconds of board occupancy delivered to this tenant
+    /// (preempted segments count only their actual span).
+    pub delivered_bank_s: f64,
+    /// Time the tenant spent parked on an exhausted bucket, clipped to
+    /// the schedule horizon (a final park whose refill stretches past the
+    /// makespan delayed nothing and is not counted beyond it).
+    pub parked_s: f64,
+    /// Number of times the bucket went into deficit and parked the tenant.
+    pub parks: u64,
+}
+
 /// The full timeline produced by one scheduling pass (fleet-wide: per-board
 /// timelines merged into one, ordered by admission).
 #[derive(Debug, Clone)]
@@ -134,6 +156,11 @@ pub struct Schedule {
     pub boards: Vec<BoardStats>,
     /// Batch jobs cut at a round boundary for an interactive arrival.
     pub preemptions: u64,
+    /// Per-tenant fairness aggregates, present exactly when the pass ran
+    /// with a non-trivial `FairnessPolicy` (weights or quotas set). The
+    /// trivial path — and the preserved oracle walks — carry `None` and
+    /// render byte-identically to the pre-fairness scheduler.
+    pub fairness: Option<Vec<TenantFairness>>,
 }
 
 impl Schedule {
@@ -445,6 +472,7 @@ impl<'p> Scheduler<'p> {
             cache_hits: stats1.hits - stats0.hits,
             explorations: stats1.misses - stats0.misses,
             preemptions: 0,
+            fairness: None,
         })
     }
 }

@@ -1,0 +1,20 @@
+//! Helpers shared by the service integration/property suites (included
+//! via `mod common;` — not a test target of its own).
+
+use std::collections::BTreeMap;
+
+use sasa::service::JobSpec;
+
+/// Iterations promised per (tenant, kernel): preemption may split jobs
+/// into segments, but the totals must survive any reordering. Comparing
+/// this map between input specs and scheduled segments is the
+/// conservation invariant both fairness suites assert.
+pub fn iters_by_key<'a>(
+    items: impl Iterator<Item = &'a JobSpec>,
+) -> BTreeMap<(String, String), u64> {
+    let mut sums: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for spec in items {
+        *sums.entry((spec.tenant.clone(), spec.kernel.clone())).or_default() += spec.iter;
+    }
+    sums
+}

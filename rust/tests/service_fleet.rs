@@ -5,14 +5,23 @@
 //! replay — plus the ISSUE-4 heterogeneous-fleet checklist: per-board
 //! platform plans, U50 resource safety on mixed fleets, byte-identical
 //! homogeneous schedules against the preserved pre-heterogeneity walk,
-//! and the mixed-beats-all-U50 makespan win.
+//! and the mixed-beats-all-U50 makespan win — plus the ISSUE-5 fairness
+//! checklist: a randomized differential sweep of the weighted loop's
+//! structural invariants, quota park/unpark semantics, and the
+//! hog-vs-light weight shift on the shipped example stream.
 
+mod common;
+use common::iters_by_key;
+
+use sasa::metrics::percentile;
 use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::service::{
-    demo_jobs, load_jobs, Fleet, JobSpec, PlanCache, Priority, Schedule, Scheduler,
+    demo_jobs, load_jobs, FairnessPolicy, Fleet, JobSpec, PlanCache, Priority, Schedule,
+    Scheduler,
 };
 use sasa::sim::simulate;
+use sasa::util::prng::check;
 
 fn u280() -> FpgaPlatform {
     FpgaPlatform::u280()
@@ -428,6 +437,202 @@ fn mixed_fleet_beats_two_u50s_on_example_stream() {
     assert_eq!(models, ["u280", "u50"]);
     let models: Vec<&str> = twin50.boards.iter().map(|b| b.model.as_str()).collect();
     assert_eq!(models, ["u50", "u50"]);
+}
+
+// ---------------------------------------------------------------------------
+// per-tenant fairness and quotas (ISSUE 5)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn weighted_differential_sweep_holds_schedule_invariants() {
+    // randomized arrival jitter × priority mix × weight vectors (and an
+    // occasional quota): whatever order the weighted loop picks, the
+    // *structural* invariants of a valid schedule must hold — no board
+    // over capacity at any event time, admissions monotone in time,
+    // preempted segments conserving iterations, and the fairness
+    // ledger's delivered bank-seconds agreeing with the timeline's.
+    let p = u280();
+    let tenants = ["hog", "mid", "light"];
+    let kernels = ["jacobi2d", "blur"];
+    check(6, 0xD1FF, |rng| {
+        let n = rng.range(7, 10);
+        let specs: Vec<JobSpec> = (0..n)
+            .map(|_| {
+                let mut job = JobSpec::new(
+                    rng.pick(&tenants),
+                    rng.pick(&kernels),
+                    vec![720, 1024],
+                    *rng.pick(&[2u64, 4, 8]),
+                )
+                .arriving_at(rng.range(0, 10) as f64 * 1e-4);
+                if rng.range(0, 3) == 0 {
+                    job = job.with_priority(Priority::Interactive);
+                }
+                job
+            })
+            .collect();
+        let mut policy = FairnessPolicy::new();
+        for t in tenants {
+            policy = policy.with_weight(t, rng.range(1, 5));
+        }
+        if rng.range(0, 1) == 1 {
+            policy = policy.with_quota("hog", 0.003).with_quota_window_s(0.002);
+        }
+        let n_boards = rng.range(1, 2) as usize;
+        let mut cache = PlanCache::in_memory();
+        let s = Fleet::new(&p, n_boards)
+            .with_policy(policy)
+            .schedule(&specs, &mut cache)
+            .unwrap();
+
+        // admissions are events on a forward-only clock
+        for pair in s.jobs.windows(2) {
+            assert!(pair[0].start_s <= pair[1].start_s, "admission order is time order");
+        }
+        // nothing starts before it arrives, waits are consistent
+        for j in &s.jobs {
+            assert!(j.start_s >= j.spec.arrival_s - 1e-12);
+            assert!((j.queue_wait_s - (j.start_s - j.spec.arrival_s)).abs() < 1e-12);
+            assert!(j.finish_s > j.start_s);
+        }
+        // capacity: at every admission instant, per-board banks in use
+        // never exceed that board's pool
+        for probe in &s.jobs {
+            let t = probe.start_s;
+            for (bi, b) in s.boards.iter().enumerate() {
+                let in_use: u64 = s
+                    .jobs
+                    .iter()
+                    .filter(|j| j.board == bi && j.start_s <= t && t < j.finish_s)
+                    .map(|j| j.hbm_banks)
+                    .sum();
+                assert!(in_use <= b.banks, "board {bi}: {in_use} banks at t={t}");
+            }
+        }
+        // conservation across preemption splits and reorderings
+        assert_eq!(iters_by_key(specs.iter()), iters_by_key(s.jobs.iter().map(|j| &j.spec)));
+        // the ledger's delivered bank-seconds (charges minus preemption
+        // refunds) must agree with the timeline's occupancy integral.
+        // (a draw whose present tenants got all-equal weights and no
+        // quota is the trivial policy — no ledger, nothing to check)
+        if let Some(fairness) = s.fairness.as_ref() {
+            let delivered: f64 = fairness.iter().map(|t| t.delivered_bank_s).sum();
+            assert!(
+                (delivered - s.bank_seconds_used).abs() < 1e-9,
+                "{delivered} != {}",
+                s.bank_seconds_used
+            );
+        }
+    });
+}
+
+#[test]
+fn quota_exhausted_tenant_parks_until_refill_never_drops() {
+    let p = u280();
+    // two identical hog jobs plus a light job, all at t=0: without a
+    // quota the board has banks for all three at once; with a tiny
+    // bucket the first hog admission drives the bucket into deficit and
+    // the second hog job must wait for the refill — parked, not dropped
+    let jobs = vec![
+        JobSpec::new("hog", "jacobi2d", vec![720, 1024], 8),
+        JobSpec::new("hog", "jacobi2d", vec![720, 1024], 8),
+        JobSpec::new("light", "blur", vec![720, 1024], 8),
+    ];
+    let mut c1 = PlanCache::in_memory();
+    let free_run = Fleet::new(&p, 1).schedule(&jobs, &mut c1).unwrap();
+    let mut c2 = PlanCache::in_memory();
+    let quota_run = Fleet::new(&p, 1)
+        .with_policy(FairnessPolicy::new().with_quota("hog", 1e-6).with_quota_window_s(0.001))
+        .schedule(&jobs, &mut c2)
+        .unwrap();
+
+    // nothing dropped: same segments, same iterations
+    assert_eq!(quota_run.jobs.len(), 3);
+    assert_eq!(iters_by_key(jobs.iter()), iters_by_key(quota_run.jobs.iter().map(|j| &j.spec)));
+
+    let hog_starts = |s: &Schedule| -> Vec<f64> {
+        let mut v: Vec<f64> = s
+            .jobs
+            .iter()
+            .filter(|j| j.spec.tenant == "hog")
+            .map(|j| j.start_s)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    };
+    let free_hog = hog_starts(&free_run);
+    let quota_hog = hog_starts(&quota_run);
+    assert_eq!(free_hog.len(), 2);
+    // the second hog admission is strictly delayed by the park...
+    assert!(
+        quota_hog[1] > free_hog[1],
+        "parked start {} must exceed unthrottled start {}",
+        quota_hog[1],
+        free_hog[1]
+    );
+    // ...while the light tenant is untouched by the hog's bucket
+    let light = quota_run.jobs.iter().find(|j| j.spec.tenant == "light").unwrap();
+    assert_eq!(light.start_s, 0.0, "light admits immediately");
+
+    let fairness = quota_run.fairness.as_ref().unwrap();
+    let hog = fairness.iter().find(|t| t.tenant == "hog").unwrap();
+    assert!(hog.parks >= 1, "the bucket must have gone into deficit");
+    assert!(hog.parked_s > 0.0);
+    assert_eq!(hog.quota_bank_s, Some(1e-6));
+    let light_f = fairness.iter().find(|t| t.tenant == "light").unwrap();
+    assert_eq!(light_f.parks, 0);
+    assert_eq!(light_f.parked_s, 0.0);
+    // trivial run carries no fairness block at all
+    assert!(free_run.fairness.is_none());
+}
+
+#[test]
+fn weights_improve_light_tenant_p95_wait_on_example_stream() {
+    // the acceptance scenario behind `sasa serve --jobs examples/jobs.json
+    // --banks 3 --tenant-weights hog:1,light:4`: the shipped stream ends
+    // with a hog tenant dumping four large jacobi2d jobs just ahead of
+    // two small light-tenant jobs. A 3-bank slice of the U280 is the
+    // smallest pool every kernel in the stream fits (hotspot needs 3),
+    // and it admits exactly one job at a time — so under FIFO the light
+    // jobs are the last batch admissions (latest arrivals, behind the
+    // hog's whole backlog), while a 4:1 weight lets them jump every hog
+    // job after the first: the light tenant's p95 queue wait strictly
+    // improves, and the hog still gets every iteration delivered.
+    let p = u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    assert!(specs.iter().any(|j| j.tenant == "hog"), "stream ships a hog tenant");
+    assert!(specs.iter().any(|j| j.tenant == "light"), "stream ships a light tenant");
+
+    let mut c1 = PlanCache::in_memory();
+    let fifo = Fleet::new(&p, 1)
+        .with_board_banks(vec![3])
+        .schedule(&specs, &mut c1)
+        .unwrap();
+    let mut c2 = PlanCache::in_memory();
+    let weighted = Fleet::new(&p, 1)
+        .with_board_banks(vec![3])
+        .with_policy(FairnessPolicy::new().with_weight("hog", 1).with_weight("light", 4))
+        .schedule(&specs, &mut c2)
+        .unwrap();
+
+    let light_p95 = |s: &Schedule| {
+        let waits: Vec<f64> = s
+            .jobs
+            .iter()
+            .filter(|j| j.spec.tenant == "light")
+            .map(|j| j.queue_wait_s)
+            .collect();
+        assert!(!waits.is_empty());
+        percentile(&waits, 95.0)
+    };
+    let (before, after) = (light_p95(&fifo), light_p95(&weighted));
+    assert!(before > 0.0, "light must actually queue behind the hog under FIFO");
+    assert!(
+        after < before,
+        "light p95 wait must strictly improve: {after} !< {before}"
+    );
+    // fairness never starves the hog: full delivery on both runs
+    assert_eq!(iters_by_key(specs.iter()), iters_by_key(weighted.jobs.iter().map(|j| &j.spec)));
 }
 
 // ---------------------------------------------------------------------------
