@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Schema gate for the Chrome-trace export (``--trace-out``).
+
+``sasa serve --trace-out`` / ``sasa trace`` emit a trace-event JSON file
+(DESIGN.md §7) that Perfetto and chrome://tracing load directly. The CI
+determinism step already byte-diffs two warm runs; this script checks the
+*shape* the docs promise, so a regression in the exporter can never land
+as "still deterministic, but garbage":
+
+* top level is ``{"displayTimeUnit": "ms", "traceEvents": [...]}``;
+* every event carries integer ``pid``/``tid`` and a finite ``ts``;
+* timestamps are monotone non-decreasing within each (pid, tid) track;
+* duration events come in balanced, properly nested B/E pairs per track;
+* instants (``ph: "i"``) are thread-scoped (``s: "t"``);
+* with ``--metrics metrics.json``: the number of run spans opened on
+  board tracks equals the number of scheduled segments in the metrics
+  snapshot — one span per admitted segment, none dropped.
+
+Usage: ci/check_trace.py trace.json [--metrics metrics.json]
+"""
+
+import json
+import math
+import sys
+
+
+def fail(failures):
+    print("\ntrace schema gate FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    return 1
+
+
+def main(argv):
+    trace_path = None
+    metrics_path = None
+    args = list(argv[1:])
+    while args:
+        a = args.pop(0)
+        if a == "--metrics":
+            metrics_path = args.pop(0)
+        else:
+            trace_path = a
+    if trace_path is None:
+        print(__doc__.strip().splitlines()[-1], file=sys.stderr)
+        return 2
+
+    with open(trace_path) as f:
+        trace = json.load(f)
+
+    failures = []
+    if trace.get("displayTimeUnit") != "ms":
+        failures.append('displayTimeUnit must be "ms"')
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        failures.append("traceEvents must be a non-empty list")
+        return fail(failures)
+
+    # pid -> process_name label from the "M" metadata events
+    labels = {}
+    # (pid, tid) -> last timestamp seen, open-B stack
+    last_ts = {}
+    stacks = {}
+    board_spans = 0
+    board_pids = set()
+
+    for i, e in enumerate(events):
+        where = f"event {i} ({e.get('name', '?')})"
+        ph = e.get("ph")
+        pid, tid = e.get("pid"), e.get("tid")
+        if not isinstance(pid, int) or not isinstance(tid, int):
+            failures.append(f"{where}: pid/tid must be integers")
+            continue
+        if ph == "M":
+            if e.get("name") == "process_name":
+                labels[pid] = e.get("args", {}).get("name", "")
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) or ts < 0:
+            failures.append(f"{where}: ts must be a finite non-negative number")
+            continue
+        track = (pid, tid)
+        if ts < last_ts.get(track, float("-inf")):
+            failures.append(
+                f"{where}: ts {ts} goes backwards on track pid={pid} tid={tid} "
+                f"(previous {last_ts[track]})"
+            )
+        last_ts[track] = ts
+        if ph == "B":
+            stacks.setdefault(track, []).append(e.get("name", ""))
+        elif ph == "E":
+            if not stacks.get(track):
+                failures.append(f"{where}: E with no open B on pid={pid} tid={tid}")
+            else:
+                stacks[track].pop()
+        elif ph == "i":
+            if e.get("s") != "t":
+                failures.append(f'{where}: instant scope must be "t"')
+        else:
+            failures.append(f"{where}: unexpected phase {ph!r}")
+
+    for (pid, tid), stack in sorted(stacks.items()):
+        for name in stack:
+            failures.append(f"unclosed span {name!r} on pid={pid} tid={tid}")
+
+    for pid, label in labels.items():
+        if label.startswith("board"):
+            board_pids.add(pid)
+    if not board_pids:
+        failures.append("no board process_name metadata found")
+    board_spans = sum(
+        1 for e in events if e.get("ph") == "B" and e.get("pid") in board_pids
+    )
+
+    n_tracks = len(last_ts)
+    print(
+        f"{trace_path}: {len(events)} event(s), {n_tracks} track(s), "
+        f"{len(board_pids)} board(s), {board_spans} run span(s)"
+    )
+
+    if metrics_path is not None:
+        with open(metrics_path) as f:
+            metrics = json.load(f)
+        segments = len(metrics.get("jobs", []))
+        status = "ok" if board_spans == segments else "MISMATCH"
+        print(f"run spans vs metrics segments: {board_spans} vs {segments} {status}")
+        if board_spans != segments:
+            failures.append(
+                f"{board_spans} run span(s) on board tracks but the metrics "
+                f"snapshot schedules {segments} segment(s)"
+            )
+
+    if failures:
+        return fail(failures)
+    print("trace schema gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

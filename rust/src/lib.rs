@@ -32,6 +32,7 @@
 //! | [`codegen`] | TAPA HLS kernel/host/connectivity + execution-plan emission |
 //! | [`metrics`] | tables/percentiles + one function per paper artifact |
 //! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor |
+//! | [`obs`] | deterministic observability: event recorder, Chrome-trace export, metrics snapshots |
 //! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
 //!
 //! The serving entry points most callers want are
@@ -51,4 +52,5 @@ pub mod coordinator;
 pub mod codegen;
 pub mod metrics;
 pub mod service;
+pub mod obs;
 pub mod bench;

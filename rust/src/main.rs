@@ -7,6 +7,7 @@
 //! sasa run --kernel jacobi2d --dims 64x64 --iter 8   execute for real via PJRT
 //! sasa sim --kernel blur --iter 16             cycle-simulate all five schemes
 //! sasa serve --jobs jobs.json --boards 2       schedule a multi-tenant job batch on a fleet
+//! sasa trace --jobs jobs.json                  replay a batch, export trace + metrics JSON
 //! sasa batch --iter 8 [--real]                 run the whole suite as one batch
 //! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
 //! ```
@@ -126,6 +127,7 @@ fn run() -> Result<()> {
         "run" => cmd_run(&args, &platform),
         "sim" => cmd_sim(&args, &platform),
         "serve" => cmd_serve(&args, &platform),
+        "trace" => cmd_trace(&args, &platform),
         "batch" => cmd_batch(&args, &platform),
         "report" => cmd_report(&args, &platform),
         "help" | "--help" | "-h" => {
@@ -146,7 +148,9 @@ fn print_help() {
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
          sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
          [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n             \
-         [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n  \
+         [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n             \
+         [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
+         sasa trace --jobs <jobs.json> [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
          FLAGS (serve):\n  \
@@ -164,7 +168,13 @@ fn print_help() {
          --quota <bank-s>  give every tenant a token bucket of this many\n                    \
          HBM-bank-seconds; exhausted tenants are parked until\n                    \
          the bucket refills (never dropped)\n  \
-         --quota-window-ms <x>  refill horizon of a drained bucket (default 5)\n\n\
+         --quota-window-ms <x>  refill horizon of a drained bucket (default 5)\n  \
+         --trace-out <path>  record the run and write a Chrome trace-event\n                    \
+         timeline (simulated time; load in Perfetto or\n                    \
+         chrome://tracing); `sasa trace` defaults it to trace.json\n  \
+         --metrics-out <path>  record the run and write a JSON metrics\n                    \
+         snapshot mirroring every report table; `sasa trace`\n                    \
+         defaults it to metrics.json\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d",
         known = FpgaPlatform::KNOWN.join(", ")
     );
@@ -514,20 +524,26 @@ fn print_batch_report(
     );
 }
 
-/// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
-/// [--banks n] [--boards mix] [--aging-ms x] [--tenant-weights a:4,b:1]
-/// [--quota bank-s] [--quota-window-ms x]`: schedule a multi-tenant job
-/// batch over a fleet of boards' HBM bank pools. `--boards` takes a count
-/// (identical `--platform` boards) or a heterogeneous mix like
-/// `u280:1,u50:1` — each board is planned by its own platform's DSE.
-/// Weights turn within-class admission into weighted fair queuing;
-/// `--quota` caps every tenant with a bank-second token bucket.
-fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+/// Shared `serve`/`trace` setup: load the job stream, open the plan
+/// cache, and build the executor (fleet mix, aging bound, fairness
+/// policy) from the flags the two verbs have in common. They differ
+/// only in what they do with the resulting report — `serve` prints the
+/// tables, `trace` writes the observability artifacts.
+#[allow(clippy::type_complexity)]
+fn configure_batch<'p>(
+    args: &Args,
+    platform: &'p FpgaPlatform,
+) -> Result<(
+    Vec<sasa::service::JobSpec>,
+    sasa::service::PlanCache,
+    String,
+    sasa::service::BatchExecutor<'p>,
+)> {
     use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, PlanCache};
     let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
     let specs = load_jobs(jobs_path)?;
-    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
-    let mut cache = PlanCache::at_path(cache_path)?;
+    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE).to_string();
+    let mut cache = PlanCache::at_path(&cache_path)?;
     if let Some(cap) = args.get("cache-cap") {
         let cap: usize = cap.parse().context("--cache-cap must be an integer")?;
         if cap == 0 {
@@ -593,8 +609,97 @@ fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         policy = policy.with_quota_window_s(ms / 1e3);
     }
     exec = exec.with_policy(policy);
+    Ok((specs, cache, cache_path, exec))
+}
+
+/// Write the two observability artifacts from a recorded batch: the
+/// Chrome trace-event timeline and the metrics snapshot. Both are pure
+/// functions of the recorded events / the report, and every timestamp in
+/// them is simulated time, so reruns produce byte-identical files.
+fn write_obs_artifacts(
+    sink: &sasa::obs::MemorySink,
+    report: &sasa::service::BatchReport,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> Result<()> {
+    use sasa::obs::{chrome_trace, metrics_snapshot};
+    let events = sink.events();
+    if let Some(path) = trace_out {
+        std::fs::write(path, chrome_trace(&events).to_string())
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "trace: {} event(s) -> {path} (load in Perfetto or chrome://tracing)",
+            events.len()
+        );
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, metrics_snapshot(report, None).to_string())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        println!("metrics: snapshot -> {path}");
+    }
+    Ok(())
+}
+
+/// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
+/// [--banks n] [--boards mix] [--aging-ms x] [--tenant-weights a:4,b:1]
+/// [--quota bank-s] [--quota-window-ms x] [--trace-out t.json]
+/// [--metrics-out m.json]`: schedule a multi-tenant job batch over a
+/// fleet of boards' HBM bank pools. `--boards` takes a count (identical
+/// `--platform` boards) or a heterogeneous mix like `u280:1,u50:1` —
+/// each board is planned by its own platform's DSE. Weights turn
+/// within-class admission into weighted fair queuing; `--quota` caps
+/// every tenant with a bank-second token bucket. `--trace-out` /
+/// `--metrics-out` additionally record the run and export the timeline
+/// / counter artifacts (see DESIGN.md §7).
+fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let (specs, mut cache, cache_path, mut exec) = configure_batch(args, platform)?;
+    let trace_out = args.get("trace-out");
+    let metrics_out = args.get("metrics-out");
+    // recording is strictly opt-in: without either flag no recorder is
+    // ever constructed and serve's output stays byte-identical to the
+    // pre-observability CLI
+    let sink = if trace_out.is_some() || metrics_out.is_some() {
+        let (recorder, sink) = sasa::obs::Recorder::to_memory();
+        cache.set_recorder(recorder.clone());
+        exec = exec.with_recorder(recorder);
+        Some(sink)
+    } else {
+        None
+    };
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
-    print_batch_report(&report, &cache, cache_path);
+    print_batch_report(&report, &cache, &cache_path);
+    if let Some(sink) = &sink {
+        write_obs_artifacts(sink, &report, trace_out, metrics_out)?;
+    }
+    cache.save()
+}
+
+/// `sasa trace --jobs jobs.json [--trace-out trace.json] [--metrics-out
+/// metrics.json]` plus all of `serve`'s fleet/fairness flags: replay the
+/// job batch with the event recorder on and write both observability
+/// artifacts without printing the report tables. The schedule is the
+/// same one `serve` would produce (recording never changes decisions),
+/// and both outputs default to the current directory.
+fn cmd_trace(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    let (specs, mut cache, _cache_path, mut exec) = configure_batch(args, platform)?;
+    let trace_out = args.get("trace-out").unwrap_or("trace.json");
+    let metrics_out = args.get("metrics-out").unwrap_or("metrics.json");
+    let (recorder, sink) = sasa::obs::Recorder::to_memory();
+    cache.set_recorder(recorder.clone());
+    exec = exec.with_recorder(recorder);
+    let report = run_saving_cache(&exec, &specs, &mut cache)?;
+    let s = &report.schedule;
+    println!(
+        "replayed {} job(s) on {} board(s): {:.3} ms makespan, {} preemption(s), \
+         {} cache hit(s) / {} exploration(s)",
+        s.jobs.len(),
+        s.boards.len(),
+        s.makespan_s * 1e3,
+        s.preemptions,
+        s.cache_hits,
+        s.explorations
+    );
+    write_obs_artifacts(&sink, &report, Some(trace_out), Some(metrics_out))?;
     cache.save()
 }
 

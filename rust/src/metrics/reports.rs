@@ -1,4 +1,4 @@
-//! One function per paper table/figure (DESIGN.md §7 experiment index),
+//! One function per paper table/figure (DESIGN.md §8 experiment index),
 //! plus the serving layer's fairness table ([`fairness_table`]).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
@@ -406,6 +406,76 @@ mod tests {
         // degenerate inputs render zeros, not NaN
         let none = fairness_table(&[]);
         assert_eq!(none.rows.len(), 0);
+    }
+
+    #[test]
+    fn fairness_table_golden_output() {
+        // golden render: column widths, separator, and cell formatting
+        // are all load-bearing (CI byte-diffs serve output), so assert
+        // the exact markdown, not just substrings
+        let rows = vec![
+            FairnessRow {
+                tenant: "hog".into(),
+                weight: 1,
+                quota_bank_s: Some(0.002),
+                delivered_bank_s: 0.006,
+                parked_s: 0.004,
+                parks: 2,
+            },
+            FairnessRow {
+                tenant: "light".into(),
+                weight: 4,
+                quota_bank_s: None,
+                delivered_bank_s: 0.002,
+                parked_s: 0.0,
+                parks: 0,
+            },
+        ];
+        let expected = "\
+### Per-tenant fairness (weighted fair queuing + bank-second quotas)\n\
+\n\
+| tenant | weight | weight % | bank-ms | delivered % | quota bank-ms | parks | parked ms |\n\
+|--------|--------|----------|---------|-------------|---------------|-------|-----------|\n\
+| hog    | 1      | 20.0     | 6.000   | 75.0        | 2.000         | 2     | 4.000     |\n\
+| light  | 4      | 80.0     | 2.000   | 25.0        | -             | 0     | 0.000     |\n";
+        assert_eq!(fairness_table(&rows).to_markdown(), expected);
+    }
+
+    #[test]
+    fn fairness_table_single_row_and_long_tenant() {
+        // a lone tenant owns 100% of both shares, and a tenant name
+        // longer than every column header must widen its column — every
+        // rendered line stays the same width
+        let rows = vec![FairnessRow {
+            tenant: "a-tenant-named-longer-than-any-header".into(),
+            weight: 3,
+            quota_bank_s: None,
+            delivered_bank_s: 0.0045,
+            parked_s: 0.0,
+            parks: 0,
+        }];
+        let t = fairness_table(&rows);
+        assert_eq!(t.rows[0][2], "100.0", "single tenant holds the whole weight share");
+        assert_eq!(t.rows[0][4], "100.0", "single tenant holds the whole delivered share");
+        let md = t.to_markdown();
+        assert!(md.contains("a-tenant-named-longer-than-any-header"));
+        let widths: Vec<usize> = md
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.chars().count())
+            .collect();
+        assert_eq!(widths.len(), 3, "header, separator, one row");
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "misaligned: {md}");
+    }
+
+    #[test]
+    fn fairness_table_empty_renders_header_only() {
+        // a pass with no tenants still renders a well-formed (empty)
+        // table: header + separator, no NaN shares to divide into
+        let md = fairness_table(&[]).to_markdown();
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 2, "header and separator only: {md}");
+        assert!(lines[0].contains("tenant") && lines[1].starts_with("|-"));
     }
 
     #[test]

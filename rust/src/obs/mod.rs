@@ -1,0 +1,46 @@
+//! `sasa::obs` — deterministic observability for the serving stack.
+//!
+//! The fleet loop grew priority classes, preemption, weighted fair
+//! queuing, and quota parking (DESIGN.md §4–§6); debugging a schedule
+//! from two summary tables means re-deriving the timeline by hand. This
+//! subsystem records what actually happened as structured events and
+//! counters, and exports them in machine-readable forms:
+//!
+//! * [`record`] — the [`Event`] taxonomy (arrivals, admissions with the
+//!   losing candidates' scores, completions, preemptions + refunds,
+//!   quota park/unpark, plan-cache hits/misses/evictions/explores), the
+//!   [`Sink`] trait, the [`Recorder`] handle the instrumented
+//!   constructors accept, and [`EngineCounters`] for the tiered engine's
+//!   per-stage work split.
+//! * [`trace`] — [`chrome_trace`]: the event stream as Chrome
+//!   trace-event JSON (one track per board, one per tenant, instants for
+//!   parks and preemptions), loadable in Perfetto. `--trace-out`.
+//! * [`snapshot`] — [`metrics_snapshot`]: every report table as one JSON
+//!   document with raw numeric fields. `--metrics-out`.
+//!
+//! Two properties hold throughout (and CI gates on both,
+//! `ci/check_trace.py`):
+//!
+//! 1. **Determinism.** Every timestamp is simulated time — the
+//!    schedule's own seconds — never wall-clock; "explore latency" is
+//!    the deterministic predicted-seconds proxy. Identical runs export
+//!    byte-identical artifacts.
+//! 2. **Zero cost when disabled.** A disabled [`Recorder`] holds no
+//!    sink; [`Recorder::emit`] takes a closure it never calls, so the
+//!    default path constructs no event and allocates nothing
+//!    (`tests/obs_noalloc.rs`), and default `sasa serve` output stays
+//!    byte-identical to the pre-observability scheduler — the same
+//!    preservation discipline as the `*_walk` oracles.
+//!
+//! Recorders are handed down through constructors
+//! (`Fleet::with_recorder`, `BatchExecutor::with_recorder`,
+//! `PlanCache::set_recorder`, `Engine::with_counters`) rather than a
+//! global, so concurrent executors can record to separate sinks.
+
+pub mod record;
+pub mod snapshot;
+pub mod trace;
+
+pub use record::{CandidateScore, EngineCounters, Event, MemorySink, NoopSink, Recorder, Sink};
+pub use snapshot::{metrics_snapshot, snapshot_total_iters, METRICS_VERSION};
+pub use trace::chrome_trace;

@@ -1,0 +1,364 @@
+//! Event recorder: the taxonomy of fleet/cache timeline events, the
+//! [`Sink`] trait they are delivered to, and the [`Recorder`] handle that
+//! the scheduler, executor, plan cache, and engine carry.
+//!
+//! Every timestamp in an [`Event`] is **simulated time** — the same
+//! `sim.seconds`-derived clock the fleet timeline runs on — never
+//! wall-clock. Two identical runs therefore produce identical event
+//! streams, which is what lets CI diff exported traces byte for byte
+//! (DESIGN.md §7).
+//!
+//! A disabled recorder holds no sink at all: [`Recorder::emit`] takes a
+//! closure and never invokes it when disabled, so no [`Event`] (and none
+//! of the `String`s inside one) is ever constructed on the default path.
+//! `tests/obs_noalloc.rs` asserts this with a counting global allocator.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{num, obj, Json};
+
+/// One losing feasible (board, predicted latency) pair at the admission
+/// rank the winner was placed at — the alternatives the placement score
+/// rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateScore {
+    /// Board index in the fleet.
+    pub board: usize,
+    /// That board's own platform's cycle-simulated latency for the rank.
+    pub seconds: f64,
+}
+
+/// A structured observation from one of the instrumented subsystems.
+///
+/// Timeline events (`Arrival` … `QuotaUnpark`) carry the fleet clock in
+/// `t_s`; plan-cache events happen at prepare time, *before* the timeline
+/// starts, and are ordered by emission sequence instead (the trace
+/// exporter gives them ordinal pseudo-timestamps). `job` is the segment's
+/// index in the resulting [`Schedule::jobs`](crate::service::Schedule)
+/// vector for admission/completion/preemption, and the submission index
+/// for arrivals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Emitted once when a fleet schedule starts: the board roster.
+    FleetStart {
+        /// `(model, banks)` per board, in board-index order.
+        boards: Vec<(String, u64)>,
+    },
+    /// A job (or a preempted remainder) joined the wait queue.
+    Arrival {
+        t_s: f64,
+        /// Submission index in the input stream.
+        job: usize,
+        tenant: String,
+        kernel: String,
+        priority: &'static str,
+        /// True for a re-enqueued preemption remainder.
+        resumed: bool,
+    },
+    /// A job was admitted onto a board and now occupies banks.
+    Admission {
+        t_s: f64,
+        /// Segment index in `Schedule::jobs`.
+        job: usize,
+        tenant: String,
+        kernel: String,
+        board: usize,
+        /// Candidate rank the placement settled on (0 = DSE optimum).
+        rank: usize,
+        banks: u64,
+        duration_s: f64,
+        cache_hit: bool,
+        /// True when this segment is a re-admitted preemption remainder.
+        resumed: bool,
+        /// The feasible boards that lost at this rank, with the predicted
+        /// latencies the score compared (empty when only one board fit).
+        losers: Vec<CandidateScore>,
+    },
+    /// A running segment finished and released its banks.
+    Completion {
+        t_s: f64,
+        /// Segment index in `Schedule::jobs`.
+        job: usize,
+        tenant: String,
+        board: usize,
+    },
+    /// A batch victim was cut at its next round boundary; the un-run tail
+    /// was refunded to the victim tenant's ledger.
+    Preemption {
+        /// Fleet clock when the preemption was decided.
+        t_s: f64,
+        /// Round boundary where the cut takes effect.
+        boundary_s: f64,
+        /// Victim segment index in `Schedule::jobs`.
+        job: usize,
+        tenant: String,
+        board: usize,
+        /// Bank-seconds credited back for the un-run tail.
+        refund_bank_s: f64,
+        /// Iteration rounds the victim keeps.
+        rounds_kept: u64,
+    },
+    /// A tenant's token bucket went into deficit at admission: the tenant
+    /// is skipped by the pick until `until_s`.
+    QuotaPark { t_s: f64, tenant: String, until_s: f64 },
+    /// A parked tenant's bucket refilled; it is eligible again.
+    QuotaUnpark { t_s: f64, tenant: String },
+    /// A plan-cache lookup was served from a stored plan.
+    CacheHit { key: String },
+    /// A plan-cache lookup found nothing; a DSE exploration follows.
+    CacheMiss { key: String },
+    /// An LRU-capped cache dropped its oldest-used entry.
+    CacheEvict { key: String },
+    /// A DSE exploration finished. `best_seconds` is the deterministic
+    /// latency proxy for the explore cost (the rank-0 candidate's
+    /// cycle-simulated seconds) — never wall-clock.
+    Explored { key: String, candidates: usize, best_seconds: f64 },
+}
+
+impl Event {
+    /// The simulated-time stamp, if this is a timeline event.
+    pub fn t_s(&self) -> Option<f64> {
+        match self {
+            Event::Arrival { t_s, .. }
+            | Event::Admission { t_s, .. }
+            | Event::Completion { t_s, .. }
+            | Event::Preemption { t_s, .. }
+            | Event::QuotaPark { t_s, .. }
+            | Event::QuotaUnpark { t_s, .. } => Some(*t_s),
+            _ => None,
+        }
+    }
+}
+
+/// Where recorded events go. Implementations must be thread-safe: the
+/// plan cache explores candidates on the worker pool.
+pub trait Sink: Send + Sync {
+    fn record(&self, ev: Event);
+}
+
+/// A sink that drops everything. [`Recorder::disabled`] does not even
+/// construct one (it holds no sink at all); this type exists for tests
+/// and for explicitly plugging a recorder that discards.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopSink;
+
+impl Sink for NoopSink {
+    fn record(&self, _ev: Event) {}
+}
+
+/// An in-memory sink: events accumulate in arrival order under a mutex.
+/// This is what `--trace-out` / `--metrics-out` collect into.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl MemorySink {
+    /// Snapshot the recorded events (clones; recording may continue).
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Sink for MemorySink {
+    fn record(&self, ev: Event) {
+        self.events.lock().unwrap().push(ev);
+    }
+}
+
+/// The handle the instrumented subsystems carry. Cloning is cheap (an
+/// `Option<Arc>`); the default is disabled. Handed down through
+/// `Fleet::with_recorder` / `BatchExecutor::with_recorder` /
+/// `PlanCache::set_recorder` rather than a global, so two executors in
+/// one process can record to different sinks.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    sink: Option<Arc<dyn Sink>>,
+}
+
+impl Recorder {
+    /// A recorder that records nothing and allocates nothing per event.
+    pub fn disabled() -> Recorder {
+        Recorder { sink: None }
+    }
+
+    /// A recorder delivering to a fresh [`MemorySink`]; returns both.
+    pub fn to_memory() -> (Recorder, Arc<MemorySink>) {
+        let sink = Arc::new(MemorySink::default());
+        (Recorder { sink: Some(sink.clone()) }, sink)
+    }
+
+    /// A recorder delivering to an arbitrary sink.
+    pub fn to_sink(sink: Arc<dyn Sink>) -> Recorder {
+        Recorder { sink: Some(sink) }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Record one event. The closure is only invoked when a sink is
+    /// attached — a disabled recorder never builds the event, so the hot
+    /// paths pay one branch and zero allocations.
+    #[inline]
+    pub fn emit<F: FnOnce() -> Event>(&self, build: F) {
+        if let Some(sink) = &self.sink {
+            sink.record(build());
+        }
+    }
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Recorder").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+/// Per-stage counters for the tiered stencil engine
+/// (`reference::engine`): how many cells ran through the unclamped
+/// interior row sweep vs the clamped border VM, how many tasks fanned out
+/// to the worker pool, and how often the local-grid arena reused a grid
+/// instead of allocating one.
+///
+/// Counters are relaxed atomics: the engine's pool `run` joins every task
+/// before returning, so totals read after `Engine::run` are exact.
+#[derive(Debug, Default)]
+pub struct EngineCounters {
+    interior_cells: AtomicU64,
+    border_cells: AtomicU64,
+    pool_tasks: AtomicU64,
+    arena_grids_allocated: AtomicU64,
+    arena_grids_reused: AtomicU64,
+}
+
+impl EngineCounters {
+    pub fn add_interior_cells(&self, n: u64) {
+        self.interior_cells.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_border_cells(&self, n: u64) {
+        self.border_cells.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_pool_tasks(&self, n: u64) {
+        self.pool_tasks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_arena_grids_allocated(&self, n: u64) {
+        self.arena_grids_allocated.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_arena_grids_reused(&self, n: u64) {
+        self.arena_grids_reused.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn interior_cells(&self) -> u64 {
+        self.interior_cells.load(Ordering::Relaxed)
+    }
+
+    pub fn border_cells(&self) -> u64 {
+        self.border_cells.load(Ordering::Relaxed)
+    }
+
+    pub fn pool_tasks(&self) -> u64 {
+        self.pool_tasks.load(Ordering::Relaxed)
+    }
+
+    pub fn arena_grids_allocated(&self) -> u64 {
+        self.arena_grids_allocated.load(Ordering::Relaxed)
+    }
+
+    pub fn arena_grids_reused(&self) -> u64 {
+        self.arena_grids_reused.load(Ordering::Relaxed)
+    }
+
+    /// The counters as a JSON object (the `engine` section of a
+    /// `--metrics-out` snapshot).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("interior_cells", num(self.interior_cells() as f64)),
+            ("border_cells", num(self.border_cells() as f64)),
+            ("pool_tasks", num(self.pool_tasks() as f64)),
+            ("arena_grids_allocated", num(self.arena_grids_allocated() as f64)),
+            ("arena_grids_reused", num(self.arena_grids_reused() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_builds_the_event() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        let mut built = false;
+        rec.emit(|| {
+            built = true;
+            Event::CacheHit { key: "k".into() }
+        });
+        assert!(!built, "disabled recorder must not invoke the builder");
+    }
+
+    #[test]
+    fn memory_sink_collects_in_order() {
+        let (rec, sink) = Recorder::to_memory();
+        assert!(rec.is_enabled());
+        rec.emit(|| Event::CacheMiss { key: "a".into() });
+        rec.emit(|| Event::CacheHit { key: "b".into() });
+        let evs = sink.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], Event::CacheMiss { key: "a".into() });
+        assert_eq!(evs[1], Event::CacheHit { key: "b".into() });
+        assert_eq!(sink.take().len(), 2);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_sink() {
+        let (rec, sink) = Recorder::to_memory();
+        let rec2 = rec.clone();
+        rec.emit(|| Event::CacheHit { key: "x".into() });
+        rec2.emit(|| Event::CacheHit { key: "y".into() });
+        assert_eq!(sink.len(), 2);
+    }
+
+    #[test]
+    fn engine_counters_accumulate() {
+        let c = EngineCounters::default();
+        c.add_interior_cells(100);
+        c.add_interior_cells(20);
+        c.add_border_cells(7);
+        c.add_pool_tasks(3);
+        c.add_arena_grids_allocated(2);
+        c.add_arena_grids_reused(14);
+        assert_eq!(c.interior_cells(), 120);
+        assert_eq!(c.border_cells(), 7);
+        let j = c.to_json();
+        assert_eq!(j.get("pool_tasks").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("arena_grids_reused").and_then(Json::as_u64), Some(14));
+    }
+
+    #[test]
+    fn timeline_stamp_accessor() {
+        let ev = Event::QuotaPark { t_s: 0.25, tenant: "t".into(), until_s: 0.5 };
+        assert_eq!(ev.t_s(), Some(0.25));
+        assert_eq!(Event::CacheHit { key: "k".into() }.t_s(), None);
+    }
+}

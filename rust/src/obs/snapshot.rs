@@ -1,0 +1,267 @@
+//! Machine-readable metrics snapshot: the `--metrics-out` JSON document.
+//!
+//! Mirrors every table a batch report renders — jobs, tenants, classes,
+//! per-board utilization, the fairness table when present, and the
+//! service summary — as one JSON object with raw numeric fields
+//! (seconds, bank-seconds, cells), so downstream tooling reads values
+//! directly instead of screen-scraping the markdown tables. The numbers
+//! are the *same* numbers the tables format: `tests/obs_trace.rs`
+//! cross-checks the snapshot against the rendered tables for the
+//! shipped `examples/jobs.json` stream.
+//!
+//! Serialization is deterministic: `util::json` objects are
+//! `BTreeMap`-backed (sorted keys) and every array here follows the
+//! table row order, so two identical runs write byte-identical files.
+
+use crate::service::BatchReport;
+use crate::util::json::{num, obj, s, Json};
+
+use super::record::EngineCounters;
+
+/// The snapshot document version (bump on breaking shape changes).
+pub const METRICS_VERSION: u64 = 1;
+
+/// Render a batch report (plus optional engine counters) as the
+/// `--metrics-out` JSON document.
+pub fn metrics_snapshot(report: &BatchReport, engine: Option<&EngineCounters>) -> Json {
+    let sched = &report.schedule;
+    let mut fields = vec![
+        ("version", num(METRICS_VERSION as f64)),
+        (
+            "summary",
+            obj(vec![
+                ("jobs", num(sched.jobs.len() as f64)),
+                ("boards", num(sched.boards.len() as f64)),
+                ("pool_banks", num(sched.pool_banks as f64)),
+                ("makespan_s", num(sched.makespan_s)),
+                ("peak_concurrency", num(sched.peak_concurrency as f64)),
+                ("peak_banks_in_use", num(sched.peak_banks_in_use as f64)),
+                ("bank_seconds_used", num(sched.bank_seconds_used)),
+                ("bank_utilization_pct", num(sched.bank_utilization() * 100.0)),
+                ("preemptions", num(sched.preemptions as f64)),
+                ("cache_hits", num(sched.cache_hits as f64)),
+                ("explorations", num(sched.explorations as f64)),
+            ]),
+        ),
+        (
+            "jobs",
+            Json::Arr(
+                sched
+                    .jobs
+                    .iter()
+                    .map(|j| {
+                        obj(vec![
+                            ("tenant", s(j.spec.tenant.clone())),
+                            ("kernel", s(j.spec.kernel.clone())),
+                            ("dims", s(j.spec.dims_label())),
+                            ("iter", num(j.spec.iter as f64)),
+                            ("priority", s(j.spec.priority.name())),
+                            ("board", num(j.board as f64)),
+                            ("config", s(j.config.to_string())),
+                            ("banks", num(j.hbm_banks as f64)),
+                            ("plan", s(if j.cache_hit { "hit" } else { "explored" })),
+                            ("fallback_rank", num(j.fallback_rank as f64)),
+                            (
+                                "segment",
+                                s(match (j.preempted, j.resumed) {
+                                    (true, _) => "cut",
+                                    (false, true) => "resume",
+                                    (false, false) => "-",
+                                }),
+                            ),
+                            ("arrival_s", num(j.spec.arrival_s)),
+                            ("queue_wait_s", num(j.queue_wait_s)),
+                            ("start_s", num(j.start_s)),
+                            ("finish_s", num(j.finish_s)),
+                            ("gcell_per_s", num(j.sim.gcell_per_s)),
+                            ("cells", num(j.cells as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tenants",
+            Json::Arr(
+                report
+                    .tenants
+                    .iter()
+                    .map(|t| {
+                        obj(vec![
+                            ("tenant", s(t.tenant.clone())),
+                            ("jobs", num(t.jobs as f64)),
+                            ("cells", num(t.cells as f64)),
+                            ("span_s", num(t.span_s)),
+                            ("gcell_per_s", num(t.gcell_per_s)),
+                            ("mean_wait_s", num(t.mean_wait_s)),
+                            ("weight", num(t.weight as f64)),
+                            ("delivered_bank_s", num(t.delivered_bank_s)),
+                            ("fair_share_pct", num(t.fair_share_pct)),
+                            ("throttled_s", num(t.throttled_s)),
+                            ("parks", num(t.parks as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "classes",
+            Json::Arr(
+                report
+                    .classes
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("class", s(c.class.name())),
+                            ("jobs", num(c.jobs as f64)),
+                            ("p50_wait_s", num(c.p50_wait_s)),
+                            ("p95_wait_s", num(c.p95_wait_s)),
+                            ("max_wait_s", num(c.max_wait_s)),
+                            ("p50_turnaround_s", num(c.p50_turnaround_s)),
+                            ("p95_turnaround_s", num(c.p95_turnaround_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "boards",
+            Json::Arr(
+                sched
+                    .boards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        obj(vec![
+                            ("board", num(i as f64)),
+                            ("model", s(b.model.clone())),
+                            ("banks", num(b.banks as f64)),
+                            ("jobs", num(b.jobs as f64)),
+                            ("peak_banks", num(b.peak_banks as f64)),
+                            ("bank_seconds", num(b.bank_seconds)),
+                            (
+                                "utilization_pct",
+                                num(b.utilization(sched.makespan_s) * 100.0),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(fairness) = &sched.fairness {
+        fields.push((
+            "fairness",
+            Json::Arr(
+                fairness
+                    .iter()
+                    .map(|t| {
+                        obj(vec![
+                            ("tenant", s(t.tenant.clone())),
+                            ("weight", num(t.weight as f64)),
+                            (
+                                "quota_bank_s",
+                                t.quota_bank_s.map_or(Json::Null, num),
+                            ),
+                            ("delivered_bank_s", num(t.delivered_bank_s)),
+                            ("parked_s", num(t.parked_s)),
+                            ("parks", num(t.parks as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    if let Some(counters) = engine {
+        fields.push(("engine", counters.to_json()));
+    }
+    obj(fields)
+}
+
+/// The iteration total a snapshot accounts for (sum of per-segment
+/// `iter`): preemption splits a job's iterations across segments, so the
+/// sum is conserved — a cross-check the tests lean on.
+pub fn snapshot_total_iters(snapshot: &Json) -> u64 {
+    snapshot
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .map(|jobs| jobs.iter().map(|j| j.u64_or("iter", 0)).sum())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::FpgaPlatform;
+    use crate::service::{demo_jobs, BatchExecutor, PlanCache};
+
+    fn demo_report() -> BatchReport {
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap()
+    }
+
+    #[test]
+    fn snapshot_mirrors_schedule_totals() {
+        let report = demo_report();
+        let snap = metrics_snapshot(&report, None);
+        assert_eq!(snap.u64_or("version", 0), METRICS_VERSION);
+
+        let summary = snap.get("summary").unwrap();
+        assert_eq!(summary.u64_or("jobs", 0), report.schedule.jobs.len() as u64);
+        let jobs = snap.get("jobs").and_then(Json::as_arr).unwrap();
+        assert_eq!(jobs.len(), report.schedule.jobs.len());
+
+        // bank-seconds: Σ banks × span over segments == the summary integral
+        let total: f64 = jobs
+            .iter()
+            .map(|j| {
+                let banks = j.get("banks").and_then(Json::as_f64).unwrap();
+                let start = j.get("start_s").and_then(Json::as_f64).unwrap();
+                let finish = j.get("finish_s").and_then(Json::as_f64).unwrap();
+                banks * (finish - start)
+            })
+            .sum();
+        let used = summary.get("bank_seconds_used").and_then(Json::as_f64).unwrap();
+        assert!((total - used).abs() <= 1e-9 * used.max(1.0), "{total} vs {used}");
+
+        // iteration conservation across segments
+        let iters: u64 = demo_jobs().iter().map(|s| s.iter).sum();
+        assert_eq!(snapshot_total_iters(&snap), iters);
+
+        // tenant rows mirror the aggregates
+        let tenants = snap.get("tenants").and_then(Json::as_arr).unwrap();
+        assert_eq!(tenants.len(), report.tenants.len());
+        for (row, t) in tenants.iter().zip(&report.tenants) {
+            assert_eq!(row.str_or("tenant", ""), t.tenant);
+            assert_eq!(row.u64_or("jobs", 0), t.jobs as u64);
+            assert_eq!(row.get("cells").and_then(Json::as_f64), Some(t.cells as f64));
+        }
+
+        // no fairness / engine sections unless provided
+        assert!(snap.get("fairness").is_none());
+        assert!(snap.get("engine").is_none());
+
+        // the document round-trips through the JSON wire form
+        let wire = snap.to_string();
+        assert_eq!(Json::parse(&wire).unwrap(), snap);
+    }
+
+    #[test]
+    fn engine_section_appears_when_counters_given() {
+        let report = demo_report();
+        let counters = EngineCounters::default();
+        counters.add_interior_cells(42);
+        let snap = metrics_snapshot(&report, Some(&counters));
+        let engine = snap.get("engine").unwrap();
+        assert_eq!(engine.u64_or("interior_cells", 0), 42);
+    }
+
+    #[test]
+    fn deterministic_serialization() {
+        let report = demo_report();
+        let a = metrics_snapshot(&report, None).to_string();
+        let b = metrics_snapshot(&report, None).to_string();
+        assert_eq!(a, b);
+    }
+}

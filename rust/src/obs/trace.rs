@@ -1,0 +1,584 @@
+//! Chrome trace-event exporter: renders a recorded event stream as the
+//! JSON Array Format that `chrome://tracing` and [Perfetto] load.
+//!
+//! Track layout (DESIGN.md §7):
+//!
+//! * one process (pid) per **board**, named `board<i> (<model>)`, with a
+//!   `B`/`E` span per admitted segment and instant events for
+//!   preemption cuts;
+//! * one process per **tenant**, named `tenant:<name>`, mirroring that
+//!   tenant's segments plus instants for arrivals and quota
+//!   park/unpark;
+//! * one `plan-cache` process for hit/miss/evict/explore instants.
+//!
+//! Concurrent segments on one board (or one tenant) are split across
+//! lanes (tids) deterministically: each span takes the lowest-numbered
+//! lane whose previous span has already ended, so `B`/`E` pairs on every
+//! `(pid, tid)` track nest without overlap — a Perfetto requirement and
+//! what `ci/check_trace.py` validates.
+//!
+//! Timestamps are the schedule's own simulated seconds scaled to
+//! microseconds (the trace `ts` unit); plan-cache events happen at
+//! prepare time before the timeline starts, so their `ts` is the
+//! emission ordinal instead. Both are deterministic, never wall-clock.
+//!
+//! [Perfetto]: https://ui.perfetto.dev
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::record::Event;
+
+/// Seconds → trace `ts` microseconds.
+fn us(t_s: f64) -> f64 {
+    t_s * 1e6
+}
+
+/// One run span reconstructed from an Admission/Completion pair.
+struct Span {
+    seg: usize,
+    start_s: f64,
+    end_s: f64,
+    name: String,
+    tenant: String,
+    board: usize,
+    args: Json,
+}
+
+/// Sort order for entries sharing one `(pid, tid, ts)` slot: a span end
+/// must precede a span begin that starts the instant it freed the lane.
+fn phase_order(ph: &str) -> u8 {
+    match ph {
+        "M" => 0,
+        "E" => 1,
+        "B" => 2,
+        _ => 3,
+    }
+}
+
+/// Assign non-overlapping lanes (tids ≥ 1) to spans already sorted by
+/// `(start, end, seg)`: each span takes the lowest lane whose previous
+/// occupant ended at or before the span's start.
+fn assign_lanes(spans: &[&Span]) -> Vec<u64> {
+    let mut lane_end: Vec<f64> = Vec::new();
+    let mut tids = Vec::with_capacity(spans.len());
+    for sp in spans {
+        let lane = match lane_end.iter().position(|&e| e <= sp.start_s) {
+            Some(l) => l,
+            None => {
+                lane_end.push(f64::NEG_INFINITY);
+                lane_end.len() - 1
+            }
+        };
+        lane_end[lane] = sp.end_s;
+        tids.push(lane as u64 + 1);
+    }
+    tids
+}
+
+fn metadata(pid: u64, name: &str) -> Json {
+    obj(vec![
+        ("args", obj(vec![("name", s(name))])),
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+        ("tid", num(0.0)),
+        ("ts", num(0.0)),
+    ])
+}
+
+fn instant(pid: u64, ts: f64, name: &str, args: Json) -> Json {
+    obj(vec![
+        ("args", args),
+        ("name", s(name)),
+        ("ph", s("i")),
+        ("pid", num(pid as f64)),
+        ("s", s("t")),
+        ("tid", num(0.0)),
+        ("ts", num(ts)),
+    ])
+}
+
+/// Render an event stream (as recorded by a
+/// [`MemorySink`](super::record::MemorySink)) into Chrome trace-event
+/// JSON: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+///
+/// Output is fully deterministic for a deterministic event stream:
+/// object keys serialize sorted (`util::json` is `BTreeMap`-backed) and
+/// the event array is sorted by `(pid, tid, ts, phase)`.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    // -- roster: boards from FleetStart, tenants from every event
+    let mut boards: Vec<(String, u64)> = Vec::new();
+    let mut tenants: BTreeSet<String> = BTreeSet::new();
+    let mut max_board = 0usize;
+    for ev in events {
+        match ev {
+            Event::FleetStart { boards: b } => {
+                if boards.is_empty() {
+                    boards = b.clone();
+                }
+            }
+            Event::Arrival { tenant, .. } | Event::QuotaPark { tenant, .. } | Event::QuotaUnpark { tenant, .. } => {
+                tenants.insert(tenant.clone());
+            }
+            Event::Admission { tenant, board, .. }
+            | Event::Completion { tenant, board, .. }
+            | Event::Preemption { tenant, board, .. } => {
+                tenants.insert(tenant.clone());
+                max_board = max_board.max(*board);
+            }
+            _ => {}
+        }
+    }
+    while boards.len() <= max_board {
+        boards.push(("board".to_string(), 0));
+    }
+    let tenants: Vec<String> = tenants.into_iter().collect();
+    let board_pid = |b: usize| b as u64 + 1;
+    let tenant_pid = |t: usize| (boards.len() + 1 + t) as u64;
+    let cache_pid = (boards.len() + tenants.len() + 1) as u64;
+
+    // -- spans: pair admissions with completions per segment index
+    let mut spans: BTreeMap<usize, Span> = BTreeMap::new();
+    for ev in events {
+        match ev {
+            Event::Admission {
+                t_s,
+                job,
+                tenant,
+                kernel,
+                board,
+                rank,
+                banks,
+                duration_s,
+                cache_hit,
+                resumed,
+                losers,
+            } => {
+                let mut args = vec![
+                    ("banks", num(*banks as f64)),
+                    ("plan", s(if *cache_hit { "hit" } else { "explored" })),
+                    ("rank", num(*rank as f64)),
+                    ("seg", num(*job as f64)),
+                ];
+                if *resumed {
+                    args.push(("resumed", Json::Bool(true)));
+                }
+                if !losers.is_empty() {
+                    args.push((
+                        "losers",
+                        Json::Arr(
+                            losers
+                                .iter()
+                                .map(|l| {
+                                    obj(vec![
+                                        ("board", num(l.board as f64)),
+                                        ("seconds", num(l.seconds)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                spans.insert(
+                    *job,
+                    Span {
+                        seg: *job,
+                        start_s: *t_s,
+                        end_s: *t_s + *duration_s,
+                        name: format!("{tenant}/{kernel}#{job}"),
+                        tenant: tenant.clone(),
+                        board: *board,
+                        args: obj(args),
+                    },
+                );
+            }
+            Event::Completion { t_s, job, .. } => {
+                if let Some(sp) = spans.get_mut(job) {
+                    sp.end_s = *t_s;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // -- entries, each tagged (pid, tid, ts, phase) for the final sort
+    let mut entries: Vec<(u64, u64, f64, u8, Json)> = Vec::new();
+    let mut push = |pid: u64, tid: u64, ts: f64, ph: &str, j: Json| {
+        entries.push((pid, tid, ts, phase_order(ph), j));
+    };
+
+    for (b, (model, banks)) in boards.iter().enumerate() {
+        let label = if *banks > 0 {
+            format!("board{b} ({model}, {banks} banks)")
+        } else {
+            format!("board{b} ({model})")
+        };
+        push(board_pid(b), 0, 0.0, "M", metadata(board_pid(b), &label));
+    }
+    for (t, name) in tenants.iter().enumerate() {
+        push(tenant_pid(t), 0, 0.0, "M", metadata(tenant_pid(t), &format!("tenant:{name}")));
+    }
+
+    // -- run spans, laned per board pid and (mirrored) per tenant pid
+    let mut sorted: Vec<&Span> = spans.values().collect();
+    sorted.sort_by(|a, b| {
+        a.start_s
+            .total_cmp(&b.start_s)
+            .then(a.end_s.total_cmp(&b.end_s))
+            .then(a.seg.cmp(&b.seg))
+    });
+    for group_by_tenant in [false, true] {
+        let groups: BTreeSet<u64> = sorted
+            .iter()
+            .map(|sp| {
+                if group_by_tenant {
+                    tenant_pid(tenants.iter().position(|t| *t == sp.tenant).unwrap())
+                } else {
+                    board_pid(sp.board)
+                }
+            })
+            .collect();
+        for pid in groups {
+            let group: Vec<&Span> = sorted
+                .iter()
+                .filter(|sp| {
+                    let p = if group_by_tenant {
+                        tenant_pid(tenants.iter().position(|t| *t == sp.tenant).unwrap())
+                    } else {
+                        board_pid(sp.board)
+                    };
+                    p == pid
+                })
+                .copied()
+                .collect();
+            let tids = assign_lanes(&group);
+            for (sp, tid) in group.iter().zip(tids) {
+                push(
+                    pid,
+                    tid,
+                    us(sp.start_s),
+                    "B",
+                    obj(vec![
+                        ("args", sp.args.clone()),
+                        ("cat", s("run")),
+                        ("name", s(sp.name.clone())),
+                        ("ph", s("B")),
+                        ("pid", num(pid as f64)),
+                        ("tid", num(tid as f64)),
+                        ("ts", num(us(sp.start_s))),
+                    ]),
+                );
+                push(
+                    pid,
+                    tid,
+                    us(sp.end_s),
+                    "E",
+                    obj(vec![
+                        ("name", s(sp.name.clone())),
+                        ("ph", s("E")),
+                        ("pid", num(pid as f64)),
+                        ("tid", num(tid as f64)),
+                        ("ts", num(us(sp.end_s))),
+                    ]),
+                );
+            }
+        }
+    }
+
+    // -- instants: arrivals/parks/unparks on tenant tracks, preemption
+    //    cuts on board tracks, cache activity on its own ordinal track
+    let mut cache_seq = 0u64;
+    for ev in events {
+        match ev {
+            Event::Arrival { t_s, job, tenant, kernel, priority, resumed } => {
+                let t = tenants.iter().position(|x| x == tenant).unwrap();
+                push(
+                    tenant_pid(t),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        tenant_pid(t),
+                        us(*t_s),
+                        &format!("arrival {kernel}"),
+                        obj(vec![
+                            ("job", num(*job as f64)),
+                            ("priority", s(*priority)),
+                            ("resumed", Json::Bool(*resumed)),
+                        ]),
+                    ),
+                );
+            }
+            Event::QuotaPark { t_s, tenant, until_s } => {
+                let t = tenants.iter().position(|x| x == tenant).unwrap();
+                push(
+                    tenant_pid(t),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        tenant_pid(t),
+                        us(*t_s),
+                        "quota park",
+                        obj(vec![("until_s", num(*until_s))]),
+                    ),
+                );
+            }
+            Event::QuotaUnpark { t_s, tenant } => {
+                let t = tenants.iter().position(|x| x == tenant).unwrap();
+                push(
+                    tenant_pid(t),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(tenant_pid(t), us(*t_s), "quota unpark", obj(vec![])),
+                );
+            }
+            Event::Preemption { t_s, boundary_s, job, tenant, board, refund_bank_s, rounds_kept } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*boundary_s),
+                    "i",
+                    instant(
+                        board_pid(*board),
+                        us(*boundary_s),
+                        &format!("preempt {tenant}#{job}"),
+                        obj(vec![
+                            ("refund_bank_s", num(*refund_bank_s)),
+                            ("requested_at_s", num(*t_s)),
+                            ("rounds_kept", num(*rounds_kept as f64)),
+                        ]),
+                    ),
+                );
+            }
+            Event::CacheHit { key } | Event::CacheMiss { key } | Event::CacheEvict { key } => {
+                let name = match ev {
+                    Event::CacheHit { .. } => "hit",
+                    Event::CacheMiss { .. } => "miss",
+                    _ => "evict",
+                };
+                push(
+                    cache_pid,
+                    0,
+                    cache_seq as f64,
+                    "i",
+                    instant(cache_pid, cache_seq as f64, name, obj(vec![("key", s(key.clone()))])),
+                );
+                cache_seq += 1;
+            }
+            Event::Explored { key, candidates, best_seconds } => {
+                push(
+                    cache_pid,
+                    0,
+                    cache_seq as f64,
+                    "i",
+                    instant(
+                        cache_pid,
+                        cache_seq as f64,
+                        "explore",
+                        obj(vec![
+                            ("best_seconds", num(*best_seconds)),
+                            ("candidates", num(*candidates as f64)),
+                            ("key", s(key.clone())),
+                        ]),
+                    ),
+                );
+                cache_seq += 1;
+            }
+            _ => {}
+        }
+    }
+    if cache_seq > 0 {
+        push(cache_pid, 0, 0.0, "M", metadata(cache_pid, "plan-cache"));
+    }
+
+    entries.sort_by(|a, b| {
+        a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.total_cmp(&b.2)).then(a.3.cmp(&b.3))
+    });
+    obj(vec![
+        ("displayTimeUnit", s("ms")),
+        ("traceEvents", Json::Arr(entries.into_iter().map(|e| e.4).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::record::CandidateScore;
+    use super::*;
+
+    fn admission(job: usize, tenant: &str, board: usize, t_s: f64, dur: f64) -> Event {
+        Event::Admission {
+            t_s,
+            job,
+            tenant: tenant.into(),
+            kernel: "jacobi2d".into(),
+            board,
+            rank: 0,
+            banks: 8,
+            duration_s: dur,
+            cache_hit: true,
+            resumed: false,
+            losers: vec![CandidateScore { board: 1 - board, seconds: dur * 2.0 }],
+        }
+    }
+
+    fn completion(job: usize, tenant: &str, board: usize, t_s: f64) -> Event {
+        Event::Completion { t_s, job, tenant: tenant.into(), board }
+    }
+
+    fn track_events(trace: &Json) -> &[Json] {
+        trace.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array")
+    }
+
+    #[test]
+    fn spans_balance_and_nest_per_track() {
+        let events = vec![
+            Event::FleetStart { boards: vec![("u280".into(), 32), ("u50".into(), 24)] },
+            admission(0, "alice", 0, 0.0, 0.002),
+            admission(1, "bob", 0, 0.0005, 0.001), // overlaps seg 0 on board 0
+            completion(1, "bob", 0, 0.0015),
+            completion(0, "alice", 0, 0.002),
+        ];
+        let trace = chrome_trace(&events);
+        let evs = track_events(&trace);
+        // per (pid, tid): timestamps non-decreasing, B/E balanced
+        let mut stacks: BTreeMap<(u64, u64), (f64, i64)> = BTreeMap::new();
+        for ev in evs {
+            let pid = ev.get("pid").and_then(Json::as_u64).unwrap();
+            let tid = ev.get("tid").and_then(Json::as_u64).unwrap();
+            let ts = ev.get("ts").and_then(Json::as_f64).unwrap();
+            let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+            let e = stacks.entry((pid, tid)).or_insert((f64::NEG_INFINITY, 0));
+            assert!(ts >= e.0, "ts must be monotone per track");
+            e.0 = ts;
+            match ph {
+                "B" => e.1 += 1,
+                "E" => {
+                    e.1 -= 1;
+                    assert!(e.1 >= 0, "E without matching B");
+                }
+                _ => {}
+            }
+        }
+        for ((pid, tid), (_, depth)) in &stacks {
+            assert_eq!(*depth, 0, "unbalanced spans on pid {pid} tid {tid}");
+        }
+        // the two overlapping board-0 segments landed on different lanes
+        let b_tids: BTreeSet<u64> = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("B")
+                    && e.get("pid").and_then(Json::as_u64) == Some(1)
+            })
+            .map(|e| e.get("tid").and_then(Json::as_u64).unwrap())
+            .collect();
+        assert_eq!(b_tids.len(), 2, "overlapping spans need distinct lanes");
+    }
+
+    #[test]
+    fn one_span_per_segment_and_metadata_names() {
+        let events = vec![
+            Event::FleetStart { boards: vec![("u280".into(), 32)] },
+            admission(0, "alice", 0, 0.0, 0.001),
+            completion(0, "alice", 0, 0.001),
+            admission(1, "alice", 0, 0.001, 0.001),
+            completion(1, "alice", 0, 0.002),
+        ];
+        let trace = chrome_trace(&events);
+        let evs = track_events(&trace);
+        // board pid 1 carries one B per segment; tenant track mirrors them
+        let b_count = |pid: u64| {
+            evs.iter()
+                .filter(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some("B")
+                        && e.get("pid").and_then(Json::as_u64) == Some(pid)
+                })
+                .count()
+        };
+        assert_eq!(b_count(1), 2, "board track: one span per segment");
+        assert_eq!(b_count(2), 2, "tenant track mirrors the segments");
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(names, vec!["board0 (u280, 32 banks)", "tenant:alice"]);
+    }
+
+    #[test]
+    fn instants_and_cache_track() {
+        let events = vec![
+            Event::FleetStart { boards: vec![("u280".into(), 32)] },
+            Event::CacheMiss { key: "k1".into() },
+            Event::Explored { key: "k1".into(), candidates: 5, best_seconds: 0.001 },
+            Event::CacheHit { key: "k1".into() },
+            Event::Arrival {
+                t_s: 0.0,
+                job: 0,
+                tenant: "alice".into(),
+                kernel: "blur".into(),
+                priority: "batch",
+                resumed: false,
+            },
+            admission(0, "alice", 0, 0.0, 0.002),
+            Event::QuotaPark { t_s: 0.0, tenant: "alice".into(), until_s: 0.004 },
+            Event::QuotaUnpark { t_s: 0.004, tenant: "alice".into() },
+            completion(0, "alice", 0, 0.002),
+        ];
+        let trace = chrome_trace(&events);
+        let evs = track_events(&trace);
+        let names: BTreeSet<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .map(|e| e.get("name").and_then(Json::as_str).unwrap())
+            .collect();
+        for expect in ["arrival blur", "quota park", "quota unpark", "miss", "explore", "hit"] {
+            assert!(names.contains(expect), "missing instant {expect:?}");
+        }
+        // cache events live on their own pid with ordinal timestamps
+        let cache_ts: Vec<f64> = evs
+            .iter()
+            .filter(|e| {
+                e.get("pid").and_then(Json::as_u64) == Some(3)
+                    && e.get("ph").and_then(Json::as_str) == Some("i")
+            })
+            .map(|e| e.get("ts").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(cache_ts, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn preemption_shortens_the_victim_span() {
+        let events = vec![
+            Event::FleetStart { boards: vec![("u280".into(), 32)] },
+            admission(0, "bob", 0, 0.0, 0.010),
+            Event::Preemption {
+                t_s: 0.001,
+                boundary_s: 0.002,
+                job: 0,
+                tenant: "bob".into(),
+                board: 0,
+                refund_bank_s: 0.064,
+                rounds_kept: 2,
+            },
+            completion(0, "bob", 0, 0.002),
+        ];
+        let trace = chrome_trace(&events);
+        let evs = track_events(&trace);
+        let end = evs
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("E")
+                    && e.get("pid").and_then(Json::as_u64) == Some(1)
+            })
+            .and_then(|e| e.get("ts").and_then(Json::as_f64))
+            .unwrap();
+        assert_eq!(end, 2000.0, "span ends at the boundary, not the planned finish");
+        assert!(evs.iter().any(|e| {
+            e.get("name").and_then(Json::as_str).is_some_and(|n| n.starts_with("preempt"))
+        }));
+    }
+}

@@ -23,8 +23,10 @@
 //! exactly the per-cell VM's (see `tests/property_engine.rs`).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::dsl::{analyze, BinOp, Expr, StencilProgram, StmtKind};
+use crate::obs::EngineCounters;
 use crate::util::pool::Pool;
 
 use super::Grid;
@@ -396,7 +398,9 @@ fn eval_cells_clamped(
 }
 
 /// Evaluate one statement over a band of rows: interior via row sweeps,
-/// the clamped frame via the per-cell path.
+/// the clamped frame via the per-cell path. `ctr` (when recording) splits
+/// the band's cells into interior-sweep vs border-VM work — counting never
+/// changes what is evaluated.
 #[allow(clippy::too_many_arguments)]
 fn eval_band(
     prog: &Compiled,
@@ -407,6 +411,7 @@ fn eval_band(
     out: &mut [f32],
     out_base: usize,
     sc: &mut Scratch,
+    ctr: Option<&EngineCounters>,
 ) {
     let (c0, c1) = col_range;
     let nrows_total = grids[0].rows;
@@ -417,8 +422,16 @@ fn eval_band(
     let int_c0 = c0.max((-prog.min_dc).max(0) as usize);
     let int_c1 = c1.min((cols as i64 - prog.max_dc.max(0)).max(0) as usize);
     if int_r0 >= int_r1 || int_c0 >= int_c1 {
+        if let Some(ctr) = ctr {
+            ctr.add_border_cells(rows.len() as u64 * (c1 - c0) as u64);
+        }
         eval_cells_clamped(prog, grids, rows, col_range, cols, out, out_base, &mut sc.stack);
         return;
+    }
+    if let Some(ctr) = ctr {
+        let interior = (int_r1 - int_r0) as u64 * (int_c1 - int_c0) as u64;
+        ctr.add_interior_cells(interior);
+        ctr.add_border_cells(rows.len() as u64 * (c1 - c0) as u64 - interior);
     }
     if rows.start < int_r0 {
         eval_cells_clamped(
@@ -461,6 +474,7 @@ fn eval_region(
     col_range: (usize, usize),
     out: &mut Grid,
     scratch: &mut ScratchPool,
+    ctr: Option<&EngineCounters>,
 ) {
     let total = rows.len();
     if total == 0 || col_range.0 >= col_range.1 {
@@ -480,7 +494,7 @@ fn eval_region(
     if n_tasks == 1 {
         eval_band(
             prog, grids, base..rows.end, col_range, cols, band, base,
-            &mut scratch.per_worker[0],
+            &mut scratch.per_worker[0], ctr,
         );
         return;
     }
@@ -494,8 +508,11 @@ fn eval_region(
         let start = base + ci * chunk;
         let end = start + slab.len() / cols;
         tasks.push(Box::new(move || {
-            eval_band(prog, grids, start..end, col_range, cols, slab, start, sc);
+            eval_band(prog, grids, start..end, col_range, cols, slab, start, sc, ctr);
         }));
+    }
+    if let Some(ctr) = ctr {
+        ctr.add_pool_tasks(tasks.len() as u64);
     }
     pool.run(tasks);
 }
@@ -515,6 +532,9 @@ pub struct Engine {
     /// Kernel radii (live-region geometry, after local-chain composition).
     pr: usize,
     pc: usize,
+    /// Optional per-stage work counters ([`crate::obs`]); `None` (the
+    /// default) counts nothing and evaluation is untouched either way.
+    counters: Option<Arc<EngineCounters>>,
 }
 
 impl Engine {
@@ -540,7 +560,17 @@ impl Engine {
             out_prog,
             pr: info.radius_rows as usize,
             pc: info.radius_cols as usize,
+            counters: None,
         }
+    }
+
+    /// Attach per-stage work counters: every [`Engine::run`] splits its
+    /// evaluated cells into interior-sweep vs border-VM work and reports
+    /// pool fan-out and arena reuse. Counters are relaxed atomics shared
+    /// by reference, so one registry can aggregate across engines.
+    pub fn with_counters(mut self, counters: Arc<EngineCounters>) -> Engine {
+        self.counters = Some(counters);
+        self
     }
 
     fn collect_grids<'a>(
@@ -574,6 +604,13 @@ impl Engine {
         let mut next = cur.clone();
         let mut arena: Vec<Grid> =
             (0..self.local_progs.len()).map(|_| Grid::new(maxr, cols)).collect();
+        let ctr = self.counters.as_deref();
+        if let Some(ctr) = ctr {
+            // the arena allocates once; every later step reuses it where
+            // the naive oracle would allocate fresh local grids
+            ctr.add_arena_grids_allocated(arena.len() as u64);
+            ctr.add_arena_grids_reused(arena.len() as u64 * (nsteps - 1));
+        }
         let mut scratch = ScratchPool::new();
         let live_top = self.pr;
         let live_bot = nrows.saturating_sub(self.pr).min(maxr);
@@ -584,14 +621,14 @@ impl Engine {
                 let grids = self.collect_grids(inputs, &cur, done);
                 eval_region(
                     &self.local_progs[j], &grids, 0..maxr, (0, cols), &mut rest[0],
-                    &mut scratch,
+                    &mut scratch, ctr,
                 );
             }
             if live_top < live_bot && c0 < c1 {
                 let grids = self.collect_grids(inputs, &cur, &arena);
                 eval_region(
                     &self.out_prog, &grids, live_top..live_bot, (c0, c1), &mut next,
-                    &mut scratch,
+                    &mut scratch, ctr,
                 );
                 // the cells outside the evaluated region are identical in
                 // both buffers (copy-through borders are never written)
@@ -741,6 +778,30 @@ mod tests {
         assert!(c.max_stack < c.ops.len(), "must beat the ops.len() bound");
         // extents of the 5-point star
         assert_eq!((c.min_dr, c.max_dr, c.min_dc, c.max_dc), (-1, 1, -1, 1));
+    }
+
+    #[test]
+    fn counters_account_for_every_evaluated_cell() {
+        let mut rng = Prng::new(3);
+        let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[12, 16], 2)).unwrap();
+        let info = analyze(&prog);
+        let inputs: Vec<Grid> = (0..info.n_inputs)
+            .map(|_| Grid::from_vec(12, 16, rng.grid(12, 16, -1.0, 1.0)))
+            .collect();
+        let counters = Arc::new(EngineCounters::default());
+        let engine = Engine::new(&prog).with_counters(counters.clone());
+        let out = engine.run(&inputs, 12, 2);
+        // counting never changes evaluation
+        assert_eq!(out, interpret_naive(&prog, &inputs, 12, 2));
+        // the live region is (12-2)x(16-2) = 140 cells, evaluated twice,
+        // and the tier split is exhaustive
+        assert_eq!(counters.interior_cells() + counters.border_cells(), 280);
+        assert!(counters.interior_cells() > 0);
+        // jacobi2d has no local statements: nothing in the arena
+        assert_eq!(counters.arena_grids_allocated(), 0);
+        assert_eq!(counters.arena_grids_reused(), 0);
+        // 140 cells per region is far below the pool threshold: inline
+        assert_eq!(counters.pool_tasks(), 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::dsl::KernelInfo;
 use crate::model::{explore, Bounds, Config, DseChoice, DseResult, ModelParams, Parallelism};
+use crate::obs::{Event, Recorder};
 use crate::platform::{DesignStyle, FpgaPlatform, Resources, RESOURCE_MODEL_VERSION};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::pool::Pool;
@@ -71,6 +72,7 @@ pub struct PlanCache {
     /// When set, inserts evict the least-recently-used entries over cap.
     max_entries: Option<usize>,
     stats: CacheStats,
+    recorder: Recorder,
 }
 
 fn style_name(style: DesignStyle) -> &'static str {
@@ -90,6 +92,7 @@ impl PlanCache {
             seq: 0,
             max_entries: None,
             stats: CacheStats::default(),
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -103,6 +106,7 @@ impl PlanCache {
             seq: 0,
             max_entries: None,
             stats: CacheStats::default(),
+            recorder: Recorder::disabled(),
         };
         if path.exists() {
             let text = std::fs::read_to_string(&path)
@@ -151,6 +155,13 @@ impl PlanCache {
         self.max_entries
     }
 
+    /// Attach an event recorder ([`crate::obs`]): hits, misses, evictions
+    /// and finished explorations are reported as events. Disabled by
+    /// default — a disabled recorder builds no event at all.
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
+    }
+
     fn evict_to_cap(&mut self) {
         let Some(cap) = self.max_entries else { return };
         if self.entries.len() <= cap {
@@ -166,6 +177,7 @@ impl PlanCache {
         order.sort();
         for (_, key) in order.iter().take(self.entries.len() - cap) {
             self.entries.remove(key);
+            self.recorder.emit(|| Event::CacheEvict { key: key.clone() });
         }
     }
 
@@ -212,10 +224,17 @@ impl PlanCache {
         if let Some(e) = self.entries.get_mut(&key) {
             e.last_used = seq;
             self.stats.hits += 1;
+            self.recorder.emit(|| Event::CacheHit { key: key.clone() });
             return (e.result.clone(), true);
         }
         self.stats.misses += 1;
+        self.recorder.emit(|| Event::CacheMiss { key: key.clone() });
         let r = explore(info, platform, iter);
+        self.recorder.emit(|| Event::Explored {
+            key: key.clone(),
+            candidates: r.per_scheme.len(),
+            best_seconds: r.best.seconds,
+        });
         self.insert(key, r.clone());
         (r, false)
     }
@@ -244,6 +263,7 @@ impl PlanCache {
                 Some(e) => {
                     e.last_used = seq;
                     self.stats.hits += 1;
+                    self.recorder.emit(|| Event::CacheHit { key: key.clone() });
                     out.push(Some((e.result.clone(), true)));
                 }
                 None => out.push(None),
@@ -291,6 +311,12 @@ impl PlanCache {
                 .clone();
             if run[idx] {
                 self.stats.misses += 1;
+                self.recorder.emit(|| Event::CacheMiss { key: key.clone() });
+                self.recorder.emit(|| Event::Explored {
+                    key: key.clone(),
+                    candidates: r.per_scheme.len(),
+                    best_seconds: r.best.seconds,
+                });
                 self.insert(key.clone(), r.clone());
                 out[idx] = Some((r, false));
             } else {
@@ -302,6 +328,7 @@ impl PlanCache {
                     e.last_used = seq;
                 }
                 self.stats.hits += 1;
+                self.recorder.emit(|| Event::CacheHit { key: key.clone() });
                 out[idx] = Some((r, true));
             }
         }

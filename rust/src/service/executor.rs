@@ -21,6 +21,7 @@ use crate::dsl::{benchmarks as b, parse};
 use crate::metrics::reports::{fairness_table, FairnessRow};
 use crate::metrics::{percentile, Table};
 use crate::model::Config;
+use crate::obs::Recorder;
 use crate::platform::FpgaPlatform;
 use crate::reference::{interpret, Grid};
 use crate::runtime::Runtime;
@@ -95,6 +96,7 @@ pub struct BatchExecutor<'p> {
     board_platforms: Option<Vec<FpgaPlatform>>,
     aging_s: Option<f64>,
     policy: Option<FairnessPolicy>,
+    recorder: Recorder,
 }
 
 impl<'p> BatchExecutor<'p> {
@@ -106,6 +108,7 @@ impl<'p> BatchExecutor<'p> {
             board_platforms: None,
             aging_s: None,
             policy: None,
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -144,6 +147,15 @@ impl<'p> BatchExecutor<'p> {
         self
     }
 
+    /// Attach an event recorder ([`crate::obs`]): the fleet pass this
+    /// executor runs reports its timeline (arrivals, admissions with the
+    /// losing candidates, completions, preemptions, quota park/unpark) to
+    /// it. Disabled by default — recording never changes the schedule.
+    pub fn with_recorder(mut self, recorder: Recorder) -> BatchExecutor<'p> {
+        self.recorder = recorder;
+        self
+    }
+
     /// Schedule the batch over the fleet and aggregate statistics.
     pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
         let mut fleet = match &self.board_platforms {
@@ -159,6 +171,9 @@ impl<'p> BatchExecutor<'p> {
         }
         if let Some(policy) = &self.policy {
             fleet = fleet.with_policy(policy.clone());
+        }
+        if self.recorder.is_enabled() {
+            fleet = fleet.with_recorder(self.recorder.clone());
         }
         let schedule = fleet.schedule(specs, cache)?;
         let tenants = aggregate_tenants(&schedule);
@@ -474,6 +489,78 @@ mod tests {
         // every tenant delivered nonzero throughput
         for t in &report.tenants {
             assert!(t.gcell_per_s > 0.0, "{}", t.tenant);
+        }
+    }
+
+    #[test]
+    fn empty_batch_renders_well_formed_tables() {
+        // zero jobs is a degenerate but legal batch: every table renders
+        // header-only, and no division (utilization, shares) produces NaN
+        let p = FpgaPlatform::u280();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&[], &mut cache).unwrap();
+        assert!(report.schedule.jobs.is_empty());
+        assert!(report.tenants.is_empty());
+        assert!(report.classes.is_empty());
+        for t in [report.job_table(), report.tenant_table(), report.class_table()] {
+            assert!(t.rows.is_empty());
+            assert!(!t.to_markdown().is_empty());
+        }
+        let summary = report.summary_table();
+        assert_eq!(summary.rows.len(), 1);
+        assert_eq!(summary.rows[0][0], "0", "zero jobs");
+        assert_eq!(summary.rows[0][3], "0.000", "zero makespan, not NaN");
+        assert_eq!(summary.rows[0][6], "0.0", "zero utilization, not NaN");
+        // the board row exists even with nothing scheduled on it
+        let board = report.board_table();
+        assert_eq!(board.rows.len(), 1);
+        assert_eq!(board.rows[0][5], "0.0");
+    }
+
+    #[test]
+    fn single_job_report_accounts_exactly() {
+        let p = FpgaPlatform::u280();
+        let specs = vec![JobSpec::new("solo", "blur", vec![720, 1024], 8)];
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&specs, &mut cache).unwrap();
+        assert_eq!(report.schedule.jobs.len(), 1);
+        let j = &report.schedule.jobs[0];
+        // one job's occupancy IS the whole pool's bank-second integral
+        assert_eq!(
+            report.schedule.bank_seconds_used,
+            j.hbm_banks as f64 * (j.finish_s - j.start_s)
+        );
+        assert_eq!(report.schedule.makespan_s, j.finish_s);
+        let solo = &report.tenants[0];
+        assert_eq!((solo.tenant.as_str(), solo.jobs), ("solo", 1));
+        assert_eq!(solo.fair_share_pct, 100.0, "a lone tenant owns the full share");
+        assert_eq!(report.classes.len(), 1);
+        assert_eq!(report.classes[0].jobs, 1);
+        // percentiles of one sample all collapse onto it
+        assert_eq!(report.classes[0].p50_wait_s, report.classes[0].p95_wait_s);
+        assert_eq!(report.job_table().rows.len(), 1);
+        assert_eq!(report.job_table().rows[0][0], "solo");
+    }
+
+    #[test]
+    fn tenant_name_longer_than_headers_keeps_tables_aligned() {
+        let p = FpgaPlatform::u280();
+        let long = "tenant-with-a-name-longer-than-every-column-header";
+        let specs = vec![
+            JobSpec::new(long, "blur", vec![720, 1024], 8),
+            JobSpec::new("b", "blur", vec![720, 1024], 8),
+        ];
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&specs, &mut cache).unwrap();
+        for t in [report.job_table(), report.tenant_table()] {
+            let md = t.to_markdown();
+            assert!(md.contains(long), "{md}");
+            let widths: Vec<usize> = md
+                .lines()
+                .filter(|l| l.starts_with('|'))
+                .map(|l| l.chars().count())
+                .collect();
+            assert!(widths.windows(2).all(|w| w[0] == w[1]), "misaligned:\n{md}");
         }
     }
 

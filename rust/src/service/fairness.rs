@@ -332,6 +332,14 @@ impl FairLedger {
         self.state(tenant).pass
     }
 
+    /// The tenant's raw park deadline (`<= now` means not parked). The
+    /// fleet's event recorder reads this to stamp quota park/unpark
+    /// timeline events; scheduling itself goes through
+    /// [`FairLedger::parked`] / [`FairLedger::next_unpark`].
+    pub(super) fn parked_until(&self, tenant: &str) -> f64 {
+        self.state(tenant).parked_until
+    }
+
     /// Minimum pass among the given tenants (the backlog floor an idle
     /// tenant re-enters at); infinite when the iterator is empty.
     pub(super) fn min_pass<'a>(&self, tenants: impl Iterator<Item = &'a str>) -> f64 {

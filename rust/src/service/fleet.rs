@@ -69,6 +69,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
+use crate::obs::{CandidateScore, Event, Recorder};
 use crate::platform::FpgaPlatform;
 
 use super::cache::PlanCache;
@@ -114,6 +115,7 @@ pub struct Fleet {
     boards: Vec<BoardPool>,
     aging_s: f64,
     policy: FairnessPolicy,
+    recorder: Recorder,
 }
 
 /// A job waiting for admission (arrived, not yet placed). Crate-internal:
@@ -159,6 +161,7 @@ impl Fleet {
             ],
             aging_s: DEFAULT_AGING_S,
             policy: FairnessPolicy::new(),
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -176,6 +179,7 @@ impl Fleet {
                 .collect(),
             aging_s: DEFAULT_AGING_S,
             policy: FairnessPolicy::new(),
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -220,6 +224,17 @@ impl Fleet {
     /// routes through the preserved `Fleet::pick_unweighted_walk`).
     pub fn with_policy(mut self, policy: FairnessPolicy) -> Fleet {
         self.policy = policy;
+        self
+    }
+
+    /// Attach an event recorder ([`crate::obs`]). The default is
+    /// disabled: no event is ever constructed and the admission path pays
+    /// one branch. Recording never changes a scheduling decision — the
+    /// only extra work (recomputing the losing feasible boards at an
+    /// admission's rank) is gated on the recorder being enabled, and the
+    /// preserved `*_walk` oracles are not instrumented at all.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Fleet {
+        self.recorder = recorder;
         self
     }
 
@@ -328,6 +343,14 @@ impl Fleet {
         let total_banks = self.total_banks();
         let stats0 = cache.stats();
 
+        self.recorder.emit(|| Event::FleetStart {
+            boards: self
+                .boards
+                .iter()
+                .map(|b| (b.platform.model().to_string(), b.banks))
+                .collect(),
+        });
+
         // fairness ledger only for a non-trivial policy: the trivial path
         // (all weights equal, no quotas) must stay byte-identical to the
         // pre-fairness loop, so it carries no ledger and picks through
@@ -358,8 +381,25 @@ impl Fleet {
         let mut peak_concurrency = 0usize;
         let mut peak_banks = 0u64;
         let mut preemptions = 0u64;
+        // recording only: (tenant, park deadline) pairs awaiting their
+        // QuotaUnpark event — empty and untouched when disabled
+        let mut parked_log: Vec<(String, f64)> = Vec::new();
 
         loop {
+            // 0. recording only: parks whose deadline has passed get the
+            //    QuotaUnpark stamped at the deadline itself — the clock
+            //    may jump straight past an unpark that is not the nearest
+            //    event (e.g. the tenant's next job is not yet waiting)
+            if !parked_log.is_empty() {
+                parked_log.sort_by(|a, b| {
+                    a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0))
+                });
+                while parked_log.first().is_some_and(|(_, until)| *until <= clock) {
+                    let (tenant, until) = parked_log.remove(0);
+                    self.recorder.emit(|| Event::QuotaUnpark { t_s: until, tenant });
+                }
+            }
+
             // 1. fire every event at `clock`: completions free their
             //    board's banks, arrivals join the wait queue. A tenant
             //    arriving with nothing waiting or running re-enters the
@@ -369,6 +409,12 @@ impl Fleet {
             running.retain(|r| {
                 if r.finish_s <= clock {
                     free[r.board] += r.banks;
+                    self.recorder.emit(|| Event::Completion {
+                        t_s: r.finish_s,
+                        job: r.job,
+                        tenant: jobs[r.job].spec.tenant.clone(),
+                        board: r.board,
+                    });
                     false
                 } else {
                     true
@@ -376,6 +422,14 @@ impl Fleet {
             });
             while future.front().is_some_and(|w| w.prep.spec.arrival_s <= clock) {
                 let w = future.pop_front().unwrap();
+                self.recorder.emit(|| Event::Arrival {
+                    t_s: w.prep.spec.arrival_s,
+                    job: w.index,
+                    tenant: w.prep.spec.tenant.clone(),
+                    kernel: w.prep.spec.kernel.clone(),
+                    priority: w.prep.spec.priority.name(),
+                    resumed: w.prep.resumed,
+                });
                 if let Some(l) = ledger.as_mut() {
                     let tenant = &w.prep.spec.tenant;
                     let active = waiting.iter().any(|x| x.prep.spec.tenant == *tenant)
@@ -410,6 +464,31 @@ impl Fleet {
                 else {
                     break;
                 };
+                // recording only: the feasible boards that lost at the
+                // winning rank, with the predicted latencies the
+                // placement score compared (`try_admit` re-derives the
+                // same set; the decision itself is untouched)
+                let losers: Vec<CandidateScore> = if self.recorder.is_enabled() {
+                    let prep = &waiting[top].prep;
+                    free.iter()
+                        .enumerate()
+                        .filter(|&(b, _)| b != board)
+                        .filter_map(|(b, &f)| {
+                            let plan = &prep.plans[plan_of_board[b]];
+                            let c = plan.candidates.get(rank)?;
+                            if c.hbm_banks <= f {
+                                Some(CandidateScore {
+                                    board: b,
+                                    seconds: plan.sims[rank].seconds,
+                                })
+                            } else {
+                                None
+                            }
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
                 let w = waiting.swap_remove(top);
                 let plan = &w.prep.plans[plan_of_board[board]];
                 let choice = plan.candidates[rank].clone();
@@ -417,10 +496,35 @@ impl Fleet {
                 let cache_hit = plan.cache_hit;
                 let duration = sim.seconds.max(1e-12);
                 free[board] -= choice.hbm_banks;
+                self.recorder.emit(|| Event::Admission {
+                    t_s: clock,
+                    job: jobs.len(),
+                    tenant: w.prep.spec.tenant.clone(),
+                    kernel: w.prep.spec.kernel.clone(),
+                    board,
+                    rank,
+                    banks: choice.hbm_banks,
+                    duration_s: duration,
+                    cache_hit,
+                    resumed: w.prep.resumed,
+                    losers,
+                });
                 if let Some(l) = ledger.as_mut() {
                     // admission charges the full occupancy up front (a
                     // preemption later refunds the un-run tail)
                     l.charge(&w.prep.spec.tenant, choice.hbm_banks as f64 * duration, clock);
+                    if self.recorder.is_enabled() {
+                        let until = l.parked_until(&w.prep.spec.tenant);
+                        if until > clock {
+                            let tenant = w.prep.spec.tenant.clone();
+                            parked_log.push((tenant.clone(), until));
+                            self.recorder.emit(|| Event::QuotaPark {
+                                t_s: clock,
+                                tenant,
+                                until_s: until,
+                            });
+                        }
+                    }
                 }
                 running.push(Running {
                     board,
@@ -475,12 +579,12 @@ impl Fleet {
                     if let Some(v) =
                         pick_victim(head, &free, &running, &jobs, &plan_of_board, clock)
                     {
-                        let (job_idx, start_s, iters_per_round, old_finish_s, banks) = {
+                        let (job_idx, start_s, iters_per_round, old_finish_s, banks, vboard) = {
                             let r = &mut running[v.running_idx];
                             let old_finish_s = r.finish_s;
                             r.preempted = true;
                             r.finish_s = v.boundary_s;
-                            (r.job, r.start_s, r.iters_per_round, old_finish_s, r.banks)
+                            (r.job, r.start_s, r.iters_per_round, old_finish_s, r.banks, r.board)
                         };
                         let done_iters = v.rounds_done * iters_per_round;
                         let seg = &mut jobs[job_idx];
@@ -495,15 +599,32 @@ impl Fleet {
                         let mut rem_spec = seg.spec.clone();
                         rem_spec.iter = remaining;
                         rem_spec.arrival_s = v.boundary_s;
+                        let refund_bank_s = banks as f64 * (old_finish_s - v.boundary_s);
                         if let Some(l) = ledger.as_mut() {
                             // refund the victim's un-run tail: the cut
                             // segment occupies banks only to the boundary
-                            l.credit(
-                                &rem_spec.tenant,
-                                banks as f64 * (old_finish_s - v.boundary_s),
-                                clock,
-                            );
+                            l.credit(&rem_spec.tenant, refund_bank_s, clock);
+                            if self.recorder.is_enabled() {
+                                // the refund may pull a pending unpark
+                                // earlier (to `clock` when it erases the
+                                // whole deficit): keep the stamp true
+                                let until = l.parked_until(&rem_spec.tenant).max(clock);
+                                for p in parked_log.iter_mut() {
+                                    if p.0 == rem_spec.tenant {
+                                        p.1 = until;
+                                    }
+                                }
+                            }
                         }
+                        self.recorder.emit(|| Event::Preemption {
+                            t_s: clock,
+                            boundary_s: v.boundary_s,
+                            job: job_idx,
+                            tenant: rem_spec.tenant.clone(),
+                            board: vboard,
+                            refund_bank_s,
+                            rounds_kept: v.rounds_done,
+                        });
                         let rem =
                             prepare_remainder(&platforms, &max_banks, &rem_spec, cache)?;
                         let pos = future
@@ -534,6 +655,14 @@ impl Fleet {
                 bail!("fleet stalled with {} job(s) waiting", waiting.len());
             }
             clock = next;
+        }
+
+        // recording only: a tenant parked by its *last* job's charge has
+        // no unpark event inside the loop (nothing waits on it) — stamp
+        // the bucket-refill deadlines so every park closes in the trace
+        parked_log.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+        for (tenant, until) in parked_log {
+            self.recorder.emit(|| Event::QuotaUnpark { t_s: until, tenant });
         }
 
         let boards = self.board_stats(&jobs, &durations, &peak_per_board);

@@ -38,6 +38,13 @@
 //!   reports, and can execute admitted configurations for real through the
 //!   `Coordinator` against the interpreter oracle.
 //!
+//! Every layer here optionally carries an [`crate::obs::Recorder`]
+//! (`Fleet::with_recorder`, `BatchExecutor::with_recorder`,
+//! `PlanCache::set_recorder`): the fleet loop and the plan cache report
+//! structured timeline events — on simulated time, so exports stay
+//! deterministic — that `--trace-out` / `--metrics-out` turn into Chrome
+//! traces and metrics snapshots. Disabled by default at zero cost.
+//!
 //! CLI entry points: `sasa serve --jobs <jobs.json> [--boards N]` and
 //! `sasa batch`; see `examples/serving.rs` for the library-level
 //! walkthrough and DESIGN.md §4 for the architecture.

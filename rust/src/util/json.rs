@@ -1,10 +1,15 @@
 //! Minimal JSON parser + writer.
 //!
 //! The offline vendor set has no `serde`, so the artifact manifest
-//! (written by `python/compile/aot.py`) and the execution plans exchanged
-//! between the DSE and the coordinator use this small, strict JSON
-//! implementation. Supports the full JSON grammar except `\u` surrogate
-//! pairs beyond the BMP.
+//! (written by `python/compile/aot.py`), the execution plans exchanged
+//! between the DSE and the coordinator, and the `sasa::obs` trace/metrics
+//! exports use this small, strict JSON implementation. Supports the full
+//! JSON grammar, including `\u` surrogate pairs beyond the BMP (a lone
+//! surrogate decodes to U+FFFD rather than erroring). The writer emits
+//! pure ASCII: control characters and all non-ASCII code points are
+//! `\u`-escaped (astral-plane characters as surrogate pairs), so tenant
+//! names and event labels can flow into trace JSON without encoding
+//! surprises downstream.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -208,13 +213,30 @@ impl<'a> Parser<'a> {
                     b'r' => s.push('\r'),
                     b't' => s.push('\t'),
                     b'u' => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                            code = code * 16
-                                + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                        let code = self.hex4()?;
+                        if (0xd800..0xdc00).contains(&code) {
+                            // high surrogate: combine with a following
+                            // \uDC00..\uDFFF low surrogate when present,
+                            // otherwise decode the loner to U+FFFD
+                            if self.b[self.i..].starts_with(b"\\u") {
+                                let mark = self.i;
+                                self.i += 2;
+                                let low = self.hex4()?;
+                                if (0xdc00..0xe000).contains(&low) {
+                                    let c = 0x10000 + ((code - 0xd800) << 10) + (low - 0xdc00);
+                                    s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                } else {
+                                    // not a low surrogate: re-parse it on
+                                    // its own and mark the high as lone
+                                    self.i = mark;
+                                    s.push('\u{fffd}');
+                                }
+                            } else {
+                                s.push('\u{fffd}');
+                            }
+                        } else {
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         }
-                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                     }
                     _ => return Err(self.err("bad escape char")),
                 },
@@ -235,6 +257,16 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
+            code = code * 16 + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -312,7 +344,18 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
             '\n' => write!(f, "\\n")?,
             '\r' => write!(f, "\\r")?,
             '\t' => write!(f, "\\t")?,
-            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            // ASCII-only output: escape controls (incl. DEL) and every
+            // non-ASCII code point; astral-plane characters become UTF-16
+            // surrogate pairs, the JSON wire form the parser reassembles
+            c if (c as u32) < 0x20 || (c as u32) >= 0x7f => {
+                let code = c as u32;
+                if code > 0xffff {
+                    let v = code - 0x10000;
+                    write!(f, "\\u{:04x}\\u{:04x}", 0xd800 + (v >> 10), 0xdc00 + (v & 0x3ff))?;
+                } else {
+                    write!(f, "\\u{code:04x}")?;
+                }
+            }
             c => write!(f, "{c}")?,
         }
     }
@@ -393,5 +436,41 @@ mod tests {
     fn unicode_escape_and_utf8() {
         let j = Json::parse(r#""é café ✓""#).unwrap();
         assert_eq!(j.as_str(), Some("é café ✓"));
+    }
+
+    #[test]
+    fn emits_ascii_only_and_round_trips() {
+        for text in ["é café ✓", "tenant-😀-grin", "𝔘𝔫𝔦", "nul\u{1}\u{7f}ctl", "мир", "日本語"] {
+            let j = s(text);
+            let wire = j.to_string();
+            assert!(wire.is_ascii(), "{wire:?} must be pure ASCII");
+            assert_eq!(Json::parse(&wire).unwrap().as_str(), Some(text), "round-trip of {text:?}");
+        }
+        // spot-check the exact escapes: BMP as one \u, astral as a pair
+        assert_eq!(s("é").to_string(), "\"\\u00e9\"");
+        assert_eq!(s("😀").to_string(), "\"\\ud83d\\ude00\"");
+        assert_eq!(s("\u{7f}").to_string(), "\"\\u007f\"");
+    }
+
+    #[test]
+    fn parses_surrogate_pairs_and_loners() {
+        // a valid pair decodes to the astral-plane character
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap().as_str(), Some("😀"));
+        // a lone high surrogate (end of string, or followed by a non-low
+        // escape) decodes to U+FFFD without consuming what follows
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{fffd}x"));
+        assert_eq!(
+            Json::parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{fffd}A"),
+            "non-low escape after a high surrogate must survive"
+        );
+        // a lone low surrogate is a loner too
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // object keys take the same writer path
+        let j = obj(vec![("ключ", num(1))]);
+        let wire = j.to_string();
+        assert!(wire.is_ascii());
+        assert_eq!(Json::parse(&wire).unwrap(), j);
     }
 }

@@ -1,0 +1,57 @@
+//! The disabled recorder's zero-cost guarantee, enforced with a counting
+//! global allocator: `Recorder::emit` on the default (disabled) path must
+//! never run the event constructor, and therefore never allocate. This
+//! lives in its own integration-test binary because `#[global_allocator]`
+//! is process-global — it must not skew any other test's behavior.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sasa::obs::{Event, Recorder};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_recorder_emit_never_allocates() {
+    let recorder = Recorder::disabled();
+    assert!(!recorder.is_enabled());
+
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        // the closure would allocate (String construction) if it ran;
+        // the disabled path must drop it unevaluated
+        recorder.emit(|| Event::CacheHit { key: format!("key-{i}") });
+        recorder.emit(|| Event::QuotaUnpark { t_s: i as f64, tenant: i.to_string() });
+    }
+    let after = ALLOCATIONS.load(Ordering::Relaxed);
+    assert_eq!(after, before, "disabled emit allocated {} time(s)", after - before);
+
+    // sanity check on the counter itself: an enabled recorder both runs
+    // the constructor (allocating) and stores the event
+    let (recorder, sink) = Recorder::to_memory();
+    recorder.emit(|| Event::CacheHit { key: "key".to_string() });
+    assert_eq!(sink.len(), 1);
+    assert!(
+        ALLOCATIONS.load(Ordering::Relaxed) > after,
+        "the counting allocator must observe enabled-path allocations"
+    );
+}

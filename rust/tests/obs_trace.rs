@@ -1,0 +1,268 @@
+//! Integration tests for the observability layer (`sasa::obs`): trace
+//! schema validity, byte-for-byte determinism of both export artifacts,
+//! the recording-changes-nothing invariant, and the `--metrics-out`
+//! snapshot agreeing with the rendered report tables (ISSUE 6).
+
+use std::collections::BTreeMap;
+
+use sasa::obs::{chrome_trace, metrics_snapshot, snapshot_total_iters, Event, Recorder};
+use sasa::platform::FpgaPlatform;
+use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, JobSpec, PlanCache};
+use sasa::util::json::Json;
+
+/// Run the shipped `examples/jobs.json` stream on a u280:1,u50:1 fleet
+/// with the recorder on — the same scenario `ci/check_trace.py` drives
+/// through the binary — returning the report and the recorded events.
+fn recorded_example_run() -> (sasa::service::BatchReport, Vec<Event>) {
+    let u280 = FpgaPlatform::u280();
+    let u50 = FpgaPlatform::u50();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    let (recorder, sink) = Recorder::to_memory();
+    let mut cache = PlanCache::in_memory();
+    cache.set_recorder(recorder.clone());
+    let exec = BatchExecutor::new(&u280)
+        .with_fleet(vec![u280.clone(), u50])
+        .with_recorder(recorder);
+    let report = exec.run(&specs, &mut cache).unwrap();
+    (report, sink.events())
+}
+
+#[test]
+fn trace_schema_holds_for_the_example_stream() {
+    let (report, events) = recorded_example_run();
+    let trace = chrome_trace(&events);
+    let evs = trace.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!evs.is_empty());
+    assert_eq!(trace.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+
+    // the invariants ci/check_trace.py enforces on the binary's output:
+    // per (pid, tid) track, timestamps are non-decreasing and B/E spans
+    // balance; span begins carry args
+    let mut tracks: BTreeMap<(u64, u64), (f64, i64)> = BTreeMap::new();
+    let mut begins_on_boards = 0usize;
+    let mut begins_total = 0usize;
+    for ev in evs {
+        let pid = ev.get("pid").and_then(Json::as_u64).unwrap();
+        let tid = ev.get("tid").and_then(Json::as_u64).unwrap();
+        let ts = ev.get("ts").and_then(Json::as_f64).unwrap();
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+        let t = tracks.entry((pid, tid)).or_insert((f64::NEG_INFINITY, 0));
+        assert!(ts >= t.0, "pid {pid} tid {tid}: ts went backwards ({ts} < {})", t.0);
+        t.0 = ts;
+        match ph {
+            "B" => {
+                t.1 += 1;
+                begins_total += 1;
+                // boards occupy pids 1..=2 in a two-board fleet
+                if pid <= 2 {
+                    begins_on_boards += 1;
+                }
+                assert!(ev.get("args").is_some(), "B span without args");
+            }
+            "E" => {
+                t.1 -= 1;
+                assert!(t.1 >= 0, "pid {pid} tid {tid}: E without matching B");
+            }
+            _ => {}
+        }
+    }
+    for ((pid, tid), (_, depth)) in &tracks {
+        assert_eq!(*depth, 0, "pid {pid} tid {tid}: unbalanced spans");
+    }
+    // one run span per admitted segment, on the board track and mirrored
+    // on the tenant track
+    assert_eq!(begins_on_boards, report.schedule.jobs.len());
+    assert_eq!(begins_total, 2 * report.schedule.jobs.len());
+}
+
+#[test]
+fn trace_and_metrics_exports_are_deterministic() {
+    let (report_a, events_a) = recorded_example_run();
+    let (report_b, events_b) = recorded_example_run();
+    assert_eq!(events_a, events_b, "two warm runs must record identical streams");
+    assert_eq!(
+        chrome_trace(&events_a).to_string(),
+        chrome_trace(&events_b).to_string(),
+        "trace artifact must be byte-identical across runs"
+    );
+    assert_eq!(
+        metrics_snapshot(&report_a, None).to_string(),
+        metrics_snapshot(&report_b, None).to_string(),
+        "metrics artifact must be byte-identical across runs"
+    );
+}
+
+#[test]
+fn recording_never_changes_the_schedule() {
+    let u280 = FpgaPlatform::u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+
+    let mut plain_cache = PlanCache::in_memory();
+    let plain = BatchExecutor::new(&u280)
+        .with_boards(2)
+        .run(&specs, &mut plain_cache)
+        .unwrap();
+
+    let (recorder, sink) = Recorder::to_memory();
+    let mut rec_cache = PlanCache::in_memory();
+    rec_cache.set_recorder(recorder.clone());
+    let recorded = BatchExecutor::new(&u280)
+        .with_boards(2)
+        .with_recorder(recorder)
+        .run(&specs, &mut rec_cache)
+        .unwrap();
+    assert!(!sink.is_empty(), "the recorded run must actually record");
+
+    // every rendered table — i.e. everything `sasa serve` prints — is
+    // byte-identical with and without the recorder attached
+    assert_eq!(plain.job_table().to_markdown(), recorded.job_table().to_markdown());
+    assert_eq!(plain.tenant_table().to_markdown(), recorded.tenant_table().to_markdown());
+    assert_eq!(plain.class_table().to_markdown(), recorded.class_table().to_markdown());
+    assert_eq!(plain.board_table().to_markdown(), recorded.board_table().to_markdown());
+    assert_eq!(plain.summary_table().to_markdown(), recorded.summary_table().to_markdown());
+}
+
+#[test]
+fn quota_parks_record_with_matching_unparks() {
+    // the known-parking scenario from tests/service_fleet.rs: a tiny
+    // bucket parks the hog's second job, and every QuotaPark event must
+    // be closed by a QuotaUnpark at its refill deadline
+    let p = FpgaPlatform::u280();
+    let specs = vec![
+        JobSpec::new("hog", "jacobi2d", vec![720, 1024], 8),
+        JobSpec::new("hog", "jacobi2d", vec![720, 1024], 8),
+        JobSpec::new("light", "blur", vec![720, 1024], 8),
+    ];
+    let policy = FairnessPolicy::new().with_quota("hog", 1e-6).with_quota_window_s(0.001);
+    let (recorder, sink) = Recorder::to_memory();
+    let mut cache = PlanCache::in_memory();
+    cache.set_recorder(recorder.clone());
+    let report = BatchExecutor::new(&p)
+        .with_policy(policy)
+        .with_recorder(recorder)
+        .run(&specs, &mut cache)
+        .unwrap();
+    let events = sink.events();
+
+    let parks: Vec<(&String, f64, f64)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::QuotaPark { t_s, tenant, until_s } => Some((tenant, *t_s, *until_s)),
+            _ => None,
+        })
+        .collect();
+    let total_parks: u64 = report.tenants.iter().map(|t| t.parks).sum();
+    assert_eq!(parks.len() as u64, total_parks, "one QuotaPark per counted park");
+    assert!(!parks.is_empty(), "the 1e-6 bank-s bucket must park the hog");
+    for (tenant, t_s, until_s) in &parks {
+        assert!(until_s > t_s, "park deadline must lie in the future");
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                Event::QuotaUnpark { t_s: u, tenant: t } if t == *tenant && *u >= *t_s
+            )),
+            "park of {tenant} at {t_s} has no unpark"
+        );
+    }
+    // the trace renders them as instants on the tenant tracks
+    let trace = chrome_trace(&events).to_string();
+    assert!(trace.contains("quota park") && trace.contains("quota unpark"));
+}
+
+#[test]
+fn metrics_snapshot_agrees_with_rendered_tables() {
+    // satellite (f): the --metrics-out document carries the *same*
+    // numbers the report tables format, for the shipped example stream
+    let (report, _) = recorded_example_run();
+    let snap = metrics_snapshot(&report, None);
+
+    // summary section vs the one-row summary table
+    let summary_cells = &report.summary_table().rows[0];
+    let summary = snap.get("summary").unwrap();
+    assert_eq!(summary.u64_or("jobs", u64::MAX).to_string(), summary_cells[0]);
+    assert_eq!(summary.u64_or("boards", u64::MAX).to_string(), summary_cells[1]);
+    assert_eq!(summary.u64_or("pool_banks", u64::MAX).to_string(), summary_cells[2]);
+    let makespan_s = summary.get("makespan_s").and_then(Json::as_f64).unwrap();
+    assert_eq!(format!("{:.3}", makespan_s * 1e3), summary_cells[3]);
+    assert_eq!(summary.u64_or("peak_concurrency", u64::MAX).to_string(), summary_cells[4]);
+    assert_eq!(summary.u64_or("peak_banks_in_use", u64::MAX).to_string(), summary_cells[5]);
+    let util = summary.get("bank_utilization_pct").and_then(Json::as_f64).unwrap();
+    assert_eq!(format!("{util:.1}"), summary_cells[6]);
+    assert_eq!(summary.u64_or("preemptions", u64::MAX).to_string(), summary_cells[7]);
+    assert_eq!(summary.u64_or("cache_hits", u64::MAX).to_string(), summary_cells[8]);
+    assert_eq!(summary.u64_or("explorations", u64::MAX).to_string(), summary_cells[9]);
+
+    // job rows, in the same admission order as the job table
+    let jobs = snap.get("jobs").and_then(Json::as_arr).unwrap();
+    let job_rows = &report.job_table().rows;
+    assert_eq!(jobs.len(), job_rows.len());
+    for (j, row) in jobs.iter().zip(job_rows) {
+        assert_eq!(j.str_or("tenant", "?"), row[0]);
+        assert_eq!(j.str_or("kernel", "?"), row[1]);
+        assert_eq!(j.str_or("dims", "?"), row[2]);
+        assert_eq!(j.u64_or("iter", u64::MAX).to_string(), row[3]);
+        assert_eq!(j.str_or("priority", "?"), row[4]);
+        assert_eq!(j.u64_or("board", u64::MAX).to_string(), row[5]);
+        assert_eq!(j.str_or("config", "?"), row[6]);
+        assert_eq!(j.u64_or("banks", u64::MAX).to_string(), row[7]);
+        assert_eq!(j.str_or("plan", "?"), row[8]);
+        let wait = j.get("queue_wait_s").and_then(Json::as_f64).unwrap();
+        assert_eq!(format!("{:.3}", wait * 1e3), row[11]);
+        let finish = j.get("finish_s").and_then(Json::as_f64).unwrap();
+        assert_eq!(format!("{:.3}", finish * 1e3), row[13]);
+        let gcell = j.get("gcell_per_s").and_then(Json::as_f64).unwrap();
+        assert_eq!(format!("{gcell:.2}"), row[14]);
+    }
+
+    // tenant rows mirror the tenant table (trivial policy: six columns)
+    let tenants = snap.get("tenants").and_then(Json::as_arr).unwrap();
+    let tenant_rows = &report.tenant_table().rows;
+    assert_eq!(tenants.len(), tenant_rows.len());
+    for (t, row) in tenants.iter().zip(tenant_rows) {
+        assert_eq!(t.str_or("tenant", "?"), row[0]);
+        assert_eq!(t.u64_or("jobs", u64::MAX).to_string(), row[1]);
+        let gcell = t.get("gcell_per_s").and_then(Json::as_f64).unwrap();
+        assert_eq!(format!("{gcell:.2}"), row[4]);
+    }
+
+    // class and board sections line up row-for-row too
+    let classes = snap.get("classes").and_then(Json::as_arr).unwrap();
+    assert_eq!(classes.len(), report.class_table().rows.len());
+    for (c, row) in classes.iter().zip(&report.class_table().rows) {
+        assert_eq!(c.str_or("class", "?"), row[0]);
+        assert_eq!(c.u64_or("jobs", u64::MAX).to_string(), row[1]);
+    }
+    let boards = snap.get("boards").and_then(Json::as_arr).unwrap();
+    assert_eq!(boards.len(), report.board_table().rows.len());
+    for (b, row) in boards.iter().zip(&report.board_table().rows) {
+        assert_eq!(b.u64_or("board", u64::MAX).to_string(), row[0]);
+        assert_eq!(b.str_or("model", "?"), row[1]);
+        assert_eq!(b.u64_or("banks", u64::MAX).to_string(), row[2]);
+        assert_eq!(b.u64_or("jobs", u64::MAX).to_string(), row[3]);
+        assert_eq!(b.u64_or("peak_banks", u64::MAX).to_string(), row[4]);
+        let util = b.get("utilization_pct").and_then(Json::as_f64).unwrap();
+        assert_eq!(format!("{util:.1}"), row[5]);
+    }
+
+    // iteration conservation: segments partition each job's iterations
+    let requested: u64 = load_jobs("examples/jobs.json").unwrap().iter().map(|s| s.iter).sum();
+    assert_eq!(snapshot_total_iters(&snap), requested);
+}
+
+#[test]
+fn cache_events_match_cache_stats() {
+    let (report, events) = recorded_example_run();
+    let hits = events.iter().filter(|e| matches!(e, Event::CacheHit { .. })).count();
+    let misses = events.iter().filter(|e| matches!(e, Event::CacheMiss { .. })).count();
+    let explores = events.iter().filter(|e| matches!(e, Event::Explored { .. })).count();
+    assert_eq!(hits as u64, report.schedule.cache_hits);
+    assert_eq!(misses as u64, report.schedule.explorations);
+    assert_eq!(explores, misses, "every miss is resolved by exactly one exploration");
+    // every exploration reports its candidates and a simulated-time latency
+    for e in &events {
+        if let Event::Explored { candidates, best_seconds, .. } = e {
+            assert!(*candidates > 0);
+            assert!(*best_seconds > 0.0 && best_seconds.is_finite());
+        }
+    }
+}
