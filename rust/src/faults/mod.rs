@@ -1,0 +1,777 @@
+//! `sasa::faults` — deterministic fault injection and recovery policy
+//! for the fleet scheduler (DESIGN.md §8).
+//!
+//! A production fleet sees boards crash, hang, and lose HBM banks; today's
+//! loop schedules as if hardware were perfect. This module supplies the
+//! *policy* half of fault tolerance — what fails, when, and how recovery
+//! retries — while `service::fleet` owns the *mechanism* (killing
+//! segments at the fault instant, re-planning remainders through the plan
+//! cache, and re-enqueueing them with backoff).
+//!
+//! Three design rules, mirroring the rest of the serving stack:
+//!
+//! 1. **Determinism.** Faults fire at declared simulated-time instants
+//!    (`--faults board=1,at_ms=3.5,kind=crash`) or are expanded from a
+//!    seed through [`crate::util::prng::Prng`]
+//!    (`--faults seed=42,count=3,horizon_ms=8`): two identical faulted
+//!    runs replay byte-identical schedules, traces, and snapshots — the
+//!    CI chaos gate diffs them.
+//! 2. **Strictly opt-in.** A run with no fault plan constructs no
+//!    [`FaultRt`] at all: every fault branch in the fleet loop is gated on
+//!    an `Option` that stays `None`, so faultless output is byte-identical
+//!    to the pre-fault scheduler (the same preservation discipline as
+//!    `Fleet::pick_unweighted_walk`).
+//! 3. **Nothing silently lost.** Every admitted iteration is either
+//!    retired on the timeline, requeued as a re-planned remainder, or
+//!    reported in [`ReliabilityStats`] as exhausted/drained — the chaos
+//!    property suite sums all three against the submitted totals.
+//!
+//! Fault taxonomy ([`FaultKind`]): a **crash** kills a board instantly
+//! (running segments keep only their fully retired kernel-launch rounds);
+//! a **hang** stops the board silently — detected only when a segment
+//! misses its completion deadline (admitted finish plus
+//! [`WATCHDOG_GRACE_FRAC`] of its duration), at which point the board is
+//! marked down and its segments are cut back to the rounds retired before
+//! the hang onset; **bank_degrade:n** shrinks the board's HBM pool to `n`
+//! banks mid-run, evicting the newest segments until the survivors fit.
+//! Crash and hang faults may carry `repair_ms`, after which the board
+//! rejoins placement — at its current (possibly degraded) bank count.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::prng::Prng;
+
+/// Default retry cap: a job lineage killed more than this many times is
+/// reported exhausted instead of requeued (`--retry-cap`).
+pub const DEFAULT_RETRY_CAP: u64 = 3;
+/// First-retry backoff (seconds). Timelines here are milliseconds, so
+/// 0.5 ms delays a retry by roughly one small-job drain.
+pub const DEFAULT_BACKOFF_BASE_S: f64 = 0.0005;
+/// Backoff ceiling (seconds): retries never wait longer than this.
+pub const DEFAULT_BACKOFF_CAP_S: f64 = 0.004;
+/// Watchdog grace as a fraction of the segment's admitted duration: a
+/// segment is declared lost `duration × (1 + WATCHDOG_GRACE_FRAC)` after
+/// its start. Per-segment (longer jobs get longer grace) and on the
+/// simulated clock, so detection instants replay deterministically.
+pub const WATCHDOG_GRACE_FRAC: f64 = 0.25;
+
+/// What goes wrong on a board.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The board dies at the fault instant: running segments are cut at
+    /// their last fully retired round boundary, banks free immediately,
+    /// and the board leaves placement until repaired (if ever).
+    Crash,
+    /// The board silently stops retiring work. Its segments keep their
+    /// banks until the per-segment completion-deadline watchdog fires;
+    /// detection marks the board down and cuts every segment back to the
+    /// rounds retired before the hang onset.
+    Hang,
+    /// The board's HBM pool shrinks to this many banks. The board stays
+    /// up; the newest segments are evicted until the survivors fit.
+    BankDegrade(u64),
+}
+
+impl FaultKind {
+    /// The CLI spelling (`crash` / `hang` / `bank_degrade:8`), used by
+    /// events and reports.
+    pub fn label(&self) -> String {
+        match self {
+            FaultKind::Crash => "crash".into(),
+            FaultKind::Hang => "hang".into(),
+            FaultKind::BankDegrade(n) => format!("bank_degrade:{n}"),
+        }
+    }
+}
+
+/// One scheduled fault: board index, injection instant (simulated
+/// seconds), kind, and an optional repair delay after which the board
+/// rejoins placement.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub board: usize,
+    pub at_s: f64,
+    pub kind: FaultKind,
+    /// Crash: board up again `repair_s` after the fault. Hang: `repair_s`
+    /// after *detection*. `None` = the board stays down.
+    pub repair_s: Option<f64>,
+}
+
+/// Bounded exponential backoff plus a retry cap for requeued remainders.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Kills a job lineage survives before being reported exhausted.
+    pub cap: u64,
+    pub backoff_base_s: f64,
+    pub backoff_cap_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            cap: DEFAULT_RETRY_CAP,
+            backoff_base_s: DEFAULT_BACKOFF_BASE_S,
+            backoff_cap_s: DEFAULT_BACKOFF_CAP_S,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `retry` (1-based): base × 2^(retry−1),
+    /// capped.
+    pub fn backoff_s(&self, retry: u64) -> f64 {
+        let exp = (retry.saturating_sub(1)).min(32) as i32;
+        (self.backoff_base_s * 2f64.powi(exp)).min(self.backoff_cap_s)
+    }
+}
+
+/// Seeded fault generation: `count` faults drawn from
+/// [`Prng`] over `[0.05, 0.75] × horizon_s`, so the schedule is a pure
+/// function of the seed and the fleet shape.
+#[derive(Debug, Clone)]
+pub struct SeededFaults {
+    pub seed: u64,
+    pub count: u64,
+    pub horizon_s: f64,
+}
+
+/// A complete fault configuration: explicit fault specs and/or a seeded
+/// generator, plus the retry policy and the drain flag. Built by
+/// [`FaultPlan::parse`] from the `--faults` CLI spec and expanded against
+/// the concrete fleet by [`FaultPlan::resolve`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+    pub seeded: Option<SeededFaults>,
+    pub retry: RetryPolicy,
+    /// Graceful degradation: after the first fault fires, stop admitting
+    /// (and preempting) but let in-flight segments complete; everything
+    /// still queued is reported drained, not silently dropped.
+    pub drain: bool,
+}
+
+impl FaultPlan {
+    /// True when the plan can never inject anything — the fleet then
+    /// constructs no fault state at all and stays byte-identical to a
+    /// flagless run (`--faults none` exists for exactly this oracle).
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.seeded.is_none()
+    }
+
+    /// Parse the `--faults` CLI spec: `;`-separated entries, each a
+    /// `,`-separated list of `key=value` fields.
+    ///
+    /// * explicit: `board=1,at_ms=3.5,kind=crash` with `kind` one of
+    ///   `crash`, `hang`, `bank_degrade:<n>`, plus optional
+    ///   `repair_ms=<t>`;
+    /// * seeded: `seed=42,count=3,horizon_ms=8`;
+    /// * `none`: the empty plan (the faultless-oracle gate's spelling).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        if spec.trim() == "none" {
+            return Ok(plan);
+        }
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let mut fields: BTreeMap<&str, &str> = BTreeMap::new();
+            for field in entry.split(',') {
+                let (k, v) = field
+                    .split_once('=')
+                    .with_context(|| format!("--faults: '{field}' is not key=value"))?;
+                if fields.insert(k.trim(), v.trim()).is_some() {
+                    bail!("--faults: duplicate '{}' in '{entry}'", k.trim());
+                }
+            }
+            let ms = |fields: &BTreeMap<&str, &str>, key: &str| -> Result<Option<f64>> {
+                match fields.get(key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let t: f64 = v
+                            .parse()
+                            .with_context(|| format!("--faults: {key}={v} is not a number"))?;
+                        if !t.is_finite() || t < 0.0 {
+                            bail!("--faults: {key}={v} must be finite and >= 0");
+                        }
+                        Ok(Some(t * 1e-3))
+                    }
+                }
+            };
+            if fields.contains_key("seed") {
+                if plan.seeded.is_some() {
+                    bail!("--faults: more than one seed= entry");
+                }
+                let seed: u64 = fields
+                    .get("seed")
+                    .unwrap()
+                    .parse()
+                    .context("--faults: seed must be an integer")?;
+                let count: u64 = fields
+                    .get("count")
+                    .context("--faults: seed entries need count=<n>")?
+                    .parse()
+                    .context("--faults: count must be an integer")?;
+                let horizon_s = ms(&fields, "horizon_ms")?
+                    .context("--faults: seed entries need horizon_ms=<t>")?;
+                if count == 0 || horizon_s <= 0.0 {
+                    bail!("--faults: seeded generation needs count >= 1 and horizon_ms > 0");
+                }
+                for k in fields.keys() {
+                    if !matches!(*k, "seed" | "count" | "horizon_ms") {
+                        bail!("--faults: unknown field '{k}' in seed entry '{entry}'");
+                    }
+                }
+                plan.seeded = Some(SeededFaults { seed, count, horizon_s });
+                continue;
+            }
+            let board: usize = fields
+                .get("board")
+                .with_context(|| format!("--faults: '{entry}' needs board=<index>"))?
+                .parse()
+                .context("--faults: board must be an integer index")?;
+            let at_s = ms(&fields, "at_ms")?
+                .with_context(|| format!("--faults: '{entry}' needs at_ms=<t>"))?;
+            let kind = match *fields
+                .get("kind")
+                .with_context(|| format!("--faults: '{entry}' needs kind=<kind>"))?
+            {
+                "crash" => FaultKind::Crash,
+                "hang" => FaultKind::Hang,
+                other => match other.strip_prefix("bank_degrade:") {
+                    Some(n) => FaultKind::BankDegrade(
+                        n.parse()
+                            .with_context(|| format!("--faults: bad bank count in '{other}'"))?,
+                    ),
+                    None => bail!(
+                        "--faults: unknown kind '{other}' \
+                         (expected crash, hang, or bank_degrade:<n>)"
+                    ),
+                },
+            };
+            let repair_s = ms(&fields, "repair_ms")?;
+            for k in fields.keys() {
+                if !matches!(*k, "board" | "at_ms" | "kind" | "repair_ms") {
+                    bail!("--faults: unknown field '{k}' in '{entry}'");
+                }
+            }
+            plan.faults.push(FaultSpec { board, at_s, kind, repair_s });
+        }
+        Ok(plan)
+    }
+
+    /// Expand the plan against a concrete fleet (`banks[b]` = board `b`'s
+    /// pool): validates explicit specs, draws the seeded faults, and
+    /// returns the merged schedule sorted by injection instant. The
+    /// result is a pure function of the plan and the fleet shape.
+    pub fn resolve(&self, banks: &[u64]) -> Result<Vec<FaultSpec>> {
+        let mut out = Vec::with_capacity(self.faults.len());
+        for f in &self.faults {
+            if f.board >= banks.len() {
+                bail!(
+                    "--faults: board {} out of range (fleet has {} board(s))",
+                    f.board,
+                    banks.len()
+                );
+            }
+            if let FaultKind::BankDegrade(n) = f.kind {
+                if n == 0 || n >= banks[f.board] {
+                    bail!(
+                        "--faults: bank_degrade:{n} on board {} must reduce its pool \
+                         (board has {} banks)",
+                        f.board,
+                        banks[f.board]
+                    );
+                }
+            }
+            out.push(f.clone());
+        }
+        if let Some(s) = &self.seeded {
+            let mut rng = Prng::new(s.seed);
+            for _ in 0..s.count {
+                let board = rng.range(0, banks.len() as u64 - 1) as usize;
+                let at_s = rng.f32_range(0.05, 0.75) as f64 * s.horizon_s;
+                let kind = match rng.range(0, 2) {
+                    0 => FaultKind::Crash,
+                    1 => FaultKind::Hang,
+                    _ if banks[board] >= 2 => {
+                        FaultKind::BankDegrade(rng.range(1, banks[board] - 1))
+                    }
+                    _ => FaultKind::Crash,
+                };
+                let repair_s = match kind {
+                    FaultKind::BankDegrade(_) => None,
+                    _ => Some(rng.f32_range(0.2, 0.5) as f64 * s.horizon_s),
+                };
+                out.push(FaultSpec { board, at_s, kind, repair_s });
+            }
+        }
+        // deterministic firing order, whatever the entry order was
+        out.sort_by(|a, b| {
+            a.at_s.partial_cmp(&b.at_s).unwrap().then_with(|| a.board.cmp(&b.board))
+        });
+        Ok(out)
+    }
+}
+
+/// A job (or job remainder) the recovery layer gave up on — reported,
+/// never silently dropped.
+#[derive(Debug, Clone)]
+pub struct LostJob {
+    pub tenant: String,
+    pub kernel: String,
+    /// Iterations that were admitted (or submitted) but never retired.
+    pub iter_lost: u64,
+    /// Why: `retry cap exhausted`, `no surviving board fits`,
+    /// `stranded`, or `drained`.
+    pub reason: String,
+}
+
+/// Per-board reliability accounting for one scheduling pass.
+#[derive(Debug, Clone)]
+pub struct BoardReliability {
+    pub board: usize,
+    pub model: String,
+    /// Faults injected on this board.
+    pub faults: u64,
+    /// Segments killed on this board (crash cuts, watchdog cuts,
+    /// degrade evictions).
+    pub kills: u64,
+    /// Total time the board spent out of placement, clipped to the
+    /// makespan.
+    pub down_s: f64,
+    /// Mean time to repair over the completed down→up cycles; `None`
+    /// when the board was never repaired.
+    pub mttr_s: Option<f64>,
+    /// Bank-seconds occupied past the last retired round boundary of
+    /// killed segments — paid for, not delivered.
+    pub lost_bank_s: f64,
+    /// Bank-seconds of retired work (completed segments in full, killed
+    /// segments up to their cut boundary).
+    pub delivered_bank_s: f64,
+}
+
+/// The reliability block of a faulted [`crate::service::Schedule`]:
+/// per-board fault/repair accounting plus everything the recovery layer
+/// requeued or gave up on. `None` on faultless schedules.
+#[derive(Debug, Clone)]
+pub struct ReliabilityStats {
+    pub boards: Vec<BoardReliability>,
+    /// Remainders successfully re-planned and re-enqueued.
+    pub retries: u64,
+    /// Jobs dropped with a reason (retry cap, no surviving board,
+    /// stranded at end of events).
+    pub exhausted: Vec<LostJob>,
+    /// Jobs still queued when a `--drain` run stopped admitting.
+    pub drained: Vec<LostJob>,
+}
+
+impl ReliabilityStats {
+    /// Iterations lost across exhausted and drained jobs — the
+    /// conservation ledger's "reported lost" side.
+    pub fn iter_lost(&self) -> u64 {
+        self.exhausted.iter().chain(&self.drained).map(|l| l.iter_lost).sum()
+    }
+}
+
+/// Live fault state for one `Fleet::schedule` pass. Constructed only when
+/// a non-empty plan is attached — the faultless path carries `None` and
+/// never touches any of this. The fleet loop owns the scheduling
+/// mechanics; this struct owns timers, board health, retry ledgers, and
+/// the accounting that becomes [`ReliabilityStats`].
+pub(crate) struct FaultRt {
+    /// Resolved fault schedule, sorted by `at_s`; `next_fault` indexes
+    /// the first not-yet-fired entry.
+    pending: Vec<FaultSpec>,
+    next_fault: usize,
+    pub(crate) retry: RetryPolicy,
+    pub(crate) drain: bool,
+    pub(crate) drain_active: bool,
+    /// Live bank capacity per board (shrinks on `bank_degrade`).
+    pub(crate) cap: Vec<u64>,
+    /// Board out of placement (crashed, or hang detected).
+    pub(crate) down: Vec<bool>,
+    /// Hang onset instant while the hang is still undetected.
+    pub(crate) hung: Vec<Option<f64>>,
+    /// Pending repair deadline for a hang, applied at detection.
+    pub(crate) hung_repair: Vec<Option<f64>>,
+    /// (up_at, board) repair timers, unordered; drained by `due_repairs`.
+    repairs: Vec<(f64, usize)>,
+    /// The fleet's one outstanding preemption cut as `(jobs[] index of the
+    /// cut segment, Waiting.index of its queued remainder)` — a fault
+    /// killing the cut segment must pull that remainder back and fold it
+    /// into the kill, or its iterations would be double-counted.
+    pub(crate) pending_cut: Option<(usize, usize)>,
+    down_since: Vec<Option<f64>>,
+    models: Vec<String>,
+    // accounting
+    b_faults: Vec<u64>,
+    b_kills: Vec<u64>,
+    b_down_s: Vec<f64>,
+    b_repaired: Vec<(u64, f64)>,
+    b_lost_bank_s: Vec<f64>,
+    b_delivered_bank_s: Vec<f64>,
+    /// Original-job lineage of each admitted `jobs[]` entry.
+    pub(crate) lineage_of_job: Vec<usize>,
+    /// Lineage of each queued `Waiting.index` (initial jobs map to
+    /// themselves; remainders inherit their source).
+    pub(crate) lineage_of_index: BTreeMap<usize, usize>,
+    retries_of_lineage: BTreeMap<usize, u64>,
+    retries: u64,
+    pub(crate) exhausted: Vec<LostJob>,
+    pub(crate) drained: Vec<LostJob>,
+}
+
+impl FaultRt {
+    pub(crate) fn new(
+        resolved: Vec<FaultSpec>,
+        retry: RetryPolicy,
+        drain: bool,
+        boards: &[(String, u64)],
+    ) -> FaultRt {
+        let n = boards.len();
+        FaultRt {
+            pending: resolved,
+            next_fault: 0,
+            retry,
+            drain,
+            drain_active: false,
+            cap: boards.iter().map(|(_, banks)| *banks).collect(),
+            down: vec![false; n],
+            hung: vec![None; n],
+            hung_repair: vec![None; n],
+            repairs: Vec::new(),
+            pending_cut: None,
+            down_since: vec![None; n],
+            models: boards.iter().map(|(m, _)| m.clone()).collect(),
+            b_faults: vec![0; n],
+            b_kills: vec![0; n],
+            b_down_s: vec![0.0; n],
+            b_repaired: vec![(0, 0.0); n],
+            b_lost_bank_s: vec![0.0; n],
+            b_delivered_bank_s: vec![0.0; n],
+            lineage_of_job: Vec::new(),
+            lineage_of_index: BTreeMap::new(),
+            retries_of_lineage: BTreeMap::new(),
+            retries: 0,
+            exhausted: Vec::new(),
+            drained: Vec::new(),
+        }
+    }
+
+    /// Earliest pending injection or repair instant (`INFINITY` when
+    /// none) — joins the event loop's clock-advance `min`. Watchdog
+    /// deadlines live on the fleet's running list, not here.
+    pub(crate) fn next_timer_s(&self) -> f64 {
+        let fault = self
+            .pending
+            .get(self.next_fault)
+            .map_or(f64::INFINITY, |f| f.at_s);
+        let repair = self
+            .repairs
+            .iter()
+            .map(|&(t, _)| t)
+            .fold(f64::INFINITY, f64::min);
+        fault.min(repair)
+    }
+
+    /// Boards whose repair deadline has passed, in (deadline, board)
+    /// order; marks them up and accounts the down span.
+    pub(crate) fn due_repairs(&mut self, clock: f64) -> Vec<usize> {
+        let mut due: Vec<(f64, usize)> =
+            self.repairs.iter().copied().filter(|&(t, _)| t <= clock).collect();
+        due.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+        self.repairs.retain(|&(t, _)| t > clock);
+        due.iter()
+            .map(|&(t, board)| {
+                let since = self.down_since[board].take().unwrap_or(t);
+                self.down[board] = false;
+                self.b_down_s[board] += t - since;
+                let (n, total) = &mut self.b_repaired[board];
+                *n += 1;
+                *total += t - since;
+                board
+            })
+            .collect()
+    }
+
+    /// Injections due at or before `clock`, in schedule order.
+    pub(crate) fn due_faults(&mut self, clock: f64) -> Vec<FaultSpec> {
+        let mut due = Vec::new();
+        while self
+            .pending
+            .get(self.next_fault)
+            .is_some_and(|f| f.at_s <= clock)
+        {
+            due.push(self.pending[self.next_fault].clone());
+            self.next_fault += 1;
+        }
+        due
+    }
+
+    pub(crate) fn record_fault(&mut self, board: usize) {
+        self.b_faults[board] += 1;
+        if self.drain {
+            self.drain_active = true;
+        }
+    }
+
+    /// Take the board out of placement at `clock`, optionally scheduling
+    /// its repair.
+    pub(crate) fn mark_down(&mut self, board: usize, clock: f64, repair_at: Option<f64>) {
+        if !self.down[board] {
+            self.down[board] = true;
+            self.down_since[board] = Some(clock);
+        }
+        self.hung[board] = None;
+        self.hung_repair[board] = None;
+        if let Some(t) = repair_at {
+            self.repairs.push((t, board));
+        }
+    }
+
+    /// A board is accepting work: neither down nor (even undetectedly)
+    /// hung. Preemption only considers victims on healthy boards.
+    pub(crate) fn healthy(&self, board: usize) -> bool {
+        !self.down[board] && self.hung[board].is_none()
+    }
+
+    /// A down board with a repair timer still pending — it will rejoin
+    /// placement, so requeued remainders may keep waiting for it.
+    pub(crate) fn repair_pending(&self, board: usize) -> bool {
+        self.repairs.iter().any(|&(_, b)| b == board)
+    }
+
+    /// Account one killed segment's occupancy split: delivered up to the
+    /// cut boundary, lost from there to the end of occupancy.
+    pub(crate) fn record_kill(
+        &mut self,
+        board: usize,
+        banks: u64,
+        start_s: f64,
+        boundary_s: f64,
+        occupancy_end_s: f64,
+    ) {
+        self.b_kills[board] += 1;
+        self.b_delivered_bank_s[board] += banks as f64 * (boundary_s - start_s);
+        self.b_lost_bank_s[board] += banks as f64 * (occupancy_end_s - boundary_s);
+    }
+
+    /// Account a normally completed segment's full occupancy as
+    /// delivered.
+    pub(crate) fn record_delivery(&mut self, board: usize, bank_s: f64) {
+        self.b_delivered_bank_s[board] += bank_s;
+    }
+
+    /// Bump the lineage's retry counter; `Some(retry_number)` when the
+    /// remainder should be requeued, `None` when the cap is exhausted.
+    pub(crate) fn try_retry(&mut self, lineage: usize) -> Option<u64> {
+        let n = self.retries_of_lineage.entry(lineage).or_insert(0);
+        *n += 1;
+        (*n <= self.retry.cap).then_some(*n)
+    }
+
+    pub(crate) fn record_requeue(&mut self) {
+        self.retries += 1;
+    }
+
+    /// Close the books at the end of a pass: clip still-open down spans
+    /// to the makespan and freeze the accounting into the schedule's
+    /// reliability block.
+    pub(crate) fn into_stats(mut self, makespan_s: f64) -> ReliabilityStats {
+        for (board, since) in self.down_since.iter_mut().enumerate() {
+            if let Some(t) = since.take() {
+                self.b_down_s[board] += (makespan_s - t).max(0.0);
+            }
+        }
+        let boards = (0..self.cap.len())
+            .map(|b| BoardReliability {
+                board: b,
+                model: self.models[b].clone(),
+                faults: self.b_faults[b],
+                kills: self.b_kills[b],
+                down_s: self.b_down_s[b],
+                mttr_s: {
+                    let (n, total) = self.b_repaired[b];
+                    (n > 0).then(|| total / n as f64)
+                },
+                lost_bank_s: self.b_lost_bank_s[b],
+                delivered_bank_s: self.b_delivered_bank_s[b],
+            })
+            .collect();
+        ReliabilityStats {
+            boards,
+            retries: self.retries,
+            exhausted: self.exhausted,
+            drained: self.drained,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_explicit_specs() {
+        let plan = FaultPlan::parse(
+            "board=1,at_ms=3.5,kind=crash;board=0,at_ms=5,kind=bank_degrade:8,repair_ms=2",
+        )
+        .unwrap();
+        assert_eq!(plan.faults.len(), 2);
+        assert!(plan.seeded.is_none());
+        let f = &plan.faults[0];
+        assert_eq!(f.board, 1);
+        assert!((f.at_s - 0.0035).abs() < 1e-12);
+        assert_eq!(f.kind, FaultKind::Crash);
+        assert_eq!(f.repair_s, None);
+        let g = &plan.faults[1];
+        assert_eq!(g.kind, FaultKind::BankDegrade(8));
+        assert!((g.repair_s.unwrap() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_seeded_and_none() {
+        let plan = FaultPlan::parse("seed=42,count=3,horizon_ms=8").unwrap();
+        let s = plan.seeded.as_ref().unwrap();
+        assert_eq!((s.seed, s.count), (42, 3));
+        assert!((s.horizon_s - 0.008).abs() < 1e-12);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("board=0,at_ms=1", "needs kind"),
+            ("at_ms=1,kind=crash", "needs board"),
+            ("board=0,kind=crash", "needs at_ms"),
+            ("board=0,at_ms=-1,kind=crash", ">= 0"),
+            ("board=0,at_ms=1,kind=melt", "unknown kind"),
+            ("board=0,at_ms=1,kind=bank_degrade:x", "bad bank count"),
+            ("board=0,at_ms=1,kind=crash,board=1", "duplicate"),
+            ("board=0,at_ms=1,kind=crash,flavor=mild", "unknown field"),
+            ("seed=1,count=3", "horizon_ms"),
+            ("seed=1,horizon_ms=4", "count"),
+            ("seed=1,count=0,horizon_ms=4", "count >= 1"),
+            ("nonsense", "key=value"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_validates_and_sorts() {
+        let plan = FaultPlan::parse(
+            "board=1,at_ms=5,kind=crash;board=0,at_ms=2,kind=hang",
+        )
+        .unwrap();
+        let faults = plan.resolve(&[32, 32]).unwrap();
+        assert_eq!(faults[0].board, 0, "sorted by injection instant");
+        assert_eq!(faults[1].board, 1);
+
+        let oob = FaultPlan::parse("board=2,at_ms=1,kind=crash").unwrap();
+        let err = oob.resolve(&[32, 32]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        let grow = FaultPlan::parse("board=0,at_ms=1,kind=bank_degrade:32").unwrap();
+        let err = grow.resolve(&[32]).unwrap_err().to_string();
+        assert!(err.contains("must reduce"), "{err}");
+    }
+
+    #[test]
+    fn seeded_resolution_is_deterministic_and_valid() {
+        let plan = FaultPlan::parse("seed=7,count=16,horizon_ms=10").unwrap();
+        let a = plan.resolve(&[32, 16]).unwrap();
+        let b = plan.resolve(&[32, 16]).unwrap();
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.board, y.board);
+            assert!(x.at_s == y.at_s);
+            assert_eq!(x.kind, y.kind);
+        }
+        let banks = [32u64, 16];
+        for f in &a {
+            assert!(f.board < 2);
+            assert!(f.at_s >= 0.0 && f.at_s <= 0.0075 + 1e-9);
+            if let FaultKind::BankDegrade(n) = f.kind {
+                assert!(n >= 1 && n < banks[f.board]);
+            }
+        }
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s), "sorted");
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = RetryPolicy::default();
+        assert!(p.backoff_s(1) == DEFAULT_BACKOFF_BASE_S);
+        assert!(p.backoff_s(2) == 2.0 * DEFAULT_BACKOFF_BASE_S);
+        assert!(p.backoff_s(3) == 4.0 * DEFAULT_BACKOFF_BASE_S);
+        assert!(p.backoff_s(10) == DEFAULT_BACKOFF_CAP_S, "capped");
+        assert!(p.backoff_s(64) == DEFAULT_BACKOFF_CAP_S, "exponent clamped");
+    }
+
+    #[test]
+    fn fault_rt_accounting() {
+        let mut rt = FaultRt::new(
+            vec![FaultSpec {
+                board: 0,
+                at_s: 0.001,
+                kind: FaultKind::Crash,
+                repair_s: Some(0.002),
+            }],
+            RetryPolicy::default(),
+            false,
+            &[("u280".into(), 32), ("u50".into(), 24)],
+        );
+        assert!(rt.next_timer_s() == 0.001);
+        assert!(rt.due_faults(0.0005).is_empty());
+        let due = rt.due_faults(0.001);
+        assert_eq!(due.len(), 1);
+        rt.record_fault(0);
+        rt.mark_down(0, 0.001, Some(0.003));
+        assert!(!rt.healthy(0) && rt.healthy(1));
+        assert!(rt.next_timer_s() == 0.003, "repair timer pending");
+        rt.record_kill(0, 6, 0.0, 0.0008, 0.001);
+        assert_eq!(rt.due_repairs(0.003), vec![0]);
+        assert!(rt.healthy(0), "repaired board rejoins");
+        // retries: cap at 3 kills per lineage
+        assert_eq!(rt.try_retry(5), Some(1));
+        assert_eq!(rt.try_retry(5), Some(2));
+        assert_eq!(rt.try_retry(5), Some(3));
+        assert_eq!(rt.try_retry(5), None, "cap exhausted");
+        rt.record_requeue();
+        let stats = rt.into_stats(0.01);
+        assert_eq!(stats.boards.len(), 2);
+        let b0 = &stats.boards[0];
+        assert_eq!((b0.faults, b0.kills), (1, 1));
+        assert!((b0.down_s - 0.002).abs() < 1e-12);
+        assert!((b0.mttr_s.unwrap() - 0.002).abs() < 1e-12);
+        assert!((b0.delivered_bank_s - 6.0 * 0.0008).abs() < 1e-12);
+        assert!((b0.lost_bank_s - 6.0 * 0.0002).abs() < 1e-12);
+        assert_eq!(stats.boards[1].faults, 0);
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.iter_lost(), 0);
+    }
+
+    #[test]
+    fn unrepaired_down_span_clips_to_makespan() {
+        let mut rt = FaultRt::new(
+            Vec::new(),
+            RetryPolicy::default(),
+            true,
+            &[("u280".into(), 32)],
+        );
+        rt.record_fault(0);
+        assert!(rt.drain_active, "drain arms on the first fault");
+        rt.mark_down(0, 0.004, None);
+        let stats = rt.into_stats(0.01);
+        assert!((stats.boards[0].down_s - 0.006).abs() < 1e-12);
+        assert_eq!(stats.boards[0].mttr_s, None, "never repaired");
+    }
+}

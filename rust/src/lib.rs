@@ -31,7 +31,8 @@
 //! | [`coordinator`] | multi-PE execution of the five parallelism schemes (Figs 4–6) |
 //! | [`codegen`] | TAPA HLS kernel/host/connectivity + execution-plan emission |
 //! | [`metrics`] | tables/percentiles + one function per paper artifact |
-//! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor |
+//! | [`faults`] | deterministic fault injection policy: fault plans, retry/backoff, reliability accounting |
+//! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor, board-failure recovery |
 //! | [`obs`] | deterministic observability: event recorder, Chrome-trace export, metrics snapshots |
 //! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
 //!
@@ -51,6 +52,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod codegen;
 pub mod metrics;
+pub mod faults;
 pub mod service;
 pub mod obs;
 pub mod bench;

@@ -149,6 +149,7 @@ fn print_help() {
          sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
          [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n             \
          [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n             \
+         [--faults <spec>] [--retry-cap <n>] [--drain]\n             \
          [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
          sasa trace --jobs <jobs.json> [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
@@ -169,6 +170,17 @@ fn print_help() {
          HBM-bank-seconds; exhausted tenants are parked until\n                    \
          the bucket refills (never dropped)\n  \
          --quota-window-ms <x>  refill horizon of a drained bucket (default 5)\n  \
+         --faults <spec>   deterministic fault injection: `;`-separated specs\n                    \
+         `board=1,at_ms=3.5,kind=crash|hang|bank_degrade:8\n                    \
+         [,repair_ms=x]`, or `seed=42,count=3,horizon_ms=10` for\n                    \
+         a seeded schedule, or `none` (empty plan — schedules\n                    \
+         byte-identically to omitting the flag). Killed segments\n                    \
+         keep retired rounds; remainders are re-planned and\n                    \
+         re-enqueued with bounded exponential backoff\n  \
+         --retry-cap <n>   kills one job survives before it is dropped as\n                    \
+         exhausted (default 3; requires --faults)\n  \
+         --drain           after the first fault, stop admitting new work but\n                    \
+         complete everything in flight (requires --faults)\n  \
          --trace-out <path>  record the run and write a Chrome trace-event\n                    \
          timeline (simulated time; load in Perfetto or\n                    \
          chrome://tracing); `sasa trace` defaults it to trace.json\n  \
@@ -504,6 +516,10 @@ fn print_batch_report(
     }
     println!("{}", report.class_table().to_markdown());
     println!("{}", report.board_table().to_markdown());
+    // present exactly when the pass ran with a non-empty --faults plan
+    if let Some(reliability) = report.reliability_table() {
+        println!("{}", reliability.to_markdown());
+    }
     println!("{}", report.summary_table().to_markdown());
     let s = &report.schedule;
     println!(
@@ -539,7 +555,7 @@ fn configure_batch<'p>(
     String,
     sasa::service::BatchExecutor<'p>,
 )> {
-    use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, PlanCache};
+    use sasa::service::{load_jobs, validate_for_fleet, BatchExecutor, FairnessPolicy, PlanCache};
     let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
     let specs = load_jobs(jobs_path)?;
     let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE).to_string();
@@ -552,10 +568,20 @@ fn configure_batch<'p>(
         cache = cache.with_max_entries(cap);
     }
     let mut exec = BatchExecutor::new(platform);
+    let mut pool_override = None;
     if let Some(banks) = args.get("banks") {
-        exec = exec.with_pool_banks(banks.parse().context("--banks must be an integer")?);
+        let banks: u64 = banks.parse().context("--banks must be an integer")?;
+        pool_override = Some(banks);
+        exec = exec.with_pool_banks(banks);
     }
     let boards = parse_boards(args.get("boards").unwrap_or("1"), platform)?;
+    // a job that cannot fit the largest board would stall the fleet loop
+    // mid-run; name it now, before any exploration is paid for
+    let board_banks: Vec<u64> = boards
+        .iter()
+        .map(|b| pool_override.unwrap_or(b.hbm_banks))
+        .collect();
+    validate_for_fleet(&specs, &board_banks)?;
     exec = exec.with_fleet(boards);
     if let Some(ms) = args.get("aging-ms") {
         let ms: f64 = ms.parse().context("--aging-ms must be a number")?;
@@ -609,6 +635,32 @@ fn configure_batch<'p>(
         policy = policy.with_quota_window_s(ms / 1e3);
     }
     exec = exec.with_policy(policy);
+    // fault injection is strictly opt-in: without --faults no fault
+    // state is ever constructed and the schedule stays byte-identical
+    // to the pre-faults loop ("--faults none" parses to the same empty
+    // plan, which the fleet also treats as absent — the CI oracle gate
+    // byte-diffs the two paths)
+    match args.get("faults") {
+        Some(spec) => {
+            let mut plan = sasa::faults::FaultPlan::parse(spec)?;
+            if let Some(cap) = args.get("retry-cap") {
+                plan.retry.cap =
+                    cap.parse().context("--retry-cap must be a non-negative integer")?;
+            }
+            if args.get("drain").is_some() {
+                plan.drain = true;
+            }
+            exec = exec.with_faults(plan);
+        }
+        None => {
+            // same inert-flag guard as --quota-window-ms above
+            for flag in ["retry-cap", "drain"] {
+                if args.get(flag).is_some() {
+                    bail!("--{flag} has no effect without --faults");
+                }
+            }
+        }
+    }
     Ok((specs, cache, cache_path, exec))
 }
 
@@ -642,15 +694,17 @@ fn write_obs_artifacts(
 
 /// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
 /// [--banks n] [--boards mix] [--aging-ms x] [--tenant-weights a:4,b:1]
-/// [--quota bank-s] [--quota-window-ms x] [--trace-out t.json]
-/// [--metrics-out m.json]`: schedule a multi-tenant job batch over a
-/// fleet of boards' HBM bank pools. `--boards` takes a count (identical
-/// `--platform` boards) or a heterogeneous mix like `u280:1,u50:1` —
-/// each board is planned by its own platform's DSE. Weights turn
-/// within-class admission into weighted fair queuing; `--quota` caps
-/// every tenant with a bank-second token bucket. `--trace-out` /
-/// `--metrics-out` additionally record the run and export the timeline
-/// / counter artifacts (see DESIGN.md §7).
+/// [--quota bank-s] [--quota-window-ms x] [--faults spec] [--retry-cap n]
+/// [--drain] [--trace-out t.json] [--metrics-out m.json]`: schedule a
+/// multi-tenant job batch over a fleet of boards' HBM bank pools.
+/// `--boards` takes a count (identical `--platform` boards) or a
+/// heterogeneous mix like `u280:1,u50:1` — each board is planned by its
+/// own platform's DSE. Weights turn within-class admission into weighted
+/// fair queuing; `--quota` caps every tenant with a bank-second token
+/// bucket. `--faults` injects deterministic board crashes/hangs/bank
+/// degradation and reports a reliability table (see DESIGN.md §8).
+/// `--trace-out` / `--metrics-out` additionally record the run and
+/// export the timeline / counter artifacts (see DESIGN.md §7).
 fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     let (specs, mut cache, cache_path, mut exec) = configure_batch(args, platform)?;
     let trace_out = args.get("trace-out");

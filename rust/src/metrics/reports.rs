@@ -1,4 +1,4 @@
-//! One function per paper table/figure (DESIGN.md §8 experiment index),
+//! One function per paper table/figure (DESIGN.md §9 experiment index),
 //! plus the serving layer's fairness table ([`fairness_table`]).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
@@ -58,6 +58,69 @@ pub fn fairness_table(rows: &[FairnessRow]) -> Table {
             r.quota_bank_s.map_or_else(|| "-".into(), |q| format!("{:.3}", q * 1e3)),
             r.parks.to_string(),
             format!("{:.3}", r.parked_s * 1e3),
+        ]);
+    }
+    t
+}
+
+/// One row of the serving layer's per-board reliability table: what the
+/// fault injector did to the board and what the recovery layer salvaged.
+/// Defined here (not in `service`) so the renderer stays a pure
+/// data-to-`Table` function; `service::BatchReport::reliability_table`
+/// does the conversion.
+#[derive(Debug, Clone)]
+pub struct ReliabilityRow {
+    pub board: usize,
+    pub model: String,
+    /// Faults injected on this board.
+    pub faults: u64,
+    /// Segments killed on this board (crash, watchdog, degrade eviction).
+    pub kills: u64,
+    /// Time out of placement, clipped to the makespan.
+    pub down_s: f64,
+    /// Mean time to repair over completed down→up cycles (`None` = never
+    /// repaired).
+    pub mttr_s: Option<f64>,
+    /// Bank-seconds occupied past killed segments' last retired boundary.
+    pub lost_bank_s: f64,
+    /// Bank-seconds of retired work.
+    pub delivered_bank_s: f64,
+}
+
+/// Per-board reliability report for a faulted scheduling pass: fault and
+/// kill counts, downtime and MTTR, and the lost vs. delivered bank-second
+/// split; the title carries the fleet-wide retry/lost-job totals.
+pub fn reliability_table(
+    rows: &[ReliabilityRow],
+    retries: u64,
+    exhausted: usize,
+    drained: usize,
+) -> Table {
+    let mut t = Table::new(
+        "Reliability (deterministic fault injection + recovery)",
+        &[
+            "board", "model", "faults", "kills", "down ms", "MTTR ms",
+            "lost bank-ms", "delivered bank-ms",
+        ],
+    );
+    t.title = format!(
+        "{} — {} retr{}, {} exhausted, {} drained",
+        t.title,
+        retries,
+        if retries == 1 { "y" } else { "ies" },
+        exhausted,
+        drained,
+    );
+    for r in rows {
+        t.row(vec![
+            r.board.to_string(),
+            r.model.clone(),
+            r.faults.to_string(),
+            r.kills.to_string(),
+            format!("{:.3}", r.down_s * 1e3),
+            r.mttr_s.map_or_else(|| "-".into(), |m| format!("{:.3}", m * 1e3)),
+            format!("{:.3}", r.lost_bank_s * 1e3),
+            format!("{:.3}", r.delivered_bank_s * 1e3),
         ]);
     }
     t
@@ -476,6 +539,84 @@ mod tests {
         let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
         assert_eq!(lines.len(), 2, "header and separator only: {md}");
         assert!(lines[0].contains("tenant") && lines[1].starts_with("|-"));
+    }
+
+    #[test]
+    fn reliability_table_golden_output() {
+        // same discipline as the fairness golden: CI greps and byte-diffs
+        // serve output, so the exact render (widths, separator, '-' for
+        // never-repaired MTTR, ms formatting) is load-bearing
+        let rows = vec![
+            ReliabilityRow {
+                board: 0,
+                model: "u280".into(),
+                faults: 2,
+                kills: 3,
+                down_s: 0.0015,
+                mttr_s: Some(0.00075),
+                lost_bank_s: 0.004,
+                delivered_bank_s: 0.032,
+            },
+            ReliabilityRow {
+                board: 1,
+                model: "u50".into(),
+                faults: 0,
+                kills: 0,
+                down_s: 0.0,
+                mttr_s: None,
+                lost_bank_s: 0.0,
+                delivered_bank_s: 0.018,
+            },
+        ];
+        let expected = "\
+### Reliability (deterministic fault injection + recovery) — 2 retries, 1 exhausted, 0 drained\n\
+\n\
+| board | model | faults | kills | down ms | MTTR ms | lost bank-ms | delivered bank-ms |\n\
+|-------|-------|--------|-------|---------|---------|--------------|-------------------|\n\
+| 0     | u280  | 2      | 3     | 1.500   | 0.750   | 4.000        | 32.000            |\n\
+| 1     | u50   | 0      | 0     | 0.000   | -       | 0.000        | 18.000            |\n";
+        assert_eq!(reliability_table(&rows, 2, 1, 0).to_markdown(), expected);
+    }
+
+    #[test]
+    fn reliability_table_singular_retry_and_empty() {
+        // exactly one retry reads "1 retry", and a faulted pass where no
+        // board took damage still renders a well-formed header-only table
+        let t = reliability_table(&[], 1, 0, 2);
+        assert!(
+            t.title.ends_with("1 retry, 0 exhausted, 2 drained"),
+            "{}",
+            t.title
+        );
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 2, "header and separator only: {md}");
+        assert!(lines[0].contains("MTTR ms") && lines[1].starts_with("|-"));
+    }
+
+    #[test]
+    fn reliability_table_long_model_widens_column() {
+        // a board model longer than every header must widen its column
+        // without breaking alignment across rendered lines
+        let rows = vec![ReliabilityRow {
+            board: 7,
+            model: "a-board-model-longer-than-any-header".into(),
+            faults: 1,
+            kills: 1,
+            down_s: 0.001,
+            mttr_s: None,
+            lost_bank_s: 0.0005,
+            delivered_bank_s: 0.0025,
+        }];
+        let md = reliability_table(&rows, 0, 0, 0).to_markdown();
+        assert!(md.contains("a-board-model-longer-than-any-header"));
+        let widths: Vec<usize> = md
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.chars().count())
+            .collect();
+        assert_eq!(widths.len(), 3, "header, separator, one row");
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "misaligned: {md}");
     }
 
     #[test]

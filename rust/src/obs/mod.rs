@@ -8,13 +8,15 @@
 //!
 //! * [`record`] — the [`Event`] taxonomy (arrivals, admissions with the
 //!   losing candidates' scores, completions, preemptions + refunds,
-//!   quota park/unpark, plan-cache hits/misses/evictions/explores), the
-//!   [`Sink`] trait, the [`Recorder`] handle the instrumented
-//!   constructors accept, and [`EngineCounters`] for the tiered engine's
-//!   per-stage work split.
+//!   quota park/unpark, fault injections with board down/up transitions
+//!   and retry/requeue decisions, plan-cache
+//!   hits/misses/evictions/explores), the [`Sink`] trait, the
+//!   [`Recorder`] handle the instrumented constructors accept, and
+//!   [`EngineCounters`] for the tiered engine's per-stage work split.
 //! * [`trace`] — [`chrome_trace`]: the event stream as Chrome
 //!   trace-event JSON (one track per board, one per tenant, instants for
-//!   parks and preemptions), loadable in Perfetto. `--trace-out`.
+//!   parks, preemptions, and fault/recovery activity), loadable in
+//!   Perfetto. `--trace-out`.
 //! * [`snapshot`] — [`metrics_snapshot`]: every report table as one JSON
 //!   document with raw numeric fields. `--metrics-out`.
 //!

@@ -100,6 +100,33 @@ pub enum Event {
         /// Iteration rounds the victim keeps.
         rounds_kept: u64,
     },
+    /// A fault from the injection schedule fired on a board
+    /// (`crate::faults`). `kind` is the CLI spelling: `crash`, `hang`, or
+    /// `bank_degrade:<n>`.
+    FaultInjected { t_s: f64, board: usize, kind: String },
+    /// A board left placement — crashed, or a hang was detected by the
+    /// per-segment completion-deadline watchdog.
+    BoardDown { t_s: f64, board: usize },
+    /// A repaired board rejoined placement at `banks` (its possibly
+    /// degraded pool).
+    BoardUp { t_s: f64, board: usize, banks: u64 },
+    /// A killed segment's remainder was scheduled for retry: attempt
+    /// `retry` of the lineage, re-arriving at `at_s` after backoff.
+    RetryScheduled {
+        t_s: f64,
+        /// Killed segment index in `Schedule::jobs`.
+        job: usize,
+        tenant: String,
+        /// Board the segment was killed on.
+        board: usize,
+        /// 1-based retry number for this job lineage.
+        retry: u64,
+        /// Backoff target: the remainder's new arrival instant.
+        at_s: f64,
+    },
+    /// The re-planned remainder of a killed segment re-entered the future
+    /// queue with `remaining_iter` iterations still to retire.
+    JobRequeued { t_s: f64, job: usize, tenant: String, board: usize, remaining_iter: u64 },
     /// A tenant's token bucket went into deficit at admission: the tenant
     /// is skipped by the pick until `until_s`.
     QuotaPark { t_s: f64, tenant: String, until_s: f64 },
@@ -125,6 +152,11 @@ impl Event {
             | Event::Admission { t_s, .. }
             | Event::Completion { t_s, .. }
             | Event::Preemption { t_s, .. }
+            | Event::FaultInjected { t_s, .. }
+            | Event::BoardDown { t_s, .. }
+            | Event::BoardUp { t_s, .. }
+            | Event::RetryScheduled { t_s, .. }
+            | Event::JobRequeued { t_s, .. }
             | Event::QuotaPark { t_s, .. }
             | Event::QuotaUnpark { t_s, .. } => Some(*t_s),
             _ => None,

@@ -1,8 +1,9 @@
 //! Machine-readable metrics snapshot: the `--metrics-out` JSON document.
 //!
 //! Mirrors every table a batch report renders — jobs, tenants, classes,
-//! per-board utilization, the fairness table when present, and the
-//! service summary — as one JSON object with raw numeric fields
+//! per-board utilization, the fairness and reliability tables when
+//! present, and the service summary — as one JSON object with raw
+//! numeric fields
 //! (seconds, bank-seconds, cells), so downstream tooling reads values
 //! directly instead of screen-scraping the markdown tables. The numbers
 //! are the *same* numbers the tables format: `tests/obs_trace.rs`
@@ -172,6 +173,51 @@ pub fn metrics_snapshot(report: &BatchReport, engine: Option<&EngineCounters>) -
             ),
         ));
     }
+    if let Some(rel) = &sched.reliability {
+        let lost = |jobs: &[crate::faults::LostJob]| {
+            Json::Arr(
+                jobs.iter()
+                    .map(|j| {
+                        obj(vec![
+                            ("tenant", s(j.tenant.clone())),
+                            ("kernel", s(j.kernel.clone())),
+                            ("iter_lost", num(j.iter_lost as f64)),
+                            ("reason", s(j.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        fields.push((
+            "reliability",
+            obj(vec![
+                (
+                    "boards",
+                    Json::Arr(
+                        rel.boards
+                            .iter()
+                            .map(|b| {
+                                obj(vec![
+                                    ("board", num(b.board as f64)),
+                                    ("model", s(b.model.clone())),
+                                    ("faults", num(b.faults as f64)),
+                                    ("kills", num(b.kills as f64)),
+                                    ("down_s", num(b.down_s)),
+                                    ("mttr_s", b.mttr_s.map_or(Json::Null, num)),
+                                    ("lost_bank_s", num(b.lost_bank_s)),
+                                    ("delivered_bank_s", num(b.delivered_bank_s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("retries", num(rel.retries as f64)),
+                ("exhausted", lost(&rel.exhausted)),
+                ("drained", lost(&rel.drained)),
+                ("iter_lost", num(rel.iter_lost() as f64)),
+            ]),
+        ));
+    }
     if let Some(counters) = engine {
         fields.push(("engine", counters.to_json()));
     }
@@ -238,8 +284,9 @@ mod tests {
             assert_eq!(row.get("cells").and_then(Json::as_f64), Some(t.cells as f64));
         }
 
-        // no fairness / engine sections unless provided
+        // no fairness / reliability / engine sections unless provided
         assert!(snap.get("fairness").is_none());
+        assert!(snap.get("reliability").is_none());
         assert!(snap.get("engine").is_none());
 
         // the document round-trips through the JSON wire form
@@ -255,6 +302,33 @@ mod tests {
         let snap = metrics_snapshot(&report, Some(&counters));
         let engine = snap.get("engine").unwrap();
         assert_eq!(engine.u64_or("interior_cells", 0), 42);
+    }
+
+    #[test]
+    fn reliability_section_mirrors_stats() {
+        use crate::faults::FaultPlan;
+        let p = FpgaPlatform::u280();
+        let plan = FaultPlan::parse("board=0,at_ms=0,kind=crash,repair_ms=1").unwrap();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_boards(2)
+            .with_faults(plan)
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        let snap = metrics_snapshot(&report, None);
+        let rel = snap.get("reliability").expect("faulted run carries a reliability section");
+        let stats = report.schedule.reliability.as_ref().unwrap();
+        let boards = rel.get("boards").and_then(Json::as_arr).unwrap();
+        assert_eq!(boards.len(), stats.boards.len());
+        for (row, b) in boards.iter().zip(&stats.boards) {
+            assert_eq!(row.u64_or("faults", u64::MAX), b.faults);
+            assert_eq!(row.get("down_s").and_then(Json::as_f64), Some(b.down_s));
+        }
+        assert_eq!(rel.u64_or("retries", u64::MAX), stats.retries);
+        assert_eq!(rel.u64_or("iter_lost", u64::MAX), stats.iter_lost());
+        // still conserves iterations: faults reschedule, never drop
+        let iters: u64 = demo_jobs().iter().map(|s| s.iter).sum();
+        assert_eq!(snapshot_total_iters(&snap) + stats.iter_lost(), iters);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! * one process (pid) per **board**, named `board<i> (<model>)`, with a
 //!   `B`/`E` span per admitted segment and instant events for
-//!   preemption cuts;
+//!   preemption cuts, fault injections, down/up transitions, and
+//!   retry/requeue decisions;
 //! * one process per **tenant**, named `tenant:<name>`, mirroring that
 //!   tenant's segments plus instants for arrivals and quota
 //!   park/unpark;
@@ -124,8 +125,15 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             }
             Event::Admission { tenant, board, .. }
             | Event::Completion { tenant, board, .. }
-            | Event::Preemption { tenant, board, .. } => {
+            | Event::Preemption { tenant, board, .. }
+            | Event::RetryScheduled { tenant, board, .. }
+            | Event::JobRequeued { tenant, board, .. } => {
                 tenants.insert(tenant.clone());
+                max_board = max_board.max(*board);
+            }
+            Event::FaultInjected { board, .. }
+            | Event::BoardDown { board, .. }
+            | Event::BoardUp { board, .. } => {
                 max_board = max_board.max(*board);
             }
             _ => {}
@@ -351,6 +359,71 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                             ("requested_at_s", num(*t_s)),
                             ("rounds_kept", num(*rounds_kept as f64)),
                         ]),
+                    ),
+                );
+            }
+            Event::FaultInjected { t_s, board, kind } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        board_pid(*board),
+                        us(*t_s),
+                        &format!("fault {kind}"),
+                        obj(vec![]),
+                    ),
+                );
+            }
+            Event::BoardDown { t_s, board } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(board_pid(*board), us(*t_s), "board down", obj(vec![])),
+                );
+            }
+            Event::BoardUp { t_s, board, banks } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        board_pid(*board),
+                        us(*t_s),
+                        "board up",
+                        obj(vec![("banks", num(*banks as f64))]),
+                    ),
+                );
+            }
+            Event::RetryScheduled { t_s, job, tenant, board, retry, at_s } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        board_pid(*board),
+                        us(*t_s),
+                        &format!("retry {tenant}#{job}"),
+                        obj(vec![("at_s", num(*at_s)), ("retry", num(*retry as f64))]),
+                    ),
+                );
+            }
+            Event::JobRequeued { t_s, job, tenant, board, remaining_iter } => {
+                push(
+                    board_pid(*board),
+                    0,
+                    us(*t_s),
+                    "i",
+                    instant(
+                        board_pid(*board),
+                        us(*t_s),
+                        &format!("requeue {tenant}#{job}"),
+                        obj(vec![("remaining_iter", num(*remaining_iter as f64))]),
                     ),
                 );
             }
@@ -580,5 +653,59 @@ mod tests {
         assert!(evs.iter().any(|e| {
             e.get("name").and_then(Json::as_str).is_some_and(|n| n.starts_with("preempt"))
         }));
+    }
+
+    #[test]
+    fn fault_instants_land_on_board_tracks() {
+        // a crash kill closes the victim's span at the kill time and the
+        // five fault/recovery events all render as board-track instants
+        let events = vec![
+            Event::FleetStart { boards: vec![("u280".into(), 32), ("u50".into(), 24)] },
+            admission(0, "alice", 1, 0.0, 0.010),
+            Event::FaultInjected { t_s: 0.003, board: 1, kind: "crash".into() },
+            completion(0, "alice", 1, 0.003), // kill closes the span early
+            Event::BoardDown { t_s: 0.003, board: 1 },
+            Event::RetryScheduled {
+                t_s: 0.003,
+                job: 0,
+                tenant: "alice".into(),
+                board: 1,
+                retry: 1,
+                at_s: 0.0035,
+            },
+            Event::JobRequeued {
+                t_s: 0.003,
+                job: 0,
+                tenant: "alice".into(),
+                board: 1,
+                remaining_iter: 48,
+            },
+            Event::BoardUp { t_s: 0.006, board: 1, banks: 24 },
+            admission(1, "alice", 0, 0.0035, 0.004),
+            completion(1, "alice", 0, 0.0075),
+        ];
+        let trace = chrome_trace(&events);
+        let evs = track_events(&trace);
+        let on_board = |name: &str| {
+            evs.iter().any(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("i")
+                    && e.get("pid").and_then(Json::as_u64) == Some(2)
+                    && e.get("name").and_then(Json::as_str) == Some(name)
+            })
+        };
+        for expect in ["fault crash", "board down", "retry alice#0", "requeue alice#0", "board up"]
+        {
+            assert!(on_board(expect), "missing board-track instant {expect:?}");
+        }
+        // the killed segment's span ends at the kill instant on board 1
+        let end = evs
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("E")
+                    && e.get("pid").and_then(Json::as_u64) == Some(2)
+            })
+            .and_then(|e| e.get("ts").and_then(Json::as_f64))
+            .unwrap();
+        assert_eq!(end, 3000.0, "span cut at the crash, not the planned finish");
     }
 }

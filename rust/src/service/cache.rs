@@ -130,8 +130,20 @@ impl PlanCache {
                 .and_then(Json::as_obj)
                 .with_context(|| format!("plan cache {path:?} missing 'plans' object"))?;
             for (key, val) in plans {
-                let r = result_from_json(val)
-                    .with_context(|| format!("plan cache {path:?}, entry '{key}'"))?;
+                // a corrupt or truncated entry costs one re-exploration,
+                // not the whole serve: warn, skip it, keep the healthy
+                // plans (an unparseable *file* is still an error above —
+                // that's a different failure than one mangled value)
+                let r = match result_from_json(val) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!(
+                            "warning: plan cache {path:?}, entry '{key}': {e:#} — \
+                             skipping it (the plan will be re-explored)"
+                        );
+                        continue;
+                    }
+                };
                 // pre-LRU files carry no recency: they load as 0 (oldest)
                 let last_used = val.u64_or("last_used", 0);
                 cache.seq = cache.seq.max(last_used);
@@ -566,6 +578,46 @@ mod tests {
         let path = dir.join("plans.json");
         std::fs::write(&path, "{ nope").unwrap();
         assert!(PlanCache::at_path(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_entry_skipped_with_surviving_plans() {
+        let dir = std::env::temp_dir().join("sasa_plan_cache_truncated");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let p = FpgaPlatform::u280();
+        let a = info_at(b::JACOBI2D_DSL, &[720, 1024], 4);
+        let bb = info_at(b::BLUR_DSL, &[720, 1024], 4);
+        let fresh_a = explore(&a, &p, 4);
+
+        let mut cold = PlanCache::at_path(&path).unwrap();
+        cold.get_or_explore(&a, &p, 4);
+        cold.get_or_explore(&bb, &p, 4);
+        cold.save().unwrap();
+
+        // mangle blur's entry only (rename its required 'best' field), as
+        // a torn write or bit flip inside one value would
+        let blur_key = PlanCache::key(&bb, &p, 4, DesignStyle::Sasa);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let pos = text.find(&blur_key).expect("blur plan persisted");
+        let best = pos + text[pos..].find("\"best\"").expect("entry has 'best'");
+        std::fs::write(&path, format!("{}\"bust\"{}", &text[..best], &text[best + 6..]))
+            .unwrap();
+
+        // the load keeps the healthy plan and skips (with a warning) the
+        // mangled one instead of aborting the whole serve
+        let mut warm = PlanCache::at_path(&path).unwrap();
+        assert_eq!(warm.len(), 1, "corrupt entry skipped, healthy plan kept");
+        let (ra, hit_a) = warm.get_or_explore(&a, &p, 4);
+        assert!(hit_a, "the surviving plan still hits");
+        assert_eq!(ra, fresh_a, "and round-trips bit-identically");
+        let (_, hit_b) = warm.get_or_explore(&bb, &p, 4);
+        assert!(!hit_b, "the skipped plan re-explores");
+        // saving writes a fully healthy file again
+        warm.save().unwrap();
+        assert_eq!(PlanCache::at_path(&path).unwrap().len(), 2);
     }
 
     #[test]

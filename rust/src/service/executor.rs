@@ -18,7 +18,8 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{verify::max_abs_diff, Coordinator, ExecReport, StencilJob};
 use crate::dsl::{benchmarks as b, parse};
-use crate::metrics::reports::{fairness_table, FairnessRow};
+use crate::faults::FaultPlan;
+use crate::metrics::reports::{fairness_table, reliability_table, FairnessRow, ReliabilityRow};
 use crate::metrics::{percentile, Table};
 use crate::model::Config;
 use crate::obs::Recorder;
@@ -97,6 +98,7 @@ pub struct BatchExecutor<'p> {
     aging_s: Option<f64>,
     policy: Option<FairnessPolicy>,
     recorder: Recorder,
+    faults: Option<FaultPlan>,
 }
 
 impl<'p> BatchExecutor<'p> {
@@ -109,6 +111,7 @@ impl<'p> BatchExecutor<'p> {
             aging_s: None,
             policy: None,
             recorder: Recorder::disabled(),
+            faults: None,
         }
     }
 
@@ -156,6 +159,15 @@ impl<'p> BatchExecutor<'p> {
         self
     }
 
+    /// Arm a deterministic fault plan (`--faults`): boards crash, hang,
+    /// and degrade at declared simulated instants, and the recovery layer
+    /// requeues killed segments. An empty plan schedules byte-identically
+    /// to no plan at all.
+    pub fn with_faults(mut self, plan: FaultPlan) -> BatchExecutor<'p> {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Schedule the batch over the fleet and aggregate statistics.
     pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
         let mut fleet = match &self.board_platforms {
@@ -174,6 +186,9 @@ impl<'p> BatchExecutor<'p> {
         }
         if self.recorder.is_enabled() {
             fleet = fleet.with_recorder(self.recorder.clone());
+        }
+        if let Some(plan) = &self.faults {
+            fleet = fleet.with_faults(plan.clone());
         }
         let schedule = fleet.schedule(specs, cache)?;
         let tenants = aggregate_tenants(&schedule);
@@ -413,6 +428,35 @@ impl BatchReport {
         Some(fairness_table(&rows))
     }
 
+    /// Per-board reliability table: faults, kills, downtime, MTTR, and
+    /// lost vs. delivered bank-seconds, plus retry/lost-job totals in the
+    /// title. Present exactly when the pass ran with a non-empty
+    /// `FaultPlan` — a faultless run prints nothing extra, keeping default
+    /// `sasa serve` output byte-identical to the pre-fault scheduler.
+    pub fn reliability_table(&self) -> Option<Table> {
+        let rel = self.schedule.reliability.as_ref()?;
+        let rows: Vec<ReliabilityRow> = rel
+            .boards
+            .iter()
+            .map(|b| ReliabilityRow {
+                board: b.board,
+                model: b.model.clone(),
+                faults: b.faults,
+                kills: b.kills,
+                down_s: b.down_s,
+                mttr_s: b.mttr_s,
+                lost_bank_s: b.lost_bank_s,
+                delivered_bank_s: b.delivered_bank_s,
+            })
+            .collect();
+        Some(reliability_table(
+            &rows,
+            rel.retries,
+            rel.exhausted.len(),
+            rel.drained.len(),
+        ))
+    }
+
     /// Per-board bank utilization over the fleet makespan, labeled with
     /// each board's platform model (a heterogeneous fleet shows e.g. both
     /// `u280` and `u50` rows).
@@ -598,6 +642,35 @@ mod tests {
         // the weighted tenant table grows the fair-share/throttle columns
         let md = report.tenant_table().to_markdown();
         assert!(md.contains("share %") && md.contains("parks"), "{md}");
+    }
+
+    #[test]
+    fn reliability_table_present_only_with_faults() {
+        let p = FpgaPlatform::u280();
+        // faultless run: no fault state is constructed, no table renders
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap();
+        assert!(report.schedule.reliability.is_none());
+        assert!(report.reliability_table().is_none());
+
+        // a crash at t=0 with a repair fires before any completion, so
+        // the injected-fault count is timing-independent
+        let plan = FaultPlan::parse("board=0,at_ms=0,kind=crash,repair_ms=1").unwrap();
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_boards(2)
+            .with_faults(plan)
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        let rel = report.schedule.reliability.as_ref().unwrap();
+        assert_eq!(rel.boards.len(), 2, "one row per board");
+        assert_eq!(rel.boards[0].faults, 1);
+        assert!(rel.boards[0].down_s > 0.0);
+        assert!(rel.boards.iter().map(|b| b.delivered_bank_s).sum::<f64>() > 0.0);
+        let md = report.reliability_table().unwrap().to_markdown();
+        assert!(md.contains("Reliability") && md.contains("u280"), "{md}");
+        // recovery is lossless here: nothing exhausted its retries
+        assert!(rel.exhausted.is_empty(), "{:?}", rel.exhausted);
     }
 
     #[test]

@@ -376,9 +376,12 @@ impl FairLedger {
         }
     }
 
-    /// Refund the un-run tail of a preempted segment (`bank_s` of the
-    /// charge never occupied banks). Shrinks the stride pass and the
-    /// bucket deficit; a parked tenant's unpark time moves earlier.
+    /// Refund the un-run tail of a preempted or fault-killed segment
+    /// (`bank_s` of the charge never occupied banks). Shrinks the stride
+    /// pass and the bucket deficit; a parked tenant's unpark time moves
+    /// earlier. The fleet's fault-recovery path calls this with the same
+    /// boundary arithmetic as preemption, so a tenant is never billed
+    /// twice for iterations a board crash forced it to re-run.
     pub(super) fn credit(&mut self, tenant: &str, bank_s: f64, now: f64) {
         let st = self.states.get_mut(tenant).expect("ledger covers every tenant");
         st.pass -= bank_s / st.weight as f64;

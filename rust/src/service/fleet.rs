@@ -56,6 +56,20 @@
 //!   (all weights equal, no quotas — the default) routes through, so
 //!   default schedules stay byte-identical to the pre-fairness scheduler.
 //!   See `service::fairness` for the algorithm and the oracle argument.
+//! * **Fault injection and recovery.** With a [`FaultPlan`]
+//!   ([`Fleet::with_faults`], CLI `--faults`), boards crash, hang, and
+//!   lose HBM banks at declared simulated instants (DESIGN.md §8).
+//!   Recovery reuses the preemption-remainder machinery: a killed
+//!   segment keeps its fully retired kernel-launch rounds, the remainder
+//!   is re-planned through the plan cache for the surviving board set and
+//!   re-enqueued with bounded exponential backoff under a retry cap, the
+//!   victim tenant's quota bucket is refunded for the lost tail, and a
+//!   repaired board rejoins placement at its (possibly degraded) bank
+//!   count. Hangs are detected by a per-segment completion-deadline
+//!   watchdog on the simulated clock. Everything is `Option`-gated on the
+//!   fault state: a faultless run constructs none of it and stays
+//!   byte-identical to the pre-fault scheduler — the same preservation
+//!   discipline as `pick_unweighted_walk`.
 //!
 //! With one board and all-default priorities the loop reproduces
 //! [`Scheduler::schedule_fifo_walk`] decision for decision (same configs,
@@ -69,6 +83,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
+use crate::faults::{FaultKind, FaultPlan, FaultRt, LostJob, WATCHDOG_GRACE_FRAC};
 use crate::obs::{CandidateScore, Event, Recorder};
 use crate::platform::FpgaPlatform;
 
@@ -116,6 +131,7 @@ pub struct Fleet {
     aging_s: f64,
     policy: FairnessPolicy,
     recorder: Recorder,
+    faults: Option<FaultPlan>,
 }
 
 /// A job waiting for admission (arrived, not yet placed). Crate-internal:
@@ -162,6 +178,7 @@ impl Fleet {
             aging_s: DEFAULT_AGING_S,
             policy: FairnessPolicy::new(),
             recorder: Recorder::disabled(),
+            faults: None,
         }
     }
 
@@ -180,6 +197,7 @@ impl Fleet {
             aging_s: DEFAULT_AGING_S,
             policy: FairnessPolicy::new(),
             recorder: Recorder::disabled(),
+            faults: None,
         }
     }
 
@@ -235,6 +253,16 @@ impl Fleet {
     /// preserved `*_walk` oracles are not instrumented at all.
     pub fn with_recorder(mut self, recorder: Recorder) -> Fleet {
         self.recorder = recorder;
+        self
+    }
+
+    /// Arm a deterministic fault plan ([`crate::faults`], CLI `--faults`).
+    /// An empty plan is equivalent to no plan: `schedule` constructs fault
+    /// state only for a non-empty plan, so a faultless run stays
+    /// byte-identical to the pre-fault scheduler (the preserved-oracle
+    /// discipline; see `tests/chaos_faults.rs`).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Fleet {
+        self.faults = Some(plan);
         self
     }
 
@@ -358,6 +386,24 @@ impl Fleet {
         let mut ledger = (!self.policy.is_trivial(specs.iter().map(|s| s.tenant.as_str())))
             .then(|| FairLedger::new(&self.policy, specs));
 
+        // fault runtime only for a non-empty plan: the faultless path
+        // constructs no fault state at all and stays byte-identical to
+        // the pre-fault loop — the same preservation discipline as the
+        // ledger above
+        let mut fx: Option<FaultRt> = match &self.faults {
+            Some(plan) if !plan.is_empty() => {
+                let banks: Vec<u64> = self.boards.iter().map(|b| b.banks).collect();
+                let resolved = plan.resolve(&banks)?;
+                let roster: Vec<(String, u64)> = self
+                    .boards
+                    .iter()
+                    .map(|b| (b.platform.model().to_string(), b.banks))
+                    .collect();
+                Some(FaultRt::new(resolved, plan.retry.clone(), plan.drain, &roster))
+            }
+            _ => None,
+        };
+
         let mut prepared = prepare_all(&platforms, &max_banks, specs, cache)?;
         // arrival order; equal arrivals keep submission order (stable sort)
         prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
@@ -367,6 +413,14 @@ impl Fleet {
             .enumerate()
             .map(|(index, prep)| Waiting { prep, index })
             .collect();
+        if let Some(f) = fx.as_mut() {
+            // submitted jobs are their own lineage; remainders requeued by
+            // recovery inherit their source's, so the retry cap counts
+            // kills per original job
+            for w in &future {
+                f.lineage_of_index.insert(w.index, w.index);
+            }
+        }
 
         let mut waiting: Vec<Waiting> = Vec::new();
         let mut running: Vec<Running> = Vec::new();
@@ -408,6 +462,18 @@ impl Fleet {
             //    tenants that stayed backlogged is untouched).
             running.retain(|r| {
                 if r.finish_s <= clock {
+                    if let Some(f) = fx.as_mut() {
+                        // a hung board's segments never complete on their
+                        // own — the hang stopped the board before this
+                        // (admitted) finish; the watchdog reclaims them
+                        if f.hung[r.board].is_some() {
+                            return true;
+                        }
+                        f.record_delivery(r.board, r.banks as f64 * (r.finish_s - r.start_s));
+                        if r.preempted && f.pending_cut.is_some_and(|(j, _)| j == r.job) {
+                            f.pending_cut = None;
+                        }
+                    }
                     free[r.board] += r.banks;
                     self.recorder.emit(|| Event::Completion {
                         t_s: r.finish_s,
@@ -453,15 +519,207 @@ impl Fleet {
                 waiting.push(w);
             }
 
+            // 1.5 fault timeline (absent without a plan): repairs first —
+            //     a board repaired at this instant can host work admitted
+            //     below — then injections, then the hang watchdog.
+            if fx.is_some() {
+                for board in fx.as_mut().unwrap().due_repairs(clock) {
+                    let banks = fx.as_ref().unwrap().cap[board];
+                    free[board] = banks;
+                    self.recorder.emit(|| Event::BoardUp { t_s: clock, board, banks });
+                }
+                for spec in fx.as_mut().unwrap().due_faults(clock) {
+                    let fboard = spec.board;
+                    fx.as_mut().unwrap().record_fault(fboard);
+                    let kind = spec.kind.label();
+                    self.recorder.emit(|| Event::FaultInjected {
+                        t_s: clock,
+                        board: fboard,
+                        kind: kind.clone(),
+                    });
+                    match spec.kind {
+                        FaultKind::Crash => {
+                            // work stopped at the hang onset if one was
+                            // pending on this board, else at the crash
+                            let onset = fx.as_ref().unwrap().hung[fboard].unwrap_or(clock);
+                            let mut i = 0;
+                            while i < running.len() {
+                                if running[i].board == fboard {
+                                    let r = running.remove(i);
+                                    self.kill_segment(
+                                        r,
+                                        onset,
+                                        clock,
+                                        fx.as_mut().unwrap(),
+                                        &mut jobs,
+                                        &mut durations,
+                                        &mut future,
+                                        &mut next_index,
+                                        &mut ledger,
+                                        &mut parked_log,
+                                        &platforms,
+                                        &plan_of_board,
+                                        cache,
+                                    )?;
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                            let repair_at = spec.repair_s.map(|d| clock + d);
+                            fx.as_mut().unwrap().mark_down(fboard, clock, repair_at);
+                            free[fboard] = 0;
+                            self.recorder
+                                .emit(|| Event::BoardDown { t_s: clock, board: fboard });
+                        }
+                        FaultKind::Hang => {
+                            let f = fx.as_mut().unwrap();
+                            // a hang on a down board is a no-op; on an
+                            // already-hung board the first onset stands
+                            if !f.down[fboard] && f.hung[fboard].is_none() {
+                                f.hung[fboard] = Some(clock);
+                                f.hung_repair[fboard] = spec.repair_s;
+                            }
+                        }
+                        FaultKind::BankDegrade(n) => {
+                            let (was_down, was_hung, old_cap) = {
+                                let f = fx.as_ref().unwrap();
+                                (f.down[fboard], f.hung[fboard].is_some(), f.cap[fboard])
+                            };
+                            let new_cap = n.min(old_cap);
+                            fx.as_mut().unwrap().cap[fboard] = new_cap;
+                            if !was_down {
+                                if !was_hung {
+                                    // evict the newest segments until the
+                                    // survivors fit the shrunken pool (a
+                                    // hung board's segments are doomed
+                                    // anyway — the watchdog reclaims them)
+                                    loop {
+                                        let in_use: u64 = running
+                                            .iter()
+                                            .filter(|r| r.board == fboard)
+                                            .map(|r| r.banks)
+                                            .sum();
+                                        if in_use <= new_cap {
+                                            break;
+                                        }
+                                        let idx = running
+                                            .iter()
+                                            .enumerate()
+                                            .filter(|(_, r)| r.board == fboard)
+                                            .max_by_key(|(_, r)| r.job)
+                                            .map(|(i, _)| i)
+                                            .unwrap();
+                                        let r = running.remove(idx);
+                                        self.kill_segment(
+                                            r,
+                                            clock,
+                                            clock,
+                                            fx.as_mut().unwrap(),
+                                            &mut jobs,
+                                            &mut durations,
+                                            &mut future,
+                                            &mut next_index,
+                                            &mut ledger,
+                                            &mut parked_log,
+                                            &platforms,
+                                            &plan_of_board,
+                                            cache,
+                                        )?;
+                                    }
+                                }
+                                let in_use: u64 = running
+                                    .iter()
+                                    .filter(|r| r.board == fboard)
+                                    .map(|r| r.banks)
+                                    .sum();
+                                free[fboard] = new_cap.saturating_sub(in_use);
+                            }
+                            // on a down board the shrunken cap simply takes
+                            // effect when the repair restores the pool
+                        }
+                    }
+                }
+                // hang watchdog: the earliest missed completion deadline
+                // (admitted finish + grace) diagnoses the whole board
+                let hung_now: Vec<(usize, f64)> = fx
+                    .as_ref()
+                    .unwrap()
+                    .hung
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(b, o)| o.map(|t| (b, t)))
+                    .collect();
+                for (board, onset) in hung_now {
+                    let deadline = running
+                        .iter()
+                        .filter(|r| r.board == board)
+                        .map(|r| r.finish_s + WATCHDOG_GRACE_FRAC * (r.finish_s - r.start_s))
+                        .fold(f64::INFINITY, f64::min);
+                    if deadline <= clock {
+                        let mut i = 0;
+                        while i < running.len() {
+                            if running[i].board == board {
+                                let r = running.remove(i);
+                                self.kill_segment(
+                                    r,
+                                    onset,
+                                    clock,
+                                    fx.as_mut().unwrap(),
+                                    &mut jobs,
+                                    &mut durations,
+                                    &mut future,
+                                    &mut next_index,
+                                    &mut ledger,
+                                    &mut parked_log,
+                                    &platforms,
+                                    &plan_of_board,
+                                    cache,
+                                )?;
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        let repair_at =
+                            fx.as_mut().unwrap().hung_repair[board].map(|d| clock + d);
+                        fx.as_mut().unwrap().mark_down(board, clock, repair_at);
+                        free[board] = 0;
+                        self.recorder.emit(|| Event::BoardDown { t_s: clock, board });
+                    }
+                }
+            }
+
             // 2. admission: try only the head of the priority-ordered
             //    queue (head-of-line blocking keeps every class
             //    starvation-free), as many times as it keeps succeeding.
             //    With a ledger the head is the weighted-fair pick (parked
             //    tenants skipped); without one it is the preserved
-            //    pre-fairness walk.
-            while let Some(top) = self.pick(&waiting, clock, &ledger) {
+            //    pre-fairness walk. A draining fault run admits nothing;
+            //    under an active fault state a head that no surviving
+            //    board could fit even when idle (its capacity crashed away
+            //    with no repair pending) steps aside for this instant
+            //    instead of blockading the queue forever.
+            let draining = fx.as_ref().is_some_and(|f| f.drain_active);
+            let mut unplaceable: Vec<Waiting> = Vec::new();
+            while !draining {
+                let Some(top) = self.pick(&waiting, clock, &ledger) else {
+                    break;
+                };
                 let Some((rank, board)) = try_admit(&waiting[top].prep, &free, &plan_of_board)
                 else {
+                    if let Some(f) = fx.as_ref() {
+                        let prep = &waiting[top].prep;
+                        let fits_surviving = (0..self.boards.len()).any(|b| {
+                            (!f.down[b] || f.repair_pending(b))
+                                && prep.plans[plan_of_board[b]]
+                                    .candidates
+                                    .iter()
+                                    .any(|c| c.hbm_banks <= f.cap[b])
+                        });
+                        if !fits_surviving {
+                            unplaceable.push(waiting.swap_remove(top));
+                            continue;
+                        }
+                    }
                     break;
                 };
                 // recording only: the feasible boards that lost at the
@@ -490,6 +748,12 @@ impl Fleet {
                     Vec::new()
                 };
                 let w = waiting.swap_remove(top);
+                if let Some(f) = fx.as_mut() {
+                    // jobs[] entry about to be pushed inherits the queued
+                    // job's lineage (itself, or a remainder's source)
+                    let lineage = f.lineage_of_index.get(&w.index).copied().unwrap_or(w.index);
+                    f.lineage_of_job.push(lineage);
+                }
                 let plan = &w.prep.plans[plan_of_board[board]];
                 let choice = plan.candidates[rank].clone();
                 let sim = plan.sims[rank].clone();
@@ -541,10 +805,15 @@ impl Fleet {
                     preempted: false,
                 });
                 peak_concurrency = peak_concurrency.max(running.len());
-                let in_use = total_banks - free.iter().sum::<u64>();
+                let in_use = match fx.as_ref() {
+                    // down boards zero `free` without freeing banks, so
+                    // count actual occupancy under a fault state
+                    Some(_) => running.iter().map(|r| r.banks).sum::<u64>(),
+                    None => total_banks - free.iter().sum::<u64>(),
+                };
                 peak_banks = peak_banks.max(in_use);
-                peak_per_board[board] =
-                    peak_per_board[board].max(self.boards[board].banks - free[board]);
+                let cap_b = fx.as_ref().map_or(self.boards[board].banks, |f| f.cap[board]);
+                peak_per_board[board] = peak_per_board[board].max(cap_b - free[board]);
                 durations.push(duration);
                 jobs.push(ScheduledJob {
                     config: choice.config,
@@ -564,20 +833,33 @@ impl Fleet {
                 });
             }
 
+            waiting.append(&mut unplaceable);
+
             // 3. preemption: a (real) interactive head that cannot start
             //    anywhere may cut one running batch job at its next round
             //    boundary; the freed banks admit it at that event. At most
             //    one cut may be outstanding fleet-wide — otherwise every
             //    event between the request and the boundary would claim a
-            //    fresh victim for the same stuck head.
-            if let Some(top) = self.pick(&waiting, clock, &ledger) {
+            //    fresh victim for the same stuck head. Under a fault state
+            //    only healthy boards offer victims (a cut on a hung or
+            //    down board could never admit anyone), and a draining run
+            //    cuts nothing.
+            if let Some(top) =
+                (!draining).then(|| self.pick(&waiting, clock, &ledger)).flatten()
+            {
                 let head = &waiting[top].prep;
                 if head.spec.priority == Priority::Interactive
                     && try_admit(head, &free, &plan_of_board).is_none()
                     && !running.iter().any(|r| r.preempted)
                 {
                     if let Some(v) =
-                        pick_victim(head, &free, &running, &jobs, &plan_of_board, clock)
+                        pick_victim_by(head, &free, &running, &jobs, clock, |prep, board, freed| {
+                            fx.as_ref().is_none_or(|f| f.healthy(board))
+                                && prep.plans[plan_of_board[board]]
+                                    .candidates
+                                    .iter()
+                                    .any(|c| c.hbm_banks <= freed)
+                        })
                     {
                         let (job_idx, start_s, iters_per_round, old_finish_s, banks, vboard) = {
                             let r = &mut running[v.running_idx];
@@ -630,24 +912,73 @@ impl Fleet {
                         let pos = future
                             .partition_point(|w| w.prep.spec.arrival_s <= v.boundary_s);
                         future.insert(pos, Waiting { prep: rem, index: next_index });
+                        if let Some(f) = fx.as_mut() {
+                            // the remainder inherits the victim's lineage,
+                            // and a fault killing the cut segment before
+                            // its boundary must find this remainder
+                            let lineage = f.lineage_of_job[job_idx];
+                            f.lineage_of_index.insert(next_index, lineage);
+                            f.pending_cut = Some((job_idx, next_index));
+                        }
                         next_index += 1;
                     }
                 }
             }
 
             // 4. advance to the next event (earliest completion, arrival,
-            //    or quota unpark of a tenant with work waiting)
-            let next_finish =
-                running.iter().map(|r| r.finish_s).fold(f64::INFINITY, f64::min);
+            //    quota unpark of a tenant with work waiting, fault-plan
+            //    timer, or hang-watchdog deadline). A hung board's
+            //    admitted finishes are not events — its segments only
+            //    leave through the watchdog.
+            let next_finish = running
+                .iter()
+                .filter(|r| fx.as_ref().is_none_or(|f| f.hung[r.board].is_none()))
+                .map(|r| r.finish_s)
+                .fold(f64::INFINITY, f64::min);
             let next_arrival =
                 future.front().map_or(f64::INFINITY, |w| w.prep.spec.arrival_s);
             let next_unpark = ledger.as_ref().map_or(f64::INFINITY, |l| {
                 l.next_unpark(waiting.iter().map(|w| w.prep.spec.tenant.as_str()), clock)
             });
-            let next = next_finish.min(next_arrival).min(next_unpark);
+            let next_fault = fx.as_ref().map_or(f64::INFINITY, |f| f.next_timer_s());
+            let next_watchdog = fx.as_ref().map_or(f64::INFINITY, |f| {
+                running
+                    .iter()
+                    .filter(|r| f.hung[r.board].is_some())
+                    .map(|r| r.finish_s + WATCHDOG_GRACE_FRAC * (r.finish_s - r.start_s))
+                    .fold(f64::INFINITY, f64::min)
+            });
+            let next = next_finish
+                .min(next_arrival)
+                .min(next_unpark)
+                .min(next_fault)
+                .min(next_watchdog);
             if !next.is_finite() {
                 if waiting.is_empty() {
                     break; // drained: no events left, nothing waiting
+                }
+                if let Some(f) = fx.as_mut() {
+                    // a faulted fleet can legitimately strand work (its
+                    // only fitting board died with no repair pending):
+                    // report every waiting job lost, never drop it
+                    for w in waiting.drain(..) {
+                        let lost = LostJob {
+                            tenant: w.prep.spec.tenant.clone(),
+                            kernel: w.prep.spec.kernel.clone(),
+                            iter_lost: w.prep.spec.iter,
+                            reason: if f.drain_active {
+                                "drained".into()
+                            } else {
+                                "stranded".into()
+                            },
+                        };
+                        if f.drain_active {
+                            f.drained.push(lost);
+                        } else {
+                            f.exhausted.push(lost);
+                        }
+                    }
+                    break;
                 }
                 // Unreachable: prepare guarantees some candidate fits an
                 // empty board, no events left means no board is busy, and
@@ -684,7 +1015,177 @@ impl Fleet {
             boards,
             preemptions,
             fairness: ledger.map(|l| l.into_stats(makespan_s)),
+            reliability: fx.map(|f| f.into_stats(makespan_s)),
         })
+    }
+
+    /// Kill one running segment at a fault. The segment keeps its fully
+    /// retired kernel-launch rounds — cut at the last round boundary
+    /// before `onset_s`, the preemption arithmetic with floor instead of
+    /// ceil (a crash retires nothing partial; a cut *waits* for the
+    /// boundary) — the tenant's quota is refunded for the lost tail, the
+    /// trace span closes at the kill instant, and the remainder is
+    /// re-planned for the surviving fleet and re-enqueued with
+    /// exponential backoff, or reported lost (retry cap exhausted, no
+    /// surviving fit, draining).
+    #[allow(clippy::too_many_arguments)]
+    fn kill_segment(
+        &self,
+        r: Running,
+        onset_s: f64,
+        clock: f64,
+        fx: &mut FaultRt,
+        jobs: &mut [ScheduledJob],
+        durations: &mut [f64],
+        future: &mut VecDeque<Waiting>,
+        next_index: &mut usize,
+        ledger: &mut Option<FairLedger>,
+        parked_log: &mut Vec<(String, f64)>,
+        platforms: &[FpgaPlatform],
+        plan_of_board: &[usize],
+        cache: &mut PlanCache,
+    ) -> Result<()> {
+        let Running { board, job, start_s, finish_s, banks, rounds, iters_per_round, preempted } =
+            r;
+        let iters_per_round = iters_per_round.max(1);
+        let mut total_iter = jobs[job].spec.iter;
+        if preempted {
+            // the outstanding cut already queued a remainder (arriving at
+            // the cut boundary); the fault supersedes the cut — pull the
+            // remainder back and fold its iterations into this kill, or
+            // they would be counted twice
+            if let Some((cut_job, widx)) = fx.pending_cut.take() {
+                if cut_job == job {
+                    if let Some(pos) = future.iter().position(|w| w.index == widx) {
+                        let w = future.remove(pos).unwrap();
+                        fx.lineage_of_index.remove(&widx);
+                        total_iter += w.prep.spec.iter;
+                    }
+                } else {
+                    fx.pending_cut = Some((cut_job, widx));
+                }
+            }
+        }
+        // a preempted segment's finish was already rewritten to its cut
+        // boundary, so the rounds still in flight are the ones the cut
+        // kept — recover them from the retired iteration count
+        let eff_rounds = if preempted {
+            (jobs[job].spec.iter / iters_per_round).max(1)
+        } else {
+            rounds.max(1)
+        };
+        let round_s = (finish_s - start_s) / eff_rounds as f64;
+        let rounds_done = if onset_s <= start_s || round_s <= 0.0 {
+            0
+        } else {
+            (((onset_s - start_s) / round_s).floor() as u64).min(eff_rounds)
+        };
+        let done_iters = (rounds_done * iters_per_round).min(total_iter);
+        let remaining = total_iter - done_iters;
+        let boundary_s = start_s + rounds_done as f64 * round_s;
+        let tenant = jobs[job].spec.tenant.clone();
+        let kernel = jobs[job].spec.kernel.clone();
+
+        // rewrite the segment's row to what actually retired, exactly as
+        // a preemption cut does; occupancy ran to the kill instant
+        let seg = &mut jobs[job];
+        seg.preempted = true;
+        seg.finish_s = boundary_s;
+        seg.spec.iter = done_iters;
+        seg.cells = seg.spec.total_cells();
+        durations[job] = clock - start_s;
+        fx.record_kill(board, banks, start_s, boundary_s, clock);
+
+        // refund the lost tail against the up-front admission charge (a
+        // prior preemption already refunded everything past `finish_s`)
+        let refund_bank_s = banks as f64 * (finish_s - boundary_s).max(0.0);
+        if let Some(l) = ledger.as_mut() {
+            l.credit(&tenant, refund_bank_s, clock);
+            if self.recorder.is_enabled() {
+                // the refund may pull a pending unpark earlier — keep the
+                // recorded stamp true (same fixup as a preemption cut)
+                let until = l.parked_until(&tenant).max(clock);
+                for p in parked_log.iter_mut() {
+                    if p.0 == tenant {
+                        p.1 = until;
+                    }
+                }
+            }
+        }
+        // the segment's span on the board track closes here, like any
+        // completion — the trace stays balanced under faults
+        self.recorder.emit(|| Event::Completion {
+            t_s: clock,
+            job,
+            tenant: tenant.clone(),
+            board,
+        });
+
+        if remaining == 0 {
+            return Ok(());
+        }
+        if fx.drain_active {
+            fx.drained.push(LostJob {
+                tenant,
+                kernel,
+                iter_lost: remaining,
+                reason: "drained".into(),
+            });
+            return Ok(());
+        }
+        let lineage = fx.lineage_of_job[job];
+        let Some(retry) = fx.try_retry(lineage) else {
+            fx.exhausted.push(LostJob {
+                tenant,
+                kernel,
+                iter_lost: remaining,
+                reason: "retry cap exhausted".into(),
+            });
+            return Ok(());
+        };
+        let retry_at = clock + fx.retry.backoff_s(retry);
+        let mut rem_spec = jobs[job].spec.clone();
+        rem_spec.iter = remaining;
+        rem_spec.arrival_s = retry_at;
+        // re-plan against what survives: the largest live (or
+        // repair-pending) pool per platform
+        let mut eff_max = vec![0u64; platforms.len()];
+        for (b, &pi) in plan_of_board.iter().enumerate() {
+            if !fx.down[b] || fx.repair_pending(b) {
+                eff_max[pi] = eff_max[pi].max(fx.cap[b]);
+            }
+        }
+        match prepare_remainder(platforms, &eff_max, &rem_spec, cache) {
+            Err(_) => fx.exhausted.push(LostJob {
+                tenant,
+                kernel,
+                iter_lost: remaining,
+                reason: "no surviving board fits".into(),
+            }),
+            Ok(rem) => {
+                self.recorder.emit(|| Event::RetryScheduled {
+                    t_s: clock,
+                    job,
+                    tenant: tenant.clone(),
+                    board,
+                    retry,
+                    at_s: retry_at,
+                });
+                self.recorder.emit(|| Event::JobRequeued {
+                    t_s: clock,
+                    job,
+                    tenant: tenant.clone(),
+                    board,
+                    remaining_iter: remaining,
+                });
+                let pos = future.partition_point(|w| w.prep.spec.arrival_s <= retry_at);
+                future.insert(pos, Waiting { prep: rem, index: *next_index });
+                fx.lineage_of_index.insert(*next_index, lineage);
+                *next_index += 1;
+                fx.record_requeue();
+            }
+        }
+        Ok(())
     }
 
     /// The pre-heterogeneity fleet loop, kept verbatim as the decision
@@ -864,6 +1365,7 @@ impl Fleet {
             boards,
             preemptions,
             fairness: None,
+            reliability: None,
         })
     }
 
@@ -961,28 +1463,6 @@ fn try_admit_single_list(prep: &Prepared, free: &[u64]) -> Option<(usize, usize)
         }
     }
     None
-}
-
-/// Choose the batch segment to preempt for `head`: among running,
-/// not-already-cut batch segments with more than one round whose freed
-/// banks would let some candidate of `head` — *from the victim board's own
-/// platform plan* — start on their board, the one with the earliest next
-/// round boundary (ties: lowest board, then oldest admission). Returns
-/// None when no preemption can help.
-fn pick_victim(
-    head: &Prepared,
-    free: &[u64],
-    running: &[Running],
-    jobs: &[ScheduledJob],
-    plan_of_board: &[usize],
-    now: f64,
-) -> Option<Victim> {
-    pick_victim_by(head, free, running, jobs, now, |prep, board, freed| {
-        prep.plans[plan_of_board[board]]
-            .candidates
-            .iter()
-            .any(|c| c.hbm_banks <= freed)
-    })
 }
 
 /// Pre-heterogeneity victim choice: `head`'s single shared candidate list

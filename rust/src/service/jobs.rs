@@ -284,6 +284,36 @@ pub fn load_jobs(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
     jobs_from_json(&j).with_context(|| format!("in jobs file {path:?}"))
 }
 
+/// Validate a loaded job stream against the fleet it is about to run on.
+///
+/// The wire parser already rejects the fleet-independent nonsense
+/// (`iter == 0`, negative `arrival_s`, zero extents); this is the check
+/// that has to wait until `--boards`/`--banks` are known: a job whose
+/// *minimum*-parallelism plan — one PE, which still needs
+/// `banks_per_pe = inputs + outputs` HBM banks — exceeds the largest
+/// board in the fleet can never be admitted anywhere, and the scheduler
+/// would otherwise report it as an unplaceable stall deep into the run
+/// instead of naming the offending job up front.
+pub fn validate_for_fleet(specs: &[JobSpec], board_banks: &[u64]) -> Result<()> {
+    let largest = board_banks.iter().copied().max().unwrap_or(0);
+    for spec in specs {
+        let info = spec.info()?;
+        let need = info.banks_per_pe();
+        if need > largest {
+            bail!(
+                "job '{}/{}' needs at least {need} HBM banks \
+                 ({} input(s) + {} output(s) per PE) but the largest board \
+                 in the fleet has {largest}",
+                spec.tenant,
+                spec.kernel,
+                info.n_inputs,
+                info.n_outputs
+            );
+        }
+    }
+    Ok(())
+}
+
 /// The demo serving mix (also used by `sasa batch` and the tests): three
 /// tenants, seven kernels, enough aggregate bank demand to exercise both
 /// concurrent packing and the next-best fallback on a 32-bank U280.
@@ -379,6 +409,37 @@ mod tests {
         ] {
             let j = Json::parse(text).unwrap();
             assert!(jobs_from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn validate_for_fleet_names_the_offending_job() {
+        // table-driven: (jobs, fleet bank counts, Err substring or None).
+        // blur needs 2 banks/PE (1 in + 1 out); jacobi3d needs 2 as well;
+        // a 1-bank board can host neither
+        let blur = || JobSpec::new("alice", "blur", vec![720, 1024], 8);
+        let j3d = || JobSpec::new("bob", "jacobi3d", vec![720, 32, 32], 4);
+        for (specs, banks, want) in [
+            (vec![blur()], vec![32u64], None),
+            (vec![blur(), j3d()], vec![24, 32], None),
+            // the *largest* board decides, not the first
+            (vec![blur()], vec![1, 32], None),
+            (vec![blur()], vec![1], Some("alice/blur")),
+            (vec![blur(), j3d()], vec![1, 1], Some("alice/blur")),
+            (vec![j3d()], vec![1], Some("bob/jacobi3d")),
+            // an empty fleet fits nothing
+            (vec![blur()], vec![], Some("alice/blur")),
+            (vec![], vec![1], None),
+        ] {
+            let got = validate_for_fleet(&specs, &banks);
+            match want {
+                None => assert!(got.is_ok(), "{specs:?} on {banks:?}: {got:?}"),
+                Some(frag) => {
+                    let err = got.expect_err(&format!("{specs:?} on {banks:?}")).to_string();
+                    assert!(err.contains(frag), "got '{err}', want '{frag}'");
+                    assert!(err.contains("largest board"), "{err}");
+                }
+            }
         }
     }
 

@@ -21,7 +21,11 @@
 //!   best-fit placement across a multi-board pool that may mix board
 //!   models (`--boards 2`, or heterogeneous `--boards u280:1,u50:1` —
 //!   every board is planned by its own platform's DSE and same-platform
-//!   boards share warm plans).
+//!   boards share warm plans), plus opt-in deterministic fault injection
+//!   and recovery (`--faults`, [`crate::faults`]): crashed/hung/degraded
+//!   boards lose their in-flight segments at the last retired round
+//!   boundary and the remainders are re-planned and re-enqueued with
+//!   bounded exponential backoff under a retry cap.
 //! * [`fairness`] — per-tenant weighted fair queuing and bank-second
 //!   quotas on top of the priority classes: stride-style passes order
 //!   tenants *within* a class (`--tenant-weights a:4,b:1`), token buckets
@@ -60,5 +64,7 @@ pub use cache::{CacheStats, PlanCache};
 pub use executor::{BatchExecutor, BatchReport, ClassStats, TenantStats};
 pub use fairness::{FairnessPolicy, TenantPolicy, DEFAULT_QUOTA_WINDOW_S};
 pub use fleet::{BoardPool, Fleet, DEFAULT_AGING_S};
-pub use jobs::{demo_jobs, jobs_from_json, jobs_to_json, load_jobs, JobSpec, Priority};
+pub use jobs::{
+    demo_jobs, jobs_from_json, jobs_to_json, load_jobs, validate_for_fleet, JobSpec, Priority,
+};
 pub use scheduler::{BoardStats, Schedule, ScheduledJob, Scheduler, TenantFairness};

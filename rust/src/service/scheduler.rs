@@ -44,6 +44,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::dsl::KernelInfo;
+use crate::faults::ReliabilityStats;
 use crate::model::{Config, DseChoice, DseResult};
 use crate::platform::FpgaPlatform;
 use crate::sim::{simulate, SimResult};
@@ -161,6 +162,11 @@ pub struct Schedule {
     /// trivial path — and the preserved oracle walks — carry `None` and
     /// render byte-identically to the pre-fairness scheduler.
     pub fairness: Option<Vec<TenantFairness>>,
+    /// Reliability accounting, present exactly when the pass ran with a
+    /// non-empty `FaultPlan` (`--faults`). Faultless passes — and the
+    /// preserved oracle walks — carry `None` and render byte-identically
+    /// to the pre-fault scheduler.
+    pub reliability: Option<ReliabilityStats>,
 }
 
 impl Schedule {
@@ -473,6 +479,7 @@ impl<'p> Scheduler<'p> {
             explorations: stats1.misses - stats0.misses,
             preemptions: 0,
             fairness: None,
+            reliability: None,
         })
     }
 }

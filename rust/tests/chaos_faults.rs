@@ -1,0 +1,258 @@
+//! Chaos differential sweep for `sasa::faults` + the fleet recovery
+//! layer (ISSUE 7): over deterministic PRNG-generated workloads and
+//! seeded fault schedules (fixed seeds, `util::prng::check`),
+//!
+//! (a) **preserved oracle** — a faultless run and a run armed with the
+//!     empty `--faults none` plan render byte-identical schedules and
+//!     neither constructs any reliability state (the same byte-identity
+//!     discipline as `Fleet::pick_unweighted_walk`);
+//! (b) **chaos determinism** — two identical faulted runs (same seeds,
+//!     same fault plan, warm caches) render byte-identical schedules
+//!     and reliability stats;
+//! (c) **conservation** — no admitted iteration is silently lost: every
+//!     (tenant, kernel)'s submitted iterations equal its delivered
+//!     segment iterations plus what the reliability report explicitly
+//!     gave up on (exhausted retries, drained, stranded), and each
+//!     board's timeline bank-seconds split exactly into delivered +
+//!     lost bank-seconds;
+//! (d) **explicit fault semantics** — a declared crash with a repair
+//!     retries the victim remainder and the board rejoins placement; a
+//!     drain run completes in-flight work and reports the rest.
+
+mod common;
+use common::iters_by_key;
+
+use sasa::faults::FaultPlan;
+use sasa::platform::FpgaPlatform;
+use sasa::service::{Fleet, JobSpec, PlanCache, Priority, Schedule};
+use sasa::util::prng::{check, Prng};
+
+fn u280() -> FpgaPlatform {
+    FpgaPlatform::u280()
+}
+
+const TENANTS: [&str; 3] = ["ada", "bob", "cyn"];
+
+/// A deterministic random stream: 6–9 jobs over three tenants, two cheap
+/// kernels at cacheable shapes, arrival jitter, ~1/4 interactive — the
+/// same shape as the fairness property suite.
+fn random_workload(rng: &mut Prng) -> Vec<JobSpec> {
+    let kernels = ["jacobi2d", "blur"];
+    let iters = [2u64, 4, 8];
+    let n = rng.range(6, 9);
+    (0..n)
+        .map(|_| {
+            let mut job = JobSpec::new(
+                rng.pick(&TENANTS),
+                rng.pick(&kernels),
+                vec![720, 1024],
+                *rng.pick(&iters),
+            )
+            .arriving_at(rng.range(0, 12) as f64 * 1e-4);
+            if rng.range(0, 3) == 0 {
+                job = job.with_priority(Priority::Interactive);
+            }
+            job
+        })
+        .collect()
+}
+
+/// Render a schedule at the CLI's precision — the byte-identity
+/// yardstick (same shape as the ISSUE-4 oracle test), extended with the
+/// reliability block so fault accounting is part of the comparison.
+fn render(s: &Schedule) -> String {
+    let mut out: Vec<String> = s
+        .jobs
+        .iter()
+        .map(|j| {
+            format!(
+                "{}|{}|{}|{}|{}|{:.3}|{:.3}|{:.3}",
+                j.spec.tenant,
+                j.config,
+                j.board,
+                j.hbm_banks,
+                j.fallback_rank,
+                j.queue_wait_s * 1e3,
+                j.start_s * 1e3,
+                j.finish_s * 1e3
+            )
+        })
+        .collect();
+    if let Some(rel) = &s.reliability {
+        out.push(format!("{rel:?}"));
+    }
+    out.join("\n")
+}
+
+/// Conservation invariant (c): submitted == delivered + explicitly lost,
+/// per (tenant, kernel) and per board's bank-second ledger.
+fn assert_conserved(specs: &[JobSpec], s: &Schedule) {
+    let mut accounted = iters_by_key(s.jobs.iter().map(|j| &j.spec));
+    if let Some(rel) = &s.reliability {
+        for l in rel.exhausted.iter().chain(&rel.drained) {
+            *accounted.entry((l.tenant.clone(), l.kernel.clone())).or_default() += l.iter_lost;
+        }
+    }
+    assert_eq!(
+        accounted,
+        iters_by_key(specs.iter()),
+        "every submitted iteration is delivered or explicitly reported lost"
+    );
+    if let Some(rel) = &s.reliability {
+        for (b, stats) in s.boards.iter().enumerate() {
+            let split = rel.boards[b].delivered_bank_s + rel.boards[b].lost_bank_s;
+            assert!(
+                (stats.bank_seconds - split).abs() <= 1e-9 * stats.bank_seconds.max(1.0),
+                "board {b}: timeline {} bank-s vs delivered+lost {split}",
+                stats.bank_seconds
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (a) the empty plan is byte-identical to no plan at all
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faults_none_preserves_the_faultless_schedule() {
+    let p = u280();
+    let none = FaultPlan::parse("none").unwrap();
+    assert!(none.is_empty());
+    check(6, 0xC4A0, |rng| {
+        let specs = random_workload(rng);
+        for boards in [1usize, 2] {
+            let mut cache = PlanCache::in_memory();
+            let plain = Fleet::new(&p, boards).schedule(&specs, &mut cache).unwrap();
+            let mut cache = PlanCache::in_memory();
+            let armed = Fleet::new(&p, boards)
+                .with_faults(none.clone())
+                .schedule(&specs, &mut cache)
+                .unwrap();
+            assert!(plain.reliability.is_none(), "faultless run constructs no fault state");
+            assert!(armed.reliability.is_none(), "an empty plan constructs no fault state");
+            assert_eq!(render(&plain), render(&armed), "boards={boards}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) seeded chaos is deterministic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_faulted_runs_render_identically() {
+    let p = u280();
+    check(6, 0xC4A1, |rng| {
+        let specs = random_workload(rng);
+        let seed = rng.range(1, u32::MAX as u64);
+        let plan = FaultPlan::parse(&format!("seed={seed},count=3,horizon_ms=1")).unwrap();
+        let run = || {
+            let mut cache = PlanCache::in_memory();
+            Fleet::new(&p, 2)
+                .with_faults(plan.clone())
+                .schedule(&specs, &mut cache)
+                .unwrap()
+        };
+        let (one, two) = (run(), run());
+        assert!(one.reliability.is_some(), "a non-empty plan always reports reliability");
+        assert_eq!(render(&one), render(&two), "seed={seed}");
+        assert_conserved(&specs, &one);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (c) conservation under explicit fault mixes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn explicit_fault_mix_conserves_iterations() {
+    let p = u280();
+    // crash with repair, hang with repair, and a mid-run degrade: the
+    // three kinds and both repair shapes in one schedule
+    let plan = FaultPlan::parse(
+        "board=0,at_ms=0.2,kind=crash,repair_ms=0.4;\
+         board=1,at_ms=0.3,kind=hang,repair_ms=0.3;\
+         board=1,at_ms=0.8,kind=bank_degrade:8",
+    )
+    .unwrap();
+    check(6, 0xC4A2, |rng| {
+        let specs = random_workload(rng);
+        let mut cache = PlanCache::in_memory();
+        let s = Fleet::new(&p, 2)
+            .with_faults(plan.clone())
+            .schedule(&specs, &mut cache)
+            .unwrap();
+        let rel = s.reliability.as_ref().unwrap();
+        assert_eq!(rel.boards.len(), 2);
+        assert_conserved(&specs, &s);
+        // kills imply matching recovery bookkeeping: every kill either
+        // retried or is in the explicit loss report
+        let kills: u64 = rel.boards.iter().map(|b| b.kills).sum();
+        assert!(
+            kills >= rel.retries,
+            "retries ({}) can never exceed kills ({kills})",
+            rel.retries
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (d) explicit semantics: repair rejoin + drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_with_repair_recovers_and_board_rejoins() {
+    let p = u280();
+    // a crash at t=0 downs board 0 before anything runs; with the repair
+    // it must rejoin and the run must deliver everything
+    let plan = FaultPlan::parse("board=0,at_ms=0,kind=crash,repair_ms=0.05").unwrap();
+    let specs: Vec<JobSpec> = (0..4)
+        .map(|i| {
+            JobSpec::new(TENANTS[i % TENANTS.len()], "jacobi2d", vec![720, 1024], 4)
+                .arriving_at(i as f64 * 1e-4)
+        })
+        .collect();
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1).with_faults(plan).schedule(&specs, &mut cache).unwrap();
+    let rel = s.reliability.as_ref().unwrap();
+    assert_eq!(rel.boards[0].faults, 1);
+    assert!(rel.boards[0].down_s > 0.0);
+    assert_eq!(rel.iter_lost(), 0, "repair means nothing is lost: {rel:?}");
+    assert_conserved(&specs, &s);
+    // the repaired board ran the whole batch, nothing before the repair
+    // instant (repair_ms=0.05 → 5e-5 simulated seconds)
+    assert!(s.jobs.iter().all(|j| j.board == 0));
+    assert!(s.jobs.iter().all(|j| j.start_s >= 5e-5 - 1e-12), "work starts after the repair");
+}
+
+#[test]
+fn drain_completes_in_flight_and_reports_the_rest() {
+    let p = u280();
+    // arrivals straddle the fault: ada is in flight when it fires, the
+    // far-future stragglers are still queued
+    let specs = vec![
+        JobSpec::new("ada", "jacobi2d", vec![720, 1024], 8),
+        JobSpec::new("bob", "blur", vec![720, 1024], 8).arriving_at(10.0),
+        JobSpec::new("cyn", "jacobi2d", vec![720, 1024], 4).arriving_at(10.0),
+    ];
+    // dry run to place the fault: crash the board ada is NOT on, halfway
+    // through ada's segment — drain arms mid-flight with nothing killed
+    let mut cache = PlanCache::in_memory();
+    let dry = Fleet::new(&p, 2).schedule(&specs[..1], &mut cache).unwrap();
+    let (busy, mid_ms) = (dry.jobs[0].board, dry.jobs[0].finish_s * 0.5e3);
+    let mut plan =
+        FaultPlan::parse(&format!("board={},at_ms={mid_ms},kind=crash", 1 - busy)).unwrap();
+    plan.drain = true;
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::new(&p, 2).with_faults(plan).schedule(&specs, &mut cache).unwrap();
+    let rel = s.reliability.as_ref().unwrap();
+    assert_conserved(&specs, &s);
+    // the idle board took the fault, ada's board killed nothing
+    assert_eq!(rel.boards[1 - busy].faults, 1);
+    assert_eq!(rel.boards.iter().map(|b| b.kills).sum::<u64>(), 0, "{rel:?}");
+    assert_eq!(rel.drained.len(), 2, "post-fault arrivals are drained, not admitted: {rel:?}");
+    assert!(rel.drained.iter().all(|l| l.reason == "drained"), "{rel:?}");
+    let delivered = iters_by_key(s.jobs.iter().map(|j| &j.spec));
+    assert_eq!(delivered.get(&("ada".into(), "jacobi2d".into())), Some(&8));
+}

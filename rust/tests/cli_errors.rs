@@ -1,0 +1,148 @@
+//! CLI-level failure-path tests (ISSUE 7 satellite): every bad input the
+//! `sasa` binary can be handed — unreadable or malformed `--jobs` files,
+//! unwritable artifact paths, inert flags, bad `--faults` grammar, jobs
+//! that can never fit the fleet — must exit nonzero with a **single**
+//! stderr line that names the offending path or flag, never a panic or a
+//! silent success.
+//!
+//! These drive the installed binary (`CARGO_BIN_EXE_sasa`) end to end,
+//! one step above the unit suites in `service::jobs` / `sasa::faults`
+//! that cover the same validations at the library layer.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+/// A unique scratch directory per test (no tempfile dependency): the
+/// test name keys it, a fresh process id survives concurrent runs.
+fn scratch(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("sasa_cli_errors_{}_{test}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the real binary with `args`, cwd'd into `dir` so the default plan
+/// cache and any artifacts land in scratch space.
+fn sasa(dir: &Path, args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_sasa"))
+        .args(args)
+        .current_dir(dir)
+        .output()
+        .expect("spawning the sasa binary")
+}
+
+/// The failure contract: exit code 1 and exactly one stderr line of the
+/// form `error: ...` containing every needle.
+fn assert_one_line_error(out: &Output, needles: &[&str]) {
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(1), "stderr: {stderr}");
+    let lines: Vec<&str> = stderr.lines().collect();
+    assert_eq!(lines.len(), 1, "one diagnostic line, got: {stderr}");
+    assert!(lines[0].starts_with("error: "), "{stderr}");
+    for needle in needles {
+        assert!(lines[0].contains(needle), "missing {needle:?} in: {stderr}");
+    }
+}
+
+/// One small, cheap job — enough for `serve` to schedule successfully so
+/// the artifact-writing failure paths are reachable.
+fn write_ok_jobs(dir: &Path) -> PathBuf {
+    let path = dir.join("jobs.json");
+    fs::write(
+        &path,
+        r#"{"jobs": [{"tenant": "t", "kernel": "jacobi2d", "dims": [720, 1024], "iter": 1}]}"#,
+    )
+    .unwrap();
+    path
+}
+
+#[test]
+fn missing_jobs_file_names_the_path() {
+    let dir = scratch("missing_jobs");
+    let out = sasa(&dir, &["serve", "--jobs", "no_such_jobs.json"]);
+    assert_one_line_error(&out, &["reading jobs file", "no_such_jobs.json"]);
+}
+
+#[test]
+fn malformed_jobs_file_names_the_path() {
+    let dir = scratch("malformed_jobs");
+    let path = dir.join("broken.json");
+    fs::write(&path, "{\"jobs\": [ this is not json").unwrap();
+    let out = sasa(&dir, &["serve", "--jobs", "broken.json"]);
+    assert_one_line_error(&out, &["broken.json", "not valid JSON"]);
+}
+
+#[test]
+fn invalid_job_spec_names_the_job() {
+    let dir = scratch("invalid_spec");
+    let path = dir.join("zero_iter.json");
+    fs::write(
+        &path,
+        r#"{"jobs": [{"tenant": "t", "kernel": "jacobi2d", "dims": [720, 1024], "iter": 0}]}"#,
+    )
+    .unwrap();
+    let out = sasa(&dir, &["serve", "--jobs", "zero_iter.json"]);
+    assert_one_line_error(&out, &["zero_iter.json", "iter"]);
+}
+
+#[test]
+fn job_too_wide_for_the_fleet_names_job_and_bound() {
+    let dir = scratch("too_wide");
+    write_ok_jobs(&dir);
+    // jacobi2d needs 2 banks per PE (1 input + 1 output); a 1-bank board
+    // can never place it, however far the DSE falls back
+    let out = sasa(&dir, &["serve", "--jobs", "jobs.json", "--banks", "1"]);
+    assert_one_line_error(&out, &["t/jacobi2d", "largest board"]);
+}
+
+#[test]
+fn unwritable_trace_out_names_the_path() {
+    let dir = scratch("unwritable_trace");
+    write_ok_jobs(&dir);
+    let out = sasa(
+        &dir,
+        &["serve", "--jobs", "jobs.json", "--trace-out", "no_such_dir/trace.json"],
+    );
+    assert_one_line_error(&out, &["writing trace to", "no_such_dir/trace.json"]);
+}
+
+#[test]
+fn unwritable_metrics_out_names_the_path() {
+    let dir = scratch("unwritable_metrics");
+    write_ok_jobs(&dir);
+    let out = sasa(
+        &dir,
+        &["serve", "--jobs", "jobs.json", "--metrics-out", "no_such_dir/metrics.json"],
+    );
+    assert_one_line_error(&out, &["writing metrics to", "no_such_dir/metrics.json"]);
+}
+
+#[test]
+fn fault_flags_without_a_plan_are_rejected_not_ignored() {
+    let dir = scratch("inert_fault_flags");
+    write_ok_jobs(&dir);
+    for flag in [&["--retry-cap", "2"][..], &["--drain"][..]] {
+        let mut args = vec!["serve", "--jobs", "jobs.json"];
+        args.extend_from_slice(flag);
+        let out = sasa(&dir, &args);
+        assert_one_line_error(&out, &[flag[0], "has no effect without --faults"]);
+    }
+}
+
+#[test]
+fn malformed_faults_spec_is_rejected() {
+    let dir = scratch("bad_faults");
+    write_ok_jobs(&dir);
+    let out = sasa(
+        &dir,
+        &["serve", "--jobs", "jobs.json", "--faults", "board=0,at_ms=1,kind=melt"],
+    );
+    assert_one_line_error(&out, &["unknown kind 'melt'"]);
+    let out = sasa(
+        &dir,
+        &["serve", "--jobs", "jobs.json", "--faults", "board=7,at_ms=1,kind=crash"],
+    );
+    assert_one_line_error(&out, &["board 7 out of range"]);
+}
