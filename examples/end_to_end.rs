@@ -1,4 +1,4 @@
-//! End-to-end validation driver (DESIGN.md §10 — the required example).
+//! End-to-end validation driver (DESIGN.md §11 — the required example).
 //!
 //! Exercises the full system on a real workload: JACOBI2D and HOTSPOT at
 //! 720×1024, iteration counts {2, 16, 64}. For each workload it
@@ -19,7 +19,14 @@ use sasa::dsl::{analyze, benchmarks as b, parse};
 use sasa::model::{explore, Config, Parallelism};
 use sasa::platform::FpgaPlatform;
 use sasa::reference::{interpret, Grid};
-use sasa::runtime::{artifact::default_artifact_dir, Runtime};
+use sasa::runtime::artifact::default_artifact_dir;
+// the historical compile-time substrate selection, spelled explicitly now
+// that the cfg-swapped `runtime::Runtime` alias is deprecated (scheduled
+// work picks its substrate per board via `sasa::backend` instead)
+#[cfg(feature = "pjrt")]
+use sasa::runtime::client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use sasa::runtime::interp::Runtime;
 use sasa::sim::simulate;
 use sasa::util::prng::Prng;
 

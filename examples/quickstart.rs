@@ -1,17 +1,17 @@
 //! Quickstart: the full SASA pipeline on one kernel in ~40 lines.
 //!
 //! DSL → parse → analyze → DSE (best parallelism on a U280) → execute the
-//! chosen design for real through the AOT-compiled PJRT executables →
-//! verify against the DSL interpreter.
+//! chosen design through an execution backend picked out of the registry
+//! → verify against the DSL interpreter.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use sasa::coordinator::{verify::max_abs_diff, Coordinator, StencilJob};
+use sasa::backend::{BackendRegistry, ExecutionPlan};
+use sasa::coordinator::verify::max_abs_diff;
 use sasa::dsl::{analyze, benchmarks, parse};
 use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::reference::{interpret, Grid};
-use sasa::runtime::{artifact::default_artifact_dir, Runtime};
 use sasa::sim::simulate;
 use sasa::util::prng::Prng;
 
@@ -29,21 +29,30 @@ fn main() -> anyhow::Result<()> {
     println!("DSE best: {} — predicted {:.2} GCell/s on a U280",
         dse.best.config, dse.best.gcell_per_s);
 
-    // 3. execute the chosen parallelism for real (PJRT CPU, AOT artifacts)
+    // 3. execute the chosen parallelism through an execution backend —
+    //    the registry's interpreter here, exactly what `--backend interp`
+    //    selects (a `--features pjrt` build can `create("pjrt")` instead;
+    //    same trait, same call sites)
     let mut cfg = dse.best.config;
     cfg.k = cfg.k.min(4); // toy 64-row grid: keep tiles sensible
     let mut rng = Prng::new(1);
     let input = Grid::from_vec(64, 64, rng.grid(64, 64, 0.0, 1.0));
-    let runtime = Runtime::from_dir(default_artifact_dir())?;
-    let coord = Coordinator::new(&runtime);
-    let job = StencilJob::new(&prog, vec![input.clone()], 8)?;
-    let (result, report) = coord.execute(&job, cfg)?;
+    let backend = BackendRegistry::builtin().create("interp")?;
+    let plan = ExecutionPlan {
+        kernel: "jacobi2d".into(),
+        dims: vec![64, 64],
+        iter: 8,
+        config: cfg,
+        platform: platform.clone(),
+    };
+    let prepared = backend.prepare(&plan)?;
+    let run = backend.launch(&prepared, &[input.clone()], 8)?;
     println!("executed via {}: rounds={} invocations={}",
-        cfg, report.rounds, report.pe_invocations);
+        prepared.config, run.report.rounds, run.report.pe_invocations);
 
     // 4. verify against the independent Rust DSL interpreter
     let golden = interpret(&prog, &[input], 64, 8);
-    let diff = max_abs_diff(&result, &golden);
+    let diff = max_abs_diff(&run.grid, &golden);
     println!("max |diff| vs interpreter = {diff:e}");
     assert!(diff < 1e-5, "verification failed");
 

@@ -20,15 +20,18 @@
 //!    light tenant jump the hog's backlog, strictly improving its p95
 //!    queue wait while the hog still gets every iteration;
 //! 7. one admitted configuration is executed for real through the
-//!    coordinator and verified against the DSL interpreter.
+//!    interpreter execution backend (picked out of the registry, exactly
+//!    as `--backend interp` would) and verified against the DSL
+//!    interpreter.
 //!
 //! Run: `cargo run --release --example serving`
 
+use sasa::backend::BackendRegistry;
 use sasa::metrics::percentile;
 use sasa::platform::FpgaPlatform;
-use sasa::runtime::{artifact::default_artifact_dir, Runtime};
 use sasa::service::{
-    demo_jobs, load_jobs, BatchExecutor, BatchReport, FairnessPolicy, JobSpec, PlanCache,
+    demo_jobs, load_jobs, BatchExecutor, BatchReport, FairnessPolicy, FleetBuilder, JobSpec,
+    PlanCache,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -70,10 +73,10 @@ fn main() -> anyhow::Result<()> {
     // --- heterogeneous fleet: U280+U50 vs two U50s -----------------------
     let stream = load_jobs("examples/jobs.json")?;
     let mixed = BatchExecutor::new(&platform)
-        .with_fleet(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+        .with_fleet_builder(FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]))
         .run(&stream, &mut warm)?;
     let twin_u50 = BatchExecutor::new(&platform)
-        .with_fleet(vec![FpgaPlatform::u50(), FpgaPlatform::u50()])
+        .with_fleet_builder(FleetBuilder::mixed(vec![FpgaPlatform::u50(), FpgaPlatform::u50()]))
         .run(&stream, &mut warm)?;
     println!(
         "heterogeneous: makespan {:.3} ms on u280:1,u50:1 vs {:.3} ms on u50:2",
@@ -121,13 +124,13 @@ fn main() -> anyhow::Result<()> {
         "the unweighted run stays byte-identical to the pre-fairness output"
     );
 
-    // --- real execution: one admitted config through the coordinator -----
-    let runtime = Runtime::from_dir(default_artifact_dir())?;
+    // --- real execution: one admitted config through the interp backend --
+    let backend = BackendRegistry::builtin().create("interp")?;
     let spec = JobSpec::new("alice", "jacobi2d", vec![64, 64], 8);
     let mut toy_cache = PlanCache::in_memory();
     let toy = exec.run(std::slice::from_ref(&spec), &mut toy_cache)?;
     let cfg = toy.schedule.jobs[0].config;
-    let (diff, exec_report) = exec.execute_real(&runtime, &spec, cfg, 7)?;
+    let (diff, exec_report) = exec.execute_real(backend.as_ref(), &spec, cfg, 7)?;
     println!(
         "real run: jacobi2d 64x64 iter=8 via {} -> {:.3} ms, max |diff| vs interpreter {diff:e}",
         exec_report.config, exec_report.wall_seconds * 1e3

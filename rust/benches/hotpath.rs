@@ -25,7 +25,12 @@ use sasa::model::{explore, Config, Parallelism};
 use sasa::platform::FpgaPlatform;
 use sasa::reference::{interpret, interpret_naive, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
-use sasa::runtime::{Manifest, Runtime};
+use sasa::runtime::Manifest;
+// explicit substrate selection now that the cfg-swapped alias is deprecated
+#[cfg(feature = "pjrt")]
+use sasa::runtime::client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use sasa::runtime::interp::Runtime;
 use sasa::sim::{simulate, simulate_walk};
 use sasa::util::json::{num, obj, Json};
 use sasa::util::prng::Prng;

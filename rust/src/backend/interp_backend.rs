@@ -1,0 +1,69 @@
+//! The `interp` backend: coordinator dataflow over the pure-Rust DSL
+//! interpreter ([`crate::runtime::interp::Runtime`]). The default
+//! substrate — zero native dependencies, bit-exact numerics, measured CPU
+//! wall time.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, StencilJob};
+use crate::platform::FpgaPlatform;
+use crate::reference::Grid;
+use crate::runtime::artifact::default_artifact_dir;
+use crate::runtime::{interp, RuntimeStats};
+
+use super::{prepare_plan, Capability, ExecutionBackend, ExecutionPlan, PreparedKernel, RunResult};
+
+/// Interpreter-backed execution (registry name `"interp"`).
+pub struct InterpBackend {
+    runtime: interp::Runtime,
+}
+
+impl InterpBackend {
+    /// Build over the default artifact directory (falls back to the
+    /// builtin shape matrix when no `artifacts/` build exists).
+    pub fn new() -> Result<InterpBackend> {
+        Ok(InterpBackend { runtime: interp::Runtime::from_dir(default_artifact_dir())? })
+    }
+
+    /// Build over an explicit runtime (tests, custom manifests).
+    pub fn with_runtime(runtime: interp::Runtime) -> InterpBackend {
+        InterpBackend { runtime }
+    }
+
+    /// The underlying tile executor (e.g. to drive a [`Coordinator`]
+    /// directly).
+    pub fn runtime(&self) -> &interp::Runtime {
+        &self.runtime
+    }
+}
+
+impl ExecutionBackend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn probe(&self, platform: &FpgaPlatform) -> Capability {
+        Capability {
+            backend: "interp",
+            real_hardware: false,
+            available: true,
+            detail: format!("DSL interpreter standing in for {}", platform.name),
+        }
+    }
+
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<PreparedKernel> {
+        prepare_plan(plan)
+    }
+
+    fn launch(&self, prepared: &PreparedKernel, inputs: &[Grid], iters: u64) -> Result<RunResult> {
+        let coord = Coordinator::new(&self.runtime);
+        let job = StencilJob::new(prepared.program(), inputs.to_vec(), iters)?;
+        let (grid, report) = coord.execute(&job, prepared.config)?;
+        let wall_s = report.wall_seconds;
+        Ok(RunResult { grid, report, wall_s })
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.runtime.stats()
+    }
+}

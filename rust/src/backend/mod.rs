@@ -1,0 +1,279 @@
+//! Pluggable execution backends: one `probe → prepare → launch → verify`
+//! seam for every substrate that can run an admitted configuration.
+//!
+//! SASA's premise is that the execution substrate is a *parameter* of the
+//! flow, not a constant: the same DSL program and the same admitted
+//! `Config` must run on the pure-Rust interpreter, on the cycle-replay
+//! substrate (numerics from the interpreter, wall time from the cycle
+//! simulator), or on the XLA PJRT client (feature `pjrt`) — and a fleet
+//! may mix them per board (`--boards u280:2@interp,u50:1@sim`). Before
+//! this module the choice was a compile-time `cfg` swap of a `Runtime`
+//! type alias; now it is a value: pick an [`ExecutionBackend`] out of the
+//! [`BackendRegistry`] at fleet build time.
+//!
+//! The contract, in pipeline order:
+//!
+//! 1. [`ExecutionBackend::probe`] — can this backend serve a platform,
+//!    and is it real hardware or a model ([`Capability`])?
+//! 2. [`ExecutionBackend::prepare`] — instantiate the kernel at the
+//!    plan's dims and clamp the admitted config to the verification
+//!    grid ([`PreparedKernel`]).
+//! 3. [`ExecutionBackend::launch`] — drive the coordinator dataflow for
+//!    `iters` iterations over explicit input grids ([`RunResult`]; the
+//!    explicit inputs are what let a preempted job's remainder resume
+//!    from its cut segment's output instead of re-running from scratch).
+//! 4. [`ExecutionBackend::verify`] — max |difference| against an oracle
+//!    grid ([`Diff`]).
+//!
+//! Backends also expose cumulative [`RuntimeStats`] via
+//! [`ExecutionBackend::stats`], so a mixed fleet reports one stats row
+//! per backend instead of a single blended blob
+//! (`RuntimeStats` is additive — see [`RuntimeStats::merge`]).
+//!
+//! # Example
+//!
+//! ```
+//! use sasa::backend::{BackendRegistry, ExecutionPlan};
+//! use sasa::model::{Config, Parallelism};
+//! use sasa::platform::FpgaPlatform;
+//!
+//! let registry = BackendRegistry::builtin();
+//! let backend = registry.create("interp")?;
+//! let plan = ExecutionPlan {
+//!     kernel: "jacobi2d".into(),
+//!     dims: vec![64, 64],
+//!     iter: 4,
+//!     config: Config { parallelism: Parallelism::HybridS, k: 2, s: 2 },
+//!     platform: FpgaPlatform::u280(),
+//! };
+//! let prepared = backend.prepare(&plan)?;
+//! let inputs = prepared.random_inputs(7);
+//! let run = backend.launch(&prepared, &inputs, plan.iter)?;
+//! let oracle = prepared.oracle(&inputs, plan.iter);
+//! assert!(backend.verify(&run, &oracle).within(1e-4));
+//! assert_eq!(backend.stats().executions, run.report.pe_invocations);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod interp_backend;
+#[cfg(feature = "pjrt")]
+mod pjrt_backend;
+mod registry;
+mod sim_replay;
+
+pub use interp_backend::InterpBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtBackend;
+pub use registry::{BackendRegistry, DEFAULT_BACKEND};
+pub use sim_replay::SimReplayBackend;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{verify::max_abs_diff, ExecReport};
+use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo, StencilProgram};
+use crate::model::Config;
+use crate::platform::FpgaPlatform;
+use crate::reference::{interpret, Grid};
+use crate::runtime::RuntimeStats;
+use crate::util::prng::Prng;
+
+/// What [`ExecutionBackend::probe`] reports about a backend × platform
+/// pairing.
+#[derive(Debug, Clone)]
+pub struct Capability {
+    /// Registry name of the backend that answered.
+    pub backend: &'static str,
+    /// Whether launches execute on real accelerator hardware (false for
+    /// every substrate shipped in-tree: the interpreter, the cycle
+    /// replay, and the PJRT *CPU* client are all models or hosts).
+    pub real_hardware: bool,
+    /// Whether the backend can serve this platform right now.
+    pub available: bool,
+    /// Human-readable detail (substrate, platform, degradations).
+    pub detail: String,
+}
+
+/// Everything a backend needs to instantiate one admitted configuration:
+/// the kernel (by builtin-benchmark name), concrete dims, requested
+/// iterations, the admitted config, and the platform the schedule placed
+/// it on.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub kernel: String,
+    pub dims: Vec<u64>,
+    pub iter: u64,
+    pub config: Config,
+    pub platform: FpgaPlatform,
+}
+
+/// A plan instantiated by [`ExecutionBackend::prepare`]: parsed program,
+/// analyzed kernel info, and the config clamped for the verification grid
+/// (`k` keeps at least 8 rows per tile, `s >= 1` — mirroring `sasa run`).
+pub struct PreparedKernel {
+    prog: StencilProgram,
+    pub info: KernelInfo,
+    pub config: Config,
+    pub platform: FpgaPlatform,
+    pub iter: u64,
+}
+
+impl PreparedKernel {
+    /// Deterministic random input grids for this kernel (same PRNG stream
+    /// `execute_real` has always used, so seeds stay comparable).
+    pub fn random_inputs(&self, seed: u64) -> Vec<Grid> {
+        let rows = self.info.rows as usize;
+        let cols = self.info.cols as usize;
+        let mut rng = Prng::new(seed);
+        (0..self.info.n_inputs)
+            .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0)))
+            .collect()
+    }
+
+    /// The interpreter oracle: the golden grid after `iters` iterations
+    /// from `inputs`, computed by the reference DSL interpreter.
+    pub fn oracle(&self, inputs: &[Grid], iters: u64) -> Grid {
+        interpret(&self.prog, inputs, self.info.rows as usize, iters)
+    }
+
+    /// The parsed program (for driving the coordinator directly).
+    pub fn program(&self) -> &StencilProgram {
+        &self.prog
+    }
+}
+
+/// One launch's outcome: the result grid, the coordinator's dataflow
+/// report, and the backend-accounted wall time.
+pub struct RunResult {
+    pub grid: Grid,
+    /// Coordinator dataflow report (rounds, PE invocations, halo rows,
+    /// *measured* CPU wall time).
+    pub report: ExecReport,
+    /// Backend-accounted wall seconds: measured CPU time for `interp` and
+    /// `pjrt`, the cycle simulator's predicted seconds for `sim` — the
+    /// number `sasa batch --real` charges against the simulated timeline.
+    pub wall_s: f64,
+}
+
+/// Verification outcome: max |result − oracle| over all cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diff {
+    pub max_abs: f32,
+}
+
+impl Diff {
+    pub fn within(&self, tol: f32) -> bool {
+        self.max_abs <= tol
+    }
+}
+
+/// The execution seam every substrate implements; see the [module
+/// docs](self) for the contract and a runnable example. Implementations
+/// register in [`BackendRegistry`] and are selected per board at fleet
+/// build time.
+pub trait ExecutionBackend: Send + Sync {
+    /// Registry name (`"interp"`, `"sim"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Report whether (and how) this backend can serve `platform`.
+    fn probe(&self, platform: &FpgaPlatform) -> Capability;
+
+    /// Instantiate a plan: parse the kernel at the plan's dims and clamp
+    /// the admitted config to the verification grid.
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<PreparedKernel>;
+
+    /// Execute `iters` iterations over `inputs` (full-size grids, one per
+    /// kernel input; the last one iterates).
+    fn launch(&self, prepared: &PreparedKernel, inputs: &[Grid], iters: u64) -> Result<RunResult>;
+
+    /// Max |difference| of the launch result against an oracle grid.
+    fn verify(&self, result: &RunResult, oracle: &Grid) -> Diff {
+        Diff { max_abs: max_abs_diff(&result.grid, oracle) }
+    }
+
+    /// Cumulative runtime counters for everything launched through this
+    /// backend (additive across backends — [`RuntimeStats::merge`]).
+    fn stats(&self) -> RuntimeStats;
+}
+
+/// Shared `prepare` path: the interpreter-numerics backends (`interp`,
+/// `sim`) and the PJRT client all instantiate plans identically, so the
+/// clamp lives in exactly one place.
+fn prepare_plan(plan: &ExecutionPlan) -> Result<PreparedKernel> {
+    let src = b::by_name(&plan.kernel)
+        .with_context(|| format!("unknown benchmark kernel '{}'", plan.kernel))?;
+    let prog = parse(&b::with_dims(src, &plan.dims, plan.iter))
+        .with_context(|| format!("instantiating '{}' at {:?}", plan.kernel, plan.dims))?;
+    let info = analyze(&prog);
+    let mut config = plan.config;
+    config.k = config.k.clamp(1, (info.rows / 8).max(1));
+    config.s = config.s.max(1);
+    Ok(PreparedKernel { prog, info, config, platform: plan.platform.clone(), iter: plan.iter })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Parallelism;
+
+    fn plan(kernel: &str, config: Config) -> ExecutionPlan {
+        ExecutionPlan {
+            kernel: kernel.into(),
+            dims: vec![64, 64],
+            iter: 4,
+            config,
+            platform: FpgaPlatform::u280(),
+        }
+    }
+
+    #[test]
+    fn prepare_clamps_config_to_verification_grid() {
+        let cfg = Config { parallelism: Parallelism::SpatialR, k: 64, s: 0 };
+        let backend = InterpBackend::new().unwrap();
+        let prepared = backend.prepare(&plan("jacobi2d", cfg)).unwrap();
+        // 64 rows / 8 = at most 8 tiles; s floors at 1
+        assert_eq!(prepared.config.k, 8);
+        assert_eq!(prepared.config.s, 1);
+        assert_eq!(prepared.info.rows, 64);
+    }
+
+    #[test]
+    fn launch_verifies_against_oracle() {
+        let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 2 };
+        let backend = InterpBackend::new().unwrap();
+        let p = plan("blur", cfg);
+        let prepared = backend.prepare(&p).unwrap();
+        let inputs = prepared.random_inputs(42);
+        let run = backend.launch(&prepared, &inputs, p.iter).unwrap();
+        let oracle = prepared.oracle(&inputs, p.iter);
+        let diff = backend.verify(&run, &oracle);
+        assert!(diff.within(1e-4), "diff {}", diff.max_abs);
+        assert!(run.wall_s > 0.0);
+    }
+
+    #[test]
+    fn chained_launches_equal_one_full_run() {
+        // the preemption-replay property: launching a+b iterations as one
+        // run equals launching a, then b more from the first result —
+        // exactly how `batch --real` replays a cut segment + its resume
+        let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 1 };
+        let backend = InterpBackend::new().unwrap();
+        let p = plan("jacobi2d", cfg);
+        let prepared = backend.prepare(&p).unwrap();
+        let inputs = prepared.random_inputs(9);
+        let full = backend.launch(&prepared, &inputs, 4).unwrap();
+        let cut = backend.launch(&prepared, &inputs, 1).unwrap();
+        let mut resumed_inputs = inputs.clone();
+        let upd = resumed_inputs.len() - 1;
+        resumed_inputs[upd] = cut.grid;
+        let resumed = backend.launch(&prepared, &resumed_inputs, 3).unwrap();
+        assert_eq!(backend.verify(&resumed, &full.grid).max_abs, 0.0);
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_error() {
+        let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 1 };
+        let backend = InterpBackend::new().unwrap();
+        let err = backend.prepare(&plan("no-such-kernel", cfg)).unwrap_err();
+        assert!(err.to_string().contains("no-such-kernel"), "{err}");
+    }
+}

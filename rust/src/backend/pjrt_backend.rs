@@ -1,0 +1,68 @@
+//! The `pjrt` backend (feature `pjrt`): coordinator dataflow over the XLA
+//! PJRT CPU client ([`crate::runtime::client::Runtime`]), executing the
+//! AOT-compiled HLO artifacts. With the vendored stub `xla` crate this
+//! compiles but reports unavailable at probe/construction time; swap in
+//! real bindings at `vendor/xla` to execute.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, StencilJob};
+use crate::platform::FpgaPlatform;
+use crate::reference::Grid;
+use crate::runtime::artifact::default_artifact_dir;
+use crate::runtime::{client, RuntimeStats};
+
+use super::{prepare_plan, Capability, ExecutionBackend, ExecutionPlan, PreparedKernel, RunResult};
+
+/// PJRT-backed execution (registry name `"pjrt"`).
+pub struct PjrtBackend {
+    runtime: client::Runtime,
+}
+
+impl PjrtBackend {
+    /// Build over the default artifact directory. Fails when the PJRT
+    /// client cannot be created (in particular under the vendored stub
+    /// `xla` crate, which compiles but never executes) or when no real
+    /// `artifacts/` build with a manifest exists.
+    pub fn new() -> Result<PjrtBackend> {
+        let runtime = client::Runtime::from_dir(default_artifact_dir())
+            .context("pjrt backend: PJRT runtime unavailable")?;
+        Ok(PjrtBackend { runtime })
+    }
+
+    /// Build over an explicit runtime (custom manifests).
+    pub fn with_runtime(runtime: client::Runtime) -> PjrtBackend {
+        PjrtBackend { runtime }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn probe(&self, platform: &FpgaPlatform) -> Capability {
+        Capability {
+            backend: "pjrt",
+            real_hardware: false,
+            available: true,
+            detail: format!("XLA PJRT CPU client standing in for {}", platform.name),
+        }
+    }
+
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<PreparedKernel> {
+        prepare_plan(plan)
+    }
+
+    fn launch(&self, prepared: &PreparedKernel, inputs: &[Grid], iters: u64) -> Result<RunResult> {
+        let coord = Coordinator::new(&self.runtime);
+        let job = StencilJob::new(prepared.program(), inputs.to_vec(), iters)?;
+        let (grid, report) = coord.execute(&job, prepared.config)?;
+        let wall_s = report.wall_seconds;
+        Ok(RunResult { grid, report, wall_s })
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.runtime.stats()
+    }
+}

@@ -1,0 +1,137 @@
+//! The backend registry: a deterministic name → factory table the CLI and
+//! fleet builder resolve `--backend` / `@backend` selections against.
+//!
+//! Registration order is fixed (`interp`, `sim`, then `pjrt` when
+//! compiled in), so listings and error messages are stable across runs.
+//! Factories are invoked per [`BackendRegistry::create`] call: every
+//! create returns a fresh backend with zeroed stats, and callers that
+//! want boards to share a substrate (one engine cache, merged counters)
+//! share the returned `Arc` instead.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ExecutionBackend, InterpBackend, SimReplayBackend};
+
+/// The fleet-wide default backend when no `--backend` flag and no
+/// `@backend` suffix selects one. Always the interpreter — flagless runs
+/// stay byte-identical to the pre-registry pipeline regardless of which
+/// features are compiled in.
+pub const DEFAULT_BACKEND: &str = "interp";
+
+type Factory = fn() -> Result<Arc<dyn ExecutionBackend>>;
+
+/// Name → factory table of execution backends.
+pub struct BackendRegistry {
+    entries: Vec<(&'static str, Factory)>,
+}
+
+impl BackendRegistry {
+    /// The built-in backends: `interp`, `sim`, and (feature `pjrt`)
+    /// `pjrt`.
+    pub fn builtin() -> BackendRegistry {
+        let mut registry = BackendRegistry { entries: Vec::new() };
+        registry.register("interp", || {
+            Ok(Arc::new(InterpBackend::new()?) as Arc<dyn ExecutionBackend>)
+        });
+        registry.register("sim", || {
+            Ok(Arc::new(SimReplayBackend::new()?) as Arc<dyn ExecutionBackend>)
+        });
+        #[cfg(feature = "pjrt")]
+        registry.register("pjrt", || {
+            Ok(Arc::new(super::PjrtBackend::new()?) as Arc<dyn ExecutionBackend>)
+        });
+        registry
+    }
+
+    /// Register (or replace — latest wins) a backend factory under a name.
+    pub fn register(&mut self, name: &'static str, factory: Factory) {
+        if let Some(slot) = self.entries.iter_mut().find(|(n, _)| *n == name) {
+            slot.1 = factory;
+        } else {
+            self.entries.push((name, factory));
+        }
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Whether `name` is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _)| *n == name)
+    }
+
+    /// Construct a fresh backend by name.
+    pub fn create(&self, name: &str) -> Result<Arc<dyn ExecutionBackend>> {
+        if let Some((_, factory)) = self.entries.iter().find(|(n, _)| *n == name) {
+            return factory().with_context(|| format!("constructing execution backend '{name}'"));
+        }
+        let known = self.names().join(", ");
+        let hint = if name == "pjrt" {
+            " (the pjrt backend needs a build with `--features pjrt`)"
+        } else {
+            ""
+        };
+        bail!("unknown execution backend '{name}': known backends are {known}{hint}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::FpgaPlatform;
+
+    #[test]
+    fn builtin_registry_is_deterministic() {
+        let r = BackendRegistry::builtin();
+        #[cfg(not(feature = "pjrt"))]
+        assert_eq!(r.names(), ["interp", "sim"]);
+        #[cfg(feature = "pjrt")]
+        assert_eq!(r.names(), ["interp", "sim", "pjrt"]);
+        assert!(r.contains("interp") && r.contains("sim"));
+        assert!(!r.contains("fpga"));
+    }
+
+    #[test]
+    fn create_yields_named_available_backends() {
+        let r = BackendRegistry::builtin();
+        let u280 = FpgaPlatform::u280();
+        for name in ["interp", "sim"] {
+            let b = r.create(name).unwrap();
+            assert_eq!(b.name(), name);
+            let cap = b.probe(&u280);
+            assert!(cap.available);
+            assert!(!cap.real_hardware);
+            assert!(cap.detail.contains("u280"), "{}", cap.detail);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_known_names() {
+        let r = BackendRegistry::builtin();
+        let err = r.create("fpga").unwrap_err().to_string();
+        assert!(err.contains("interp") && err.contains("sim"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_error_hints_at_feature_gate() {
+        let err = BackendRegistry::builtin().create("pjrt").unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+
+    #[test]
+    fn register_replaces_latest_wins() {
+        let mut r = BackendRegistry::builtin();
+        let before = r.names().len();
+        r.register("interp", || {
+            Ok(std::sync::Arc::new(crate::backend::SimReplayBackend::new()?)
+                as std::sync::Arc<dyn crate::backend::ExecutionBackend>)
+        });
+        assert_eq!(r.names().len(), before, "replacement, not duplication");
+        assert_eq!(r.create("interp").unwrap().name(), "sim");
+    }
+}

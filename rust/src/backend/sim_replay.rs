@@ -1,0 +1,76 @@
+//! The `sim` backend: cycle-replay execution. Numerics come from the same
+//! interpreter path as `interp` (so grids are bit-identical — the parity
+//! suite asserts `Diff::max_abs == 0` between the two), but wall time is
+//! *replayed from the cycle simulator*: `RunResult::wall_s` carries the
+//! modeled FPGA seconds for the prepared configuration, not the host CPU
+//! time. A mixed fleet can therefore account some boards at modeled board
+//! speed and others at host speed through one seam.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, StencilJob};
+use crate::platform::FpgaPlatform;
+use crate::reference::Grid;
+use crate::runtime::artifact::default_artifact_dir;
+use crate::runtime::{interp, RuntimeStats};
+use crate::sim;
+
+use super::{prepare_plan, Capability, ExecutionBackend, ExecutionPlan, PreparedKernel, RunResult};
+
+/// Cycle-replay execution (registry name `"sim"`).
+pub struct SimReplayBackend {
+    runtime: interp::Runtime,
+}
+
+impl SimReplayBackend {
+    /// Build over the default artifact directory (falls back to the
+    /// builtin shape matrix when no `artifacts/` build exists).
+    pub fn new() -> Result<SimReplayBackend> {
+        Ok(SimReplayBackend { runtime: interp::Runtime::from_dir(default_artifact_dir())? })
+    }
+
+    /// Build over an explicit runtime (tests, custom manifests).
+    pub fn with_runtime(runtime: interp::Runtime) -> SimReplayBackend {
+        SimReplayBackend { runtime }
+    }
+}
+
+impl ExecutionBackend for SimReplayBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn probe(&self, platform: &FpgaPlatform) -> Capability {
+        Capability {
+            backend: "sim",
+            real_hardware: false,
+            available: true,
+            detail: format!(
+                "interpreter numerics, wall time replayed from the {} cycle model",
+                platform.name
+            ),
+        }
+    }
+
+    fn prepare(&self, plan: &ExecutionPlan) -> Result<PreparedKernel> {
+        prepare_plan(plan)
+    }
+
+    fn launch(&self, prepared: &PreparedKernel, inputs: &[Grid], iters: u64) -> Result<RunResult> {
+        let coord = Coordinator::new(&self.runtime);
+        let job = StencilJob::new(prepared.program(), inputs.to_vec(), iters)?;
+        let (grid, report) = coord.execute(&job, prepared.config)?;
+        // the replay: charge the cycle simulator's predicted seconds for
+        // this configuration on this platform, not the host CPU time
+        let wall_s = if iters == 0 {
+            0.0
+        } else {
+            sim::simulate(&prepared.info, &prepared.platform, iters, prepared.config).seconds
+        };
+        Ok(RunResult { grid, report, wall_s })
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.runtime.stats()
+    }
+}

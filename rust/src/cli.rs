@@ -1,0 +1,792 @@
+//! `sasa::cli` — the flag surface shared by the `serve`, `trace`, and
+//! `batch` verbs, parsed once.
+//!
+//! Historically `sasa trace` and `sasa serve` duplicated their flag
+//! handling through a private `configure_batch` helper inside `main.rs`,
+//! and `sasa batch` rolled its own. This module hoists that logic into
+//! the library so all three verbs (and the tests) share one parser:
+//!
+//! * [`Args`] / [`parse_args`] — the tiny positional + `--key value` /
+//!   `--key=value` / bare-`--flag` tokenizer.
+//! * [`parse_boards`] — the `--boards` fleet grammar, now extended with
+//!   per-board backend selection: `u280:2@interp,u50:1@sim`, or a count
+//!   shorthand `2@sim`. Backend names are validated against
+//!   [`BackendRegistry::builtin`] at parse time, so a typo'd `@backend`
+//!   fails before any exploration is paid for.
+//! * [`parse_tenant_weights`] — the `--tenant-weights` grammar.
+//! * [`ServeArgs`] — every serve-family flag, decoded and validated,
+//!   with constructors for the plan cache, the fairness policy, and the
+//!   [`FleetBuilder`] + [`BatchExecutor`] the run needs. `--backend`
+//!   sets the fleet-wide default; `@backend` suffixes override it per
+//!   board.
+//!
+//! Flagless parses stay byte-compatible with the pre-registry CLI: no
+//! `--backend` and no `@backend` suffix leaves every board's backend
+//! selection empty, which the fleet builder treats as the implicit
+//! interpreter path (the CI oracle gate byte-diffs a flagless `serve`
+//! against `--backend interp` to keep this honest).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::BackendRegistry;
+use crate::faults::FaultPlan;
+use crate::obs::Recorder;
+use crate::platform::FpgaPlatform;
+use crate::service::{
+    validate_for_fleet, BatchExecutor, FairnessPolicy, FleetBuilder, JobSpec, PlanCache,
+};
+
+/// Default location of the persistent DSE plan cache.
+pub const DEFAULT_PLAN_CACHE: &str = ".sasa_plan_cache.json";
+
+/// Tiny flag parser: positional args + `--key value` / `--key=value` pairs
+/// + bare `--flags`.
+pub struct Args {
+    /// Tokens that are not flags or flag values, in order.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+/// Is this token a flag (vs. a value)? Dashed tokens that parse as numbers
+/// are values — `--offset -1` must keep its value.
+fn looks_like_flag(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        None | Some("") => false, // plain value, or bare "-" (stdin convention)
+        Some(rest) => rest.parse::<f64>().is_err(),
+    }
+}
+
+/// Tokenize an argv slice into [`Args`].
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < argv.len() && !looks_like_flag(&argv[i + 1]) {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    /// The raw value of `--key`, if present (`"true"` for bare flags).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// `--key` as a u64, or `default` when absent.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    /// `--dims` as an `x`-separated shape, or `default` when absent.
+    pub fn dims(&self, default: &[u64]) -> Result<Vec<u64>> {
+        match self.get("dims") {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split('x')
+                .map(|d| d.parse::<u64>().context("--dims expects e.g. 720x1024 or 64x16x16"))
+                .collect(),
+        }
+    }
+}
+
+/// A parsed `--boards` spec: one platform per board, plus the per-board
+/// backend selection (`None` where no `@backend` suffix was given — the
+/// fleet-wide `--backend` default, or the implicit interpreter, applies).
+pub struct BoardsSpec {
+    /// One entry per board, in declaration order.
+    pub platforms: Vec<FpgaPlatform>,
+    /// Index-parallel with `platforms`: the `@backend` override, if any.
+    pub backends: Vec<Option<String>>,
+}
+
+/// Split `entry` at its rightmost `@` into (head, backend). No `@` means
+/// no backend selection; an empty name after `@` is rejected so a typo
+/// like `u280:2@` cannot silently mean "default".
+fn split_backend<'a>(entry: &'a str, registry: &BackendRegistry) -> Result<(&'a str, Option<String>)> {
+    match entry.rsplit_once('@') {
+        None => Ok((entry, None)),
+        Some((head, backend)) => {
+            let backend = backend.trim();
+            if backend.is_empty() {
+                bail!("--boards '{entry}': missing backend name after '@'");
+            }
+            validate_backend_name("--boards", backend, registry)?;
+            Ok((head.trim(), Some(backend.to_string())))
+        }
+    }
+}
+
+/// Reject a backend name the registry does not know, listing the known
+/// set (and hinting at the feature gate for `pjrt` builds without it).
+fn validate_backend_name(flag: &str, name: &str, registry: &BackendRegistry) -> Result<()> {
+    if registry.contains(name) {
+        return Ok(());
+    }
+    let hint = if name == "pjrt" {
+        " (the pjrt backend needs a build with `--features pjrt`)"
+    } else {
+        ""
+    };
+    bail!(
+        "{flag}: unknown execution backend '{name}' (known: {}){hint}",
+        registry.names().join(", ")
+    );
+}
+
+/// Parse the `--boards` fleet spec: either a plain count (`2` — that many
+/// boards of `default_platform`) or a comma-separated heterogeneous mix
+/// (`u280:2,u50:1`; a bare model name means one board). Every entry — and
+/// the count shorthand — may carry an `@backend` suffix selecting the
+/// execution backend for those boards (`u280:2@interp,u50:1@sim`,
+/// `2@sim`); names are validated against [`BackendRegistry::builtin`].
+/// Whitespace around entries, names, counts, and backends is tolerated;
+/// every malformed shape — trailing commas, empty entries, missing model
+/// names, `model:0` counts, non-integer counts, unknown models, unknown
+/// or empty backends — is rejected with a message naming the offending
+/// piece (and, for unknown models or backends, the supported set).
+pub fn parse_boards(spec: &str, default_platform: &FpgaPlatform) -> Result<BoardsSpec> {
+    let registry = BackendRegistry::builtin();
+    let trimmed = spec.trim();
+    // count shorthand, with or without a fleet-backend suffix: `2`,
+    // `2@sim`. Only a comma-free spec can be a count — in a mix, each
+    // entry carries its own suffix, so the rightmost-'@' split must not
+    // reach across entries.
+    if !trimmed.contains(',') {
+        let (count_head, count_backend) = split_backend(trimmed, &registry)?;
+        if let Ok(n) = count_head.trim().parse::<u64>() {
+            if n == 0 {
+                bail!("--boards must be >= 1");
+            }
+            return Ok(BoardsSpec {
+                platforms: vec![default_platform.clone(); n as usize],
+                backends: vec![count_backend; n as usize],
+            });
+        }
+    }
+    let mut platforms = Vec::new();
+    let mut backends = Vec::new();
+    for part in trimmed.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!(
+                "--boards '{spec}': empty board entry \
+                 (trailing comma or ',,'? expected model:count[@backend][,...])"
+            );
+        }
+        let (head, backend) = split_backend(part, &registry)?;
+        if head.is_empty() {
+            bail!("--boards '{part}': missing board model name before '@'");
+        }
+        let (name, count) = match head.split_once(':') {
+            Some((name, count)) => {
+                let count: u64 = count.trim().parse().with_context(|| {
+                    format!("--boards '{part}': count must be a positive integer")
+                })?;
+                (name.trim(), count)
+            }
+            None => (head, 1),
+        };
+        if name.is_empty() {
+            bail!("--boards '{part}': missing board model name before ':'");
+        }
+        if count == 0 {
+            bail!("--boards '{part}': count must be >= 1 (drop the entry to mean zero boards)");
+        }
+        let platform = FpgaPlatform::by_name(name).with_context(|| {
+            format!(
+                "--boards: unknown board model '{name}' (known: {})",
+                FpgaPlatform::KNOWN.join(", ")
+            )
+        })?;
+        platforms.extend(std::iter::repeat_with(|| platform.clone()).take(count as usize));
+        backends.extend(std::iter::repeat_with(|| backend.clone()).take(count as usize));
+    }
+    Ok(BoardsSpec { platforms, backends })
+}
+
+/// Parse the `--tenant-weights` spec: `tenant:weight[,tenant:weight...]`,
+/// e.g. `hog:1,light:4`. Weights are integers >= 1; duplicate tenants are
+/// rejected (silently keeping one would hide a typo'd split weight).
+pub fn parse_tenant_weights(spec: &str) -> Result<Vec<(String, u64)>> {
+    let mut weights: Vec<(String, u64)> = Vec::new();
+    for part in spec.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!(
+                "--tenant-weights '{spec}': empty entry \
+                 (trailing comma? expected tenant:weight[,tenant:weight...])"
+            );
+        }
+        let Some((tenant, weight)) = part.split_once(':') else {
+            bail!("--tenant-weights '{part}': expected tenant:weight (e.g. hog:1,light:4)");
+        };
+        let tenant = tenant.trim();
+        if tenant.is_empty() {
+            bail!("--tenant-weights '{part}': missing tenant name before ':'");
+        }
+        let weight: u64 = weight.trim().parse().with_context(|| {
+            format!("--tenant-weights '{part}': weight must be a positive integer")
+        })?;
+        if weight == 0 {
+            bail!("--tenant-weights '{part}': weight must be >= 1");
+        }
+        if weights.iter().any(|(t, _)| t == tenant) {
+            bail!("--tenant-weights '{spec}': duplicate tenant '{tenant}'");
+        }
+        weights.push((tenant.to_string(), weight));
+    }
+    Ok(weights)
+}
+
+/// Every flag the serve family (`serve`, `trace`, `batch`) understands,
+/// decoded and validated once. The flag-only validations (grammar, finite
+/// ranges, inert fault flags) happen in [`ServeArgs::parse`]; the ones
+/// that need the job stream (unknown weight tenants, inert quota window,
+/// fleet fit) happen in [`ServeArgs::policy`] / [`ServeArgs::fleet_builder`].
+pub struct ServeArgs {
+    /// The `--platform` board model (fleet count shorthand replicates it).
+    pub platform: FpgaPlatform,
+    /// `--jobs`, when given (`serve`/`trace` require it, `batch` builds
+    /// its own stream).
+    pub jobs: Option<String>,
+    /// `--cache`, defaulted to [`DEFAULT_PLAN_CACHE`].
+    pub cache_path: String,
+    cache_cap: Option<usize>,
+    pool_banks: Option<u64>,
+    /// The parsed `--boards` fleet, one platform per board.
+    pub boards: Vec<FpgaPlatform>,
+    board_backends: Vec<Option<String>>,
+    default_backend: Option<String>,
+    aging_s: Option<f64>,
+    tenant_weights: Vec<(String, u64)>,
+    quota_bank_s: Option<f64>,
+    quota_window_s: Option<f64>,
+    faults: Option<FaultPlan>,
+    /// `--trace-out`, verbatim.
+    pub trace_out: Option<String>,
+    /// `--metrics-out`, verbatim.
+    pub metrics_out: Option<String>,
+}
+
+impl ServeArgs {
+    /// Decode and validate the flag-only parts of the serve surface.
+    pub fn parse(args: &Args, platform: &FpgaPlatform) -> Result<ServeArgs> {
+        let cache_cap = match args.get("cache-cap") {
+            None => None,
+            Some(cap) => {
+                let cap: usize = cap.parse().context("--cache-cap must be an integer")?;
+                if cap == 0 {
+                    bail!("--cache-cap must be >= 1 (0 would disable the plan cache)");
+                }
+                Some(cap)
+            }
+        };
+        let pool_banks = match args.get("banks") {
+            None => None,
+            Some(banks) => Some(banks.parse::<u64>().context("--banks must be an integer")?),
+        };
+        let spec = parse_boards(args.get("boards").unwrap_or("1"), platform)?;
+        let default_backend = match args.get("backend") {
+            None => None,
+            Some(name) => {
+                let name = name.trim();
+                validate_backend_name("--backend", name, &BackendRegistry::builtin())?;
+                Some(name.to_string())
+            }
+        };
+        let aging_s = match args.get("aging-ms") {
+            None => None,
+            Some(ms) => {
+                let ms: f64 = ms.parse().context("--aging-ms must be a number")?;
+                if !ms.is_finite() || ms < 0.0 {
+                    bail!("--aging-ms must be finite and >= 0");
+                }
+                Some(ms / 1e3)
+            }
+        };
+        let tenant_weights = match args.get("tenant-weights") {
+            None => Vec::new(),
+            Some(spec) => parse_tenant_weights(spec)?,
+        };
+        let quota_bank_s = match args.get("quota") {
+            None => None,
+            Some(q) => {
+                let q: f64 = q.parse().context("--quota must be a number (bank-seconds)")?;
+                if !q.is_finite() || q <= 0.0 {
+                    bail!("--quota must be finite and > 0 bank-seconds");
+                }
+                Some(q)
+            }
+        };
+        let quota_window_s = match args.get("quota-window-ms") {
+            None => None,
+            Some(ms) => {
+                let ms: f64 = ms.parse().context("--quota-window-ms must be a number")?;
+                if !ms.is_finite() || ms <= 0.0 {
+                    bail!("--quota-window-ms must be finite and > 0");
+                }
+                Some(ms / 1e3)
+            }
+        };
+        // fault injection is strictly opt-in: without --faults no fault
+        // state is ever constructed and the schedule stays byte-identical
+        // to the pre-faults loop ("--faults none" parses to the same empty
+        // plan, which the fleet also treats as absent — the CI oracle gate
+        // byte-diffs the two paths)
+        let faults = match args.get("faults") {
+            Some(spec) => {
+                let mut plan = FaultPlan::parse(spec)?;
+                if let Some(cap) = args.get("retry-cap") {
+                    plan.retry.cap =
+                        cap.parse().context("--retry-cap must be a non-negative integer")?;
+                }
+                if args.get("drain").is_some() {
+                    plan.drain = true;
+                }
+                Some(plan)
+            }
+            None => {
+                // same inert-flag guard as --quota-window-ms below
+                for flag in ["retry-cap", "drain"] {
+                    if args.get(flag).is_some() {
+                        bail!("--{flag} has no effect without --faults");
+                    }
+                }
+                None
+            }
+        };
+        Ok(ServeArgs {
+            platform: platform.clone(),
+            jobs: args.get("jobs").map(str::to_string),
+            cache_path: args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE).to_string(),
+            cache_cap,
+            pool_banks,
+            boards: spec.platforms,
+            board_backends: spec.backends,
+            default_backend,
+            aging_s,
+            tenant_weights,
+            quota_bank_s,
+            quota_window_s,
+            faults,
+            trace_out: args.get("trace-out").map(str::to_string),
+            metrics_out: args.get("metrics-out").map(str::to_string),
+        })
+    }
+
+    /// Load the `--jobs` stream, failing with the canonical message when
+    /// the flag is absent.
+    pub fn load_jobs(&self) -> Result<Vec<JobSpec>> {
+        let path = self.jobs.as_deref().context("--jobs <jobs.json> required")?;
+        crate::service::load_jobs(path)
+    }
+
+    /// Open the plan cache at `--cache` (or the default path), applying
+    /// the `--cache-cap` LRU bound.
+    pub fn open_cache(&self) -> Result<PlanCache> {
+        let mut cache = PlanCache::at_path(&self.cache_path)?;
+        if let Some(cap) = self.cache_cap {
+            cache = cache.with_max_entries(cap);
+        }
+        Ok(cache)
+    }
+
+    /// The HBM bank pool of each board, after any `--banks` override.
+    fn board_banks(&self) -> Vec<u64> {
+        self.boards.iter().map(|b| self.pool_banks.unwrap_or(b.hbm_banks)).collect()
+    }
+
+    /// Build the fairness policy: weights/quotas declared on the jobs
+    /// themselves, then CLI overrides on top. A policy that ends up
+    /// trivial (no quotas, all weights equal) leaves the schedule
+    /// byte-identical to the pre-fairness loop, so applying it
+    /// unconditionally is safe.
+    pub fn policy(&self, specs: &[JobSpec]) -> Result<FairnessPolicy> {
+        let mut policy = FairnessPolicy::from_specs(specs)?;
+        for (tenant, weight) in &self.tenant_weights {
+            // a typo'd tenant would otherwise be silently inert (the
+            // policy could detect as trivial and run plain FIFO)
+            if !specs.iter().any(|s| s.tenant == *tenant) {
+                let mut known: Vec<&str> = specs.iter().map(|s| s.tenant.as_str()).collect();
+                known.sort_unstable();
+                known.dedup();
+                bail!(
+                    "--tenant-weights: tenant '{tenant}' is not in the job stream \
+                     (stream tenants: {})",
+                    known.join(", ")
+                );
+            }
+            policy = policy.with_weight(tenant, *weight);
+        }
+        if let Some(q) = self.quota_bank_s {
+            policy = policy.with_quota_all(q);
+        }
+        if let Some(window) = self.quota_window_s {
+            // a window with no bucket anywhere would be silently inert —
+            // same guard as the typo'd-tenant check above
+            if self.quota_bank_s.is_none() && specs.iter().all(|s| s.quota_bank_s.is_none()) {
+                bail!(
+                    "--quota-window-ms has no effect without --quota \
+                     (or a quota_bank_s field in the jobs file)"
+                );
+            }
+            policy = policy.with_quota_window_s(window);
+        }
+        Ok(policy)
+    }
+
+    /// Assemble the [`FleetBuilder`] for this flag set: board mix, bank
+    /// pools, aging bound, fairness policy, fault plan, recorder, and the
+    /// `--backend` / `@backend` selections. Jobs that cannot fit the
+    /// largest board would stall the fleet loop mid-run; they are named
+    /// here, before any exploration is paid for.
+    pub fn fleet_builder(
+        &self,
+        specs: &[JobSpec],
+        recorder: Option<Recorder>,
+    ) -> Result<FleetBuilder> {
+        validate_for_fleet(specs, &self.board_banks())?;
+        let mut builder = FleetBuilder::mixed(self.boards.clone());
+        if let Some(banks) = self.pool_banks {
+            builder = builder.board_banks(vec![banks; self.boards.len()]);
+        }
+        if let Some(aging) = self.aging_s {
+            builder = builder.aging_s(aging);
+        }
+        builder = builder.policy(self.policy(specs)?);
+        if let Some(recorder) = recorder {
+            builder = builder.recorder(recorder);
+        }
+        if let Some(plan) = &self.faults {
+            builder = builder.faults(plan.clone());
+        }
+        if let Some(backend) = &self.default_backend {
+            builder = builder.default_backend(backend.clone());
+        }
+        if self.board_backends.iter().any(Option::is_some) {
+            builder = builder.board_backends(self.board_backends.clone());
+        }
+        Ok(builder)
+    }
+
+    /// The executor for a prepared fleet builder. Borrowing `--platform`
+    /// from `self` keeps the executor's lifetime tied to the parsed args.
+    pub fn executor(&self, builder: FleetBuilder) -> BatchExecutor<'_> {
+        BatchExecutor::new(&self.platform).with_fleet_builder(builder)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        let v: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        parse_args(&v)
+    }
+
+    #[test]
+    fn key_value_pairs_and_bare_flags() {
+        // positionals come before flags (the documented CLI shape:
+        // `sasa report table3 --csv`); a dashless token right after a flag
+        // is that flag's value
+        let a = args(&["table3", "--kernel", "blur", "--csv"]);
+        assert_eq!(a.get("kernel"), Some("blur"));
+        assert_eq!(a.get("csv"), Some("true"));
+        assert_eq!(a.positional, vec!["table3"]);
+    }
+
+    #[test]
+    fn equals_form_accepted() {
+        let a = args(&["--kernel=hotspot", "--iter=64", "--dims=720x1024"]);
+        assert_eq!(a.get("kernel"), Some("hotspot"));
+        assert_eq!(a.u64_or("iter", 0).unwrap(), 64);
+        assert_eq!(a.dims(&[]).unwrap(), vec![720, 1024]);
+        // empty value via `=` stays an explicit empty string, not "true"
+        let a = args(&["--note="]);
+        assert_eq!(a.get("note"), Some(""));
+    }
+
+    #[test]
+    fn negative_values_not_swallowed_as_flags() {
+        let a = args(&["--offset", "-1", "--scale", "-2.5", "--exp", "-1e3"]);
+        assert_eq!(a.get("offset"), Some("-1"));
+        assert_eq!(a.get("scale"), Some("-2.5"));
+        assert_eq!(a.get("exp"), Some("-1e3"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_bare() {
+        let a = args(&["--csv", "--kernel", "blur"]);
+        assert_eq!(a.get("csv"), Some("true"));
+        assert_eq!(a.get("kernel"), Some("blur"));
+        // single-dash non-numbers are not values either
+        let a = args(&["--csv", "-x"]);
+        assert_eq!(a.get("csv"), Some("true"));
+    }
+
+    #[test]
+    fn bare_dash_is_a_value() {
+        let a = args(&["--file", "-"]);
+        assert_eq!(a.get("file"), Some("-"));
+    }
+
+    #[test]
+    fn boards_count_shorthand_uses_default_platform() {
+        let u280 = FpgaPlatform::u280();
+        let spec = parse_boards("2", &u280).unwrap();
+        assert_eq!(spec.platforms.len(), 2);
+        assert!(spec.platforms.iter().all(|b| b.name == u280.name));
+        assert!(spec.backends.iter().all(Option::is_none));
+        // the shorthand follows --platform, not a hardcoded U280
+        let u50 = FpgaPlatform::u50();
+        let spec = parse_boards("3", &u50).unwrap();
+        assert_eq!(spec.platforms.len(), 3);
+        assert!(spec.platforms.iter().all(|b| b.name == u50.name));
+    }
+
+    #[test]
+    fn boards_mix_syntax_expands_in_order() {
+        let u280 = FpgaPlatform::u280();
+        let spec = parse_boards("u280:2,u50:1", &u280).unwrap();
+        let models: Vec<&str> = spec.platforms.iter().map(FpgaPlatform::model).collect();
+        assert_eq!(models, ["u280", "u280", "u50"]);
+        assert!(spec.backends.iter().all(Option::is_none));
+        // a bare model name means one board; spaces around commas are fine
+        let spec = parse_boards("u50, u280:1", &u280).unwrap();
+        let models: Vec<&str> = spec.platforms.iter().map(FpgaPlatform::model).collect();
+        assert_eq!(models, ["u50", "u280"]);
+    }
+
+    #[test]
+    fn boards_tolerates_whitespace() {
+        // table-driven accepts: whitespace around the spec, entries,
+        // names, and counts never changes the parsed fleet
+        let u280 = FpgaPlatform::u280();
+        for (spec, expect) in [
+            ("  2  ", vec!["u280", "u280"]),
+            (" u280 : 2 , u50 : 1 ", vec!["u280", "u280", "u50"]),
+            ("u50 ,u280", vec!["u50", "u280"]),
+            ("\tu50:1\t", vec!["u50"]),
+        ] {
+            let parsed = parse_boards(spec, &u280)
+                .unwrap_or_else(|e| panic!("{spec:?} must parse: {e}"));
+            let models: Vec<&str> = parsed.platforms.iter().map(FpgaPlatform::model).collect();
+            assert_eq!(models, expect, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn boards_rejects_unknown_model_and_bad_counts() {
+        let u280 = FpgaPlatform::u280();
+        let err = parse_boards("u55c:1", &u280).unwrap_err().to_string();
+        assert!(err.contains("u55c"), "{err}");
+        assert!(err.contains("u280") && err.contains("u50"), "names the known set: {err}");
+        // table-driven rejects: each malformed shape gets a message
+        // naming what was wrong with it
+        for (bad, msg) in [
+            ("0", "must be >= 1"),
+            ("u280:0", "count must be >= 1"),
+            ("u50:0,u280:1", "count must be >= 1"),
+            ("u280:x", "count must be a positive integer"),
+            ("u280:-1", "count must be a positive integer"),
+            ("u280:2.5", "count must be a positive integer"),
+            ("u280:", "count must be a positive integer"),
+            ("", "empty board entry"),
+            (",", "empty board entry"),
+            ("u280:1,", "empty board entry"),
+            ("u280:1,,u50:1", "empty board entry"),
+            (" , u280:1", "empty board entry"),
+            (":2", "missing board model name"),
+            (" : 2", "missing board model name"),
+        ] {
+            let err = match parse_boards(bad, &u280) {
+                Ok(_) => panic!("{bad:?} must be rejected"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
+        }
+    }
+
+    #[test]
+    fn boards_backend_suffix_selects_per_board() {
+        let u280 = FpgaPlatform::u280();
+        // per-entry suffixes expand with their counts, in order
+        let spec = parse_boards("u280:2@interp,u50:1@sim", &u280).unwrap();
+        let models: Vec<&str> = spec.platforms.iter().map(FpgaPlatform::model).collect();
+        assert_eq!(models, ["u280", "u280", "u50"]);
+        let backends: Vec<Option<&str>> =
+            spec.backends.iter().map(|b| b.as_deref()).collect();
+        assert_eq!(backends, [Some("interp"), Some("interp"), Some("sim")]);
+        // count shorthand takes one fleet-wide suffix
+        let spec = parse_boards("2@sim", &u280).unwrap();
+        assert_eq!(spec.platforms.len(), 2);
+        assert!(spec.backends.iter().all(|b| b.as_deref() == Some("sim")));
+        // suffixes are per entry: unsuffixed boards keep None (the
+        // --backend default, or the implicit interpreter, applies)
+        let spec = parse_boards("u50@sim, u280", &u280).unwrap();
+        let backends: Vec<Option<&str>> =
+            spec.backends.iter().map(|b| b.as_deref()).collect();
+        assert_eq!(backends, [Some("sim"), None]);
+        // whitespace around the '@' pieces is tolerated like everywhere else
+        let spec = parse_boards(" u280 : 1 @ interp ", &u280).unwrap();
+        assert_eq!(spec.backends, [Some("interp".to_string())]);
+    }
+
+    #[test]
+    fn boards_rejects_bad_backends() {
+        let u280 = FpgaPlatform::u280();
+        for (bad, msg) in [
+            ("u280:1@", "missing backend name after '@'"),
+            ("2@", "missing backend name after '@'"),
+            ("u280@warp-drive", "unknown execution backend 'warp-drive'"),
+            ("2@warp-drive", "unknown execution backend 'warp-drive'"),
+            ("@sim", "missing board model name"),
+        ] {
+            let err = match parse_boards(bad, &u280) {
+                Ok(_) => panic!("{bad:?} must be rejected"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
+        }
+        // unknown-backend errors name the known set
+        let err = parse_boards("u280@warp-drive", &u280).unwrap_err().to_string();
+        assert!(err.contains("interp") && err.contains("sim"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn boards_pjrt_backend_hints_at_feature_gate() {
+        let u280 = FpgaPlatform::u280();
+        let err = parse_boards("u280:1@pjrt", &u280).unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+
+    #[test]
+    fn tenant_weights_parse_and_reject() {
+        let ok = parse_tenant_weights("hog:1,light:4").unwrap();
+        assert_eq!(ok, vec![("hog".to_string(), 1), ("light".to_string(), 4)]);
+        // whitespace tolerated everywhere
+        let ok = parse_tenant_weights(" hog : 2 , light : 3 ").unwrap();
+        assert_eq!(ok, vec![("hog".to_string(), 2), ("light".to_string(), 3)]);
+
+        for (bad, msg) in [
+            ("", "empty entry"),
+            ("hog:1,", "empty entry"),
+            ("hog", "expected tenant:weight"),
+            (":4", "missing tenant name"),
+            ("hog:0", "weight must be >= 1"),
+            ("hog:x", "weight must be a positive integer"),
+            ("hog:1.5", "weight must be a positive integer"),
+            ("hog:-2", "weight must be a positive integer"),
+            ("hog:1,hog:4", "duplicate tenant"),
+        ] {
+            let err = match parse_tenant_weights(bad) {
+                Ok(_) => panic!("{bad:?} must be rejected"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
+        }
+    }
+
+    #[test]
+    fn serve_args_flagless_defaults() {
+        let u280 = FpgaPlatform::u280();
+        let sa = ServeArgs::parse(&args(&[]), &u280).unwrap();
+        assert!(sa.jobs.is_none());
+        assert_eq!(sa.cache_path, DEFAULT_PLAN_CACHE);
+        assert_eq!(sa.boards.len(), 1);
+        assert!(sa.board_backends.iter().all(Option::is_none));
+        assert!(sa.default_backend.is_none());
+        // no --jobs: loading fails with the canonical message
+        let err = sa.load_jobs().unwrap_err().to_string();
+        assert!(err.contains("--jobs"), "{err}");
+    }
+
+    #[test]
+    fn serve_args_backend_flag_validates() {
+        let u280 = FpgaPlatform::u280();
+        let sa = ServeArgs::parse(&args(&["--backend", "sim"]), &u280).unwrap();
+        assert_eq!(sa.default_backend.as_deref(), Some("sim"));
+        let err = ServeArgs::parse(&args(&["--backend", "warp-drive"]), &u280)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--backend"), "{err}");
+        assert!(err.contains("unknown execution backend 'warp-drive'"), "{err}");
+        assert!(err.contains("interp") && err.contains("sim"), "names the known set: {err}");
+    }
+
+    #[test]
+    fn serve_args_inert_fault_flags_rejected() {
+        let u280 = FpgaPlatform::u280();
+        for toks in [&["--retry-cap", "2"][..], &["--drain"][..]] {
+            let err = ServeArgs::parse(&args(toks), &u280).unwrap_err().to_string();
+            assert!(err.contains("has no effect without --faults"), "{toks:?}: {err}");
+        }
+        // with --faults they apply instead
+        let sa =
+            ServeArgs::parse(&args(&["--faults", "none", "--retry-cap", "2"]), &u280).unwrap();
+        assert_eq!(sa.faults.as_ref().unwrap().retry.cap, 2);
+    }
+
+    #[test]
+    fn serve_args_quota_window_requires_a_quota() {
+        let u280 = FpgaPlatform::u280();
+        let sa = ServeArgs::parse(&args(&["--quota-window-ms", "5"]), &u280).unwrap();
+        let specs = vec![JobSpec::new("t", "jacobi2d", vec![720, 1024], 4)];
+        let err = sa.policy(&specs).unwrap_err().to_string();
+        assert!(err.contains("has no effect without --quota"), "{err}");
+        // with --quota the window applies
+        let sa = ServeArgs::parse(&args(&["--quota", "1.5", "--quota-window-ms", "5"]), &u280)
+            .unwrap();
+        assert!(sa.policy(&specs).is_ok());
+    }
+
+    #[test]
+    fn serve_args_unknown_weight_tenant_rejected() {
+        let u280 = FpgaPlatform::u280();
+        let sa = ServeArgs::parse(&args(&["--tenant-weights", "ghost:4"]), &u280).unwrap();
+        let specs = vec![JobSpec::new("t", "jacobi2d", vec![720, 1024], 4)];
+        let err = sa.policy(&specs).unwrap_err().to_string();
+        assert!(err.contains("ghost") && err.contains("not in the job stream"), "{err}");
+    }
+
+    #[test]
+    fn serve_args_builder_carries_backend_selection() {
+        let u280 = FpgaPlatform::u280();
+        let specs = vec![JobSpec::new("t", "jacobi2d", vec![720, 1024], 4)];
+        let sa = ServeArgs::parse(
+            &args(&["--boards", "u280:1@interp,u50:1@sim", "--backend", "interp"]),
+            &u280,
+        )
+        .unwrap();
+        let fleet = sa.fleet_builder(&specs, None).unwrap().build().unwrap();
+        let names: Vec<&str> = fleet
+            .boards()
+            .iter()
+            .map(|b| b.backend.as_ref().map(|s| s.name.as_str()).unwrap_or("-"))
+            .collect();
+        assert_eq!(names, ["interp", "sim"]);
+    }
+}

@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::dsl::{analyze, KernelInfo, StencilProgram};
 use crate::model::{Config, Parallelism};
 use crate::reference::Grid;
-use crate::runtime::{ArtifactEntry, Runtime};
+use crate::runtime::{ArtifactEntry, TileExecutor};
 
 use grid::{exchange_borders, partition, Tile};
 
@@ -100,20 +100,22 @@ pub struct ExecReport {
     pub gcell_per_s: f64,
 }
 
-/// The coordinator. Holds the PJRT runtime; stateless across jobs.
-pub struct Coordinator<'rt> {
-    runtime: &'rt Runtime,
+/// The coordinator. Generic over the per-tile execution substrate
+/// ([`TileExecutor`]): the same dataflow drives the interpreter, the
+/// cycle-replay backend, and (feature `pjrt`) the PJRT client. Stateless
+/// across jobs.
+pub struct Coordinator<'rt, R: TileExecutor + ?Sized = crate::runtime::interp::Runtime> {
+    runtime: &'rt R,
 }
 
-impl<'rt> Coordinator<'rt> {
-    pub fn new(runtime: &'rt Runtime) -> Self {
+impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
+    pub fn new(runtime: &'rt R) -> Self {
         Coordinator { runtime }
     }
 
     fn artifact(&self, job: &StencilJob, min_rows: usize) -> Result<&'rt ArtifactEntry> {
         let name = job.info.name.to_lowercase();
-        self.runtime
-            .manifest()
+        TileExecutor::manifest(self.runtime)
             .find(&name, job.cols() as u64, min_rows as u64)
             .with_context(|| {
                 format!(

@@ -27,13 +27,15 @@
 //! | [`model`] | the analytical model (Eqs 1–9) and per-platform DSE ([`model::explore`], [`model::explore_per_platform`]) |
 //! | [`sim`] | cycle-level simulator with closed-form steady-state fast-forward |
 //! | [`reference`] | tiered DSL interpreter — the bit-exact numeric oracle |
-//! | [`runtime`] | artifact execution: interpreter-backed by default, PJRT behind `pjrt` |
-//! | [`coordinator`] | multi-PE execution of the five parallelism schemes (Figs 4–6) |
+//! | [`runtime`] | artifact tile executors: interpreter-backed by default, PJRT behind `pjrt` |
+//! | [`coordinator`] | multi-PE execution of the five parallelism schemes (Figs 4–6), generic over the tile executor |
+//! | [`backend`] | pluggable execution backends: the probe/prepare/launch/verify seam and the `interp`/`sim`/`pjrt` registry |
 //! | [`codegen`] | TAPA HLS kernel/host/connectivity + execution-plan emission |
 //! | [`metrics`] | tables/percentiles + one function per paper artifact |
 //! | [`faults`] | deterministic fault injection policy: fault plans, retry/backoff, reliability accounting |
 //! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor, board-failure recovery |
 //! | [`obs`] | deterministic observability: event recorder, Chrome-trace export, metrics snapshots |
+//! | [`cli`] | shared flag parsing for the `sasa` binary (`serve`/`trace`/`batch` argument surface) |
 //! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
 //!
 //! The serving entry points most callers want are
@@ -50,9 +52,11 @@ pub mod sim;
 pub mod reference;
 pub mod runtime;
 pub mod coordinator;
+pub mod backend;
 pub mod codegen;
 pub mod metrics;
 pub mod faults;
 pub mod service;
 pub mod obs;
+pub mod cli;
 pub mod bench;

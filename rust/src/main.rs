@@ -11,11 +11,15 @@
 //! sasa batch --iter 8 [--real]                 run the whole suite as one batch
 //! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
 //! ```
-
-use std::collections::HashMap;
+//!
+//! Flag parsing for the serve family lives in [`sasa::cli`]; execution
+//! substrates are selected per board through
+//! [`sasa::backend::BackendRegistry`] (`--backend`, `--boards ...@sim`).
 
 use anyhow::{bail, Context, Result};
 
+use sasa::backend::BackendRegistry;
+use sasa::cli::{parse_args, Args, ServeArgs};
 use sasa::codegen::{generate_connectivity, generate_hls, generate_host, Plan};
 use sasa::coordinator::{Coordinator, StencilJob};
 use sasa::dsl::{analyze, benchmarks as b, parse};
@@ -24,7 +28,6 @@ use sasa::model::{explore, Config};
 use sasa::platform::FpgaPlatform;
 use sasa::reference::{interpret, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
-use sasa::runtime::Runtime;
 use sasa::sim::simulate;
 use sasa::util::prng::Prng;
 
@@ -32,68 +35,6 @@ fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
-    }
-}
-
-/// Tiny flag parser: positional args + `--key value` / `--key=value` pairs
-/// + bare `--flags`.
-struct Args {
-    positional: Vec<String>,
-    flags: HashMap<String, String>,
-}
-
-/// Is this token a flag (vs. a value)? Dashed tokens that parse as numbers
-/// are values — `--offset -1` must keep its value.
-fn looks_like_flag(tok: &str) -> bool {
-    match tok.strip_prefix('-') {
-        None | Some("") => false, // plain value, or bare "-" (stdin convention)
-        Some(rest) => rest.parse::<f64>().is_err(),
-    }
-}
-
-fn parse_args(argv: &[String]) -> Args {
-    let mut positional = Vec::new();
-    let mut flags = HashMap::new();
-    let mut i = 0;
-    while i < argv.len() {
-        let a = &argv[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if let Some((k, v)) = key.split_once('=') {
-                flags.insert(k.to_string(), v.to_string());
-                i += 1;
-            } else if i + 1 < argv.len() && !looks_like_flag(&argv[i + 1]) {
-                flags.insert(key.to_string(), argv[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            positional.push(a.clone());
-            i += 1;
-        }
-    }
-    Args { positional, flags }
-}
-
-impl Args {
-    fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(String::as_str)
-    }
-    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
-        }
-    }
-    fn dims(&self, default: &[u64]) -> Result<Vec<u64>> {
-        match self.get("dims") {
-            None => Ok(default.to_vec()),
-            Some(v) => v
-                .split('x')
-                .map(|d| d.parse::<u64>().context("--dims expects e.g. 720x1024 or 64x16x16"))
-                .collect(),
-        }
     }
 }
 
@@ -147,19 +88,25 @@ fn print_help() {
          sasa run --kernel <name> --dims RxC --iter <n> [--scheme <p>] [--k <k>] [--s <s>]\n  \
          sasa sim --kernel <name> --iter <n> [--dims RxC]\n  \
          sasa serve --jobs <jobs.json> [--cache <plans.json>] [--cache-cap <n>]\n             \
-         [--banks <n>] [--boards <mix>] [--aging-ms <x>]\n             \
+         [--banks <n>] [--boards <mix>] [--backend <name>] [--aging-ms <x>]\n             \
          [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n             \
          [--faults <spec>] [--retry-cap <n>] [--drain]\n             \
          [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
          sasa trace --jobs <jobs.json> [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
-         sasa batch [--iter <n>] [--real] [--cache <plans.json>]\n  \
+         sasa batch [--iter <n>] [--real] [--cache <plans.json>] [--backend <name>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
          FLAGS (serve):\n  \
          --boards <mix>    fleet composition: a count (`--boards 2` = that many\n                    \
          boards of --platform, default u280) or a heterogeneous\n                    \
          mix `model:count[,model:count...]`, e.g. `u280:2,u50:1`\n                    \
          (a bare model name means one board; known models:\n                    \
-         {known})\n  \
+         {known}). Any entry — or the count — may carry an\n                    \
+         `@backend` suffix selecting that board's execution\n                    \
+         backend, e.g. `u280:2@interp,u50:1@sim` or `2@sim`\n  \
+         --backend <name>  fleet-wide default execution backend for boards\n                    \
+         without an `@backend` suffix (known: {backends};\n                    \
+         default interp — flagless runs and `--backend interp`\n                    \
+         produce byte-identical schedules and reports)\n  \
          --cache-cap <n>   LRU cap on the persisted plan cache: inserts beyond\n                    \
          <n> plans evict the least-recently-used entry (>= 1)\n  \
          --tenant-weights <spec>  per-tenant weighted-fair-queuing shares within\n                    \
@@ -188,92 +135,9 @@ fn print_help() {
          snapshot mirroring every report table; `sasa trace`\n                    \
          defaults it to metrics.json\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d",
-        known = FpgaPlatform::KNOWN.join(", ")
+        known = FpgaPlatform::KNOWN.join(", "),
+        backends = BackendRegistry::builtin().names().join(", ")
     );
-}
-
-/// Parse the `--boards` fleet spec: either a plain count (`2` — that many
-/// boards of `default_platform`) or a comma-separated heterogeneous mix
-/// (`u280:2,u50:1`; a bare model name means one board). Whitespace around
-/// entries, names, and counts is tolerated; every malformed shape —
-/// trailing commas, empty entries, missing model names, `model:0` counts,
-/// non-integer counts, unknown models — is rejected with a message naming
-/// the offending piece (and, for unknown models, the supported set).
-fn parse_boards(spec: &str, default_platform: &FpgaPlatform) -> Result<Vec<FpgaPlatform>> {
-    let trimmed = spec.trim();
-    if let Ok(n) = trimmed.parse::<u64>() {
-        if n == 0 {
-            bail!("--boards must be >= 1");
-        }
-        return Ok(vec![default_platform.clone(); n as usize]);
-    }
-    let mut boards = Vec::new();
-    for part in trimmed.split(',') {
-        let part = part.trim();
-        if part.is_empty() {
-            bail!(
-                "--boards '{spec}': empty board entry \
-                 (trailing comma or ',,'? expected model:count[,model:count...])"
-            );
-        }
-        let (name, count) = match part.split_once(':') {
-            Some((name, count)) => {
-                let count: u64 = count.trim().parse().with_context(|| {
-                    format!("--boards '{part}': count must be a positive integer")
-                })?;
-                (name.trim(), count)
-            }
-            None => (part, 1),
-        };
-        if name.is_empty() {
-            bail!("--boards '{part}': missing board model name before ':'");
-        }
-        if count == 0 {
-            bail!("--boards '{part}': count must be >= 1 (drop the entry to mean zero boards)");
-        }
-        let platform = FpgaPlatform::by_name(name).with_context(|| {
-            format!(
-                "--boards: unknown board model '{name}' (known: {})",
-                FpgaPlatform::KNOWN.join(", ")
-            )
-        })?;
-        boards.extend(std::iter::repeat_with(|| platform.clone()).take(count as usize));
-    }
-    Ok(boards)
-}
-
-/// Parse the `--tenant-weights` spec: `tenant:weight[,tenant:weight...]`,
-/// e.g. `hog:1,light:4`. Weights are integers >= 1; duplicate tenants are
-/// rejected (silently keeping one would hide a typo'd split weight).
-fn parse_tenant_weights(spec: &str) -> Result<Vec<(String, u64)>> {
-    let mut weights: Vec<(String, u64)> = Vec::new();
-    for part in spec.trim().split(',') {
-        let part = part.trim();
-        if part.is_empty() {
-            bail!(
-                "--tenant-weights '{spec}': empty entry \
-                 (trailing comma? expected tenant:weight[,tenant:weight...])"
-            );
-        }
-        let Some((tenant, weight)) = part.split_once(':') else {
-            bail!("--tenant-weights '{part}': expected tenant:weight (e.g. hog:1,light:4)");
-        };
-        let tenant = tenant.trim();
-        if tenant.is_empty() {
-            bail!("--tenant-weights '{part}': missing tenant name before ':'");
-        }
-        let weight: u64 = weight.trim().parse().with_context(|| {
-            format!("--tenant-weights '{part}': weight must be a positive integer")
-        })?;
-        if weight == 0 {
-            bail!("--tenant-weights '{part}': weight must be >= 1");
-        }
-        if weights.iter().any(|(t, _)| t == tenant) {
-            bail!("--tenant-weights '{spec}': duplicate tenant '{tenant}'");
-        }
-        weights.push((tenant.to_string(), weight));
-    }
-    Ok(weights)
 }
 
 fn cmd_parse(args: &Args) -> Result<()> {
@@ -399,6 +263,15 @@ fn cmd_codegen(args: &Args, platform: &FpgaPlatform) -> Result<()> {
 }
 
 fn cmd_run(args: &Args, platform: &FpgaPlatform) -> Result<()> {
+    // `sasa run` keeps the historical compile-time substrate: the PJRT
+    // client when built with `--features pjrt`, the interpreter otherwise.
+    // (Scheduled work selects its substrate per board at runtime through
+    // the backend registry instead — `sasa serve --backend`.)
+    #[cfg(feature = "pjrt")]
+    use sasa::runtime::client::Runtime;
+    #[cfg(not(feature = "pjrt"))]
+    use sasa::runtime::interp::Runtime;
+
     let src = kernel_source(args)?;
     let iter = args.u64_or("iter", 4)?;
     let prog0 = parse(&src)?;
@@ -482,9 +355,6 @@ fn cmd_sim(args: &Args, platform: &FpgaPlatform) -> Result<()> {
     Ok(())
 }
 
-/// Default location of the persistent DSE plan cache.
-const DEFAULT_PLAN_CACHE: &str = ".sasa_plan_cache.json";
-
 /// Run a batch and keep any explorations already paid for even when the
 /// batch itself fails. The scheduling error is the root cause, so a save
 /// failure on that path is deliberately dropped rather than masking it.
@@ -516,6 +386,11 @@ fn print_batch_report(
     }
     println!("{}", report.class_table().to_markdown());
     println!("{}", report.board_table().to_markdown());
+    // present exactly when some board selected a non-default backend —
+    // all-interp serves stay byte-identical to the pre-registry output
+    if let Some(backends) = report.backend_table() {
+        println!("{}", backends.to_markdown());
+    }
     // present exactly when the pass ran with a non-empty --faults plan
     if let Some(reliability) = report.reliability_table() {
         println!("{}", reliability.to_markdown());
@@ -538,130 +413,6 @@ fn print_batch_report(
         s.explorations,
         cache.len()
     );
-}
-
-/// Shared `serve`/`trace` setup: load the job stream, open the plan
-/// cache, and build the executor (fleet mix, aging bound, fairness
-/// policy) from the flags the two verbs have in common. They differ
-/// only in what they do with the resulting report — `serve` prints the
-/// tables, `trace` writes the observability artifacts.
-#[allow(clippy::type_complexity)]
-fn configure_batch<'p>(
-    args: &Args,
-    platform: &'p FpgaPlatform,
-) -> Result<(
-    Vec<sasa::service::JobSpec>,
-    sasa::service::PlanCache,
-    String,
-    sasa::service::BatchExecutor<'p>,
-)> {
-    use sasa::service::{load_jobs, validate_for_fleet, BatchExecutor, FairnessPolicy, PlanCache};
-    let jobs_path = args.get("jobs").context("--jobs <jobs.json> required")?;
-    let specs = load_jobs(jobs_path)?;
-    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE).to_string();
-    let mut cache = PlanCache::at_path(&cache_path)?;
-    if let Some(cap) = args.get("cache-cap") {
-        let cap: usize = cap.parse().context("--cache-cap must be an integer")?;
-        if cap == 0 {
-            bail!("--cache-cap must be >= 1 (0 would disable the plan cache)");
-        }
-        cache = cache.with_max_entries(cap);
-    }
-    let mut exec = BatchExecutor::new(platform);
-    let mut pool_override = None;
-    if let Some(banks) = args.get("banks") {
-        let banks: u64 = banks.parse().context("--banks must be an integer")?;
-        pool_override = Some(banks);
-        exec = exec.with_pool_banks(banks);
-    }
-    let boards = parse_boards(args.get("boards").unwrap_or("1"), platform)?;
-    // a job that cannot fit the largest board would stall the fleet loop
-    // mid-run; name it now, before any exploration is paid for
-    let board_banks: Vec<u64> = boards
-        .iter()
-        .map(|b| pool_override.unwrap_or(b.hbm_banks))
-        .collect();
-    validate_for_fleet(&specs, &board_banks)?;
-    exec = exec.with_fleet(boards);
-    if let Some(ms) = args.get("aging-ms") {
-        let ms: f64 = ms.parse().context("--aging-ms must be a number")?;
-        if !ms.is_finite() || ms < 0.0 {
-            bail!("--aging-ms must be finite and >= 0");
-        }
-        exec = exec.with_aging_s(ms / 1e3);
-    }
-    // fairness: weights/quotas declared on the jobs themselves, then CLI
-    // overrides on top. A policy that ends up trivial (no quotas, all
-    // weights equal) leaves the schedule byte-identical to the
-    // pre-fairness loop, so passing it unconditionally is safe.
-    let mut policy = FairnessPolicy::from_specs(&specs)?;
-    if let Some(spec) = args.get("tenant-weights") {
-        for (tenant, weight) in parse_tenant_weights(spec)? {
-            // a typo'd tenant would otherwise be silently inert (the
-            // policy could detect as trivial and run plain FIFO)
-            if !specs.iter().any(|s| s.tenant == tenant) {
-                let mut known: Vec<&str> = specs.iter().map(|s| s.tenant.as_str()).collect();
-                known.sort_unstable();
-                known.dedup();
-                bail!(
-                    "--tenant-weights: tenant '{tenant}' is not in the job stream \
-                     (stream tenants: {})",
-                    known.join(", ")
-                );
-            }
-            policy = policy.with_weight(&tenant, weight);
-        }
-    }
-    if let Some(q) = args.get("quota") {
-        let q: f64 = q.parse().context("--quota must be a number (bank-seconds)")?;
-        if !q.is_finite() || q <= 0.0 {
-            bail!("--quota must be finite and > 0 bank-seconds");
-        }
-        policy = policy.with_quota_all(q);
-    }
-    if let Some(ms) = args.get("quota-window-ms") {
-        let ms: f64 = ms.parse().context("--quota-window-ms must be a number")?;
-        if !ms.is_finite() || ms <= 0.0 {
-            bail!("--quota-window-ms must be finite and > 0");
-        }
-        // a window with no bucket anywhere would be silently inert —
-        // same guard as the typo'd-tenant check above
-        if args.get("quota").is_none() && specs.iter().all(|s| s.quota_bank_s.is_none()) {
-            bail!(
-                "--quota-window-ms has no effect without --quota \
-                 (or a quota_bank_s field in the jobs file)"
-            );
-        }
-        policy = policy.with_quota_window_s(ms / 1e3);
-    }
-    exec = exec.with_policy(policy);
-    // fault injection is strictly opt-in: without --faults no fault
-    // state is ever constructed and the schedule stays byte-identical
-    // to the pre-faults loop ("--faults none" parses to the same empty
-    // plan, which the fleet also treats as absent — the CI oracle gate
-    // byte-diffs the two paths)
-    match args.get("faults") {
-        Some(spec) => {
-            let mut plan = sasa::faults::FaultPlan::parse(spec)?;
-            if let Some(cap) = args.get("retry-cap") {
-                plan.retry.cap =
-                    cap.parse().context("--retry-cap must be a non-negative integer")?;
-            }
-            if args.get("drain").is_some() {
-                plan.drain = true;
-            }
-            exec = exec.with_faults(plan);
-        }
-        None => {
-            // same inert-flag guard as --quota-window-ms above
-            for flag in ["retry-cap", "drain"] {
-                if args.get(flag).is_some() {
-                    bail!("--{flag} has no effect without --faults");
-                }
-            }
-        }
-    }
-    Ok((specs, cache, cache_path, exec))
 }
 
 /// Write the two observability artifacts from a recorded batch: the
@@ -693,37 +444,41 @@ fn write_obs_artifacts(
 }
 
 /// `sasa serve --jobs jobs.json [--cache plans.json] [--cache-cap n]
-/// [--banks n] [--boards mix] [--aging-ms x] [--tenant-weights a:4,b:1]
-/// [--quota bank-s] [--quota-window-ms x] [--faults spec] [--retry-cap n]
-/// [--drain] [--trace-out t.json] [--metrics-out m.json]`: schedule a
-/// multi-tenant job batch over a fleet of boards' HBM bank pools.
-/// `--boards` takes a count (identical `--platform` boards) or a
-/// heterogeneous mix like `u280:1,u50:1` — each board is planned by its
-/// own platform's DSE. Weights turn within-class admission into weighted
-/// fair queuing; `--quota` caps every tenant with a bank-second token
-/// bucket. `--faults` injects deterministic board crashes/hangs/bank
-/// degradation and reports a reliability table (see DESIGN.md §8).
-/// `--trace-out` / `--metrics-out` additionally record the run and
-/// export the timeline / counter artifacts (see DESIGN.md §7).
+/// [--banks n] [--boards mix] [--backend name] [--aging-ms x]
+/// [--tenant-weights a:4,b:1] [--quota bank-s] [--quota-window-ms x]
+/// [--faults spec] [--retry-cap n] [--drain] [--trace-out t.json]
+/// [--metrics-out m.json]`: schedule a multi-tenant job batch over a
+/// fleet of boards' HBM bank pools. `--boards` takes a count (identical
+/// `--platform` boards) or a heterogeneous mix like `u280:1,u50:1` —
+/// each board is planned by its own platform's DSE, and each entry may
+/// pick its execution backend with an `@backend` suffix
+/// (`u280:1@interp,u50:1@sim`); `--backend` sets the fleet-wide default.
+/// Weights turn within-class admission into weighted fair queuing;
+/// `--quota` caps every tenant with a bank-second token bucket.
+/// `--faults` injects deterministic board crashes/hangs/bank degradation
+/// and reports a reliability table (see DESIGN.md §8). `--trace-out` /
+/// `--metrics-out` additionally record the run and export the timeline /
+/// counter artifacts (see DESIGN.md §7).
 fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
-    let (specs, mut cache, cache_path, mut exec) = configure_batch(args, platform)?;
-    let trace_out = args.get("trace-out");
-    let metrics_out = args.get("metrics-out");
+    let sa = ServeArgs::parse(args, platform)?;
+    let specs = sa.load_jobs()?;
+    let mut cache = sa.open_cache()?;
     // recording is strictly opt-in: without either flag no recorder is
     // ever constructed and serve's output stays byte-identical to the
     // pre-observability CLI
-    let sink = if trace_out.is_some() || metrics_out.is_some() {
+    let (recorder, sink) = if sa.trace_out.is_some() || sa.metrics_out.is_some() {
         let (recorder, sink) = sasa::obs::Recorder::to_memory();
-        cache.set_recorder(recorder.clone());
-        exec = exec.with_recorder(recorder);
-        Some(sink)
+        (Some(recorder), Some(sink))
     } else {
-        None
+        (None, None)
     };
+    let builder = sa.fleet_builder(&specs, recorder)?;
+    builder.instrument_cache(&mut cache);
+    let exec = sa.executor(builder);
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
-    print_batch_report(&report, &cache, &cache_path);
+    print_batch_report(&report, &cache, &sa.cache_path);
     if let Some(sink) = &sink {
-        write_obs_artifacts(sink, &report, trace_out, metrics_out)?;
+        write_obs_artifacts(sink, &report, sa.trace_out.as_deref(), sa.metrics_out.as_deref())?;
     }
     cache.save()
 }
@@ -735,12 +490,13 @@ fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
 /// same one `serve` would produce (recording never changes decisions),
 /// and both outputs default to the current directory.
 fn cmd_trace(args: &Args, platform: &FpgaPlatform) -> Result<()> {
-    let (specs, mut cache, _cache_path, mut exec) = configure_batch(args, platform)?;
-    let trace_out = args.get("trace-out").unwrap_or("trace.json");
-    let metrics_out = args.get("metrics-out").unwrap_or("metrics.json");
+    let sa = ServeArgs::parse(args, platform)?;
+    let specs = sa.load_jobs()?;
+    let mut cache = sa.open_cache()?;
     let (recorder, sink) = sasa::obs::Recorder::to_memory();
-    cache.set_recorder(recorder.clone());
-    exec = exec.with_recorder(recorder);
+    let builder = sa.fleet_builder(&specs, Some(recorder))?;
+    builder.instrument_cache(&mut cache);
+    let exec = sa.executor(builder);
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
     let s = &report.schedule;
     println!(
@@ -753,16 +509,21 @@ fn cmd_trace(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         s.cache_hits,
         s.explorations
     );
+    let trace_out = sa.trace_out.as_deref().unwrap_or("trace.json");
+    let metrics_out = sa.metrics_out.as_deref().unwrap_or("metrics.json");
     write_obs_artifacts(&sink, &report, Some(trace_out), Some(metrics_out))?;
     cache.save()
 }
 
-/// `sasa batch [--iter n] [--real] [--cache plans.json]`: run the whole
-/// benchmark suite as one batch. With `--real`, each admitted configuration
-/// is additionally executed through the coordinator on a toy grid and
-/// verified against the DSL interpreter.
+/// `sasa batch [--iter n] [--real] [--cache plans.json] [--backend name]`:
+/// run the whole benchmark suite as one batch. With `--real`, the full
+/// admitted schedule — every segment, including preempted cuts and their
+/// resumes — is replayed through each board's selected execution backend
+/// and verified against the DSL interpreter oracle, with per-job wall
+/// time accounted next to the simulated timeline.
 fn cmd_batch(args: &Args, platform: &FpgaPlatform) -> Result<()> {
-    use sasa::service::{BatchExecutor, JobSpec, PlanCache};
+    use sasa::service::JobSpec;
+    let sa = ServeArgs::parse(args, platform)?;
     let iter = args.u64_or("iter", 8)?;
     let real = args.get("real").is_some();
     let specs: Vec<JobSpec> = b::ALL
@@ -778,31 +539,26 @@ fn cmd_batch(args: &Args, platform: &FpgaPlatform) -> Result<()> {
             JobSpec::new("batch", name, dims, iter)
         })
         .collect();
-    let cache_path = args.get("cache").unwrap_or(DEFAULT_PLAN_CACHE);
-    let mut cache = PlanCache::at_path(cache_path)?;
-    let exec = BatchExecutor::new(platform);
+    let mut cache = sa.open_cache()?;
+    let builder = sa.fleet_builder(&specs, None)?;
+    let exec = sa.executor(builder);
     let report = run_saving_cache(&exec, &specs, &mut cache)?;
-    print_batch_report(&report, &cache, cache_path);
+    print_batch_report(&report, &cache, &sa.cache_path);
     cache.save()?;
 
     if real {
-        let rt = Runtime::from_dir(default_artifact_dir())?;
-        println!("\nreal execution (coordinator, toy grids):");
-        for job in &report.schedule.jobs {
-            let (diff, rep) = exec.execute_real(&rt, &job.spec, job.config, 42)?;
-            // rep.config carries the k-clamp execute_real applies on toy
-            // grids — report what actually ran, not the scheduled config
-            println!(
-                "  {:<10} {} -> {:.3} ms, max |diff| vs interpreter {diff:e}",
-                job.spec.kernel,
-                rep.config,
-                rep.wall_seconds * 1e3
-            );
-            if diff > 1e-3 {
-                bail!("{}: verification FAILED (diff {diff})", job.spec.kernel);
-            }
+        println!("\nreal execution (full-schedule replay, toy grids):");
+        let replay = exec.replay_real(&report.schedule, 42)?;
+        println!("{}", replay.table().to_markdown());
+        println!("{}", replay.backend_table().to_markdown());
+        if !replay.all_within(1e-3) {
+            bail!("replay verification FAILED (worst |diff| {:e})", replay.worst_abs);
         }
-        println!("all {} jobs verified", report.schedule.jobs.len());
+        println!(
+            "all {} segment(s) verified against the interpreter oracle (worst |diff| {:e})",
+            replay.jobs.len(),
+            replay.worst_abs
+        );
     }
     Ok(())
 }
@@ -860,162 +616,4 @@ fn cmd_report(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         println!("{}", t.to_markdown());
     }
     Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn args(tokens: &[&str]) -> Args {
-        let v: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
-        parse_args(&v)
-    }
-
-    #[test]
-    fn key_value_pairs_and_bare_flags() {
-        // positionals come before flags (the documented CLI shape:
-        // `sasa report table3 --csv`); a dashless token right after a flag
-        // is that flag's value
-        let a = args(&["table3", "--kernel", "blur", "--csv"]);
-        assert_eq!(a.get("kernel"), Some("blur"));
-        assert_eq!(a.get("csv"), Some("true"));
-        assert_eq!(a.positional, vec!["table3"]);
-    }
-
-    #[test]
-    fn equals_form_accepted() {
-        let a = args(&["--kernel=hotspot", "--iter=64", "--dims=720x1024"]);
-        assert_eq!(a.get("kernel"), Some("hotspot"));
-        assert_eq!(a.u64_or("iter", 0).unwrap(), 64);
-        assert_eq!(a.dims(&[]).unwrap(), vec![720, 1024]);
-        // empty value via `=` stays an explicit empty string, not "true"
-        let a = args(&["--note="]);
-        assert_eq!(a.get("note"), Some(""));
-    }
-
-    #[test]
-    fn negative_values_not_swallowed_as_flags() {
-        let a = args(&["--offset", "-1", "--scale", "-2.5", "--exp", "-1e3"]);
-        assert_eq!(a.get("offset"), Some("-1"));
-        assert_eq!(a.get("scale"), Some("-2.5"));
-        assert_eq!(a.get("exp"), Some("-1e3"));
-    }
-
-    #[test]
-    fn flag_followed_by_flag_stays_bare() {
-        let a = args(&["--csv", "--kernel", "blur"]);
-        assert_eq!(a.get("csv"), Some("true"));
-        assert_eq!(a.get("kernel"), Some("blur"));
-        // single-dash non-numbers are not values either
-        let a = args(&["--csv", "-x"]);
-        assert_eq!(a.get("csv"), Some("true"));
-    }
-
-    #[test]
-    fn bare_dash_is_a_value() {
-        let a = args(&["--file", "-"]);
-        assert_eq!(a.get("file"), Some("-"));
-    }
-
-    #[test]
-    fn boards_count_shorthand_uses_default_platform() {
-        let u280 = FpgaPlatform::u280();
-        let boards = parse_boards("2", &u280).unwrap();
-        assert_eq!(boards.len(), 2);
-        assert!(boards.iter().all(|b| b.name == u280.name));
-        // the shorthand follows --platform, not a hardcoded U280
-        let u50 = FpgaPlatform::u50();
-        let boards = parse_boards("3", &u50).unwrap();
-        assert_eq!(boards.len(), 3);
-        assert!(boards.iter().all(|b| b.name == u50.name));
-    }
-
-    #[test]
-    fn boards_mix_syntax_expands_in_order() {
-        let u280 = FpgaPlatform::u280();
-        let boards = parse_boards("u280:2,u50:1", &u280).unwrap();
-        let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
-        assert_eq!(models, ["u280", "u280", "u50"]);
-        // a bare model name means one board; spaces around commas are fine
-        let boards = parse_boards("u50, u280:1", &u280).unwrap();
-        let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
-        assert_eq!(models, ["u50", "u280"]);
-    }
-
-    #[test]
-    fn boards_tolerates_whitespace() {
-        // table-driven accepts: whitespace around the spec, entries,
-        // names, and counts never changes the parsed fleet
-        let u280 = FpgaPlatform::u280();
-        for (spec, expect) in [
-            ("  2  ", vec!["u280", "u280"]),
-            (" u280 : 2 , u50 : 1 ", vec!["u280", "u280", "u50"]),
-            ("u50 ,u280", vec!["u50", "u280"]),
-            ("\tu50:1\t", vec!["u50"]),
-        ] {
-            let boards = parse_boards(spec, &u280)
-                .unwrap_or_else(|e| panic!("{spec:?} must parse: {e}"));
-            let models: Vec<&str> = boards.iter().map(FpgaPlatform::model).collect();
-            assert_eq!(models, expect, "{spec:?}");
-        }
-    }
-
-    #[test]
-    fn boards_rejects_unknown_model_and_bad_counts() {
-        let u280 = FpgaPlatform::u280();
-        let err = parse_boards("u55c:1", &u280).unwrap_err().to_string();
-        assert!(err.contains("u55c"), "{err}");
-        assert!(err.contains("u280") && err.contains("u50"), "names the known set: {err}");
-        // table-driven rejects: each malformed shape gets a message
-        // naming what was wrong with it
-        for (bad, msg) in [
-            ("0", "must be >= 1"),
-            ("u280:0", "count must be >= 1"),
-            ("u50:0,u280:1", "count must be >= 1"),
-            ("u280:x", "count must be a positive integer"),
-            ("u280:-1", "count must be a positive integer"),
-            ("u280:2.5", "count must be a positive integer"),
-            ("u280:", "count must be a positive integer"),
-            ("", "empty board entry"),
-            (",", "empty board entry"),
-            ("u280:1,", "empty board entry"),
-            ("u280:1,,u50:1", "empty board entry"),
-            (" , u280:1", "empty board entry"),
-            (":2", "missing board model name"),
-            (" : 2", "missing board model name"),
-        ] {
-            let err = match parse_boards(bad, &u280) {
-                Ok(_) => panic!("{bad:?} must be rejected"),
-                Err(e) => e.to_string(),
-            };
-            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
-        }
-    }
-
-    #[test]
-    fn tenant_weights_parse_and_reject() {
-        let ok = parse_tenant_weights("hog:1,light:4").unwrap();
-        assert_eq!(ok, vec![("hog".to_string(), 1), ("light".to_string(), 4)]);
-        // whitespace tolerated everywhere
-        let ok = parse_tenant_weights(" hog : 2 , light : 3 ").unwrap();
-        assert_eq!(ok, vec![("hog".to_string(), 2), ("light".to_string(), 3)]);
-
-        for (bad, msg) in [
-            ("", "empty entry"),
-            ("hog:1,", "empty entry"),
-            ("hog", "expected tenant:weight"),
-            (":4", "missing tenant name"),
-            ("hog:0", "weight must be >= 1"),
-            ("hog:x", "weight must be a positive integer"),
-            ("hog:1.5", "weight must be a positive integer"),
-            ("hog:-2", "weight must be a positive integer"),
-            ("hog:1,hog:4", "duplicate tenant"),
-        ] {
-            let err = match parse_tenant_weights(bad) {
-                Ok(_) => panic!("{bad:?} must be rejected"),
-                Err(e) => e.to_string(),
-            };
-            assert!(err.contains(msg), "{bad:?}: got '{err}', want '{msg}'");
-        }
-    }
 }

@@ -1,4 +1,4 @@
-//! One function per paper table/figure (DESIGN.md §9 experiment index),
+//! One function per paper table/figure (DESIGN.md §10 experiment index),
 //! plus the serving layer's fairness table ([`fairness_table`]).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 use crate::reference::Grid;
 
 use super::artifact::{ArtifactEntry, Manifest};
-use super::RuntimeStats;
+use super::{RuntimeStats, TileExecutor};
 
 /// The L3-side PJRT runtime.
 pub struct Runtime {
@@ -164,5 +164,35 @@ impl Runtime {
         end: usize,
     ) -> Grid {
         Grid::from_padded_rows(entry.maxr as usize, entry.c as usize, src, start, end)
+    }
+}
+
+impl TileExecutor for Runtime {
+    fn manifest(&self) -> &Manifest {
+        Runtime::manifest(self)
+    }
+    fn stats(&self) -> RuntimeStats {
+        Runtime::stats(self)
+    }
+    fn run_stencil(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Grid],
+        nrows: u64,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        Runtime::run_stencil(self, entry, inputs, nrows, nsteps)
+    }
+    fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid {
+        Runtime::pad_to_canvas(self, entry, tile)
+    }
+    fn pad_rows_to_canvas(
+        &self,
+        entry: &ArtifactEntry,
+        src: &Grid,
+        start: usize,
+        end: usize,
+    ) -> Grid {
+        Runtime::pad_rows_to_canvas(self, entry, src, start, end)
     }
 }

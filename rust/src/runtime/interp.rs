@@ -25,7 +25,7 @@ use crate::dsl::{analyze, benchmarks as b, parse};
 use crate::reference::{Engine, Grid};
 
 use super::artifact::{ArtifactEntry, Manifest};
-use super::RuntimeStats;
+use super::{RuntimeStats, TileExecutor};
 
 /// The artifact shape matrix, mirrored from `python/compile/aot.py`
 /// (`DEFAULT_MATRIX`): (kernel, maxr, c, plane, unrolled_steps).
@@ -238,6 +238,36 @@ impl Runtime {
         end: usize,
     ) -> Grid {
         Grid::from_padded_rows(entry.maxr as usize, entry.c as usize, src, start, end)
+    }
+}
+
+impl TileExecutor for Runtime {
+    fn manifest(&self) -> &Manifest {
+        Runtime::manifest(self)
+    }
+    fn stats(&self) -> RuntimeStats {
+        Runtime::stats(self)
+    }
+    fn run_stencil(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Grid],
+        nrows: u64,
+        nsteps: u64,
+    ) -> Result<Grid> {
+        Runtime::run_stencil(self, entry, inputs, nrows, nsteps)
+    }
+    fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid {
+        Runtime::pad_to_canvas(self, entry, tile)
+    }
+    fn pad_rows_to_canvas(
+        &self,
+        entry: &ArtifactEntry,
+        src: &Grid,
+        start: usize,
+        end: usize,
+    ) -> Grid {
+        Runtime::pad_rows_to_canvas(self, entry, src, start, end)
     }
 }
 

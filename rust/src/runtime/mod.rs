@@ -1,6 +1,6 @@
 //! Execution runtimes for AOT stencil artifacts.
 //!
-//! Two interchangeable backends expose the same API (`Runtime::from_dir`,
+//! Two interchangeable tile executors expose the same API (`from_dir`,
 //! `run_stencil`, `pad_to_canvas`, `pad_rows_to_canvas`, `stats`):
 //!
 //! * **`client`** (feature `pjrt`) — loads the HLO text produced by
@@ -12,6 +12,16 @@
 //!   pipeline (coordinator dataflow, scheduler, CLI) builds and runs
 //!   offline with zero native dependencies. When no `artifacts/` directory
 //!   exists it synthesizes a manifest mirroring the AOT shape matrix.
+//!
+//! Both implement [`TileExecutor`], the per-tile seam the
+//! [`Coordinator`](crate::coordinator::Coordinator) is generic over.
+//! Substrate selection is no longer a compile-time `cfg` swap: pick a
+//! backend through [`crate::backend::BackendRegistry`] instead of naming a
+//! concrete runtime type.
+
+use anyhow::Result;
+
+use crate::reference::Grid;
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
@@ -19,19 +29,142 @@ pub mod client;
 pub mod interp;
 
 pub use artifact::{ArtifactEntry, Manifest};
+
+/// Deprecated `cfg`-swapped substrate alias. Selecting the execution
+/// substrate at compile time is exactly the hardwiring the
+/// [`crate::backend`] registry replaces; the alias survives only so old
+/// call sites keep compiling.
 #[cfg(feature = "pjrt")]
-pub use client::Runtime;
+#[deprecated(
+    since = "0.2.0",
+    note = "select a substrate via `sasa::backend::BackendRegistry` (or name \
+            `runtime::client::Runtime` explicitly) instead of the cfg-swapped alias"
+)]
+pub type Runtime = client::Runtime;
+
+/// Deprecated `cfg`-swapped substrate alias. Selecting the execution
+/// substrate at compile time is exactly the hardwiring the
+/// [`crate::backend`] registry replaces; the alias survives only so old
+/// call sites keep compiling.
 #[cfg(not(feature = "pjrt"))]
-pub use interp::Runtime;
+#[deprecated(
+    since = "0.2.0",
+    note = "select a substrate via `sasa::backend::BackendRegistry` (or name \
+            `runtime::interp::Runtime` explicitly) instead of the cfg-swapped alias"
+)]
+pub type Runtime = interp::Runtime;
+
+/// The per-tile execution seam: everything the coordinator needs from a
+/// runtime to drive one tile of one round. Implemented by
+/// [`interp::Runtime`] and (feature `pjrt`) [`client::Runtime`]; the
+/// [`Coordinator`](crate::coordinator::Coordinator) is generic over it, so
+/// the same dataflow (tiling, halo exchange, round structure) runs on any
+/// substrate.
+pub trait TileExecutor {
+    /// The artifact manifest this executor serves.
+    fn manifest(&self) -> &Manifest;
+    /// Snapshot of the cumulative runtime counters.
+    fn stats(&self) -> RuntimeStats;
+    /// Execute the stencil artifact: `inputs` are full-size [maxr, c]
+    /// grids (padded by the caller), `nrows` live rows, `nsteps`
+    /// iterations. Returns the iterated [maxr, c] grid.
+    fn run_stencil(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Grid],
+        nrows: u64,
+        nsteps: u64,
+    ) -> Result<Grid>;
+    /// Pad a tile (rows <= maxr) up to the artifact's [maxr, c] canvas.
+    fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid;
+    /// Pad rows [start, end) of `src` onto the artifact's [maxr, c] canvas
+    /// without materializing the intermediate row slice.
+    fn pad_rows_to_canvas(&self, entry: &ArtifactEntry, src: &Grid, start: usize, end: usize)
+        -> Grid;
+}
 
 /// Cumulative runtime statistics (hot-path profiling), shared by both
-/// backends. "Compile" means PJRT compilation under `pjrt`, and
+/// substrates. "Compile" means PJRT compilation under `pjrt`, and
 /// parse+instantiate of the kernel program under the interpreter.
-#[derive(Debug, Clone, Default)]
+///
+/// Stats are additive: counters from several runtimes (one per backend in
+/// a mixed fleet) combine with [`RuntimeStats::merge`] or `+` into a
+/// fleet-wide total without double counting, because every counter is a
+/// plain sum over executions.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RuntimeStats {
     pub compiles: u64,
     pub compile_seconds: f64,
     pub executions: u64,
     pub execute_seconds: f64,
     pub cells_processed: u64,
+}
+
+impl RuntimeStats {
+    /// Fold `other` into `self`, field-wise.
+    pub fn merge(&mut self, other: &RuntimeStats) {
+        self.compiles += other.compiles;
+        self.compile_seconds += other.compile_seconds;
+        self.executions += other.executions;
+        self.execute_seconds += other.execute_seconds;
+        self.cells_processed += other.cells_processed;
+    }
+}
+
+impl std::ops::Add for RuntimeStats {
+    type Output = RuntimeStats;
+    fn add(mut self, rhs: RuntimeStats) -> RuntimeStats {
+        self.merge(&rhs);
+        self
+    }
+}
+
+impl std::ops::AddAssign for RuntimeStats {
+    fn add_assign(&mut self, rhs: RuntimeStats) {
+        self.merge(&rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RuntimeStats;
+
+    #[test]
+    fn stats_add_is_fieldwise() {
+        let a = RuntimeStats {
+            compiles: 1,
+            compile_seconds: 0.5,
+            executions: 3,
+            execute_seconds: 1.25,
+            cells_processed: 100,
+        };
+        let b = RuntimeStats {
+            compiles: 2,
+            compile_seconds: 0.25,
+            executions: 4,
+            execute_seconds: 0.75,
+            cells_processed: 900,
+        };
+        let sum = a.clone() + b.clone();
+        assert_eq!(sum.compiles, 3);
+        assert_eq!(sum.executions, 7);
+        assert_eq!(sum.cells_processed, 1000);
+        assert_eq!(sum.compile_seconds, 0.75);
+        assert_eq!(sum.execute_seconds, 2.0);
+        let mut m = a;
+        m += b;
+        assert_eq!(m, sum);
+    }
+
+    #[test]
+    fn stats_merge_identity() {
+        let a = RuntimeStats {
+            compiles: 5,
+            compile_seconds: 1.0,
+            executions: 9,
+            execute_seconds: 2.0,
+            cells_processed: 42,
+        };
+        assert_eq!(a.clone() + RuntimeStats::default(), a);
+    }
 }

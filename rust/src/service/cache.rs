@@ -170,7 +170,14 @@ impl PlanCache {
     /// Attach an event recorder ([`crate::obs`]): hits, misses, evictions
     /// and finished explorations are reported as events. Disabled by
     /// default — a disabled recorder builds no event at all.
+    #[deprecated(since = "0.2.0", note = "use `FleetBuilder::instrument_cache(..)`")]
     pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.attach_recorder(recorder);
+    }
+
+    /// Non-deprecated internal form of [`PlanCache::set_recorder`]
+    /// ([`super::FleetBuilder::instrument_cache`] routes through this).
+    pub(crate) fn attach_recorder(&mut self, recorder: Recorder) {
         self.recorder = recorder;
     }
 

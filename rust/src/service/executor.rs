@@ -1,36 +1,43 @@
 //! Batch executor: turns a scheduling pass into tenant-facing reports, and
-//! optionally drives admitted configurations through the real
-//! `Coordinator` path for numeric verification.
+//! optionally drives admitted configurations through a real
+//! [`ExecutionBackend`] for numeric verification.
 //!
 //! The simulated timeline (bank pools + cycle simulator) answers "what does
 //! this job mix do on a fleet of HBM boards" — homogeneous (`with_boards`)
-//! or mixing board models (`with_fleet`, e.g. U280 + U50, each board
+//! or mixing board models (a [`FleetBuilder`] via
+//! [`BatchExecutor::with_fleet_builder`], e.g. U280 + U50, each board
 //! planned by its own platform's DSE); `execute_real` answers "does the
 //! chosen configuration actually compute the right grid", by running the
-//! same `Config` through the coordinator's multi-PE dataflow against the
-//! DSL interpreter oracle. Independent admitted jobs are explored and
-//! simulated in parallel on the worker pool (see `scheduler::prepare_all`)
-//! — a batch of N tenants costs max-of-sims wall time, not sum.
+//! same `Config` through a backend's prepare → launch → verify contract
+//! against the DSL interpreter oracle, and [`BatchExecutor::replay_real`]
+//! (`sasa batch --real`) replays the *full* admitted schedule segment by
+//! segment through each board's selected backend, chaining preempted cuts
+//! into their resumed remainders so every scheduled iteration executes
+//! exactly once. Independent admitted jobs are explored and simulated in
+//! parallel on the worker pool (see `scheduler::prepare_all`) — a batch of
+//! N tenants costs max-of-sims wall time, not sum.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{verify::max_abs_diff, Coordinator, ExecReport, StencilJob};
-use crate::dsl::{benchmarks as b, parse};
+use crate::backend::{
+    ExecutionBackend, ExecutionPlan, InterpBackend, DEFAULT_BACKEND,
+};
+use crate::coordinator::ExecReport;
 use crate::faults::FaultPlan;
 use crate::metrics::reports::{fairness_table, reliability_table, FairnessRow, ReliabilityRow};
 use crate::metrics::{percentile, Table};
 use crate::model::Config;
 use crate::obs::Recorder;
 use crate::platform::FpgaPlatform;
-use crate::reference::{interpret, Grid};
-use crate::runtime::Runtime;
-use crate::util::prng::Prng;
+use crate::reference::Grid;
+use crate::runtime::RuntimeStats;
 
 use super::cache::PlanCache;
 use super::fairness::FairnessPolicy;
-use super::fleet::Fleet;
+use super::fleet::{BoardPool, FleetBuilder};
 use super::jobs::{JobSpec, Priority};
 use super::scheduler::Schedule;
 
@@ -79,12 +86,32 @@ pub struct ClassStats {
     pub p95_turnaround_s: f64,
 }
 
+/// Per-backend execution statistics: which boards run on which substrate,
+/// and the [`RuntimeStats`] that substrate's shared handle has accrued
+/// (same-backend boards share one handle, so stats merge naturally —
+/// see [`RuntimeStats::merge`] for the additive law).
+#[derive(Debug, Clone)]
+pub struct BackendStatsRow {
+    pub backend: String,
+    /// Boards selecting this backend.
+    pub boards: usize,
+    /// Their summed bank pools.
+    pub banks: u64,
+    pub stats: RuntimeStats,
+}
+
 /// A scheduling pass plus its derived aggregations.
 #[derive(Debug, Clone)]
 pub struct BatchReport {
     pub schedule: Schedule,
     pub tenants: Vec<TenantStats>,
     pub classes: Vec<ClassStats>,
+    /// Per-backend stats rows. Present exactly when some board's selected
+    /// backend differs from the all-[`DEFAULT_BACKEND`] default — a
+    /// flagless run (and an explicit `--backend interp` run) carries
+    /// `None` and renders byte-identically to the pre-registry output,
+    /// the same `Option`-gating as `fairness` and `reliability`.
+    pub backend_stats: Option<Vec<BackendStatsRow>>,
 }
 
 /// Runs job batches through the fleet scheduler and renders reports.
@@ -93,12 +120,16 @@ pub struct BatchExecutor<'p> {
     pool_banks: Option<u64>,
     boards: usize,
     /// Heterogeneous fleet: one platform per board. Overrides `boards` /
-    /// `platform` for fleet construction when set.
+    /// `platform` for fleet construction when set (deprecated
+    /// `with_fleet` path; new callers hand over a whole `FleetBuilder`).
     board_platforms: Option<Vec<FpgaPlatform>>,
     aging_s: Option<f64>,
     policy: Option<FairnessPolicy>,
     recorder: Recorder,
     faults: Option<FaultPlan>,
+    /// When set, wins wholesale: the executor runs over exactly the fleet
+    /// this builder assembles and every other knob above is ignored.
+    fleet: Option<FleetBuilder>,
 }
 
 impl<'p> BatchExecutor<'p> {
@@ -112,7 +143,19 @@ impl<'p> BatchExecutor<'p> {
             policy: None,
             recorder: Recorder::disabled(),
             faults: None,
+            fleet: None,
         }
+    }
+
+    /// Run over exactly the fleet `builder` assembles (board models,
+    /// per-board backends, recorder, fairness, faults — the whole
+    /// configuration in one place). This is the replacement for the
+    /// deprecated `with_fleet`/`with_recorder` soup and the only way to
+    /// select execution backends for [`BatchExecutor::replay_real`]; when
+    /// set it takes precedence over every other `with_*` knob.
+    pub fn with_fleet_builder(mut self, builder: FleetBuilder) -> BatchExecutor<'p> {
+        self.fleet = Some(builder);
+        self
     }
 
     /// Restrict every board's pool to fewer banks than its platform
@@ -131,6 +174,10 @@ impl<'p> BatchExecutor<'p> {
     /// Schedule over a heterogeneous fleet: one entry per board, e.g.
     /// `[u280, u50]` for `sasa serve --boards u280:1,u50:1`. Takes
     /// precedence over [`BatchExecutor::with_boards`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `with_fleet_builder(FleetBuilder::mixed(..))`"
+    )]
     pub fn with_fleet(mut self, boards: Vec<FpgaPlatform>) -> BatchExecutor<'p> {
         assert!(!boards.is_empty(), "a fleet needs at least one board");
         self.board_platforms = Some(boards);
@@ -154,6 +201,10 @@ impl<'p> BatchExecutor<'p> {
     /// executor runs reports its timeline (arrivals, admissions with the
     /// losing candidates, completions, preemptions, quota park/unpark) to
     /// it. Disabled by default — recording never changes the schedule.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `with_fleet_builder(FleetBuilder::..().recorder(..))`"
+    )]
     pub fn with_recorder(mut self, recorder: Recorder) -> BatchExecutor<'p> {
         self.recorder = recorder;
         self
@@ -168,66 +219,326 @@ impl<'p> BatchExecutor<'p> {
         self
     }
 
-    /// Schedule the batch over the fleet and aggregate statistics.
-    pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
-        let mut fleet = match &self.board_platforms {
-            Some(boards) => Fleet::heterogeneous(boards.clone()),
-            None => Fleet::new(self.platform, self.boards),
+    /// The [`FleetBuilder`] this executor runs over: the explicitly
+    /// provided one ([`BatchExecutor::with_fleet_builder`]) or one derived
+    /// from the legacy knobs — so `run` and `replay_real` construct the
+    /// *same* fleet, backends included.
+    fn fleet_builder(&self) -> FleetBuilder {
+        if let Some(builder) = &self.fleet {
+            return builder.clone();
+        }
+        let mut builder = match &self.board_platforms {
+            Some(boards) => FleetBuilder::mixed(boards.clone()),
+            None => FleetBuilder::replicated(self.platform, self.boards),
         };
         if let Some(banks) = self.pool_banks {
-            let n = fleet.boards().len();
-            fleet = fleet.with_board_banks(vec![banks; n]);
+            let n = self.board_platforms.as_ref().map_or(self.boards.max(1), Vec::len);
+            builder = builder.board_banks(vec![banks; n]);
         }
         if let Some(aging) = self.aging_s {
-            fleet = fleet.with_aging_s(aging);
+            builder = builder.aging_s(aging);
         }
         if let Some(policy) = &self.policy {
-            fleet = fleet.with_policy(policy.clone());
+            builder = builder.policy(policy.clone());
         }
         if self.recorder.is_enabled() {
-            fleet = fleet.with_recorder(self.recorder.clone());
+            builder = builder.recorder(self.recorder.clone());
         }
         if let Some(plan) = &self.faults {
-            fleet = fleet.with_faults(plan.clone());
+            builder = builder.faults(plan.clone());
         }
+        builder
+    }
+
+    /// Schedule the batch over the fleet and aggregate statistics.
+    pub fn run(&self, specs: &[JobSpec], cache: &mut PlanCache) -> Result<BatchReport> {
+        let fleet = self.fleet_builder().build()?;
+        let backend_stats = backend_stats_rows(fleet.boards());
         let schedule = fleet.schedule(specs, cache)?;
         let tenants = aggregate_tenants(&schedule);
         let classes = aggregate_classes(&schedule);
-        Ok(BatchReport { schedule, tenants, classes })
+        Ok(BatchReport { schedule, tenants, classes, backend_stats })
     }
 
-    /// Execute one admitted configuration for real through the coordinator
-    /// (PJRT or interpreter backend) and verify against the interpreter
-    /// oracle. Returns (max |diff| vs oracle, execution report). `k` is
-    /// clamped to keep at least 8 rows per tile on small verification grids,
-    /// mirroring the `sasa run` CLI.
+    /// Execute one admitted configuration for real through `backend`'s
+    /// prepare → launch → verify contract against the interpreter oracle.
+    /// Returns (max |diff| vs oracle, execution report). The backend's
+    /// `prepare` clamps `k` to keep at least 8 rows per tile on small
+    /// verification grids, mirroring the `sasa run` CLI.
     pub fn execute_real(
         &self,
-        runtime: &Runtime,
+        backend: &dyn ExecutionBackend,
         spec: &JobSpec,
         cfg: Config,
         seed: u64,
     ) -> Result<(f32, ExecReport)> {
-        let src = b::by_name(&spec.kernel)
-            .with_context(|| format!("unknown benchmark kernel '{}'", spec.kernel))?;
-        let prog = parse(&b::with_dims(src, &spec.dims, spec.iter))?;
-        let info = spec.info()?;
-        let rows = info.rows as usize;
-        let cols = info.cols as usize;
-        let mut rng = Prng::new(seed);
-        let inputs: Vec<Grid> = (0..info.n_inputs)
-            .map(|_| Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0)))
-            .collect();
-        let mut cfg = cfg;
-        cfg.k = cfg.k.clamp(1, (info.rows / 8).max(1));
-        cfg.s = cfg.s.max(1);
-
-        let coord = Coordinator::new(runtime);
-        let job = StencilJob::new(&prog, inputs.clone(), spec.iter)?;
-        let (result, report) = coord.execute(&job, cfg)?;
-        let golden = interpret(&prog, &inputs, rows, spec.iter);
-        Ok((max_abs_diff(&result, &golden), report))
+        let plan = ExecutionPlan {
+            kernel: spec.kernel.clone(),
+            dims: spec.dims.clone(),
+            iter: spec.iter,
+            config: cfg,
+            platform: self.platform.clone(),
+        };
+        let prepared = backend.prepare(&plan)?;
+        let inputs = prepared.random_inputs(seed);
+        let run = backend.launch(&prepared, &inputs, spec.iter)?;
+        let oracle = prepared.oracle(&inputs, spec.iter);
+        let diff = backend.verify(&run, &oracle);
+        Ok((diff.max_abs, run.report))
     }
+
+    /// Replay a full admitted schedule — every timeline segment, in
+    /// admission order — through each board's selected execution backend
+    /// (boards without a selection fall back to a shared
+    /// [`DEFAULT_BACKEND`] interpreter), verifying every segment against
+    /// the interpreter oracle and accounting measured wall time against
+    /// the simulated timeline.
+    ///
+    /// Preempted jobs are replayed as a *chain*: a cut segment's output
+    /// grid becomes the resumed remainder's input state, so each scheduled
+    /// iteration executes exactly once — the pre-registry spot check
+    /// re-ran the remainder from fresh inputs, silently double-executing
+    /// the iterations the cut had already retired (and double-counting
+    /// their cells in the runtime stats).
+    ///
+    /// `schedule` must come from this executor's own fleet configuration
+    /// (board indices select backends positionally).
+    pub fn replay_real(&self, schedule: &Schedule, seed: u64) -> Result<RealReplay> {
+        let fleet = self.fleet_builder().build()?;
+        let boards = fleet.boards();
+        // boards with no selection share one lazily-built interp fallback
+        let mut fallback: Option<Arc<dyn ExecutionBackend>> = None;
+        // cut → resume chaining: output grids waiting for their remainder,
+        // FIFO per (tenant, kernel, dims) so multi-segment chains connect
+        // in admission order
+        let mut pending: BTreeMap<(String, String, String), VecDeque<Grid>> = BTreeMap::new();
+        let mut jobs = Vec::with_capacity(schedule.jobs.len());
+        for j in &schedule.jobs {
+            let board = j.board;
+            let pool = boards.get(board).with_context(|| {
+                format!("schedule names board {board} but the fleet has {}", boards.len())
+            })?;
+            let (backend_name, backend): (String, Arc<dyn ExecutionBackend>) =
+                match &pool.backend {
+                    Some(sel) => (sel.name.clone(), Arc::clone(&sel.handle)),
+                    None => {
+                        if fallback.is_none() {
+                            fallback = Some(Arc::new(InterpBackend::new()?));
+                        }
+                        (DEFAULT_BACKEND.to_string(), Arc::clone(fallback.as_ref().unwrap()))
+                    }
+                };
+            let key = (j.spec.tenant.clone(), j.spec.kernel.clone(), j.spec.dims_label());
+            // a zero-iteration segment (a cut that retired nothing) runs
+            // no kernel and leaves no state for its remainder to chain on
+            if j.spec.iter == 0 {
+                jobs.push(ReplayedJob {
+                    tenant: j.spec.tenant.clone(),
+                    kernel: j.spec.kernel.clone(),
+                    dims: j.spec.dims_label(),
+                    iter: 0,
+                    board,
+                    backend: backend_name,
+                    segment: segment_label(j.preempted, j.resumed),
+                    max_abs: 0.0,
+                    wall_s: 0.0,
+                    sim_s: j.finish_s - j.start_s,
+                });
+                continue;
+            }
+            let plan = ExecutionPlan {
+                kernel: j.spec.kernel.clone(),
+                dims: j.spec.dims.clone(),
+                iter: j.spec.iter,
+                config: j.config,
+                platform: pool.platform.clone(),
+            };
+            let prepared = backend.prepare(&plan).with_context(|| {
+                format!("replay: preparing {} for tenant {}", j.spec.kernel, j.spec.tenant)
+            })?;
+            let mut inputs = prepared.random_inputs(seed);
+            if j.resumed {
+                if let Some(state) = pending.get_mut(&key).and_then(|q| q.pop_front()) {
+                    // resume from the cut's output: the iterated grid is
+                    // the last input slot (the state the kernel advances)
+                    let last = inputs.len() - 1;
+                    inputs[last] = state;
+                }
+            }
+            let run = backend.launch(&prepared, &inputs, j.spec.iter)?;
+            let oracle = prepared.oracle(&inputs, j.spec.iter);
+            let diff = backend.verify(&run, &oracle);
+            if j.preempted {
+                pending.entry(key).or_default().push_back(run.grid.clone());
+            }
+            jobs.push(ReplayedJob {
+                tenant: j.spec.tenant.clone(),
+                kernel: j.spec.kernel.clone(),
+                dims: j.spec.dims_label(),
+                iter: j.spec.iter,
+                board,
+                backend: backend_name,
+                segment: segment_label(j.preempted, j.resumed),
+                max_abs: diff.max_abs,
+                wall_s: run.wall_s,
+                sim_s: j.finish_s - j.start_s,
+            });
+        }
+        let worst_abs = jobs.iter().map(|r| r.max_abs).fold(0.0f32, f32::max);
+        let mut backend_stats =
+            backend_stats_rows(boards).unwrap_or_else(|| all_interp_stats_row(boards));
+        // fold the fallback's accrued stats into its row: fallback boards
+        // carry no handle, so `backend_stats_rows` couldn't see them
+        if let Some(fb) = &fallback {
+            if let Some(row) = backend_stats.iter_mut().find(|r| r.backend == DEFAULT_BACKEND) {
+                row.stats.merge(&fb.stats());
+            }
+        }
+        Ok(RealReplay { jobs, backend_stats, worst_abs })
+    }
+}
+
+/// `seg` column label shared by the schedule and replay tables.
+fn segment_label(preempted: bool, resumed: bool) -> &'static str {
+    match (preempted, resumed) {
+        (true, _) => "cut",
+        (false, true) => "resume",
+        (false, false) => "-",
+    }
+}
+
+/// Group boards by selected backend, in first-appearance order. `None`
+/// exactly when every board is on the trivial all-[`DEFAULT_BACKEND`]
+/// default — the flagless path constructs no stats row at all, keeping
+/// default reports byte-identical.
+fn backend_stats_rows(boards: &[BoardPool]) -> Option<Vec<BackendStatsRow>> {
+    let nontrivial = boards
+        .iter()
+        .any(|b| b.backend.as_ref().is_some_and(|s| s.name != DEFAULT_BACKEND));
+    if !nontrivial {
+        return None;
+    }
+    let mut rows: Vec<BackendStatsRow> = Vec::new();
+    for b in boards {
+        // same-name boards share one handle, so stats are read once per name
+        let (name, stats) = match &b.backend {
+            Some(sel) => (sel.name.clone(), sel.handle.stats()),
+            None => (DEFAULT_BACKEND.to_string(), RuntimeStats::default()),
+        };
+        match rows.iter_mut().find(|r| r.backend == name) {
+            Some(row) => {
+                row.boards += 1;
+                row.banks += b.banks;
+            }
+            None => rows.push(BackendStatsRow { backend: name, boards: 1, banks: b.banks, stats }),
+        }
+    }
+    Some(rows)
+}
+
+/// The replay's stats row for an all-default fleet (no per-board
+/// selections): one [`DEFAULT_BACKEND`] row covering every board, stats
+/// filled in from the fallback handle by the caller.
+fn all_interp_stats_row(boards: &[BoardPool]) -> Vec<BackendStatsRow> {
+    vec![BackendStatsRow {
+        backend: DEFAULT_BACKEND.to_string(),
+        boards: boards.len(),
+        banks: boards.iter().map(|b| b.banks).sum(),
+        stats: RuntimeStats::default(),
+    }]
+}
+
+/// One replayed timeline segment of [`BatchExecutor::replay_real`].
+#[derive(Debug, Clone)]
+pub struct ReplayedJob {
+    pub tenant: String,
+    pub kernel: String,
+    pub dims: String,
+    /// Iterations this segment actually executed (a cut segment carries
+    /// only its retired iterations; the remainder carries the rest).
+    pub iter: u64,
+    pub board: usize,
+    pub backend: String,
+    /// `-` / `cut` / `resume`, matching the job table's `seg` column.
+    pub segment: &'static str,
+    /// Max |diff| of this segment's output vs the interpreter oracle.
+    pub max_abs: f32,
+    /// Measured wall time of the real launch (for the `sim` backend:
+    /// the cycle model's simulated seconds).
+    pub wall_s: f64,
+    /// The simulated timeline span the scheduler charged this segment.
+    pub sim_s: f64,
+}
+
+/// A full-schedule real replay: per-segment verification plus per-backend
+/// execution stats.
+#[derive(Debug, Clone)]
+pub struct RealReplay {
+    pub jobs: Vec<ReplayedJob>,
+    pub backend_stats: Vec<BackendStatsRow>,
+    /// Max |diff| over every replayed segment.
+    pub worst_abs: f32,
+}
+
+impl RealReplay {
+    /// Every segment verified within `tol` of the interpreter oracle.
+    pub fn all_within(&self, tol: f32) -> bool {
+        self.worst_abs <= tol
+    }
+
+    /// One row per replayed segment: backend, verification diff, and
+    /// measured wall time against the scheduler's simulated span.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Real replay (full schedule through selected backends)",
+            &[
+                "tenant", "kernel", "dims", "iter", "board", "backend", "seg",
+                "max |diff|", "wall ms", "sim ms",
+            ],
+        );
+        for r in &self.jobs {
+            t.row(vec![
+                r.tenant.clone(),
+                r.kernel.clone(),
+                r.dims.clone(),
+                r.iter.to_string(),
+                r.board.to_string(),
+                r.backend.clone(),
+                r.segment.to_string(),
+                format!("{:.2e}", r.max_abs),
+                ms(r.wall_s),
+                ms(r.sim_s),
+            ]);
+        }
+        t
+    }
+
+    /// Per-backend stats table for the replay (always present: a replay
+    /// executes for real even on an all-default fleet).
+    pub fn backend_table(&self) -> Table {
+        render_backend_rows(&self.backend_stats)
+    }
+}
+
+/// Render per-backend stats rows (shared by [`BatchReport::backend_table`]
+/// and [`RealReplay::backend_table`]).
+fn render_backend_rows(rows: &[BackendStatsRow]) -> Table {
+    let mut t = Table::new(
+        "Per-backend execution stats",
+        &["backend", "boards", "banks", "compiles", "execs", "exec ms", "GCells"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.backend.clone(),
+            r.boards.to_string(),
+            r.banks.to_string(),
+            r.stats.compiles.to_string(),
+            r.stats.executions.to_string(),
+            ms(r.stats.execute_seconds),
+            format!("{:.3}", r.stats.cells_processed as f64 / 1e9),
+        ]);
+    }
+    t
 }
 
 fn aggregate_tenants(schedule: &Schedule) -> Vec<TenantStats> {
@@ -478,6 +789,16 @@ impl BatchReport {
         t
     }
 
+    /// Per-backend stats table: which boards run on which execution
+    /// backend, with that backend's accrued [`RuntimeStats`]. Present
+    /// exactly when some board selects a non-[`DEFAULT_BACKEND`] backend —
+    /// a flagless run (and an explicit all-`interp` run) prints nothing
+    /// extra, keeping default `sasa serve` output byte-identical to the
+    /// pre-registry scheduler.
+    pub fn backend_table(&self) -> Option<Table> {
+        Some(render_backend_rows(self.backend_stats.as_ref()?))
+    }
+
     pub fn summary_table(&self) -> Table {
         let s = &self.schedule;
         let mut t = Table::new(
@@ -692,7 +1013,10 @@ mod tests {
         let p = FpgaPlatform::u280();
         let mut cache = PlanCache::in_memory();
         let report = BatchExecutor::new(&p)
-            .with_fleet(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+            .with_fleet_builder(FleetBuilder::mixed(vec![
+                FpgaPlatform::u280(),
+                FpgaPlatform::u50(),
+            ]))
             .run(&demo_jobs(), &mut cache)
             .unwrap();
         assert_eq!(report.schedule.boards.len(), 2);
@@ -704,17 +1028,134 @@ mod tests {
     }
 
     #[test]
-    fn real_execution_matches_oracle() {
-        // the coordinator path on a toy grid, via the default runtime
+    fn deprecated_with_fleet_matches_builder_path() {
+        // the thin wrapper and the builder produce identical schedules
         let p = FpgaPlatform::u280();
-        let rt = Runtime::from_dir(crate::runtime::artifact::default_artifact_dir()).unwrap();
+        let boards = vec![FpgaPlatform::u280(), FpgaPlatform::u50()];
+        let mut cache = PlanCache::in_memory();
+        #[allow(deprecated)]
+        let old = BatchExecutor::new(&p)
+            .with_fleet(boards.clone())
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        let mut cache = PlanCache::in_memory();
+        let new = BatchExecutor::new(&p)
+            .with_fleet_builder(FleetBuilder::mixed(boards))
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        assert_eq!(
+            old.job_table().to_markdown(),
+            new.job_table().to_markdown(),
+            "builder path must preserve the deprecated constructor's schedule"
+        );
+    }
+
+    #[test]
+    fn backend_table_present_only_with_nontrivial_selection() {
+        let p = FpgaPlatform::u280();
+        // flagless: no backend constructed, no table
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p).run(&demo_jobs(), &mut cache).unwrap();
+        assert!(report.backend_stats.is_none());
+        assert!(report.backend_table().is_none());
+
+        // explicit all-interp: backends constructed, still no table —
+        // `--backend interp` must stay byte-identical to flagless
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_fleet_builder(
+                FleetBuilder::single(&p).default_backend(DEFAULT_BACKEND),
+            )
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        assert!(report.backend_stats.is_none());
+
+        // mixed interp + sim: one row per backend, table renders
+        let mut cache = PlanCache::in_memory();
+        let report = BatchExecutor::new(&p)
+            .with_fleet_builder(
+                FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+                    .board_backends(vec![Some("interp".into()), Some("sim".into())]),
+            )
+            .run(&demo_jobs(), &mut cache)
+            .unwrap();
+        let rows = report.backend_stats.as_ref().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].backend, "interp");
+        assert_eq!(rows[1].backend, "sim");
+        let md = report.backend_table().unwrap().to_markdown();
+        assert!(md.contains("Per-backend") && md.contains("sim"), "{md}");
+    }
+
+    #[test]
+    fn real_execution_matches_oracle() {
+        // the backend seam on a toy grid, via the interp backend
+        let p = FpgaPlatform::u280();
+        let backend = InterpBackend::new().unwrap();
         let exec = BatchExecutor::new(&p);
         let spec = JobSpec::new("t", "jacobi2d", vec![64, 64], 6);
         let mut cache = PlanCache::in_memory();
         let report = exec.run(std::slice::from_ref(&spec), &mut cache).unwrap();
         let cfg = report.schedule.jobs[0].config;
-        let (diff, exec_report) = exec.execute_real(&rt, &spec, cfg, 42).unwrap();
+        let (diff, exec_report) = exec.execute_real(&backend, &spec, cfg, 42).unwrap();
         assert!(diff < 1e-4, "diff {diff}");
         assert!(exec_report.rounds >= 1);
+    }
+
+    #[test]
+    fn replay_real_verifies_every_segment() {
+        // toy-grid batch: two tenants, three segments after scheduling
+        let p = FpgaPlatform::u280();
+        let specs = vec![
+            JobSpec::new("a", "jacobi2d", vec![64, 64], 6),
+            JobSpec::new("b", "blur", vec![64, 64], 4),
+        ];
+        let exec = BatchExecutor::new(&p);
+        let mut cache = PlanCache::in_memory();
+        let report = exec.run(&specs, &mut cache).unwrap();
+        let replay = exec.replay_real(&report.schedule, 42).unwrap();
+        assert_eq!(replay.jobs.len(), report.schedule.jobs.len());
+        assert!(replay.all_within(1e-4), "worst {}", replay.worst_abs);
+        // an all-default fleet replays through the interp fallback, and
+        // the replay's stats row shows the work actually executed
+        assert_eq!(replay.backend_stats.len(), 1);
+        assert_eq!(replay.backend_stats[0].backend, DEFAULT_BACKEND);
+        assert!(replay.backend_stats[0].stats.executions > 0);
+        let md = replay.table().to_markdown();
+        assert!(md.contains("Real replay") && md.contains("jacobi2d"), "{md}");
+        assert!(replay.backend_table().to_markdown().contains("Per-backend"));
+    }
+
+    #[test]
+    fn replay_chains_preempted_segments_without_double_execution() {
+        // split a scheduled job into a cut + resumed pair, exactly the
+        // shape the preemption path emits (`seg.spec.iter` rewritten to
+        // the retired/remaining counts), and replay the chain
+        let p = FpgaPlatform::u280();
+        let spec = JobSpec::new("a", "jacobi2d", vec![64, 64], 6);
+        let exec = BatchExecutor::new(&p);
+        let mut cache = PlanCache::in_memory();
+        let report = exec.run(std::slice::from_ref(&spec), &mut cache).unwrap();
+        let full = &report.schedule.jobs[0];
+        let mut cut = full.clone();
+        cut.spec.iter = 2;
+        cut.preempted = true;
+        let mut rest = full.clone();
+        rest.spec.iter = 4;
+        rest.resumed = true;
+        let mut schedule = report.schedule.clone();
+        schedule.jobs = vec![cut, rest];
+        let replay = exec.replay_real(&schedule, 42).unwrap();
+        assert_eq!(
+            [replay.jobs[0].segment, replay.jobs[1].segment],
+            ["cut", "resume"]
+        );
+        // every segment verifies, and every scheduled iteration executes
+        // exactly once: 2 + 4, never the 2 + 6 a fresh-input replay of the
+        // remainder would silently re-execute (the numerical proof that a
+        // chained resume equals one unsplit run is
+        // `backend::tests::chained_launches_equal_one_full_run`)
+        assert!(replay.all_within(1e-4), "worst {}", replay.worst_abs);
+        assert_eq!(replay.jobs.iter().map(|r| r.iter).sum::<u64>(), 6);
     }
 }

@@ -80,9 +80,11 @@
 //! [`Scheduler::schedule_fifo_walk`]: super::scheduler::Scheduler::schedule_fifo_walk
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::backend::{BackendRegistry, ExecutionBackend};
 use crate::faults::{FaultKind, FaultPlan, FaultRt, LostJob, WATCHDOG_GRACE_FRAC};
 use crate::obs::{CandidateScore, Event, Recorder};
 use crate::platform::FpgaPlatform;
@@ -99,14 +101,37 @@ use super::scheduler::{
 /// 0.3–8 ms), so 5 ms bounds batch delay to a handful of job drains.
 pub const DEFAULT_AGING_S: f64 = 0.005;
 
+/// An execution-backend selection carried by a board: the registry name
+/// plus the shared handle boards of the same backend reuse (one substrate
+/// instance per backend name per fleet, so engine caches and
+/// [`crate::runtime::RuntimeStats`] merge naturally).
+#[derive(Clone)]
+pub struct BackendSel {
+    pub name: String,
+    pub handle: Arc<dyn ExecutionBackend>,
+}
+
+impl std::fmt::Debug for BackendSel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackendSel").field("name", &self.name).finish_non_exhaustive()
+    }
+}
+
 /// One board of the fleet: its platform spec plus the HBM bank pool it
 /// contributes (U280 = 32 pseudo-channels, possibly restricted to model a
 /// partial reservation). The platform decides which plan the board is
 /// offered: plans are explored per distinct `platform.name`.
+///
+/// A board may additionally carry an execution-backend selection
+/// (`--boards u280:2@interp,u50:1@sim`); `None` — the flagless default —
+/// means no backend is ever constructed and `sasa batch --real` falls
+/// back to the fleet-wide default at replay time. Scheduling itself never
+/// consults the backend: the simulated timeline is backend-independent.
 #[derive(Debug, Clone)]
 pub struct BoardPool {
     pub platform: FpgaPlatform,
     pub banks: u64,
+    pub backend: Option<BackendSel>,
 }
 
 /// A pool of boards sharing one admission queue.
@@ -116,11 +141,13 @@ pub struct BoardPool {
 ///
 /// ```
 /// use sasa::platform::FpgaPlatform;
-/// use sasa::service::{Fleet, JobSpec, PlanCache};
+/// use sasa::service::{FleetBuilder, JobSpec, PlanCache};
 ///
 /// let jobs = vec![JobSpec::new("alice", "jacobi2d", vec![64, 64], 4)];
 /// let mut cache = PlanCache::in_memory();
-/// let fleet = Fleet::heterogeneous(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]);
+/// let fleet = FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+///     .build()
+///     .unwrap();
 /// let schedule = fleet.schedule(&jobs, &mut cache).unwrap();
 /// assert_eq!(schedule.boards.len(), 2);
 /// assert_eq!(schedule.boards[0].model, "u280");
@@ -132,6 +159,172 @@ pub struct Fleet {
     policy: FairnessPolicy,
     recorder: Recorder,
     faults: Option<FaultPlan>,
+}
+
+/// The one way to assemble a [`Fleet`]: replaces the constructor soup
+/// (`Fleet::heterogeneous`, `Fleet::with_recorder`,
+/// `BatchExecutor::with_fleet`/`with_recorder`, `PlanCache::set_recorder`)
+/// with a single builder that also owns per-board execution-backend
+/// selection (`--boards u280:2@interp,u50:1@sim` with `--backend` as the
+/// fleet-wide default).
+///
+/// `build` is `&self` so one configured builder can assemble the fleet
+/// *and* instrument the plan cache ([`FleetBuilder::instrument_cache`])
+/// with the same recorder.
+///
+/// Flagless preservation: with no `default_backend` and no per-board
+/// backend, `build` constructs no backend at all and the fleet is
+/// field-for-field what the deprecated constructors produced — default
+/// schedules stay byte-identical.
+///
+/// ```
+/// use sasa::platform::FpgaPlatform;
+/// use sasa::service::{FleetBuilder, JobSpec, PlanCache};
+///
+/// let fleet = FleetBuilder::replicated(&FpgaPlatform::u280(), 2)
+///     .default_backend("interp")
+///     .build()
+///     .unwrap();
+/// assert_eq!(fleet.boards().len(), 2);
+/// assert_eq!(fleet.boards()[0].backend.as_ref().unwrap().name, "interp");
+///
+/// let mut cache = PlanCache::in_memory();
+/// let jobs = vec![JobSpec::new("alice", "jacobi2d", vec![64, 64], 4)];
+/// assert_eq!(fleet.schedule(&jobs, &mut cache).unwrap().jobs.len(), 1);
+/// ```
+#[derive(Clone, Default)]
+pub struct FleetBuilder {
+    platforms: Vec<FpgaPlatform>,
+    banks: Option<Vec<u64>>,
+    aging_s: Option<f64>,
+    policy: Option<FairnessPolicy>,
+    recorder: Recorder,
+    faults: Option<FaultPlan>,
+    default_backend: Option<String>,
+    board_backends: Vec<Option<String>>,
+}
+
+impl FleetBuilder {
+    /// One board.
+    pub fn single(platform: &FpgaPlatform) -> FleetBuilder {
+        FleetBuilder::replicated(platform, 1)
+    }
+
+    /// `n_boards` identical boards (at least one).
+    pub fn replicated(platform: &FpgaPlatform, n_boards: usize) -> FleetBuilder {
+        FleetBuilder::mixed(vec![platform.clone(); n_boards.max(1)])
+    }
+
+    /// One board per entry, mixing platforms (`--boards u280:1,u50:1`).
+    pub fn mixed(platforms: Vec<FpgaPlatform>) -> FleetBuilder {
+        FleetBuilder { platforms, ..FleetBuilder::default() }
+    }
+
+    /// Per-board bank pools; same semantics as [`Fleet::with_board_banks`].
+    pub fn board_banks(mut self, banks: Vec<u64>) -> FleetBuilder {
+        self.banks = Some(banks);
+        self
+    }
+
+    /// Batch-aging bound (seconds); see [`Fleet::with_aging_s`].
+    pub fn aging_s(mut self, aging_s: f64) -> FleetBuilder {
+        self.aging_s = Some(aging_s);
+        self
+    }
+
+    /// Per-tenant fairness policy; see [`Fleet::with_policy`].
+    pub fn policy(mut self, policy: FairnessPolicy) -> FleetBuilder {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Event recorder shared by the fleet and (via
+    /// [`FleetBuilder::instrument_cache`]) the plan cache.
+    pub fn recorder(mut self, recorder: Recorder) -> FleetBuilder {
+        self.recorder = recorder;
+        self
+    }
+
+    /// Deterministic fault plan; see [`Fleet::with_faults`].
+    pub fn faults(mut self, plan: FaultPlan) -> FleetBuilder {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Fleet-wide default execution backend (CLI `--backend`). Boards
+    /// without a per-board override get this one; leaving it unset (and
+    /// setting no per-board backend) keeps the flagless path: no backend
+    /// is constructed at all.
+    pub fn default_backend(mut self, name: impl Into<String>) -> FleetBuilder {
+        self.default_backend = Some(name.into());
+        self
+    }
+
+    /// Per-board backend overrides, index-parallel to the boards (CLI
+    /// `@backend` suffixes: `--boards u280:2@interp,u50:1@sim`). `None`
+    /// entries (and boards beyond the list) fall back to the default.
+    pub fn board_backends(mut self, backends: Vec<Option<String>>) -> FleetBuilder {
+        self.board_backends = backends;
+        self
+    }
+
+    /// Attach this builder's recorder to a plan cache (the replacement for
+    /// the deprecated `PlanCache::set_recorder`). A disabled recorder —
+    /// the default — leaves the cache untouched.
+    pub fn instrument_cache(&self, cache: &mut PlanCache) {
+        if self.recorder.is_enabled() {
+            cache.attach_recorder(self.recorder.clone());
+        }
+    }
+
+    /// Assemble the fleet. Backend names resolve through
+    /// [`BackendRegistry::builtin`]; boards selecting the same backend
+    /// share one handle (one substrate instance per name per fleet, so
+    /// engine caches and stats merge naturally). Errors on an unknown or
+    /// unavailable backend name.
+    pub fn build(&self) -> Result<Fleet> {
+        let mut fleet = Fleet::from_platforms(self.platforms.clone());
+        if let Some(banks) = &self.banks {
+            fleet = fleet.with_board_banks(banks.clone());
+        }
+        if let Some(aging_s) = self.aging_s {
+            fleet = fleet.with_aging_s(aging_s);
+        }
+        if let Some(policy) = &self.policy {
+            fleet = fleet.with_policy(policy.clone());
+        }
+        if self.recorder.is_enabled() {
+            fleet = fleet.set_recorder(self.recorder.clone());
+        }
+        if let Some(plan) = &self.faults {
+            fleet = fleet.with_faults(plan.clone());
+        }
+        let any_backend = self.default_backend.is_some()
+            || self.board_backends.iter().any(|b| b.is_some());
+        if any_backend {
+            let registry = BackendRegistry::builtin();
+            let mut shared: Vec<(String, Arc<dyn ExecutionBackend>)> = Vec::new();
+            for (i, board) in fleet.boards.iter_mut().enumerate() {
+                let name = self
+                    .board_backends
+                    .get(i)
+                    .cloned()
+                    .flatten()
+                    .or_else(|| self.default_backend.clone());
+                let Some(name) = name else { continue };
+                let handle = match shared.iter().find(|(n, _)| *n == name) {
+                    Some((_, h)) => Arc::clone(h),
+                    None => {
+                        let h = registry.create(&name)?;
+                        shared.push((name.clone(), Arc::clone(&h)));
+                        h
+                    }
+                };
+                board.backend = Some(BackendSel { name, handle });
+            }
+        }
+        Ok(fleet)
+    }
 }
 
 /// A job waiting for admission (arrived, not yet placed). Crate-internal:
@@ -172,7 +365,11 @@ impl Fleet {
     pub fn new(platform: &FpgaPlatform, n_boards: usize) -> Fleet {
         Fleet {
             boards: vec![
-                BoardPool { platform: platform.clone(), banks: platform.hbm_banks };
+                BoardPool {
+                    platform: platform.clone(),
+                    banks: platform.hbm_banks,
+                    backend: None
+                };
                 n_boards.max(1)
             ],
             aging_s: DEFAULT_AGING_S,
@@ -184,14 +381,14 @@ impl Fleet {
 
     /// A heterogeneous fleet: one board per entry, each exposing its own
     /// platform's full bank pool (`sasa serve --boards u280:1,u50:1`).
-    pub fn heterogeneous(platforms: Vec<FpgaPlatform>) -> Fleet {
+    fn from_platforms(platforms: Vec<FpgaPlatform>) -> Fleet {
         assert!(!platforms.is_empty(), "a fleet needs at least one board");
         Fleet {
             boards: platforms
                 .into_iter()
                 .map(|platform| {
                     let banks = platform.hbm_banks;
-                    BoardPool { platform, banks }
+                    BoardPool { platform, banks, backend: None }
                 })
                 .collect(),
             aging_s: DEFAULT_AGING_S,
@@ -199,6 +396,13 @@ impl Fleet {
             recorder: Recorder::disabled(),
             faults: None,
         }
+    }
+
+    /// A heterogeneous fleet: one board per entry, each exposing its own
+    /// platform's full bank pool.
+    #[deprecated(since = "0.2.0", note = "use `FleetBuilder::mixed(..).build()`")]
+    pub fn heterogeneous(platforms: Vec<FpgaPlatform>) -> Fleet {
+        Fleet::from_platforms(platforms)
     }
 
     /// Override the per-board bank pools (to model partial reservations),
@@ -223,7 +427,7 @@ impl Fleet {
             let platform = self.boards[0].platform.clone();
             self.boards = banks
                 .into_iter()
-                .map(|banks| BoardPool { platform: platform.clone(), banks })
+                .map(|banks| BoardPool { platform: platform.clone(), banks, backend: None })
                 .collect();
         }
         self
@@ -251,7 +455,14 @@ impl Fleet {
     /// only extra work (recomputing the losing feasible boards at an
     /// admission's rank) is gated on the recorder being enabled, and the
     /// preserved `*_walk` oracles are not instrumented at all.
-    pub fn with_recorder(mut self, recorder: Recorder) -> Fleet {
+    #[deprecated(since = "0.2.0", note = "use `FleetBuilder::recorder(..)`")]
+    pub fn with_recorder(self, recorder: Recorder) -> Fleet {
+        self.set_recorder(recorder)
+    }
+
+    /// Non-deprecated internal form of [`Fleet::with_recorder`] (the
+    /// builder routes through this).
+    fn set_recorder(mut self, recorder: Recorder) -> Fleet {
         self.recorder = recorder;
         self
     }
@@ -1523,4 +1734,85 @@ fn pick_victim_by(
         }
     }
     best.map(|(v, _)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_flagless_matches_deprecated_constructors() {
+        // Field-for-field: the builder with no backend settings produces
+        // exactly what the deprecated constructors did, backends included
+        // (None — nothing constructed).
+        let built = FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let old = Fleet::heterogeneous(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]);
+        assert_eq!(built.boards.len(), old.boards.len());
+        for (b, o) in built.boards.iter().zip(&old.boards) {
+            assert_eq!(b.platform.name, o.platform.name);
+            assert_eq!(b.banks, o.banks);
+            assert!(b.backend.is_none());
+            assert!(o.backend.is_none());
+        }
+        assert_eq!(built.aging_s, old.aging_s);
+        assert_eq!(built.policy, old.policy);
+        assert!(built.faults.is_none() && old.faults.is_none());
+    }
+
+    #[test]
+    fn builder_shares_one_handle_per_backend_name() {
+        let fleet = FleetBuilder::replicated(&FpgaPlatform::u280(), 3)
+            .default_backend("interp")
+            .build()
+            .unwrap();
+        let handles: Vec<_> = fleet
+            .boards
+            .iter()
+            .map(|b| Arc::as_ptr(&b.backend.as_ref().unwrap().handle) as *const () as usize)
+            .collect();
+        assert_eq!(handles[0], handles[1]);
+        assert_eq!(handles[1], handles[2]);
+    }
+
+    #[test]
+    fn builder_per_board_override_beats_default() {
+        let fleet = FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()])
+            .default_backend("interp")
+            .board_backends(vec![None, Some("sim".into())])
+            .build()
+            .unwrap();
+        assert_eq!(fleet.boards[0].backend.as_ref().unwrap().name, "interp");
+        assert_eq!(fleet.boards[1].backend.as_ref().unwrap().name, "sim");
+        // distinct names, distinct substrates
+        let a = Arc::as_ptr(&fleet.boards[0].backend.as_ref().unwrap().handle) as *const ()
+            as usize;
+        let b = Arc::as_ptr(&fleet.boards[1].backend.as_ref().unwrap().handle) as *const ()
+            as usize;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn builder_rejects_unknown_backend() {
+        let err = FleetBuilder::single(&FpgaPlatform::u280())
+            .default_backend("warp-drive")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("warp-drive"), "{err}");
+    }
+
+    #[test]
+    fn builder_board_banks_and_knobs_apply() {
+        let fleet = FleetBuilder::replicated(&FpgaPlatform::u280(), 2)
+            .board_banks(vec![8, 16])
+            .aging_s(0.25)
+            .build()
+            .unwrap();
+        assert_eq!(fleet.boards[0].banks, 8);
+        assert_eq!(fleet.boards[1].banks, 16);
+        assert_eq!(fleet.aging_s, 0.25);
+    }
 }

@@ -43,8 +43,8 @@
 //!   `Coordinator` against the interpreter oracle.
 //!
 //! Every layer here optionally carries an [`crate::obs::Recorder`]
-//! (`Fleet::with_recorder`, `BatchExecutor::with_recorder`,
-//! `PlanCache::set_recorder`): the fleet loop and the plan cache report
+//! ([`FleetBuilder::recorder`] + [`FleetBuilder::instrument_cache`], CLI
+//! `--trace-out`): the fleet loop and the plan cache report
 //! structured timeline events — on simulated time, so exports stay
 //! deterministic — that `--trace-out` / `--metrics-out` turn into Chrome
 //! traces and metrics snapshots. Disabled by default at zero cost.
@@ -61,10 +61,11 @@ pub mod jobs;
 pub mod scheduler;
 
 pub use cache::{CacheStats, PlanCache};
-pub use executor::{BatchExecutor, BatchReport, ClassStats, TenantStats};
+pub use executor::{BackendStatsRow, BatchExecutor, BatchReport, ClassStats, TenantStats};
 pub use fairness::{FairnessPolicy, TenantPolicy, DEFAULT_QUOTA_WINDOW_S};
-pub use fleet::{BoardPool, Fleet, DEFAULT_AGING_S};
+pub use fleet::{BackendSel, BoardPool, Fleet, FleetBuilder, DEFAULT_AGING_S};
 pub use jobs::{
     demo_jobs, jobs_from_json, jobs_to_json, load_jobs, validate_for_fleet, JobSpec, Priority,
 };
-pub use scheduler::{BoardStats, Schedule, ScheduledJob, Scheduler, TenantFairness};
+pub use executor::{RealReplay, ReplayedJob};
+pub use scheduler::{BoardStats, PlanSource, Schedule, ScheduledJob, Scheduler, TenantFairness};

@@ -238,11 +238,53 @@ fn admission_candidates(dse: &DseResult) -> Vec<DseChoice> {
 /// largest single board pool of that platform a job could land on. A job
 /// whose smallest candidate exceeds every platform's largest pool can
 /// never run anywhere in the fleet.
+/// The plan-resolution seam admission goes through: `prepare_all` and
+/// `prepare_remainder` consume a trait object, so any plan source — the
+/// persistent [`PlanCache`] today, a remote plan service or a recorded
+/// plan log tomorrow — can feed the admission loop without touching it.
+/// The `bool` is the cache-hit flag surfaced in the job table.
+pub trait PlanSource {
+    /// Resolve one (kernel, platform, iteration-count) plan.
+    fn resolve(
+        &mut self,
+        info: &KernelInfo,
+        platform: &FpgaPlatform,
+        iter: u64,
+    ) -> (DseResult, bool);
+
+    /// Resolve a batch for one platform, index-parallel to `reqs`
+    /// (batching lets an implementation fan misses out concurrently).
+    fn resolve_batch(
+        &mut self,
+        platform: &FpgaPlatform,
+        reqs: &[(&KernelInfo, u64)],
+    ) -> Vec<(DseResult, bool)>;
+}
+
+impl PlanSource for PlanCache {
+    fn resolve(
+        &mut self,
+        info: &KernelInfo,
+        platform: &FpgaPlatform,
+        iter: u64,
+    ) -> (DseResult, bool) {
+        self.get_or_explore(info, platform, iter)
+    }
+
+    fn resolve_batch(
+        &mut self,
+        platform: &FpgaPlatform,
+        reqs: &[(&KernelInfo, u64)],
+    ) -> Vec<(DseResult, bool)> {
+        self.get_or_explore_batch(platform, reqs)
+    }
+}
+
 pub(super) fn prepare_all(
     platforms: &[FpgaPlatform],
     max_banks: &[u64],
     specs: &[JobSpec],
-    cache: &mut PlanCache,
+    cache: &mut dyn PlanSource,
 ) -> Result<Vec<Prepared>> {
     let infos: Vec<KernelInfo> = specs.iter().map(JobSpec::info).collect::<Result<_>>()?;
     let reqs: Vec<(&KernelInfo, u64)> =
@@ -251,7 +293,7 @@ pub(super) fn prepare_all(
     // the cache key includes `platform.name`, so same-platform boards
     // share one exploration and warm plans stay shared across runs
     let plan_batches: Vec<Vec<(DseResult, bool)>> =
-        platforms.iter().map(|p| cache.get_or_explore_batch(p, &reqs)).collect();
+        platforms.iter().map(|p| cache.resolve_batch(p, &reqs)).collect();
 
     let mut prepared = Vec::with_capacity(specs.len());
     for (ji, (spec, info)) in specs.iter().zip(infos).enumerate() {
@@ -299,13 +341,13 @@ pub(super) fn prepare_remainder(
     platforms: &[FpgaPlatform],
     max_banks: &[u64],
     spec: &JobSpec,
-    cache: &mut PlanCache,
+    cache: &mut dyn PlanSource,
 ) -> Result<Prepared> {
     let info = spec.info()?;
     let plans: Vec<PlatformPlan> = platforms
         .iter()
         .map(|platform| {
-            let (dse, cache_hit) = cache.get_or_explore(&info, platform, spec.iter);
+            let (dse, cache_hit) = cache.resolve(&info, platform, spec.iter);
             let candidates = admission_candidates(&dse);
             let sims = candidates
                 .iter()

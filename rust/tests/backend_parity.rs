@@ -1,0 +1,209 @@
+//! Backend parity and preservation suite (ISSUE 8).
+//!
+//! Two contracts keep the pluggable-backend registry honest:
+//!
+//! 1. **Parity** — the `sim` replay backend draws its numerics from the
+//!    same interpreter substrate as `interp`, so the two must agree *bit
+//!    for bit* (`Diff::max_abs == 0`) on every kernel × parallelism
+//!    combination of the toy-grid matrix, while disagreeing on what they
+//!    account as wall time (measured CPU vs the cycle model).
+//! 2. **Preservation** — a fleet built through the registry with the
+//!    explicit default (`--backend interp`) must render every report
+//!    table byte-identically to a flagless fleet, for the shipped
+//!    `examples/jobs.json` stream at 1/2/3 boards and on the
+//!    heterogeneous `u280:1,u50:1` mix. The per-backend stats table only
+//!    appears once a non-default backend actually enters the fleet.
+
+use sasa::backend::{BackendRegistry, ExecutionPlan};
+use sasa::model::{Config, Parallelism};
+use sasa::platform::FpgaPlatform;
+use sasa::service::{load_jobs, BatchExecutor, BatchReport, FleetBuilder, PlanCache};
+
+/// The toy-grid matrix: every builtin kernel at artifact-backed toy dims.
+const MATRIX: &[(&str, &[u64])] = &[
+    ("jacobi2d", &[64, 64]),
+    ("blur", &[64, 64]),
+    ("seidel2d", &[64, 64]),
+    ("sobel2d", &[64, 64]),
+    ("dilate", &[64, 64]),
+    ("hotspot", &[64, 64]),
+    ("jacobi3d", &[64, 16, 16]),
+    ("heat3d", &[64, 16, 16]),
+];
+
+/// One representative config per parallelism family; `prepare` clamps
+/// them to the verification grid exactly as the scheduler path does.
+fn configs() -> Vec<Config> {
+    vec![
+        Config { parallelism: Parallelism::Temporal, k: 1, s: 2 },
+        Config { parallelism: Parallelism::SpatialR, k: 2, s: 1 },
+        Config { parallelism: Parallelism::HybridS, k: 2, s: 2 },
+    ]
+}
+
+#[test]
+fn interp_and_sim_replay_agree_bit_for_bit() {
+    let registry = BackendRegistry::builtin();
+    let interp = registry.create("interp").unwrap();
+    let sim = registry.create("sim").unwrap();
+    let u280 = FpgaPlatform::u280();
+    let iter = 4;
+
+    for (kernel, dims) in MATRIX {
+        for config in configs() {
+            let plan = ExecutionPlan {
+                kernel: kernel.to_string(),
+                dims: dims.to_vec(),
+                iter,
+                config,
+                platform: u280.clone(),
+            };
+            let pi = interp.prepare(&plan).unwrap();
+            let ps = sim.prepare(&plan).unwrap();
+            assert_eq!(pi.config, ps.config, "{kernel}: both backends clamp identically");
+
+            let inputs = pi.random_inputs(42);
+            let ri = interp.launch(&pi, &inputs, iter).unwrap();
+            let rs = sim.launch(&ps, &inputs, iter).unwrap();
+
+            // bit-identical numerics: the replay backend runs the same
+            // interpreter substrate, so zero — not small — difference
+            let diff = sim.verify(&rs, &ri.grid);
+            assert_eq!(
+                diff.max_abs, 0.0,
+                "{kernel} {config:?}: sim replay diverged from interp by {}",
+                diff.max_abs
+            );
+            // and both match the DSL-interpreter oracle
+            let oracle = pi.oracle(&inputs, iter);
+            assert!(interp.verify(&ri, &oracle).within(1e-4), "{kernel} {config:?}: interp");
+            assert!(sim.verify(&rs, &oracle).within(1e-4), "{kernel} {config:?}: sim");
+
+            // wall-time accounting is where they differ: interp measures
+            // CPU time, sim charges the cycle model's predicted seconds
+            assert!(ri.wall_s > 0.0, "{kernel}: measured wall time");
+            assert!(rs.wall_s > 0.0 && rs.wall_s.is_finite(), "{kernel}: modeled wall time");
+        }
+    }
+}
+
+#[test]
+fn backend_stats_accumulate_per_backend() {
+    let registry = BackendRegistry::builtin();
+    let sim = registry.create("sim").unwrap();
+    let u280 = FpgaPlatform::u280();
+    let before = sim.stats();
+    let plan = ExecutionPlan {
+        kernel: "jacobi2d".into(),
+        dims: vec![64, 64],
+        iter: 2,
+        config: Config { parallelism: Parallelism::Temporal, k: 1, s: 1 },
+        platform: u280,
+    };
+    let prepared = sim.prepare(&plan).unwrap();
+    let inputs = prepared.random_inputs(7);
+    sim.launch(&prepared, &inputs, 2).unwrap();
+    let after = sim.stats();
+    assert!(after.executions > before.executions, "launches must tick the counters");
+    assert!(after.cells_processed > before.cells_processed);
+}
+
+/// Render everything `sasa serve` prints for a report, in print order —
+/// the preservation contract is over these bytes.
+fn render_report(report: &BatchReport) -> String {
+    let mut out = String::new();
+    out.push_str(&report.job_table().to_markdown());
+    out.push_str(&report.tenant_table().to_markdown());
+    if let Some(fairness) = report.fairness_table() {
+        out.push_str(&fairness.to_markdown());
+    }
+    out.push_str(&report.class_table().to_markdown());
+    out.push_str(&report.board_table().to_markdown());
+    if let Some(backends) = report.backend_table() {
+        out.push_str(&backends.to_markdown());
+    }
+    if let Some(reliability) = report.reliability_table() {
+        out.push_str(&reliability.to_markdown());
+    }
+    out.push_str(&report.summary_table().to_markdown());
+    out
+}
+
+#[test]
+fn explicit_interp_registry_runs_render_byte_identical_reports() {
+    let u280 = FpgaPlatform::u280();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+
+    // replicated fleets: 1, 2, and 3 boards
+    for n in [1usize, 2, 3] {
+        let mut cold = PlanCache::in_memory();
+        let flagless = BatchExecutor::new(&u280)
+            .with_fleet_builder(FleetBuilder::replicated(&u280, n))
+            .run(&specs, &mut cold)
+            .unwrap();
+        let mut cold2 = PlanCache::in_memory();
+        let explicit = BatchExecutor::new(&u280)
+            .with_fleet_builder(FleetBuilder::replicated(&u280, n).default_backend("interp"))
+            .run(&specs, &mut cold2)
+            .unwrap();
+        assert!(
+            flagless.backend_table().is_none() && explicit.backend_table().is_none(),
+            "{n} board(s): the all-interp fleet must not grow a backend table"
+        );
+        assert_eq!(
+            render_report(&flagless),
+            render_report(&explicit),
+            "{n} board(s): --backend interp must not change a byte"
+        );
+    }
+
+    // heterogeneous u280:1,u50:1 mix
+    let mix = || FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]);
+    let mut cold = PlanCache::in_memory();
+    let flagless = BatchExecutor::new(&u280)
+        .with_fleet_builder(mix())
+        .run(&specs, &mut cold)
+        .unwrap();
+    let mut cold2 = PlanCache::in_memory();
+    let explicit = BatchExecutor::new(&u280)
+        .with_fleet_builder(mix().default_backend("interp"))
+        .run(&specs, &mut cold2)
+        .unwrap();
+    assert_eq!(
+        render_report(&flagless),
+        render_report(&explicit),
+        "u280:1,u50:1: --backend interp must not change a byte"
+    );
+}
+
+#[test]
+fn mixed_backend_fleet_reports_per_backend_stats() {
+    let u280 = FpgaPlatform::u280();
+    let u50 = FpgaPlatform::u50();
+    let specs = load_jobs("examples/jobs.json").unwrap();
+    let mut cache = PlanCache::in_memory();
+    let builder = FleetBuilder::mixed(vec![u280.clone(), u50])
+        .board_backends(vec![Some("interp".into()), Some("sim".into())]);
+    let report = BatchExecutor::new(&u280)
+        .with_fleet_builder(builder)
+        .run(&specs, &mut cache)
+        .unwrap();
+    let table = report.backend_table().expect("a sim board must surface the backend table");
+    let rendered = table.to_markdown();
+    assert!(rendered.contains("interp") && rendered.contains("sim"), "{rendered}");
+    let rows = report.backend_stats.as_ref().unwrap();
+    let names: Vec<&str> = rows.iter().map(|r| r.backend.as_str()).collect();
+    assert_eq!(names, ["interp", "sim"]);
+    // the schedule itself is the same one a flagless fleet produces —
+    // backend selection changes execution substrate, never admission
+    let mut cold = PlanCache::in_memory();
+    let flagless = BatchExecutor::new(&u280)
+        .with_fleet_builder(FleetBuilder::mixed(vec![FpgaPlatform::u280(), FpgaPlatform::u50()]))
+        .run(&specs, &mut cold)
+        .unwrap();
+    assert_eq!(
+        flagless.job_table().to_markdown(),
+        report.job_table().to_markdown(),
+        "backend selection must not perturb the admitted schedule"
+    );
+}

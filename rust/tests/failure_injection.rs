@@ -6,7 +6,12 @@ use sasa::dsl::{benchmarks as b, parse};
 use sasa::model::{Config, Parallelism};
 use sasa::reference::Grid;
 use sasa::runtime::artifact::default_artifact_dir;
-use sasa::runtime::{Manifest, Runtime};
+use sasa::runtime::Manifest;
+// explicit substrate selection now that the cfg-swapped alias is deprecated
+#[cfg(feature = "pjrt")]
+use sasa::runtime::client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use sasa::runtime::interp::Runtime;
 use sasa::util::prng::Prng;
 
 fn runtime() -> Runtime {

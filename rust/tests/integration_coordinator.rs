@@ -10,7 +10,11 @@ use sasa::dsl::{benchmarks as b, parse};
 use sasa::model::{Config, Parallelism};
 use sasa::reference::{interpret, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
-use sasa::runtime::Runtime;
+// explicit substrate selection now that the cfg-swapped alias is deprecated
+#[cfg(feature = "pjrt")]
+use sasa::runtime::client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use sasa::runtime::interp::Runtime;
 use sasa::util::prng::Prng;
 
 fn runtime() -> Runtime {

@@ -8,7 +8,11 @@ use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::reference::{interpret, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
-use sasa::runtime::Runtime;
+// explicit substrate selection now that the cfg-swapped alias is deprecated
+#[cfg(feature = "pjrt")]
+use sasa::runtime::client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use sasa::runtime::interp::Runtime;
 use sasa::util::prng::Prng;
 
 #[test]

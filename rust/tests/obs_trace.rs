@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use sasa::obs::{chrome_trace, metrics_snapshot, snapshot_total_iters, Event, Recorder};
 use sasa::platform::FpgaPlatform;
-use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, JobSpec, PlanCache};
+use sasa::service::{load_jobs, BatchExecutor, FairnessPolicy, FleetBuilder, JobSpec, PlanCache};
 use sasa::util::json::Json;
 
 /// Run the shipped `examples/jobs.json` stream on a u280:1,u50:1 fleet
@@ -19,10 +19,9 @@ fn recorded_example_run() -> (sasa::service::BatchReport, Vec<Event>) {
     let specs = load_jobs("examples/jobs.json").unwrap();
     let (recorder, sink) = Recorder::to_memory();
     let mut cache = PlanCache::in_memory();
-    cache.set_recorder(recorder.clone());
-    let exec = BatchExecutor::new(&u280)
-        .with_fleet(vec![u280.clone(), u50])
-        .with_recorder(recorder);
+    let builder = FleetBuilder::mixed(vec![u280.clone(), u50]).recorder(recorder);
+    builder.instrument_cache(&mut cache);
+    let exec = BatchExecutor::new(&u280).with_fleet_builder(builder);
     let report = exec.run(&specs, &mut cache).unwrap();
     (report, sink.events())
 }
@@ -105,10 +104,10 @@ fn recording_never_changes_the_schedule() {
 
     let (recorder, sink) = Recorder::to_memory();
     let mut rec_cache = PlanCache::in_memory();
-    rec_cache.set_recorder(recorder.clone());
+    let builder = FleetBuilder::replicated(&u280, 2).recorder(recorder);
+    builder.instrument_cache(&mut rec_cache);
     let recorded = BatchExecutor::new(&u280)
-        .with_boards(2)
-        .with_recorder(recorder)
+        .with_fleet_builder(builder)
         .run(&specs, &mut rec_cache)
         .unwrap();
     assert!(!sink.is_empty(), "the recorded run must actually record");
@@ -136,10 +135,10 @@ fn quota_parks_record_with_matching_unparks() {
     let policy = FairnessPolicy::new().with_quota("hog", 1e-6).with_quota_window_s(0.001);
     let (recorder, sink) = Recorder::to_memory();
     let mut cache = PlanCache::in_memory();
-    cache.set_recorder(recorder.clone());
+    let builder = FleetBuilder::single(&p).policy(policy).recorder(recorder);
+    builder.instrument_cache(&mut cache);
     let report = BatchExecutor::new(&p)
-        .with_policy(policy)
-        .with_recorder(recorder)
+        .with_fleet_builder(builder)
         .run(&specs, &mut cache)
         .unwrap();
     let events = sink.events();

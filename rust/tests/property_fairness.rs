@@ -22,7 +22,8 @@ use common::iters_by_key;
 
 use sasa::platform::FpgaPlatform;
 use sasa::service::{
-    FairnessPolicy, Fleet, JobSpec, PlanCache, Priority, Schedule, DEFAULT_AGING_S,
+    FairnessPolicy, Fleet, FleetBuilder, JobSpec, PlanCache, Priority, Schedule,
+    DEFAULT_AGING_S,
 };
 use sasa::util::prng::{check, Prng};
 
@@ -289,7 +290,8 @@ fn trivial_policy_is_byte_identical_to_prefairness_walks() {
         // mixed u280:1,u50:1 fleet: the homogeneous walk refuses mixed
         // platforms, so the trivial-policy equivalence is default-vs-
         // uniform (CI's determinism gate holds the rendered bytes stable)
-        let mixed = || Fleet::heterogeneous(vec![u280(), FpgaPlatform::u50()]);
+        let mixed =
+            || FleetBuilder::mixed(vec![u280(), FpgaPlatform::u50()]).build().unwrap();
         let default = mixed().schedule(&specs, &mut cache).unwrap();
         let uniform =
             mixed().with_policy(policy_of(&[3, 3, 3])).schedule(&specs, &mut cache).unwrap();

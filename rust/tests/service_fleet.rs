@@ -17,7 +17,8 @@ use sasa::metrics::percentile;
 use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::service::{
-    demo_jobs, load_jobs, FairnessPolicy, Fleet, JobSpec, PlanCache, Priority, Schedule,
+    demo_jobs, load_jobs, FairnessPolicy, Fleet, FleetBuilder, JobSpec, PlanCache, Priority,
+    Schedule,
     Scheduler,
 };
 use sasa::sim::simulate;
@@ -298,7 +299,9 @@ fn mixed_fleet_plans_each_board_with_its_own_platform() {
         JobSpec::new("b", "jacobi2d", vec![9720, 1024], 2),
     ];
     let mut cache = PlanCache::in_memory();
-    let s = Fleet::heterogeneous(vec![u280.clone(), u50.clone()])
+    let s = FleetBuilder::mixed(vec![u280.clone(), u50.clone()])
+        .build()
+        .unwrap()
         .schedule(&jobs, &mut cache)
         .unwrap();
     assert_eq!(s.jobs.len(), 2);
@@ -333,7 +336,9 @@ fn mixed_fleet_never_exceeds_u50_resources_on_the_u50_board() {
     let u50 = FpgaPlatform::u50();
     let specs = load_jobs("examples/jobs.json").unwrap();
     let mut cache = PlanCache::in_memory();
-    let s = Fleet::heterogeneous(vec![u280.clone(), u50.clone()])
+    let s = FleetBuilder::mixed(vec![u280.clone(), u50.clone()])
+        .build()
+        .unwrap()
         .schedule(&specs, &mut cache)
         .unwrap();
 
@@ -404,7 +409,9 @@ fn homogeneous_two_boards_byte_identical_to_pre_heterogeneity_walk() {
     }
     // the oracle refuses mixed fleets: it is a single-platform loop
     let mut c = PlanCache::in_memory();
-    let err = Fleet::heterogeneous(vec![u280(), FpgaPlatform::u50()])
+    let err = FleetBuilder::mixed(vec![u280(), FpgaPlatform::u50()])
+        .build()
+        .unwrap()
         .schedule_homogeneous_walk(&specs, &mut c)
         .unwrap_err()
         .to_string();
@@ -419,11 +426,15 @@ fn mixed_fleet_beats_two_u50s_on_example_stream() {
     let u50 = FpgaPlatform::u50();
     let specs = load_jobs("examples/jobs.json").unwrap();
     let mut c1 = PlanCache::in_memory();
-    let mixed = Fleet::heterogeneous(vec![u280(), u50.clone()])
+    let mixed = FleetBuilder::mixed(vec![u280(), u50.clone()])
+        .build()
+        .unwrap()
         .schedule(&specs, &mut c1)
         .unwrap();
     let mut c2 = PlanCache::in_memory();
-    let twin50 = Fleet::heterogeneous(vec![u50.clone(), u50])
+    let twin50 = FleetBuilder::mixed(vec![u50.clone(), u50])
+        .build()
+        .unwrap()
         .schedule(&specs, &mut c2)
         .unwrap();
     assert!(

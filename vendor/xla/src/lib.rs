@@ -1,0 +1,151 @@
+//! Compile-only stub of the `xla` PJRT bindings.
+//!
+//! Implements exactly the API surface `sasa`'s `runtime::client` consumes
+//! — [`PjRtClient`], [`PjRtLoadedExecutable`], [`Literal`],
+//! [`HloModuleProto`], [`XlaComputation`] — with every runtime entry point
+//! returning [`Error::Unavailable`]. The point is that the `pjrt` feature
+//! always *compiles* (CI gates on `cargo check --features pjrt`), while a
+//! stub build honestly reports the backend as unavailable the moment a
+//! client is created. Replace this crate with the real bindings to
+//! execute.
+
+use std::fmt;
+
+/// The stub's only error: the real XLA runtime is not linked in.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} unavailable — the vendored `xla` crate is a \
+                 compile-only stub; vendor the real PJRT bindings at vendor/xla to execute"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A dense literal value (stub: shape-only bookkeeping, no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _shape: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { _shape: vec![data.len() as i64] }
+    }
+
+    /// Scalar i32 literal.
+    pub fn scalar(_v: i32) -> Literal {
+        Literal { _shape: Vec::new() }
+    }
+
+    /// Reshape to `dims` (stub: recorded, never materialized).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _shape: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    /// Read the literal back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// An HLO module parsed from text (stub: never parsed).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A device buffer holding an execution result.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with `args`; returns per-device, per-output buffers.
+    pub fn execute<T: Borrowable>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Argument types [`PjRtLoadedExecutable::execute`] accepts.
+pub trait Borrowable {}
+impl Borrowable for Literal {}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub: creation is the
+    /// earliest honest point to report that no real XLA runtime is linked.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_tuple1().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("compile-only stub"), "{err}");
+    }
+}
