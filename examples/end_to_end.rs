@@ -1,4 +1,4 @@
-//! End-to-end validation driver (DESIGN.md §11 — the required example).
+//! End-to-end validation driver (DESIGN.md §12 — the required example).
 //!
 //! Exercises the full system on a real workload: JACOBI2D and HOTSPOT at
 //! 720×1024, iteration counts {2, 16, 64}. For each workload it

@@ -19,6 +19,9 @@
 //!   [`FleetBuilder`] + [`BatchExecutor`] the run needs. `--backend`
 //!   sets the fleet-wide default; `@backend` suffixes override it per
 //!   board.
+//! * [`LoadgenArgs`] — the `sasa loadgen` surface: a seed, a job count,
+//!   an arrival process, and the mix knobs, decoded into a
+//!   [`crate::loadgen::TraceSpec`] plus the output path.
 //!
 //! Flagless parses stay byte-compatible with the pre-registry CLI: no
 //! `--backend` and no `@backend` suffix leaves every board's backend
@@ -32,6 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::backend::BackendRegistry;
 use crate::faults::FaultPlan;
+use crate::loadgen::{ArrivalModel, TraceSpec};
 use crate::obs::Recorder;
 use crate::platform::FpgaPlatform;
 use crate::service::{
@@ -497,6 +501,109 @@ impl ServeArgs {
     }
 }
 
+/// The decoded `sasa loadgen` flag surface: a [`TraceSpec`] plus the
+/// output path the generated `jobs.json` is written to.
+pub struct LoadgenArgs {
+    /// The seedable workload description every flag folds into.
+    pub spec: TraceSpec,
+    /// `--out`: where the generated `jobs.json` goes (required — the
+    /// trace-summary table owns stdout).
+    pub out: String,
+}
+
+impl LoadgenArgs {
+    /// Decode and validate the loadgen surface. Arrival-model knobs are
+    /// guarded like serve's fault flags: a burst knob without
+    /// `--arrivals bursty` (or `--rate` under bursty) is an error, not a
+    /// silent no-op.
+    pub fn parse(args: &Args) -> Result<LoadgenArgs> {
+        let out = match args.get("out") {
+            Some(path) if !path.is_empty() => path.to_string(),
+            _ => bail!("loadgen requires --out <jobs.json> (the summary table owns stdout)"),
+        };
+        let mut spec = TraceSpec::new(args.u64_or("seed", 0)?);
+        let jobs = args.u64_or("jobs", spec.jobs as u64)?;
+        if jobs == 0 {
+            bail!("--jobs must be >= 1");
+        }
+        spec.jobs = jobs as usize;
+        spec.arrivals = match args.get("arrivals").unwrap_or("poisson") {
+            "poisson" => {
+                for flag in ["burst-size", "burst-gap-ms"] {
+                    if args.get(flag).is_some() {
+                        bail!("--{flag} has no effect without --arrivals bursty");
+                    }
+                }
+                let rate = parse_positive_f64(args, "rate", 40.0)?;
+                ArrivalModel::Poisson { rate_per_ms: rate }
+            }
+            "bursty" => {
+                if args.get("rate").is_some() {
+                    bail!("--rate has no effect with --arrivals bursty (use --burst-gap-ms)");
+                }
+                let burst_size = args.u64_or("burst-size", 16)?;
+                if burst_size == 0 {
+                    bail!("--burst-size must be >= 1");
+                }
+                let gap_ms = parse_positive_f64(args, "burst-gap-ms", 0.25)?;
+                ArrivalModel::Bursty { burst_size, gap_ms }
+            }
+            other => bail!("unknown arrival model '{other}' (poisson, bursty)"),
+        };
+        let tenants = args.u64_or("tenants", spec.tenants as u64)?;
+        if tenants == 0 {
+            bail!("--tenants must be >= 1");
+        }
+        spec.tenants = tenants as usize;
+        spec.hog_frac = parse_fraction(args, "hog-frac", spec.hog_frac)?;
+        spec.interactive_frac = parse_fraction(args, "interactive-frac", spec.interactive_frac)?;
+        spec.weighted = args.get("weighted").is_some();
+        spec.quota_bank_s = match args.get("quota") {
+            None => None,
+            Some(q) => {
+                let q: f64 = q.parse().context("--quota must be a number (bank-seconds)")?;
+                if !q.is_finite() || q <= 0.0 {
+                    bail!("--quota must be finite and > 0 bank-seconds");
+                }
+                Some(q)
+            }
+        };
+        spec.max_iter = args.u64_or("iter-max", spec.max_iter)?;
+        if spec.max_iter == 0 {
+            bail!("--iter-max must be >= 1");
+        }
+        Ok(LoadgenArgs { spec, out })
+    }
+}
+
+/// `--key` as a finite, strictly positive f64, or `default` when absent.
+fn parse_positive_f64(args: &Args, key: &str, default: f64) -> Result<f64> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let v: f64 = v.parse().with_context(|| format!("--{key} must be a number"))?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("--{key} must be finite and > 0");
+            }
+            Ok(v)
+        }
+    }
+}
+
+/// `--key` as a fraction in `[0, 1]`, or `default` when absent.
+fn parse_fraction(args: &Args, key: &str, default: f64) -> Result<f64> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let v: f64 = v.parse().with_context(|| format!("--{key} must be a number"))?;
+            if !(0.0..=1.0).contains(&v) {
+                bail!("--{key} must be in [0, 1]");
+            }
+            Ok(v)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -770,6 +877,66 @@ mod tests {
         let specs = vec![JobSpec::new("t", "jacobi2d", vec![720, 1024], 4)];
         let err = sa.policy(&specs).unwrap_err().to_string();
         assert!(err.contains("ghost") && err.contains("not in the job stream"), "{err}");
+    }
+
+    #[test]
+    fn loadgen_args_defaults_and_overrides() {
+        let la = LoadgenArgs::parse(&args(&["--seed", "9", "--jobs", "400", "--out", "g.json"]))
+            .unwrap();
+        assert_eq!(la.spec.seed, 9);
+        assert_eq!(la.spec.jobs, 400);
+        assert_eq!(la.spec.arrivals, ArrivalModel::Poisson { rate_per_ms: 40.0 });
+        assert_eq!(la.out, "g.json");
+        assert!(!la.spec.weighted);
+        let la = LoadgenArgs::parse(&args(&[
+            "--arrivals",
+            "bursty",
+            "--burst-size",
+            "32",
+            "--burst-gap-ms",
+            "0.5",
+            "--tenants",
+            "8",
+            "--hog-frac",
+            "0.5",
+            "--interactive-frac",
+            "0.1",
+            "--weighted",
+            "--quota",
+            "0.05",
+            "--iter-max",
+            "8",
+            "--out",
+            "g.json",
+        ]))
+        .unwrap();
+        assert_eq!(la.spec.arrivals, ArrivalModel::Bursty { burst_size: 32, gap_ms: 0.5 });
+        assert_eq!(la.spec.tenants, 8);
+        assert!(la.spec.weighted);
+        assert_eq!(la.spec.quota_bank_s, Some(0.05));
+        assert_eq!(la.spec.max_iter, 8);
+    }
+
+    #[test]
+    fn loadgen_args_rejects_bad_and_inert_flags() {
+        // table-driven: each token set must fail with a message naming the flag
+        let cases: &[(&[&str], &str)] = &[
+            (&["--seed", "1"], "--out"),
+            (&["--out", "g.json", "--jobs", "0"], "--jobs"),
+            (&["--out", "g.json", "--arrivals", "diurnal"], "unknown arrival model"),
+            (&["--out", "g.json", "--rate", "0"], "--rate"),
+            (&["--out", "g.json", "--burst-size", "4"], "has no effect"),
+            (&["--out", "g.json", "--arrivals", "bursty", "--rate", "2"], "has no effect"),
+            (&["--out", "g.json", "--hog-frac", "1.5"], "--hog-frac"),
+            (&["--out", "g.json", "--interactive-frac", "-0.1"], "--interactive-frac"),
+            (&["--out", "g.json", "--quota", "0"], "--quota"),
+            (&["--out", "g.json", "--tenants", "0"], "--tenants"),
+            (&["--out", "g.json", "--iter-max", "0"], "--iter-max"),
+        ];
+        for (toks, needle) in cases {
+            let err = LoadgenArgs::parse(&args(toks)).unwrap_err().to_string();
+            assert!(err.contains(needle), "{toks:?}: {err}");
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! | [`metrics`] | tables/percentiles + one function per paper artifact |
 //! | [`faults`] | deterministic fault injection policy: fault plans, retry/backoff, reliability accounting |
 //! | [`service`] | multi-tenant serving: plan cache, heterogeneous fleet scheduler, per-tenant fairness/quotas, batch executor, board-failure recovery |
+//! | [`loadgen`] | deterministic heavy-traffic trace synthesis: seeded arrival processes, diurnal tenant mixes, kernel/size draws emitting standard `jobs.json` |
 //! | [`obs`] | deterministic observability: event recorder, Chrome-trace export, metrics snapshots |
 //! | [`cli`] | shared flag parsing for the `sasa` binary (`serve`/`trace`/`batch` argument surface) |
 //! | [`bench`] | shared benchmark plumbing for `rust/benches/` |
@@ -57,6 +58,7 @@ pub mod codegen;
 pub mod metrics;
 pub mod faults;
 pub mod service;
+pub mod loadgen;
 pub mod obs;
 pub mod cli;
 pub mod bench;

@@ -1,0 +1,104 @@
+//! Arrival processes for synthesized traces.
+//!
+//! Arrival instants are generated on an integer **microsecond grid**:
+//! gaps are drawn in µs, rounded, and accumulated as `u64` before the
+//! single conversion to seconds. That keeps the emitted `arrival_s`
+//! values a pure function of the seed (no accumulated floating-point
+//! drift), keeps `jobs.json` human-readable, and — at high rates — makes
+//! float-*equal* arrivals common, which is exactly the tie-breaking
+//! surface the stress harness wants to exercise.
+
+use crate::util::prng::Prng;
+
+/// How job arrival instants are spaced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// Memoryless arrivals: inter-arrival gaps are exponential draws with
+    /// mean `1 / rate_per_ms` milliseconds.
+    Poisson {
+        /// Mean arrival rate in jobs per millisecond of simulated time.
+        rate_per_ms: f64,
+    },
+    /// Closed bursts: groups of jobs share one arrival instant, with the
+    /// group size jittered around `burst_size` and consecutive bursts
+    /// `gap_ms` apart (also jittered). Every job inside a burst has a
+    /// float-identical `arrival_s`.
+    Bursty {
+        /// Nominal jobs per burst (jittered to `[max(1, b/2), 3b/2]`).
+        burst_size: u64,
+        /// Nominal gap between burst instants in milliseconds.
+        gap_ms: f64,
+    },
+}
+
+impl ArrivalModel {
+    /// Generate `jobs` non-decreasing arrival instants in microseconds.
+    pub fn arrivals_us(&self, rng: &mut Prng, jobs: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity(jobs);
+        match *self {
+            ArrivalModel::Poisson { rate_per_ms } => {
+                let mean_us = 1e3 / rate_per_ms.max(1e-9);
+                let mut t: u64 = 0;
+                for _ in 0..jobs {
+                    t += rng.exp(mean_us).round() as u64;
+                    out.push(t);
+                }
+            }
+            ArrivalModel::Bursty { burst_size, gap_ms } => {
+                let nominal = burst_size.max(1);
+                let gap_us = (gap_ms.max(0.0) * 1e3).max(1.0);
+                let mut t: u64 = 0;
+                while out.len() < jobs {
+                    let size = rng.range(nominal.max(2) / 2, nominal + nominal / 2).max(1);
+                    for _ in 0..size {
+                        if out.len() == jobs {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                    // jitter the burst spacing in [0.5, 1.5) × gap
+                    t += (gap_us * (0.5 + rng.f64())).round() as u64;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_sorted_and_mean_gap_tracks_rate() {
+        let mut rng = Prng::new(99);
+        let us = ArrivalModel::Poisson { rate_per_ms: 10.0 }.arrivals_us(&mut rng, 5000);
+        assert_eq!(us.len(), 5000);
+        assert!(us.windows(2).all(|w| w[0] <= w[1]));
+        // rate 10/ms => mean gap 100 µs => ~500 ms horizon for 5k jobs
+        let span_ms = *us.last().unwrap() as f64 / 1e3;
+        assert!((300.0..800.0).contains(&span_ms), "span {span_ms} ms");
+    }
+
+    #[test]
+    fn bursty_produces_exact_ties() {
+        let mut rng = Prng::new(7);
+        let us = ArrivalModel::Bursty { burst_size: 16, gap_ms: 1.0 }.arrivals_us(&mut rng, 400);
+        assert_eq!(us.len(), 400);
+        assert!(us.windows(2).all(|w| w[0] <= w[1]));
+        let ties = us.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(ties > 300, "bursts should share instants, got {ties} ties");
+    }
+
+    #[test]
+    fn same_seed_same_instants() {
+        for model in [
+            ArrivalModel::Poisson { rate_per_ms: 40.0 },
+            ArrivalModel::Bursty { burst_size: 8, gap_ms: 0.25 },
+        ] {
+            let a = model.arrivals_us(&mut Prng::new(5), 1000);
+            let b = model.arrivals_us(&mut Prng::new(5), 1000);
+            assert_eq!(a, b);
+        }
+    }
+}

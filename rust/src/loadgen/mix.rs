@@ -1,0 +1,101 @@
+//! Workload mix draws: tenant rosters, the diurnal hog/light split, and
+//! kernel/size/iteration choices over the paper's benchmark matrix
+//! (`dsl::benchmarks`: 8 kernels × 4 sizes × the iteration sweep, §5.1).
+
+use crate::dsl::benchmarks as b;
+use crate::util::prng::Prng;
+
+/// The 2-D benchmark kernels (sizes drawn from [`b::SIZES_2D`]).
+pub const KERNELS_2D: [&str; 6] = ["blur", "seidel2d", "dilate", "hotspot", "sobel2d", "jacobi2d"];
+
+/// The 3-D benchmark kernels (sizes drawn from [`b::SIZES_3D`]).
+pub const KERNELS_3D: [&str; 2] = ["heat3d", "jacobi3d"];
+
+/// Build the tenant roster: `ceil(tenants × hog_frac)` bank-hungry "hog"
+/// tenants, the rest "light". At least one tenant always exists; when
+/// `hog_frac` rounds to everything, the roster is all hogs (the mix draw
+/// then ignores the diurnal share).
+pub fn tenant_roster(tenants: usize, hog_frac: f64) -> (Vec<String>, Vec<String>) {
+    let tenants = tenants.max(1);
+    let hogs = ((tenants as f64 * hog_frac.clamp(0.0, 1.0)).ceil() as usize).min(tenants);
+    let hog_names = (0..hogs).map(|i| format!("hog{i}")).collect();
+    let light_names = (0..tenants - hogs).map(|i| format!("light{i}")).collect();
+    (hog_names, light_names)
+}
+
+/// Diurnal hog share at `phase ∈ [0, 1]` of the trace: a triangular
+/// "daytime" curve that ramps the bank-hungry tenants from 20% of
+/// arrivals at the trace edges to 80% at the midpoint. Pure arithmetic —
+/// no libm — so the draw sequence is bit-stable everywhere.
+pub fn hog_share(phase: f64) -> f64 {
+    let tri = 1.0 - (2.0 * phase.clamp(0.0, 1.0) - 1.0).abs();
+    0.2 + 0.6 * tri
+}
+
+/// Draw one (kernel, dims, iter) for a job of the given class. Hogs take
+/// the two largest paper sizes of their kernel's dimensionality (wide
+/// bank footprints, long rounds); lights take the two smallest. `iter`
+/// comes from the paper's power-of-two sweep, capped at `max_iter`.
+pub fn draw_job(rng: &mut Prng, hoggy: bool, max_iter: u64) -> (&'static str, Vec<u64>, u64) {
+    let three_d = rng.range(0, (KERNELS_2D.len() + KERNELS_3D.len()) as u64 - 1) as usize
+        >= KERNELS_2D.len();
+    let size_band = if hoggy { 2..4 } else { 0..2 };
+    let (kernel, dims): (&'static str, Vec<u64>) = if three_d {
+        let k = *rng.pick(&KERNELS_3D);
+        let band: Vec<[u64; 3]> = b::SIZES_3D[size_band].to_vec();
+        (k, rng.pick(&band).to_vec())
+    } else {
+        let k = *rng.pick(&KERNELS_2D);
+        let band: Vec<[u64; 2]> = b::SIZES_2D[size_band].to_vec();
+        (k, rng.pick(&band).to_vec())
+    };
+    let sweep: Vec<u64> = b::ITER_SWEEP.iter().copied().filter(|&i| i <= max_iter.max(1)).collect();
+    let iter = if sweep.is_empty() { 1 } else { *rng.pick(&sweep) };
+    (kernel, dims, iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_splits_and_never_empties() {
+        let (h, l) = tenant_roster(6, 0.33);
+        assert_eq!((h.len(), l.len()), (2, 4));
+        let (h, l) = tenant_roster(0, 0.5);
+        assert_eq!(h.len() + l.len(), 1);
+        let (h, l) = tenant_roster(4, 1.0);
+        assert_eq!((h.len(), l.len()), (4, 0));
+    }
+
+    #[test]
+    fn hog_share_peaks_at_midday() {
+        assert!((hog_share(0.0) - 0.2).abs() < 1e-12);
+        assert!((hog_share(1.0) - 0.2).abs() < 1e-12);
+        assert!((hog_share(0.5) - 0.8).abs() < 1e-12);
+        assert!(hog_share(0.25) > hog_share(0.1));
+    }
+
+    #[test]
+    fn every_draw_names_a_real_benchmark_with_matching_dims() {
+        let mut rng = Prng::new(12);
+        for case in 0..500 {
+            let (kernel, dims, iter) = draw_job(&mut rng, case % 2 == 0, 64);
+            let src = b::by_name(kernel).expect("drawn kernel must be builtin");
+            let prog = crate::dsl::parse(&b::with_dims(src, &dims, iter)).unwrap();
+            assert_eq!(prog.iteration, iter);
+            assert!(b::ITER_SWEEP.contains(&iter));
+            let is_3d = KERNELS_3D.contains(&kernel);
+            assert_eq!(dims.len(), if is_3d { 3 } else { 2 });
+        }
+    }
+
+    #[test]
+    fn max_iter_caps_the_sweep() {
+        let mut rng = Prng::new(3);
+        for _ in 0..200 {
+            let (_, _, iter) = draw_job(&mut rng, false, 8);
+            assert!(iter <= 8);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! `sasa::loadgen` — deterministic heavy-traffic trace synthesis.
+//!
+//! The serving stack's fairness, quota, preemption, and recovery claims
+//! were historically exercised by a nine-job `examples/jobs.json`; this
+//! subsystem turns every scheduler test into a thousands-of-jobs test.
+//! [`TraceSpec`] describes a workload — an arrival process
+//! ([`ArrivalModel`]: Poisson or bursty), a diurnal hog/light tenant mix
+//! ([`mix::hog_share`]), a priority-class blend, optional per-tenant
+//! weight/quota assignment, and kernel/size/iteration draws over the
+//! paper's 8-kernel matrix — and [`generate`] expands it into a plain
+//! `Vec<JobSpec>`. The `sasa loadgen` CLI verb writes that stream as a
+//! standard `jobs.json` ([`crate::service::jobs_to_json`]), so generated
+//! traces flow through the unmodified `serve`/`trace`/`batch` paths and
+//! the CI determinism gates.
+//!
+//! Two contracts hold:
+//!
+//! 1. **Byte determinism.** A trace is a pure function of its
+//!    [`TraceSpec`]: every draw comes from one [`crate::util::prng::Prng`]
+//!    seeded by `spec.seed`, arrival instants live on an integer
+//!    microsecond grid (no accumulated float drift), and the JSON codec
+//!    prints shortest-roundtrip floats — so the same seed emits a
+//!    byte-identical file, run after run (CI byte-diffs two generations).
+//! 2. **Validity.** Every generated job names a builtin benchmark at one
+//!    of the paper's sizes, declares tenant-consistent weights/quotas,
+//!    and passes [`crate::service::validate_for_fleet`] on any fleet
+//!    whose largest board has ≥ 3 HBM banks.
+//!
+//! The tier-2 stress harness (`rust/tests/stress_loadgen.rs`, smoke-sized
+//! by default, full scale under `SASA_STRESS=1`) drives generated traces
+//! through homogeneous, heterogeneous, mixed-backend, and faulted fleets
+//! and asserts the global invariants that must survive at scale.
+
+pub mod arrivals;
+pub mod mix;
+
+pub use arrivals::ArrivalModel;
+
+use crate::metrics::reports::LoadgenRow;
+use crate::service::{JobSpec, Priority};
+use crate::util::prng::Prng;
+
+use std::collections::BTreeMap;
+
+/// A complete, seedable description of a synthetic workload. Construct
+/// with [`TraceSpec::new`] and override fields directly; [`generate`]
+/// expands it deterministically.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// PRNG seed — the only source of randomness in the trace.
+    pub seed: u64,
+    /// Number of jobs to emit.
+    pub jobs: usize,
+    /// Arrival process (Poisson or bursty).
+    pub arrivals: ArrivalModel,
+    /// Tenant count; split hog/light by `hog_frac` ([`mix::tenant_roster`]).
+    pub tenants: usize,
+    /// Fraction of tenants that are bank-hungry "hogs".
+    pub hog_frac: f64,
+    /// Probability that a job is `interactive` rather than `batch`.
+    pub interactive_frac: f64,
+    /// Assign each tenant a fair-queuing weight drawn from 1..=4.
+    pub weighted: bool,
+    /// Stamp this token-bucket quota (bank-seconds) on every hog tenant.
+    pub quota_bank_s: Option<f64>,
+    /// Cap on the per-job iteration draw (from the paper's sweep).
+    pub max_iter: u64,
+}
+
+impl TraceSpec {
+    /// The default trace at a given seed: 400 jobs, Poisson at 40
+    /// jobs/ms, 6 tenants (2 hogs), a 25% interactive blend, unweighted,
+    /// no quotas, iterations capped at 16.
+    pub fn new(seed: u64) -> TraceSpec {
+        TraceSpec {
+            seed,
+            jobs: 400,
+            arrivals: ArrivalModel::Poisson { rate_per_ms: 40.0 },
+            tenants: 6,
+            hog_frac: 0.33,
+            interactive_frac: 0.25,
+            weighted: false,
+            quota_bank_s: None,
+            max_iter: 16,
+        }
+    }
+}
+
+/// Expand a [`TraceSpec`] into its job stream. Pure: the same spec always
+/// returns the same jobs (and therefore the same `jobs.json` bytes).
+///
+/// ```
+/// use sasa::loadgen::{generate, TraceSpec};
+///
+/// let spec = TraceSpec { jobs: 50, ..TraceSpec::new(9) };
+/// let a = generate(&spec);
+/// let b = generate(&spec);
+/// assert_eq!(a, b);
+/// assert_eq!(a.len(), 50);
+/// ```
+pub fn generate(spec: &TraceSpec) -> Vec<JobSpec> {
+    let mut rng = Prng::new(spec.seed);
+    let (hogs, lights) = mix::tenant_roster(spec.tenants, spec.hog_frac);
+    // weights are drawn once per tenant (roster order) so the stream is
+    // tenant-consistent, as the jobs.json validator requires
+    let weight_of: BTreeMap<String, u64> = if spec.weighted {
+        hogs.iter().chain(lights.iter()).map(|t| (t.clone(), rng.range(1, 4))).collect()
+    } else {
+        BTreeMap::new()
+    };
+    let arrivals = spec.arrivals.arrivals_us(&mut rng, spec.jobs);
+    let n = arrivals.len();
+    let mut out = Vec::with_capacity(n);
+    for (i, us) in arrivals.iter().enumerate() {
+        let phase = if n <= 1 { 0.5 } else { i as f64 / (n - 1) as f64 };
+        let hoggy = !hogs.is_empty() && (lights.is_empty() || rng.f64() < mix::hog_share(phase));
+        let tenant = rng.pick(if hoggy { &hogs } else { &lights }).clone();
+        let (kernel, dims, iter) = mix::draw_job(&mut rng, hoggy, spec.max_iter);
+        let mut job = JobSpec::new(&tenant, kernel, dims, iter).arriving_at(*us as f64 * 1e-6);
+        if rng.f64() < spec.interactive_frac {
+            job = job.with_priority(Priority::Interactive);
+        }
+        if let Some(w) = weight_of.get(&tenant) {
+            job = job.with_weight(*w);
+        }
+        if hoggy {
+            if let Some(q) = spec.quota_bank_s {
+                job = job.with_quota(q);
+            }
+        }
+        out.push(job);
+    }
+    out
+}
+
+/// Summarize a generated stream per tenant, for
+/// [`crate::metrics::reports::loadgen_table`]. Rows come back in tenant
+/// name order (the roster names sort naturally).
+pub fn summary_rows(specs: &[JobSpec]) -> Vec<LoadgenRow> {
+    let mut by_tenant: BTreeMap<&str, LoadgenRow> = BTreeMap::new();
+    let mut kernels: BTreeMap<&str, std::collections::BTreeSet<&str>> = BTreeMap::new();
+    for spec in specs {
+        let row = by_tenant.entry(&spec.tenant).or_insert_with(|| LoadgenRow {
+            tenant: spec.tenant.clone(),
+            jobs: 0,
+            interactive: 0,
+            kernels: 0,
+            iters: 0,
+            first_s: spec.arrival_s,
+            last_s: spec.arrival_s,
+            weight: None,
+            quota_bank_s: None,
+        });
+        row.jobs += 1;
+        if spec.priority == Priority::Interactive {
+            row.interactive += 1;
+        }
+        row.iters += spec.iter;
+        row.first_s = row.first_s.min(spec.arrival_s);
+        row.last_s = row.last_s.max(spec.arrival_s);
+        row.weight = row.weight.or(spec.weight);
+        row.quota_bank_s = row.quota_bank_s.or(spec.quota_bank_s);
+        kernels.entry(&spec.tenant).or_default().insert(&spec.kernel);
+    }
+    let mut rows: Vec<LoadgenRow> = by_tenant.into_values().collect();
+    for row in &mut rows {
+        row.kernels = kernels.get(row.tenant.as_str()).map_or(0, |k| k.len() as u64);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{jobs_from_json, jobs_to_json, validate_for_fleet, FairnessPolicy};
+    use crate::util::json::Json;
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        let spec = TraceSpec { jobs: 200, ..TraceSpec::new(9) };
+        let a = jobs_to_json(&generate(&spec)).to_string();
+        let b = jobs_to_json(&generate(&spec)).to_string();
+        assert_eq!(a, b, "same seed must emit byte-identical jobs.json");
+        let other = jobs_to_json(&generate(&TraceSpec { seed: 10, ..spec })).to_string();
+        assert_ne!(a, other, "different seeds should differ");
+    }
+
+    #[test]
+    fn stream_roundtrips_and_validates_for_small_fleets() {
+        let spec = TraceSpec { jobs: 300, ..TraceSpec::new(42) };
+        let specs = generate(&spec);
+        assert_eq!(specs.len(), 300);
+        let back =
+            jobs_from_json(&Json::parse(&jobs_to_json(&specs).to_string()).unwrap()).unwrap();
+        assert_eq!(specs, back, "jobs.json roundtrip must be lossless");
+        validate_for_fleet(&specs, &[8]).expect("fits any board with >= 3 banks");
+        assert!(specs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s), "sorted arrivals");
+    }
+
+    #[test]
+    fn weights_and_quotas_are_tenant_consistent() {
+        let spec = TraceSpec {
+            jobs: 500,
+            weighted: true,
+            quota_bank_s: Some(0.05),
+            ..TraceSpec::new(7)
+        };
+        let specs = generate(&spec);
+        // the fairness policy builder rejects conflicting declarations
+        FairnessPolicy::from_specs(&specs).expect("tenant-consistent weights/quotas");
+        let hog_jobs = specs.iter().filter(|s| s.tenant.starts_with("hog")).count();
+        assert!(hog_jobs > 0, "diurnal mix must schedule hog arrivals");
+        for s in &specs {
+            assert_eq!(s.quota_bank_s.is_some(), s.tenant.starts_with("hog"));
+            assert!(s.weight.is_some());
+        }
+    }
+
+    #[test]
+    fn priority_blend_tracks_the_requested_fraction() {
+        let spec = TraceSpec { jobs: 2000, interactive_frac: 0.25, ..TraceSpec::new(1) };
+        let specs = generate(&spec);
+        let interactive =
+            specs.iter().filter(|s| s.priority == Priority::Interactive).count() as f64;
+        let frac = interactive / specs.len() as f64;
+        assert!((0.2..0.3).contains(&frac), "interactive fraction {frac} far from 0.25");
+    }
+
+    #[test]
+    fn summary_rows_account_for_every_job() {
+        let spec = TraceSpec { jobs: 250, weighted: true, ..TraceSpec::new(5) };
+        let specs = generate(&spec);
+        let rows = summary_rows(&specs);
+        assert_eq!(rows.iter().map(|r| r.jobs).sum::<u64>(), 250);
+        assert_eq!(
+            rows.iter().map(|r| r.iters).sum::<u64>(),
+            specs.iter().map(|s| s.iter).sum::<u64>()
+        );
+        let names: Vec<&str> = rows.iter().map(|r| r.tenant.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "rows come back in tenant order");
+    }
+}

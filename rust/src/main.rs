@@ -7,6 +7,7 @@
 //! sasa run --kernel jacobi2d --dims 64x64 --iter 8   execute for real via PJRT
 //! sasa sim --kernel blur --iter 16             cycle-simulate all five schemes
 //! sasa serve --jobs jobs.json --boards 2       schedule a multi-tenant job batch on a fleet
+//! sasa loadgen --seed 9 --jobs 400 --out g.json  synthesize a deterministic job stream
 //! sasa trace --jobs jobs.json                  replay a batch, export trace + metrics JSON
 //! sasa batch --iter 8 [--real]                 run the whole suite as one batch
 //! sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]
@@ -19,7 +20,7 @@
 use anyhow::{bail, Context, Result};
 
 use sasa::backend::BackendRegistry;
-use sasa::cli::{parse_args, Args, ServeArgs};
+use sasa::cli::{parse_args, Args, LoadgenArgs, ServeArgs};
 use sasa::codegen::{generate_connectivity, generate_hls, generate_host, Plan};
 use sasa::coordinator::{Coordinator, StencilJob};
 use sasa::dsl::{analyze, benchmarks as b, parse};
@@ -68,6 +69,7 @@ fn run() -> Result<()> {
         "run" => cmd_run(&args, &platform),
         "sim" => cmd_sim(&args, &platform),
         "serve" => cmd_serve(&args, &platform),
+        "loadgen" => cmd_loadgen(&args),
         "trace" => cmd_trace(&args, &platform),
         "batch" => cmd_batch(&args, &platform),
         "report" => cmd_report(&args, &platform),
@@ -92,6 +94,11 @@ fn print_help() {
          [--tenant-weights <a:4,b:1>] [--quota <bank-s>] [--quota-window-ms <x>]\n             \
          [--faults <spec>] [--retry-cap <n>] [--drain]\n             \
          [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
+         sasa loadgen --seed <n> --out <jobs.json> [--jobs <n>]\n             \
+         [--arrivals poisson|bursty] [--rate <jobs/ms>]\n             \
+         [--burst-size <n>] [--burst-gap-ms <x>] [--tenants <n>]\n             \
+         [--hog-frac <f>] [--interactive-frac <f>] [--weighted]\n             \
+         [--quota <bank-s>] [--iter-max <n>]\n  \
          sasa trace --jobs <jobs.json> [--trace-out <t.json>] [--metrics-out <m.json>]\n  \
          sasa batch [--iter <n>] [--real] [--cache <plans.json>] [--backend <name>]\n  \
          sasa report <fig1|...|fig21|table1|table3|soda|all> [--csv] [--platform u280|u50]\n\n\
@@ -134,6 +141,19 @@ fn print_help() {
          --metrics-out <path>  record the run and write a JSON metrics\n                    \
          snapshot mirroring every report table; `sasa trace`\n                    \
          defaults it to metrics.json\n\n\
+         FLAGS (loadgen):\n  \
+         --seed <n>        trace seed: the stream is a pure function of it —\n                    \
+         the same seed writes a byte-identical jobs.json\n  \
+         --jobs <n>        jobs to synthesize (default 400)\n  \
+         --arrivals <m>    poisson (exponential gaps at --rate jobs/ms,\n                    \
+         default 40) or bursty (groups of ~--burst-size jobs\n                    \
+         sharing one instant, --burst-gap-ms apart)\n  \
+         --tenants <n>     tenant count (default 6); --hog-frac of them are\n                    \
+         bank-hungry hogs on a diurnal curve peaking mid-trace\n  \
+         --interactive-frac <f>  share of jobs in the interactive class\n  \
+         --weighted        draw a fair-queuing weight (1..4) per tenant\n  \
+         --quota <bank-s>  stamp this token-bucket quota on every hog tenant\n  \
+         --iter-max <n>    cap the per-job iteration draw (default 16)\n\n\
          Benchmarks: blur seidel2d dilate hotspot heat3d sobel2d jacobi2d jacobi3d",
         known = FpgaPlatform::KNOWN.join(", "),
         backends = BackendRegistry::builtin().names().join(", ")
@@ -481,6 +501,27 @@ fn cmd_serve(args: &Args, platform: &FpgaPlatform) -> Result<()> {
         write_obs_artifacts(sink, &report, sa.trace_out.as_deref(), sa.metrics_out.as_deref())?;
     }
     cache.save()
+}
+
+/// `sasa loadgen --seed 9 --jobs 400 --out g.json [...]`: synthesize a
+/// deterministic heavy-traffic job stream (`sasa::loadgen`) and write it
+/// as a standard `jobs.json`. The stream is a pure function of the seed —
+/// the same flags write a byte-identical file (CI diffs two generations) —
+/// and flows through the unmodified `serve`/`trace`/`batch` paths.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let la = LoadgenArgs::parse(args)?;
+    let specs = sasa::loadgen::generate(&la.spec);
+    std::fs::write(&la.out, sasa::service::jobs_to_json(&specs).to_string())
+        .with_context(|| format!("writing {}", la.out))?;
+    println!("{}", reports::loadgen_table(&sasa::loadgen::summary_rows(&specs)).to_markdown());
+    println!(
+        "wrote {} job(s) to {} (seed {}, {:.3} ms arrival horizon)",
+        specs.len(),
+        la.out,
+        la.spec.seed,
+        specs.last().map_or(0.0, |s| s.arrival_s * 1e3)
+    );
+    Ok(())
 }
 
 /// `sasa trace --jobs jobs.json [--trace-out trace.json] [--metrics-out

@@ -1,5 +1,6 @@
-//! One function per paper table/figure (DESIGN.md §10 experiment index),
-//! plus the serving layer's fairness table ([`fairness_table`]).
+//! One function per paper table/figure (DESIGN.md §11 experiment index),
+//! plus the serving layer's fairness table ([`fairness_table`]) and the
+//! load generator's trace summary ([`loadgen_table`]).
 
 use crate::dsl::{analyze, benchmarks as b, parse, KernelInfo};
 use crate::model::{explore, Parallelism};
@@ -58,6 +59,59 @@ pub fn fairness_table(rows: &[FairnessRow]) -> Table {
             r.quota_bank_s.map_or_else(|| "-".into(), |q| format!("{:.3}", q * 1e3)),
             r.parks.to_string(),
             format!("{:.3}", r.parked_s * 1e3),
+        ]);
+    }
+    t
+}
+
+/// One row of the load generator's per-tenant trace summary: what
+/// `sasa loadgen` synthesized for a tenant before the stream is handed to
+/// the scheduler. Defined here (not in `loadgen`) so the renderer stays a
+/// pure data-to-`Table` function; `loadgen::summary_rows` does the
+/// conversion.
+#[derive(Debug, Clone)]
+pub struct LoadgenRow {
+    pub tenant: String,
+    /// Jobs generated for this tenant.
+    pub jobs: u64,
+    /// Of those, jobs in the `interactive` admission class.
+    pub interactive: u64,
+    /// Distinct kernels drawn.
+    pub kernels: u64,
+    /// Total iterations across the tenant's jobs.
+    pub iters: u64,
+    /// Earliest arrival instant (seconds).
+    pub first_s: f64,
+    /// Latest arrival instant (seconds).
+    pub last_s: f64,
+    /// Assigned fair-queuing weight (`None` = unweighted stream).
+    pub weight: Option<u64>,
+    /// Assigned token-bucket quota in bank-seconds (`None` = no quota).
+    pub quota_bank_s: Option<f64>,
+}
+
+/// Per-tenant trace summary for a generated workload: job counts, class
+/// blend, kernel diversity, and the arrival window, plus any fairness
+/// knobs the generator stamped on the stream.
+pub fn loadgen_table(rows: &[LoadgenRow]) -> Table {
+    let mut t = Table::new(
+        "Generated trace (per-tenant summary)",
+        &[
+            "tenant", "jobs", "interactive", "kernels", "iterations", "first ms", "last ms",
+            "weight", "quota bank-ms",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.tenant.clone(),
+            r.jobs.to_string(),
+            r.interactive.to_string(),
+            r.kernels.to_string(),
+            r.iters.to_string(),
+            format!("{:.3}", r.first_s * 1e3),
+            format!("{:.3}", r.last_s * 1e3),
+            r.weight.map_or_else(|| "-".into(), |w| w.to_string()),
+            r.quota_bank_s.map_or_else(|| "-".into(), |q| format!("{:.3}", q * 1e3)),
         ]);
     }
     t
@@ -469,6 +523,43 @@ mod tests {
         // degenerate inputs render zeros, not NaN
         let none = fairness_table(&[]);
         assert_eq!(none.rows.len(), 0);
+    }
+
+    #[test]
+    fn loadgen_table_renders_counts_window_and_optional_knobs() {
+        let rows = vec![
+            LoadgenRow {
+                tenant: "hog0".into(),
+                jobs: 120,
+                interactive: 31,
+                kernels: 7,
+                iters: 960,
+                first_s: 0.000125,
+                last_s: 0.009,
+                weight: Some(2),
+                quota_bank_s: Some(0.05),
+            },
+            LoadgenRow {
+                tenant: "light0".into(),
+                jobs: 280,
+                interactive: 70,
+                kernels: 8,
+                iters: 2100,
+                first_s: 0.0,
+                last_s: 0.0095,
+                weight: None,
+                quota_bank_s: None,
+            },
+        ];
+        let t = loadgen_table(&rows);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][1], "120");
+        assert_eq!(t.rows[0][5], "0.125");
+        assert_eq!(t.rows[0][7], "2");
+        assert_eq!(t.rows[0][8], "50.000");
+        assert_eq!(t.rows[1][7], "-");
+        assert_eq!(t.rows[1][8], "-");
+        assert!(t.to_markdown().contains("Generated trace"));
     }
 
     #[test]

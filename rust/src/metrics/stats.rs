@@ -80,6 +80,58 @@ mod tests {
         assert_eq!(percentile(&v, f64::INFINITY), 5.0);
     }
 
+    /// The rule of the doc comment, implemented independently: sort, then
+    /// index at the 1-based nearest rank. The oracle for the large-N sweep.
+    fn naive_sort_and_index(values: &[f64], pct: f64) -> f64 {
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let rank = ((pct.clamp(0.0, 100.0) / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+
+    #[test]
+    fn large_n_matches_the_naive_oracle() {
+        // 5k-sample vectors at loadgen scale: p50/p95/p99 (and a fractional
+        // sweep) must agree bit-for-bit with the sort-and-index oracle
+        let mut rng = crate::util::prng::Prng::new(0xC0FFEE);
+        let samples: Vec<f64> = (0..5000).map(|_| rng.f64() * 25.0).collect();
+        for pct in [0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let got = percentile(&samples, pct);
+            let want = naive_sort_and_index(&samples, pct);
+            assert!(got == want, "pct {pct}: {got} != oracle {want}");
+            assert!(samples.contains(&got), "pct {pct}: result not a sample element");
+        }
+        for step in 0..=1000 {
+            let pct = step as f64 / 10.0;
+            assert!(percentile(&samples, pct) == naive_sort_and_index(&samples, pct), "{pct}");
+        }
+    }
+
+    #[test]
+    fn large_n_with_heavy_ties_matches_the_oracle() {
+        // quantize to 16 distinct values so every rank lands inside a run
+        // of duplicates — the regime generated traces produce (µs-grid
+        // arrival waits, identical job durations)
+        let mut rng = crate::util::prng::Prng::new(7);
+        let samples: Vec<f64> = (0..5000).map(|_| (rng.range(0, 15) as f64) * 0.125).collect();
+        for pct in [0.0, 10.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+            let got = percentile(&samples, pct);
+            assert!(got == naive_sort_and_index(&samples, pct), "pct {pct}");
+            assert!((got / 0.125).fract() == 0.0, "result stays on the tie grid");
+        }
+    }
+
+    #[test]
+    fn degenerate_single_class_distribution_is_flat() {
+        // a single-class trace where every job waits the same: all
+        // percentiles collapse to that value at any N
+        let samples = vec![0.375; 5000];
+        for pct in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&samples, pct), 0.375, "pct {pct}");
+        }
+    }
+
     #[test]
     fn result_is_always_a_sample_element() {
         let v = [0.25, 0.5, 0.125, 0.75, 1.0, 0.875, 0.0625];

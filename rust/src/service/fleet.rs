@@ -93,7 +93,7 @@ use super::cache::PlanCache;
 use super::fairness::{FairLedger, FairnessPolicy};
 use super::jobs::{JobSpec, Priority};
 use super::scheduler::{
-    prepare_all, prepare_remainder, BoardStats, Prepared, Schedule, ScheduledJob,
+    prepare_all, prepare_remainder, sort_by_arrival, BoardStats, Prepared, Schedule, ScheduledJob,
 };
 
 /// Default aging bound: a batch job that has waited this long is promoted
@@ -616,8 +616,9 @@ impl Fleet {
         };
 
         let mut prepared = prepare_all(&platforms, &max_banks, specs, cache)?;
-        // arrival order; equal arrivals keep submission order (stable sort)
-        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        // arrival order; equal arrivals order by declaration index
+        // (explicit tie-break shared with the walk oracles)
+        sort_by_arrival(&mut prepared);
         let mut next_index = prepared.len();
         let mut future: VecDeque<Waiting> = prepared
             .into_iter()
@@ -1424,7 +1425,7 @@ impl Fleet {
         let stats0 = cache.stats();
 
         let mut prepared = prepare_all(&platforms, &[max_board], specs, cache)?;
-        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        sort_by_arrival(&mut prepared);
         let mut next_index = prepared.len();
         let mut future: VecDeque<Waiting> = prepared
             .into_iter()

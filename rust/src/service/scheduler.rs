@@ -332,6 +332,30 @@ pub(super) fn prepare_all(
     Ok(prepared)
 }
 
+/// Sort prepared jobs into arrival order with an **explicit** tie-break on
+/// declaration index: float-equal arrivals (common in generated traces,
+/// where instants live on a microsecond grid) order by their position in
+/// the submitted stream. `prepare_all` returns jobs in `specs` order, so
+/// the enumerate index *is* the declaration index. Behaviorally identical
+/// to the stable `sort_by` on `arrival_s` alone that every event loop used
+/// before — the tie-break is now part of the comparator's contract rather
+/// than an implementation detail of the sort, so a future switch to an
+/// unstable sort (or a keyed map) cannot silently reorder same-instant
+/// arrivals. All three event loops (fleet, homogeneous walk, FIFO walk)
+/// share this one definition.
+pub(super) fn sort_by_arrival(prepared: &mut Vec<Prepared>) {
+    let mut indexed: Vec<(usize, Prepared)> =
+        std::mem::take(prepared).into_iter().enumerate().collect();
+    indexed.sort_by(|(ai, a), (bi, b)| {
+        a.spec
+            .arrival_s
+            .partial_cmp(&b.spec.arrival_s)
+            .expect("arrival_s is validated finite")
+            .then_with(|| ai.cmp(bi))
+    });
+    *prepared = indexed.into_iter().map(|(_, prep)| prep).collect();
+}
+
 /// Resolve one job synchronously — used for the re-enqueued remainder of a
 /// preempted job, whose shrunken iteration count needs its own plan (and
 /// marks the result `resumed`). Candidate sims run inline: they are
@@ -426,9 +450,9 @@ impl<'p> Scheduler<'p> {
             specs,
             cache,
         )?;
-        // FIFO by arrival time; equal arrivals keep submission order
-        // (sort_by is stable).
-        prepared.sort_by(|a, b| a.spec.arrival_s.partial_cmp(&b.spec.arrival_s).unwrap());
+        // FIFO by arrival time; equal arrivals order by declaration index
+        // (explicit tie-break, shared with the fleet loops).
+        sort_by_arrival(&mut prepared);
         let mut pending: VecDeque<Prepared> = prepared.into();
 
         let mut running: Vec<(f64, u64)> = Vec::new(); // (finish, banks)

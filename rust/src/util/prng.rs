@@ -38,6 +38,21 @@ impl Prng {
         lo + self.f32() * (hi - lo)
     }
 
+    /// Uniform f64 in `[0, 1)` with the full 53 bits of mantissa — the
+    /// workload generator draws arrival gaps and mix choices from this so
+    /// traces are a pure function of the seed.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential draw with the given mean (inverse-CDF transform).
+    /// `1.0 - f64()` keeps the argument of `ln` in `(0, 1]`, so the result
+    /// is always finite and non-negative.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        -mean * (1.0 - self.f64()).ln()
+    }
+
     /// Pick a random element of a slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.range(0, xs.len() as u64 - 1) as usize]
@@ -85,6 +100,31 @@ mod tests {
             let f = rng.f32();
             assert!((0.0..1.0).contains(&f));
         }
+    }
+
+    #[test]
+    fn f64_bounds_and_determinism() {
+        let mut a = Prng::new(11);
+        let mut b = Prng::new(11);
+        for _ in 0..1000 {
+            let x = a.f64();
+            assert!((0.0..1.0).contains(&x));
+            assert_eq!(x.to_bits(), b.f64().to_bits());
+        }
+    }
+
+    #[test]
+    fn exp_is_nonnegative_finite_with_roughly_right_mean() {
+        let mut rng = Prng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.exp(2.5);
+            assert!(x.is_finite() && x >= 0.0);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.5).abs() < 0.1, "sample mean {mean} far from 2.5");
     }
 
     #[test]

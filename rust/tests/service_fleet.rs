@@ -18,8 +18,7 @@ use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
 use sasa::service::{
     demo_jobs, load_jobs, FairnessPolicy, Fleet, FleetBuilder, JobSpec, PlanCache, Priority,
-    Schedule,
-    Scheduler,
+    Schedule, Scheduler,
 };
 use sasa::sim::simulate;
 use sasa::util::prng::check;
@@ -663,4 +662,46 @@ fn replay_is_deterministic() {
     assert_same_decisions(&a, &b);
     assert_eq!(a.preemptions, b.preemptions);
     assert!(a.bank_seconds_used == b.bank_seconds_used);
+}
+
+// ---------------------------------------------------------------------------
+// same-instant arrival tie-break (ISSUE-9 satellite: float-equal arrivals
+// order by declaration index, never by map iteration or sort internals)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hundred_same_instant_arrivals_order_by_declaration_index() {
+    let p = u280();
+    let jobs: Vec<JobSpec> = (0..100)
+        .map(|k| {
+            JobSpec::new(&format!("t{k:03}"), "jacobi2d", vec![720, 1024], 4).arriving_at(0.00125)
+        })
+        .collect();
+    let expected: Vec<String> = (0..100).map(|k| format!("t{k:03}")).collect();
+
+    // a single 2-bank board serializes the burst: admission order is
+    // exactly the declaration-index tie-break (all 100 arrivals are
+    // float-identical, so arrival time distinguishes nothing)
+    let mut c1 = PlanCache::in_memory();
+    let s = Fleet::new(&p, 1).with_board_banks(vec![2]).schedule(&jobs, &mut c1).unwrap();
+    let order: Vec<&str> = s.jobs.iter().map(|j| j.spec.tenant.as_str()).collect();
+    assert_eq!(order, expected, "homogeneous walk keeps submission order");
+    assert!(s.jobs.windows(2).all(|w| w[0].start_s <= w[1].start_s), "monotone admissions");
+
+    // the general mixed-platform event loop takes the same tie-break
+    let mut c2 = PlanCache::in_memory();
+    let s = FleetBuilder::mixed(vec![u280(), FpgaPlatform::u50()])
+        .build()
+        .unwrap()
+        .with_board_banks(vec![2, 2])
+        .schedule(&jobs, &mut c2)
+        .unwrap();
+    let order: Vec<&str> = s.jobs.iter().map(|j| j.spec.tenant.as_str()).collect();
+    assert_eq!(order, expected, "mixed-fleet loop keeps submission order");
+
+    // so does the preserved FIFO reference walk
+    let mut c3 = PlanCache::in_memory();
+    let walk = Scheduler::new(&p).schedule_fifo_walk(&jobs, &mut c3).unwrap();
+    let order: Vec<&str> = walk.jobs.iter().map(|j| j.spec.tenant.as_str()).collect();
+    assert_eq!(order, expected, "FIFO walk keeps submission order");
 }

@@ -1,0 +1,426 @@
+//! Tier-2 stress & differential harness: `sasa::loadgen` traces driven
+//! at scale through the **unmodified** fleet paths (ISSUE 9).
+//!
+//! Smoke-sized by default so plain `cargo test` stays quick; set
+//! `SASA_STRESS=1` to run the full 1k+-job sweeps the acceptance gate
+//! names. Every run is seeded — no wall clock, no ambient entropy — so
+//! a failure reproduces byte-for-byte from the test name alone.
+//!
+//! The invariants that must survive at scale, each owned by a named
+//! test below:
+//!
+//! * **byte-identical reruns** — same seed, same fleet, same bytes, for
+//!   both the generated `jobs.json` and the rendered schedule;
+//! * **conservation** — iterations and bank-seconds are delivered or
+//!   explicitly reported lost, never silently dropped;
+//! * **ledger-vs-timeline agreement** — the fairness ledger's delivered
+//!   bank-seconds match the timeline's occupancy integral;
+//! * **aging-bound starvation caps** — once a batch job has aged past
+//!   the boost window, no younger interactive job starts before it;
+//! * **quota park/unpark pairing** — the observability stream's park
+//!   events alternate and reconcile with the ledger's park counts;
+//! * **monotone timelines & capacity** — admissions ride a forward-only
+//!   clock and no board exceeds its bank pool at any instant.
+
+mod common;
+use common::iters_by_key;
+
+use std::collections::BTreeMap;
+
+use sasa::dsl::KernelInfo;
+use sasa::faults::FaultPlan;
+use sasa::loadgen::{generate, ArrivalModel, TraceSpec};
+use sasa::model::explore;
+use sasa::obs::{Event, Recorder};
+use sasa::platform::FpgaPlatform;
+use sasa::service::{
+    jobs_to_json, FairnessPolicy, Fleet, FleetBuilder, JobSpec, PlanCache, Priority, Schedule,
+    DEFAULT_AGING_S,
+};
+
+fn u280() -> FpgaPlatform {
+    FpgaPlatform::u280()
+}
+
+/// Smoke size for plain `cargo test`, full size under `SASA_STRESS=1`.
+fn scale(smoke: usize, full: usize) -> usize {
+    if std::env::var("SASA_STRESS").is_ok_and(|v| v == "1") {
+        full
+    } else {
+        smoke
+    }
+}
+
+/// Render a schedule at the CLI's precision — the byte-identity
+/// yardstick (same shape as the chaos suite's), extended with the
+/// fairness and reliability blocks so ledger state is part of the
+/// comparison.
+fn render(s: &Schedule) -> String {
+    let mut out: Vec<String> = s
+        .jobs
+        .iter()
+        .map(|j| {
+            format!(
+                "{}|{}|{}|{}|{}|{:.3}|{:.3}|{:.3}",
+                j.spec.tenant,
+                j.config,
+                j.board,
+                j.hbm_banks,
+                j.fallback_rank,
+                j.queue_wait_s * 1e3,
+                j.start_s * 1e3,
+                j.finish_s * 1e3
+            )
+        })
+        .collect();
+    if let Some(rows) = &s.fairness {
+        out.push(format!("{rows:?}"));
+    }
+    if let Some(rel) = &s.reliability {
+        out.push(format!("{rel:?}"));
+    }
+    out.join("\n")
+}
+
+/// The structural invariant suite every schedule must satisfy at any
+/// scale. `faulted` relaxes the wait-consistency checks (retried
+/// remainders re-arrive at the fault instant, which is their own
+/// contract, covered by the chaos suite) and extends conservation with
+/// the reliability report's explicit losses.
+fn assert_schedule_invariants(specs: &[JobSpec], s: &Schedule, faulted: bool) {
+    // admissions are events on a forward-only clock
+    for pair in s.jobs.windows(2) {
+        assert!(pair[0].start_s <= pair[1].start_s, "admission order is time order");
+    }
+    for j in &s.jobs {
+        assert!(j.finish_s > j.start_s, "{}: zero-width segment", j.spec.tenant);
+        if !faulted {
+            assert!(j.start_s >= j.spec.arrival_s - 1e-12);
+            assert!((j.queue_wait_s - (j.start_s - j.spec.arrival_s)).abs() < 1e-12);
+        }
+    }
+    // capacity: at every admission instant, per-board banks in use never
+    // exceed that board's pool
+    for probe in &s.jobs {
+        let t = probe.start_s;
+        for (bi, b) in s.boards.iter().enumerate() {
+            let in_use: u64 = s
+                .jobs
+                .iter()
+                .filter(|j| j.board == bi && j.start_s <= t && t < j.finish_s)
+                .map(|j| j.hbm_banks)
+                .sum();
+            assert!(in_use <= b.banks, "board {bi}: {in_use} banks in use at t={t}");
+        }
+    }
+    // conservation: every submitted iteration is delivered or explicitly
+    // reported lost (exhausted retries, drained remainders)
+    let mut accounted = iters_by_key(s.jobs.iter().map(|j| &j.spec));
+    if let Some(rel) = &s.reliability {
+        for l in rel.exhausted.iter().chain(&rel.drained) {
+            *accounted.entry((l.tenant.clone(), l.kernel.clone())).or_default() += l.iter_lost;
+        }
+    }
+    assert_eq!(accounted, iters_by_key(specs.iter()), "iteration conservation");
+    // each board's timeline bank-seconds split exactly into delivered +
+    // lost when faults were armed
+    if let Some(rel) = &s.reliability {
+        for (b, stats) in s.boards.iter().enumerate() {
+            let split = rel.boards[b].delivered_bank_s + rel.boards[b].lost_bank_s;
+            assert!(
+                (stats.bank_seconds - split).abs() <= 1e-9 * stats.bank_seconds.max(1.0),
+                "board {b}: timeline {} bank-s vs delivered+lost {split}",
+                stats.bank_seconds
+            );
+        }
+    }
+    // ledger-vs-timeline: delivered bank-seconds across tenants must
+    // agree with the schedule's occupancy integral
+    if let Some(fairness) = s.fairness.as_ref() {
+        let delivered: f64 = fairness.iter().map(|t| t.delivered_bank_s).sum();
+        assert!(
+            (delivered - s.bank_seconds_used).abs() <= 1e-9 * s.bank_seconds_used.max(1.0),
+            "ledger {delivered} bank-s != timeline {}",
+            s.bank_seconds_used
+        );
+    }
+}
+
+/// Aging-bound starvation cap, valid for unfaulted **unweighted** runs:
+/// strict head-of-line admission means a batch job that has aged past
+/// the boost window outranks every interactive job that arrived after
+/// the window closed, so the younger interactive job can never start
+/// first. Resumed segments re-enter the queue at their cut time and are
+/// excluded (their ordering is the preemption contract, not aging's).
+fn assert_aging_cap(s: &Schedule, aging_s: f64) {
+    let fresh: Vec<_> = s.jobs.iter().filter(|j| !j.resumed).collect();
+    for b in fresh.iter().filter(|j| j.spec.priority == Priority::Batch) {
+        for i in fresh.iter().filter(|j| j.spec.priority == Priority::Interactive) {
+            if i.spec.arrival_s > b.spec.arrival_s + aging_s {
+                assert!(
+                    i.start_s >= b.start_s - 1e-12,
+                    "starved past the aging bound: batch {} (arrived {:.6}) started {:.6} \
+                     after interactive {} (arrived {:.6}) started {:.6}",
+                    b.spec.tenant,
+                    b.spec.arrival_s,
+                    b.start_s,
+                    i.spec.tenant,
+                    i.spec.arrival_s,
+                    i.start_s
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generated traces are byte-identical artifacts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn generated_traces_are_byte_identical_at_scale() {
+    let jobs = scale(400, 1500);
+    let poisson = TraceSpec::new(0xA110C);
+    let mut bursty = TraceSpec::new(0xA110C);
+    bursty.arrivals = ArrivalModel::Bursty { burst_size: 24, gap_ms: 0.4 };
+    bursty.weighted = true;
+    bursty.quota_bank_s = Some(0.002);
+    for mut spec in [poisson, bursty] {
+        spec.jobs = jobs;
+        let one = jobs_to_json(&generate(&spec)).to_string();
+        let two = jobs_to_json(&generate(&spec)).to_string();
+        assert_eq!(one, two, "same seed, same bytes ({:?})", spec.arrivals);
+        spec.seed ^= 1;
+        let other = jobs_to_json(&generate(&spec)).to_string();
+        assert_ne!(one, other, "a different seed moves the stream");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// homogeneous fleet at scale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn homogeneous_fleet_at_scale_holds_every_invariant() {
+    let mut spec = TraceSpec::new(0x5EED01);
+    spec.jobs = scale(150, 1200);
+    let specs = generate(&spec);
+    let run = || {
+        let mut cache = PlanCache::in_memory();
+        Fleet::new(&u280(), 3).schedule(&specs, &mut cache).unwrap()
+    };
+    let (one, two) = (run(), run());
+    assert_eq!(render(&one), render(&two), "byte-identical rerun");
+    // preemption may split a job into segments, never drop one
+    assert!(one.jobs.len() >= specs.len(), "every job admitted at least once");
+    assert_schedule_invariants(&specs, &one, false);
+    assert_aging_cap(&one, DEFAULT_AGING_S);
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous fleet, with and without per-board backends
+// ---------------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_and_mixed_backend_fleets_agree() {
+    let mut spec = TraceSpec::new(0x5EED02);
+    spec.jobs = scale(140, 1000);
+    let specs = generate(&spec);
+    let plain = {
+        let mut cache = PlanCache::in_memory();
+        FleetBuilder::mixed(vec![u280(), FpgaPlatform::u50()])
+            .build()
+            .unwrap()
+            .schedule(&specs, &mut cache)
+            .unwrap()
+    };
+    assert_schedule_invariants(&specs, &plain, false);
+    assert_aging_cap(&plain, DEFAULT_AGING_S);
+    // execution backends never steer scheduling: annotating boards with
+    // different substrates must reproduce the plain schedule byte for byte
+    let backed = {
+        let mut cache = PlanCache::in_memory();
+        FleetBuilder::mixed(vec![u280(), FpgaPlatform::u50()])
+            .board_backends(vec![Some("interp".into()), Some("sim".into())])
+            .build()
+            .unwrap()
+            .schedule(&specs, &mut cache)
+            .unwrap()
+    };
+    assert_eq!(render(&plain), render(&backed), "backends are schedule-invisible");
+}
+
+// ---------------------------------------------------------------------------
+// bursty weighted trace with quotas: park/unpark pairing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bursty_quota_trace_pairs_parks_with_unparks() {
+    let mut spec = TraceSpec::new(0x5EED03);
+    spec.jobs = scale(150, 1000);
+    spec.arrivals = ArrivalModel::Bursty { burst_size: 24, gap_ms: 0.4 };
+    spec.weighted = true;
+    // a quota far below any single job's bank-second cost: every hog
+    // window overdraws, so parks are guaranteed at any scale
+    spec.quota_bank_s = Some(5e-5);
+    let specs = generate(&spec);
+    let policy = FairnessPolicy::from_specs(&specs).unwrap().with_quota_window_s(0.002);
+    let (recorder, sink) = Recorder::to_memory();
+    let mut cache = PlanCache::in_memory();
+    let s = Fleet::new(&u280(), 2)
+        .with_policy(policy)
+        .with_recorder(recorder)
+        .schedule(&specs, &mut cache)
+        .unwrap();
+    assert_schedule_invariants(&specs, &s, false);
+
+    // pairing: per tenant the stream alternates park, unpark, park, …
+    // and every park closes (tail parks get their bucket-refill deadline
+    // stamped after the loop), so each stream has even length
+    let mut streams: BTreeMap<String, Vec<bool>> = BTreeMap::new();
+    for ev in sink.events() {
+        match ev {
+            Event::QuotaPark { t_s, tenant, until_s } => {
+                assert!(until_s >= t_s, "{tenant}: park must point forward");
+                streams.entry(tenant).or_default().push(true);
+            }
+            Event::QuotaUnpark { tenant, .. } => streams.entry(tenant).or_default().push(false),
+            _ => {}
+        }
+    }
+    let mut event_parks = 0u64;
+    for (tenant, stream) in &streams {
+        for (k, parked) in stream.iter().enumerate() {
+            assert_eq!(*parked, k % 2 == 0, "{tenant}: park/unpark events must alternate");
+        }
+        assert_eq!(stream.len() % 2, 0, "{tenant}: every park must close with an unpark");
+        event_parks += stream.iter().filter(|p| **p).count() as u64;
+    }
+    // the observability stream and the fairness ledger agree on parks
+    let fairness = s.fairness.as_ref().expect("quota'd trace builds a ledger");
+    let ledger_parks: u64 = fairness.iter().map(|t| t.parks).sum();
+    assert_eq!(event_parks, ledger_parks, "event stream vs ledger park counts");
+    assert!(ledger_parks > 0, "an overdrawn quota must actually park someone");
+    for row in fairness {
+        let evs = streams.get(&row.tenant);
+        let in_stream = evs.map_or(0, |s| s.iter().filter(|p| **p).count());
+        assert_eq!(in_stream as u64, row.parks, "{}: per-tenant park count", row.tenant);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// faulted fleet differential (satellite d)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_runs_conserve_what_the_faultless_run_delivers() {
+    for seed in [0x5EED10u64, 0x5EED11] {
+        let mut spec = TraceSpec::new(seed);
+        spec.jobs = scale(120, 1000);
+        let specs = generate(&spec);
+        let faultless = {
+            let mut cache = PlanCache::in_memory();
+            Fleet::new(&u280(), 2).schedule(&specs, &mut cache).unwrap()
+        };
+        assert!(faultless.reliability.is_none(), "faultless run builds no fault state");
+        assert_schedule_invariants(&specs, &faultless, false);
+
+        let plan = FaultPlan::parse(&format!("seed={seed},count=4,horizon_ms=2")).unwrap();
+        let run = || {
+            let mut cache = PlanCache::in_memory();
+            Fleet::new(&u280(), 2)
+                .with_faults(plan.clone())
+                .schedule(&specs, &mut cache)
+                .unwrap()
+        };
+        let (one, two) = (run(), run());
+        assert_eq!(render(&one), render(&two), "seed {seed:#x}: chaos is deterministic");
+        assert!(one.reliability.is_some(), "a non-empty plan always reports reliability");
+        // the differential: delivered iterations plus explicit losses in
+        // the faulted run equal the faultless run's delivered total —
+        // which itself equals the submitted total (checked inside)
+        assert_schedule_invariants(&specs, &one, true);
+        assert_eq!(
+            iters_by_key(faultless.jobs.iter().map(|j| &j.spec)),
+            iters_by_key(specs.iter()),
+            "seed {seed:#x}: the faultless run delivers everything submitted"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PlanCache LRU churn (satellite b)
+// ---------------------------------------------------------------------------
+
+/// Distinct cache keys at loadgen scale: every row count is its own
+/// kernel shape, so each draw is a genuine miss until re-requested.
+fn churn_infos(n: usize) -> Vec<KernelInfo> {
+    (0..n)
+        .map(|i| {
+            JobSpec::new("churn", "jacobi2d", vec![256 + i as u64, 256], 4)
+                .info()
+                .expect("jacobi2d analyzes at any row count")
+        })
+        .collect()
+}
+
+#[test]
+fn plan_cache_lru_survives_key_churn_under_a_small_cap() {
+    let p = u280();
+    let cap = 32;
+    let infos = churn_infos(scale(240, 2048));
+    let mut cache = PlanCache::in_memory().with_max_entries(cap);
+    for wave in infos.chunks(256) {
+        let reqs: Vec<(&KernelInfo, u64)> = wave.iter().map(|i| (i, 4)).collect();
+        let out = cache.get_or_explore_batch(&p, &reqs);
+        assert_eq!(out.len(), reqs.len(), "every request resolves, evicted or not");
+        assert!(cache.len() <= cap, "{} entries under a cap of {cap}", cache.len());
+    }
+    // spot-check returned plans against fresh uncached exploration —
+    // eviction may drop the memo, never the value handed back
+    for k in [0usize, infos.len() / 2, infos.len() - 1] {
+        let reqs = [(&infos[k], 4u64)];
+        let out = cache.get_or_explore_batch(&p, &reqs);
+        assert_eq!(out[0].0.best.config, explore(&infos[k], &p, 4).best.config, "key {k}");
+    }
+}
+
+#[test]
+fn in_flight_batch_values_survive_their_own_eviction() {
+    let p = u280();
+    let infos = churn_infos(66);
+    let mut cache = PlanCache::in_memory().with_max_entries(8);
+    // pre-warm the first key, then request it at both ends of a batch
+    // whose 64 fresh middles overflow the cap eight times over
+    cache.get_or_explore_batch(&p, &[(&infos[0], 4)]);
+    let mut reqs: Vec<(&KernelInfo, u64)> = vec![(&infos[0], 4)];
+    reqs.extend(infos[1..65].iter().map(|i| (i, 4)));
+    reqs.push((&infos[0], 4));
+    let out = cache.get_or_explore_batch(&p, &reqs);
+    let (first, first_hit) = &out[0];
+    let (last, last_hit) = out.last().unwrap();
+    assert!(*first_hit, "the pre-warmed key opens the batch as a hit");
+    assert!(*last_hit, "a duplicate key within one batch is a hit, not a re-explore");
+    assert_eq!(first.best.config, last.best.config, "hit values are captured before inserts");
+    assert!(cache.len() <= 8, "the cap still holds after the batch lands");
+}
+
+#[test]
+fn persisted_cache_file_stays_under_the_cap() {
+    let p = u280();
+    let cap = 16;
+    let path = std::env::temp_dir().join(format!("sasa_stress_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let infos = churn_infos(100);
+    {
+        let mut cache = PlanCache::at_path(&path).unwrap().with_max_entries(cap);
+        let reqs: Vec<(&KernelInfo, u64)> = infos.iter().map(|i| (i, 4)).collect();
+        cache.get_or_explore_batch(&p, &reqs);
+        assert!(cache.len() <= cap);
+        cache.save().unwrap();
+    }
+    let reloaded = PlanCache::at_path(&path).unwrap();
+    assert!(reloaded.len() <= cap, "the file on disk holds at most the cap");
+    assert!(!reloaded.is_empty(), "the survivors did persist");
+    let _ = std::fs::remove_file(&path);
+}
