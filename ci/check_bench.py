@@ -2,20 +2,32 @@
 """Bench-regression guard for BENCH_hotpath.json.
 
 The hotpath bench (rust/benches/hotpath.rs) emits derived speedups of the
-two PR-2 optimizations:
+hot-path optimizations:
 
-* ``sim_fastforward_speedup``     — closed-form steady-state fast-forward
-                                    vs the explicit row walk;
-* ``interp_speedup_<kernel>``     — tiered interior/border engine vs the
-                                    naive per-cell oracle.
+* ``sim_fastforward_speedup``          — closed-form steady-state
+                                         fast-forward vs the explicit
+                                         row walk;
+* ``interp_speedup_<kernel>``          — tiered interior/border engine vs
+                                         the naive per-cell oracle;
+* ``interp_blocked_speedup_<kernel>``  — temporally blocked engine
+                                         (trapezoidal row tiles, t fused
+                                         iterations) vs the tiered engine
+                                         at depth 1.
 
 This script fails (exit 1) when any of them regresses below a conservative
-floor, so an accidental revert of either hot path can never land silently.
+floor, so an accidental revert of any hot path can never land silently.
 Floors are deliberately far below the typical measured speedups: CI runners
-are noisy and the smoke run uses reduced sizes — the gate is for "the
-optimization stopped working", not for small variance.
+are noisy — the gate is for "the optimization stopped working", not for
+small variance.
 
-Usage: ci/check_bench.py [BENCH_hotpath.json] [--floor NAME=VALUE ...]
+Smoke-mode files (``"smoke": true``, emitted under ``SASA_BENCH_SMOKE=1``)
+use reduced sizes whose speedups sit well below the full-run numbers.
+Comparing them against full-run floors silently gated the wrong thing, so
+a smoke file is now refused unless ``--smoke`` is passed, which scales
+every floor by ``SMOKE_FLOOR_SCALE``. Conversely ``--smoke`` against a
+full-run file is refused too — scaled floors would mask a real regression.
+
+Usage: ci/check_bench.py [BENCH_hotpath.json] [--smoke] [--floor NAME=VALUE ...]
 """
 
 import json
@@ -27,24 +39,58 @@ DEFAULT_FLOORS = {
     "sim_fastforward_speedup": 2.0,
     "interp_speedup_jacobi2d": 1.1,
     "interp_speedup_hotspot": 1.1,
+    "interp_blocked_speedup_jacobi2d": 1.05,
+    "interp_blocked_speedup_hotspot": 1.05,
 }
+
+# Smoke runs use reduced sizes (shallower fusion, noisier timings): floors
+# shrink to "did the optimization survive at all" territory.
+SMOKE_FLOOR_SCALE = 0.5
 
 
 def main(argv):
     path = "BENCH_hotpath.json"
     floors = dict(DEFAULT_FLOORS)
+    smoke_expected = False
     args = list(argv[1:])
     while args:
         a = args.pop(0)
         if a == "--floor":
             name, _, value = args.pop(0).partition("=")
             floors[name] = float(value)
+        elif a == "--smoke":
+            smoke_expected = True
         else:
             path = a
 
     with open(path) as f:
         bench = json.load(f)
     derived = bench.get("derived", {})
+    is_smoke = bool(bench.get("smoke", False))
+
+    if is_smoke and not smoke_expected:
+        print(
+            f"{path} is a smoke-mode bench file (\"smoke\": true) but full-run "
+            "floors were requested.\nSmoke runs use reduced sizes — their "
+            "speedups must not be compared against the committed full-run "
+            "baseline.\nPass --smoke to gate it with scaled floors.",
+            file=sys.stderr,
+        )
+        return 1
+    if smoke_expected and not is_smoke:
+        print(
+            f"--smoke was passed but {path} is a full-run bench file "
+            "(\"smoke\" flag absent or false).\nScaled floors would mask a "
+            "real regression — drop --smoke for full-run files.",
+            file=sys.stderr,
+        )
+        return 1
+    if smoke_expected:
+        floors = {name: floor * SMOKE_FLOOR_SCALE for name, floor in floors.items()}
+        print(
+            f"smoke-mode file: floors scaled by {SMOKE_FLOOR_SCALE} "
+            "(reduced sizes, reduced expectations)"
+        )
 
     failures = []
     for name, floor in sorted(floors.items()):

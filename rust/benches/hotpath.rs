@@ -23,7 +23,7 @@ use sasa::coordinator::grid::partition;
 use sasa::dsl::{analyze, benchmarks as b, parse};
 use sasa::model::{explore, Config, Parallelism};
 use sasa::platform::FpgaPlatform;
-use sasa::reference::{interpret, interpret_naive, Grid};
+use sasa::reference::{interpret_naive, Engine, Grid};
 use sasa::runtime::artifact::default_artifact_dir;
 use sasa::runtime::Manifest;
 // explicit substrate selection now that the cfg-swapped alias is deprecated
@@ -46,8 +46,10 @@ fn series_json(m: &Measurement) -> Json {
 
 fn main() {
     let smoke = std::env::var("SASA_BENCH_SMOKE").is_ok();
-    // interpreter workload: headline-ish in full mode, tiny in smoke mode
-    let (irows, icols, iiter) = if smoke { (96usize, 256usize, 2u64) } else { (768, 1024, 8) };
+    // interpreter workload: headline-ish in full mode, small-but-tall in
+    // smoke mode (256 rows so the temporally blocked engine engages — its
+    // smoke numbers must exercise the same code path the floors gate)
+    let (irows, icols, iiter) = if smoke { (256usize, 256usize, 2u64) } else { (768, 1024, 8) };
     let (sim_samples, interp_samples, sweep_samples, dse_samples) =
         if smoke { (5u32, 3u32, 2u32, 8u32) } else { (30, 10, 5, 50) };
 
@@ -88,8 +90,11 @@ fn main() {
     }));
     derived.insert("fig10_17_sweep_s".into(), num(results.last().unwrap().median_s));
 
-    // 4. interpreter Mcell-iters/s: tiered engine vs the naive per-cell
-    //    oracle (identical algorithm to the pre-PR interpreter)
+    // 4. interpreter Mcell-iters/s, three rungs of the same ladder: the
+    //    naive per-cell oracle (the pre-PR interpreter), the tiered engine
+    //    forced to one step per sweep (depth 1), and the temporally
+    //    blocked engine (auto depth — trapezoidal row tiles, t fused
+    //    iterations per global read/write)
     let mut rng = Prng::new(7);
     for (kernel, src) in [("jacobi2d", b::JACOBI2D_DSL), ("hotspot", b::HOTSPOT_DSL)] {
         let prog = parse(&b::with_dims(src, &[irows as u64, icols as u64], iiter)).unwrap();
@@ -97,11 +102,18 @@ fn main() {
         let inputs: Vec<Grid> = (0..kinfo.n_inputs)
             .map(|_| Grid::from_vec(irows, icols, rng.grid(irows, icols, 0.0, 1.0)))
             .collect();
-        // sanity: the engine must be bit-identical to the oracle
+        // sanity: both engine paths must be bit-identical to the oracle
+        let engine = Engine::new(&prog);
+        let golden = interpret_naive(&prog, &inputs, irows, iiter);
         assert_eq!(
-            interpret(&prog, &inputs, irows, iiter),
-            interpret_naive(&prog, &inputs, irows, iiter),
+            engine.run_with_depth(&inputs, irows, iiter, 1, None),
+            golden,
             "tiered engine diverged from the naive oracle on {kernel}"
+        );
+        assert_eq!(
+            engine.run(&inputs, irows, iiter),
+            golden,
+            "blocked engine diverged from the naive oracle on {kernel}"
         );
         let cell_iters = (irows * icols) as f64 * iiter as f64;
         results.push(bench(
@@ -113,25 +125,43 @@ fn main() {
             },
         ));
         let naive = results.last().unwrap().clone();
+        // compile included in both engine rungs, as it always was for the
+        // old `interpret`-based series — the rungs stay comparable
         results.push(bench(
             &format!("interp: tiered {kernel} {irows}x{icols} iter={iiter}"),
             1,
             interp_samples,
             || {
-                std::hint::black_box(interpret(&prog, &inputs, irows, iiter));
+                std::hint::black_box(
+                    Engine::new(&prog).run_with_depth(&inputs, irows, iiter, 1, None),
+                );
             },
         ));
         let tiered = results.last().unwrap().clone();
+        results.push(bench(
+            &format!("interp: blocked {kernel} {irows}x{icols} iter={iiter}"),
+            1,
+            interp_samples,
+            || {
+                std::hint::black_box(Engine::new(&prog).run(&inputs, irows, iiter));
+            },
+        ));
+        let blocked = results.last().unwrap().clone();
         let naive_rate = cell_iters / naive.median_s / 1e6;
         let tiered_rate = cell_iters / tiered.median_s / 1e6;
+        let blocked_rate = cell_iters / blocked.median_s / 1e6;
         let speedup = naive.median_s / tiered.median_s;
+        let blocked_speedup = tiered.median_s / blocked.median_s;
         println!(
-            "interp {kernel}: naive {naive_rate:.1} -> tiered {tiered_rate:.1} \
-             Mcell-iters/s ({speedup:.1}x)\n"
+            "interp {kernel}: naive {naive_rate:.1} -> tiered {tiered_rate:.1} -> \
+             blocked {blocked_rate:.1} Mcell-iters/s \
+             ({speedup:.1}x tiered/naive, {blocked_speedup:.2}x blocked/tiered)\n"
         );
         derived.insert(format!("interp_naive_{kernel}_mcells_per_s"), num(naive_rate));
         derived.insert(format!("interp_tiered_{kernel}_mcells_per_s"), num(tiered_rate));
+        derived.insert(format!("interp_blocked_{kernel}_mcells_per_s"), num(blocked_rate));
         derived.insert(format!("interp_speedup_{kernel}"), num(speedup));
+        derived.insert(format!("interp_blocked_speedup_{kernel}"), num(blocked_speedup));
     }
 
     // 5. partitioning geometry

@@ -31,6 +31,19 @@ impl Tile {
     pub fn owned_local(&self) -> (usize, usize) {
         (self.start - self.ext_start, self.end - self.ext_start)
     }
+
+    /// The global row range still bit-valid after `steps` iterations run
+    /// on the extended range in isolation: contamination advances `depth`
+    /// rows per step inward from each *cut* edge (a clipped extension sits
+    /// on the real grid boundary, where clamping is genuine, so nothing
+    /// contaminates from there). This is the shrinking trapezoid of the
+    /// temporally blocked engine and the halo contract of the coordinator.
+    pub fn valid_after(&self, steps: usize, depth: usize, rows: usize) -> (usize, usize) {
+        let eat = steps * depth;
+        let lo = if self.ext_start == 0 { 0 } else { self.ext_start + eat };
+        let hi = if self.ext_end == rows { rows } else { self.ext_end.saturating_sub(eat) };
+        (lo.min(hi), hi)
+    }
 }
 
 /// Split `rows` into `k` contiguous tiles (ceil split: earlier tiles take
@@ -126,6 +139,24 @@ mod tests {
             assert_eq!(t.ext_start + a, t.start);
             assert_eq!(t.ext_start + b, t.end);
         }
+    }
+
+    #[test]
+    fn valid_after_shrinks_from_cut_edges_only() {
+        let tiles = partition(100, 3, 8);
+        // middle tile: both edges are cuts, both sides shrink
+        let t = tiles[1];
+        assert_eq!(t.valid_after(0, 1, 100), (t.ext_start, t.ext_end));
+        assert_eq!(t.valid_after(3, 1, 100), (t.ext_start + 3, t.ext_end - 3));
+        // a tile extended by depth·steps is exactly valid on its owned rows
+        assert_eq!(t.valid_after(8, 1, 100), (t.start, t.end));
+        // edge tiles: the grid boundary side never shrinks
+        assert_eq!(tiles[0].valid_after(3, 1, 100).0, 0);
+        assert_eq!(tiles[2].valid_after(3, 1, 100).1, 100);
+        // over-deep blocks collapse to an empty range instead of panicking
+        let (lo, hi) = t.valid_after(100, 2, 100);
+        assert!(lo >= hi);
+        assert_eq!(lo, hi, "collapsed range must be empty, not inverted");
     }
 
     #[test]

@@ -28,9 +28,11 @@ pub mod verify;
 use anyhow::{bail, Context, Result};
 
 use crate::dsl::{analyze, KernelInfo, StencilProgram};
+use crate::metrics::stats::giga_rate;
 use crate::model::{Config, Parallelism};
 use crate::reference::Grid;
 use crate::runtime::{ArtifactEntry, TileExecutor};
+use crate::util::pool::Pool;
 
 use grid::{exchange_borders, partition, Tile};
 
@@ -129,6 +131,8 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
 
     /// Run one tile through the executable: slice all inputs to the tile's
     /// extended range, pad to the canvas, execute, return the full canvas.
+    /// The input canvases are recycled here; the *returned* canvas is the
+    /// caller's to recycle once its rows have been copied out.
     fn run_tile(
         &self,
         job: &StencilJob,
@@ -145,8 +149,13 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
                 self.runtime.pad_rows_to_canvas(entry, src, tile.ext_start, tile.ext_end),
             );
         }
-        self.runtime
-            .run_stencil(entry, &canvases, tile.ext_rows() as u64, nsteps)
+        let out = self
+            .runtime
+            .run_stencil(entry, &canvases, tile.ext_rows() as u64, nsteps)?;
+        for c in canvases {
+            self.runtime.recycle_canvas(c);
+        }
+        Ok(out)
     }
 
     /// Execute a job under a given configuration.
@@ -169,7 +178,10 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
                 pe_invocations: invocations,
                 halo_rows_exchanged: halo_rows,
                 wall_seconds: wall,
-                gcell_per_s: cells / wall / 1e9,
+                // guarded: zero-iteration jobs (cells == 0) and
+                // sub-timer-resolution walls must not leak inf/NaN into
+                // the rendered report tables
+                gcell_per_s: giga_rate(cells, wall),
             },
         ))
     }
@@ -184,6 +196,7 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
             let steps = remaining.min(s);
             let canvas = self.run_tile(job, entry, &tile, &state, steps)?;
             state.copy_rows_from(0, &canvas, 0, job.rows());
+            self.runtime.recycle_canvas(canvas);
             remaining -= steps;
             rounds += 1;
         }
@@ -197,10 +210,36 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
         let entry = self.artifact(job, max_rows)?;
         let state = &job.inputs[job.update_idx()];
         let mut out = state.clone();
-        for tile in &tiles {
-            let canvas = self.run_tile(job, entry, tile, state, job.iter)?;
-            let (a, b) = tile.owned_local();
-            out.copy_rows_from(tile.start, &canvas, a, b - a);
+        let cols = job.cols();
+        // tiles are fully independent (zero communication): fan them over
+        // the persistent worker pool, each writing its owned-row slab of
+        // `out` directly. Errors surface in tile order, so the reported
+        // failure is deterministic.
+        let mut slots: Vec<Result<()>> = Vec::new();
+        slots.resize_with(tiles.len(), || Ok(()));
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(tiles.len());
+            let mut rest: &mut [f32] = &mut out.data;
+            let mut row = 0usize;
+            for (tile, slot) in tiles.iter().zip(slots.iter_mut()) {
+                let (slab, tail) = rest.split_at_mut((tile.end - row) * cols);
+                rest = tail;
+                row = tile.end;
+                tasks.push(Box::new(move || {
+                    *slot = (|| -> Result<()> {
+                        let canvas = self.run_tile(job, entry, tile, state, job.iter)?;
+                        let (a, b) = tile.owned_local();
+                        slab.copy_from_slice(&canvas.data[a * cols..b * cols]);
+                        self.runtime.recycle_canvas(canvas);
+                        Ok(())
+                    })();
+                }));
+            }
+            Pool::global().run(tasks);
+        }
+        for s in slots {
+            s?;
         }
         Ok((out, 1, k, 0))
     }
@@ -236,25 +275,54 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
         let mut halo_rows = 0u64;
         let mut invocations = 0u64;
         for _ in 0..job.iter {
-            // run every PE for one iteration
-            for (t, st) in tiles.iter().zip(state.iter_mut()) {
-                let mut canvases: Vec<Grid> = Vec::with_capacity(job.inputs.len());
-                let statics = &static_canvases[t.index];
-                let mut si = 0;
-                for i in 0..job.inputs.len() {
-                    if i == job.update_idx() {
-                        canvases.push(self.runtime.pad_to_canvas(entry, st));
-                    } else {
-                        canvases.push(statics[si].1.clone());
-                        si += 1;
-                    }
+            // run every PE for one iteration, fanned over the worker pool
+            // (each task owns its tile's resident state; statics are
+            // cloned through the runtime's canvas pool)
+            let mut slots: Vec<Result<()>> = Vec::new();
+            slots.resize_with(tiles.len(), || Ok(()));
+            {
+                let statics_ref = &static_canvases;
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(tiles.len());
+                for ((t, st), slot) in
+                    tiles.iter().zip(state.iter_mut()).zip(slots.iter_mut())
+                {
+                    tasks.push(Box::new(move || {
+                        *slot = (|| -> Result<()> {
+                            let mut canvases: Vec<Grid> =
+                                Vec::with_capacity(job.inputs.len());
+                            let statics = &statics_ref[t.index];
+                            let mut si = 0;
+                            for i in 0..job.inputs.len() {
+                                if i == job.update_idx() {
+                                    canvases.push(self.runtime.pad_to_canvas(entry, st));
+                                } else {
+                                    canvases
+                                        .push(self.runtime.canvas_clone(&statics[si].1));
+                                    si += 1;
+                                }
+                            }
+                            let canvas = self.runtime.run_stencil(
+                                entry,
+                                &canvases,
+                                t.ext_rows() as u64,
+                                1,
+                            )?;
+                            st.copy_rows_from(0, &canvas, 0, t.ext_rows());
+                            self.runtime.recycle_canvas(canvas);
+                            for c in canvases {
+                                self.runtime.recycle_canvas(c);
+                            }
+                            Ok(())
+                        })();
+                    }));
                 }
-                let canvas =
-                    self.runtime
-                        .run_stencil(entry, &canvases, t.ext_rows() as u64, 1)?;
-                st.copy_rows_from(0, &canvas, 0, t.ext_rows());
-                invocations += 1;
+                Pool::global().run(tasks);
             }
+            for s in slots {
+                s?;
+            }
+            invocations += tiles.len() as u64;
             // border streaming: each PE's owned edge rows land in its
             // neighbours' halo bands (in-place split_at_mut row windows)
             halo_rows += exchange_borders(&tiles, &mut state, pr);
@@ -286,6 +354,7 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
                 let canvas = self.run_tile_state(job, entry, tile, &global, steps)?;
                 let (a, b) = tile.owned_local();
                 next.copy_rows_from(tile.start, &canvas, a, b - a);
+                self.runtime.recycle_canvas(canvas);
                 invocations += 1;
             }
             global = next;
@@ -334,6 +403,10 @@ impl<'rt, R: TileExecutor + ?Sized> Coordinator<'rt, R> {
                     self.runtime
                         .run_stencil(entry, &canvases, t.ext_rows() as u64, steps)?;
                 st.copy_rows_from(0, &canvas, 0, t.ext_rows());
+                self.runtime.recycle_canvas(canvas);
+                for c in canvases {
+                    self.runtime.recycle_canvas(c);
+                }
                 invocations += 1;
             }
             remaining -= steps;

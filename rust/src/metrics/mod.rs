@@ -7,5 +7,5 @@ pub mod reports;
 pub mod stats;
 pub mod table;
 
-pub use stats::percentile;
+pub use stats::{giga_rate, percentile};
 pub use table::Table;

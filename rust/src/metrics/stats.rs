@@ -17,6 +17,19 @@
 /// first (`service::executor` does). A **single-element** sample returns
 /// that element for every `pct`. `pct` itself must be a real number;
 /// a `NaN` percentile is a caller bug (debug-asserted).
+/// Throughput in giga-units per second, guarded for report tables: zero
+/// work, a zero (sub-timer-resolution) wall, a negative clock skew, or a
+/// NaN in either operand all yield `0.0` instead of leaking `inf`/`NaN`
+/// into rendered output. The `!(.. > 0.0)` form is deliberate — NaN fails
+/// every comparison, so it lands in the guarded branch.
+pub fn giga_rate(units: f64, seconds: f64) -> f64 {
+    if !(units > 0.0 && seconds > 0.0) {
+        0.0
+    } else {
+        units / seconds / 1e9
+    }
+}
+
 pub fn percentile(values: &[f64], pct: f64) -> f64 {
     debug_assert!(!pct.is_nan(), "percentile of a NaN pct is meaningless");
     if values.is_empty() {
@@ -33,6 +46,18 @@ pub fn percentile(values: &[f64], pct: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn giga_rate_guards_degenerate_inputs() {
+        assert_eq!(giga_rate(2e9, 1.0), 2.0);
+        assert_eq!(giga_rate(0.0, 1.0), 0.0, "zero-iteration job");
+        assert_eq!(giga_rate(100.0, 0.0), 0.0, "sub-timer-resolution wall");
+        assert_eq!(giga_rate(100.0, -1.0), 0.0, "clock skew");
+        assert_eq!(giga_rate(f64::NAN, 1.0), 0.0);
+        assert_eq!(giga_rate(100.0, f64::NAN), 0.0);
+        // a tiny-but-nonzero wall is legitimate fast work, not clamped
+        assert_eq!(giga_rate(100.0, 1e-9), 100.0);
+    }
 
     #[test]
     fn nearest_rank_percentiles() {

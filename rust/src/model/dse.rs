@@ -71,7 +71,7 @@ fn evaluate(
         cycles,
         freq_mhz: freq,
         seconds,
-        gcell_per_s: (p.cells() * p.iter) as f64 / seconds / 1e9,
+        gcell_per_s: crate::metrics::stats::giga_rate((p.cells() * p.iter) as f64, seconds),
         hbm_banks: banks,
         resources: total,
     }

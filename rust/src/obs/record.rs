@@ -276,6 +276,8 @@ pub struct EngineCounters {
     pool_tasks: AtomicU64,
     arena_grids_allocated: AtomicU64,
     arena_grids_reused: AtomicU64,
+    temporal_tiles: AtomicU64,
+    temporal_fused_steps: AtomicU64,
 }
 
 impl EngineCounters {
@@ -299,6 +301,17 @@ impl EngineCounters {
         self.arena_grids_reused.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Trapezoidal tiles processed by temporally blocked rounds.
+    pub fn add_temporal_tiles(&self, n: u64) {
+        self.temporal_tiles.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Iterations executed inside temporally blocked rounds (the sum of
+    /// per-round fused depths).
+    pub fn add_temporal_fused_steps(&self, n: u64) {
+        self.temporal_fused_steps.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn interior_cells(&self) -> u64 {
         self.interior_cells.load(Ordering::Relaxed)
     }
@@ -319,6 +332,14 @@ impl EngineCounters {
         self.arena_grids_reused.load(Ordering::Relaxed)
     }
 
+    pub fn temporal_tiles(&self) -> u64 {
+        self.temporal_tiles.load(Ordering::Relaxed)
+    }
+
+    pub fn temporal_fused_steps(&self) -> u64 {
+        self.temporal_fused_steps.load(Ordering::Relaxed)
+    }
+
     /// The counters as a JSON object (the `engine` section of a
     /// `--metrics-out` snapshot).
     pub fn to_json(&self) -> Json {
@@ -328,6 +349,8 @@ impl EngineCounters {
             ("pool_tasks", num(self.pool_tasks() as f64)),
             ("arena_grids_allocated", num(self.arena_grids_allocated() as f64)),
             ("arena_grids_reused", num(self.arena_grids_reused() as f64)),
+            ("temporal_tiles", num(self.temporal_tiles() as f64)),
+            ("temporal_fused_steps", num(self.temporal_fused_steps() as f64)),
         ])
     }
 }
@@ -380,11 +403,18 @@ mod tests {
         c.add_pool_tasks(3);
         c.add_arena_grids_allocated(2);
         c.add_arena_grids_reused(14);
+        c.add_temporal_tiles(5);
+        c.add_temporal_fused_steps(8);
+        c.add_temporal_fused_steps(3);
         assert_eq!(c.interior_cells(), 120);
         assert_eq!(c.border_cells(), 7);
+        assert_eq!(c.temporal_tiles(), 5);
+        assert_eq!(c.temporal_fused_steps(), 11);
         let j = c.to_json();
         assert_eq!(j.get("pool_tasks").and_then(Json::as_u64), Some(3));
         assert_eq!(j.get("arena_grids_reused").and_then(Json::as_u64), Some(14));
+        assert_eq!(j.get("temporal_tiles").and_then(Json::as_u64), Some(5));
+        assert_eq!(j.get("temporal_fused_steps").and_then(Json::as_u64), Some(11));
     }
 
     #[test]

@@ -21,13 +21,26 @@
 //! per-call thread spawns. Results are bit-identical to the naive oracle:
 //! the op sequence, operand order, and n-ary min/max fold order are
 //! exactly the per-cell VM's (see `tests/property_engine.rs`).
+//!
+//! On tall grids the engine additionally applies **temporal blocking**
+//! (trapezoidal row tiling à la Zohouri et al. — the software analogue of
+//! the paper's cascaded temporal PE chains): `t` iterations are fused over
+//! overlapped row tiles, so interior rows cross the global double buffer
+//! once per `t` steps instead of once per step. The per-step valid region
+//! of a tile shrinks by the row radius from every *cut* edge while real
+//! grid edges keep their genuine clamping, which is what keeps the blocked
+//! sweep bit-identical to the plain one (DESIGN.md §3.1). All grid-sized
+//! working buffers can be drawn from a [`BufferPool`]
+//! ([`Engine::run_pooled`]), making repeated runs allocation-free once the
+//! pool is warm.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::coordinator::grid::{partition, Tile};
 use crate::dsl::{analyze, BinOp, Expr, StencilProgram, StmtKind};
 use crate::obs::EngineCounters;
-use crate::util::pool::Pool;
+use crate::util::pool::{BufferPool, Pool};
 
 use super::Grid;
 
@@ -588,33 +601,120 @@ impl Engine {
     }
 
     /// Run `nsteps` masked stencil iterations (same contract as
-    /// [`interpret_naive`]; bit-identical results).
+    /// [`interpret_naive`]; bit-identical results). Temporal blocking is
+    /// applied automatically where the geometry pays
+    /// ([`Engine::auto_block_depth`]).
     pub fn run(&self, inputs: &[Grid], nrows: usize, nsteps: u64) -> Grid {
+        self.run_pooled(inputs, nrows, nsteps, None)
+    }
+
+    /// [`Engine::run`] with the grid-sized working buffers (double buffer,
+    /// local arena, tile planes) drawn from and returned to `pool`: a warm
+    /// pool makes repeated runs allocation-free. The *result* grid keeps
+    /// its pooled buffer — recycle it via the pool when consumed.
+    pub fn run_pooled(
+        &self,
+        inputs: &[Grid],
+        nrows: usize,
+        nsteps: u64,
+        pool: Option<&BufferPool>,
+    ) -> Grid {
+        assert!(!inputs.is_empty(), "at least one input grid");
+        let depth = self.auto_block_depth(inputs[0].rows, nsteps);
+        self.run_with_depth(inputs, nrows, nsteps, depth, pool)
+    }
+
+    /// [`Engine::run`] with an explicit temporal-block depth `t` (the
+    /// property sweep and the bench force depths through this): `t = 1` is
+    /// the plain one-step-per-sweep tiered engine; `t >= 2` requests
+    /// trapezoidal blocking, silently falling back to the plain sweep
+    /// where blocking cannot apply (local-statement chains, zero row
+    /// radius). A `t` beyond `nsteps` is clamped round by round.
+    pub fn run_with_depth(
+        &self,
+        inputs: &[Grid],
+        nrows: usize,
+        nsteps: u64,
+        t: u64,
+        pool: Option<&BufferPool>,
+    ) -> Grid {
         assert_eq!(inputs.len(), self.n_inputs, "input count mismatch");
+        assert!(t >= 1, "block depth must be at least 1");
         let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
         for g in inputs {
             assert_eq!((g.rows, g.cols), (maxr, cols), "input shapes must agree");
         }
-        let mut cur = inputs[self.upd].clone();
-        if nsteps == 0 {
-            return cur;
+        let live_top = self.pr;
+        let live_bot = nrows.saturating_sub(self.pr).min(maxr);
+        let (c0, c1) = (self.pc, cols.saturating_sub(self.pc));
+        // Degenerate live region (radius >= grid extent) or zero steps: no
+        // cell is ever written, so the result is the input unchanged.
+        // Return before touching the arena or any counter — the old path
+        // still evaluated every local statement `nsteps` times and
+        // pre-credited `arena_grids_reused` for cur/next swaps that never
+        // happened.
+        if nsteps == 0 || live_top >= live_bot || c0 >= c1 {
+            return inputs[self.upd].clone();
         }
-        // double buffer + local arena: all grid-sized allocation happens
-        // here, before the first step — steady state allocates nothing
-        let mut next = cur.clone();
-        let mut arena: Vec<Grid> =
-            (0..self.local_progs.len()).map(|_| Grid::new(maxr, cols)).collect();
+        let local_pool;
+        let pool = match pool {
+            Some(p) => p,
+            None => {
+                local_pool = BufferPool::new();
+                &local_pool
+            }
+        };
+        if t >= 2 && self.local_progs.is_empty() && self.pr >= 1 {
+            self.run_blocked(inputs, live_top, live_bot, c0, c1, nsteps, t, pool)
+        } else {
+            self.run_plain(inputs, live_top, live_bot, c0, c1, nsteps, pool)
+        }
+    }
+
+    /// Pick the automatic temporal-block depth for a `rows`-tall grid:
+    /// `1` (no blocking) unless the kernel has no local chain, a nonzero
+    /// row radius, and the grid is tall enough that the `2·pr·t` halo
+    /// wedge recomputed per tile stays well under the tile body — the
+    /// geometry-pays rule of DESIGN.md §3.1.
+    pub fn auto_block_depth(&self, rows: usize, nsteps: u64) -> u64 {
+        if nsteps < 2 || !self.local_progs.is_empty() || self.pr == 0 || rows < MIN_BLOCK_ROWS {
+            return 1;
+        }
+        let mut t = MAX_BLOCK_DEPTH.min(nsteps);
+        while t > 1 && 4 * self.pr * t as usize > BLOCK_TILE_BODY_ROWS {
+            t -= 1;
+        }
+        t
+    }
+
+    /// The plain tiered sweep: one iteration per cur/next swap.
+    fn run_plain(
+        &self,
+        inputs: &[Grid],
+        live_top: usize,
+        live_bot: usize,
+        c0: usize,
+        c1: usize,
+        nsteps: u64,
+        pool: &BufferPool,
+    ) -> Grid {
+        let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
         let ctr = self.counters.as_deref();
+        let mut cur = grid_copy(pool, &inputs[self.upd]);
+        // the cells outside the evaluated region must be identical in both
+        // buffers (copy-through borders are never written): seed next = cur
+        let mut next = grid_copy(pool, &cur);
+        // arena grids are fully overwritten before any read, so pooled
+        // (arbitrary-content) buffers are as good as zeroed ones
+        let mut arena: Vec<Grid> =
+            (0..self.local_progs.len()).map(|_| grid_take(pool, maxr, cols)).collect();
         if let Some(ctr) = ctr {
-            // the arena allocates once; every later step reuses it where
+            // the arena materializes once; every later step reuses it where
             // the naive oracle would allocate fresh local grids
             ctr.add_arena_grids_allocated(arena.len() as u64);
             ctr.add_arena_grids_reused(arena.len() as u64 * (nsteps - 1));
         }
         let mut scratch = ScratchPool::new();
-        let live_top = self.pr;
-        let live_bot = nrows.saturating_sub(self.pr).min(maxr);
-        let (c0, c1) = (self.pc, cols.saturating_sub(self.pc));
         for _ in 0..nsteps {
             for j in 0..self.local_progs.len() {
                 let (done, rest) = arena.split_at_mut(j);
@@ -624,19 +724,246 @@ impl Engine {
                     &mut scratch, ctr,
                 );
             }
-            if live_top < live_bot && c0 < c1 {
-                let grids = self.collect_grids(inputs, &cur, &arena);
-                eval_region(
-                    &self.out_prog, &grids, live_top..live_bot, (c0, c1), &mut next,
-                    &mut scratch, ctr,
-                );
-                // the cells outside the evaluated region are identical in
-                // both buffers (copy-through borders are never written)
-                std::mem::swap(&mut cur, &mut next);
-            }
+            let grids = self.collect_grids(inputs, &cur, &arena);
+            eval_region(
+                &self.out_prog, &grids, live_top..live_bot, (c0, c1), &mut next,
+                &mut scratch, ctr,
+            );
+            std::mem::swap(&mut cur, &mut next);
         }
+        for g in arena {
+            pool.put(g.data);
+        }
+        pool.put(next.data);
         cur
     }
+
+    /// Trapezoidal temporal blocking: partition the rows into overlapped
+    /// tiles extended by `pr·tb` per cut side, run `tb` fused steps inside
+    /// each tile's local double buffer, then write each tile's owned rows
+    /// back — one global read + one global write per `tb` steps.
+    ///
+    /// Correctness invariants (each step `s` in `1..=tb` of a round):
+    /// * the rows still *needed* are the owned range extended by
+    ///   `pr·(tb−s)` per cut side; every needed row of step `s` taps only
+    ///   rows needed at step `s−1`, and those taps stay inside the tile
+    ///   buffer wherever the extension was not clipped — a clipped side
+    ///   starts at the real grid edge, where buffer clamping is the
+    ///   genuine boundary clamping of the unblocked sweep;
+    /// * needed rows outside the live band copy through unchanged, and
+    ///   columns outside `[c0, c1)` keep their original values in both
+    ///   planes (seeded by the full-tile copy, preserved by the full-row
+    ///   copy-through, never touched by the column-bounded eval) — exactly
+    ///   the cells the global sweep never writes;
+    /// * at `s = tb` the needed range has shrunk to the owned range, so
+    ///   the write-back rows hold bit-exact `tb`-step values.
+    #[allow(clippy::too_many_arguments)]
+    fn run_blocked(
+        &self,
+        inputs: &[Grid],
+        live_top: usize,
+        live_bot: usize,
+        c0: usize,
+        c1: usize,
+        nsteps: u64,
+        t: u64,
+        pool: &BufferPool,
+    ) -> Grid {
+        let (maxr, cols) = (inputs[0].rows, inputs[0].cols);
+        let ctr = self.counters.as_deref();
+        let workers = Pool::global();
+        let mut cur = grid_copy(pool, &inputs[self.upd]);
+        // every row of next is written each round (the tiles' owned ranges
+        // partition the grid), so arbitrary contents are fine
+        let mut next = grid_take(pool, maxr, cols);
+        let mut tiles: Vec<Tile> = Vec::new();
+        // per tile, the non-iterated inputs sliced to its extended range
+        // (tile-local row origin, same as the working planes)
+        let mut statics: Vec<Vec<Grid>> = Vec::new();
+        let mut round_tb = 0u64;
+        let mut remaining = nsteps;
+        while remaining > 0 {
+            let tb = remaining.min(t);
+            if tb != round_tb {
+                // re-tile when the fused depth changes (at most once, for
+                // the final short round): shallower fusion narrows the halo
+                for ts in statics.drain(..) {
+                    for g in ts {
+                        pool.put(g.data);
+                    }
+                }
+                let ext = self.pr * tb as usize;
+                let body = BLOCK_TILE_BODY_ROWS.max(4 * ext);
+                tiles = partition(maxr, (maxr / body).max(1), ext);
+                statics = tiles
+                    .iter()
+                    .map(|tl| {
+                        inputs
+                            .iter()
+                            .enumerate()
+                            .filter(|&(i, _)| i != self.upd)
+                            .map(|(_, g)| grid_copy_rows(pool, g, tl.ext_start, tl.ext_end))
+                            .collect()
+                    })
+                    .collect();
+                round_tb = tb;
+            }
+            let n_tasks = if maxr * cols < PARALLEL_THRESHOLD_CELLS {
+                1
+            } else {
+                workers.workers().min(tiles.len()).max(1)
+            };
+            let chunk = tiles.len().div_ceil(n_tasks);
+            // contiguous tile groups own disjoint row slabs of `next`
+            let cur_ref = &cur;
+            let statics_ref = &statics;
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_tasks);
+            let mut rest: &mut [f32] = &mut next.data;
+            let mut row = 0usize;
+            for group in tiles.chunks(chunk) {
+                let hi = group.last().unwrap().end;
+                let (slab, tail) = rest.split_at_mut((hi - row) * cols);
+                rest = tail;
+                let slab_row0 = row;
+                row = hi;
+                tasks.push(Box::new(move || {
+                    let mut sc = Scratch::new();
+                    let mut slab = slab;
+                    for tile in group {
+                        self.run_tile_blocked(
+                            tile, tb, live_top, live_bot, c0, c1, cur_ref,
+                            &statics_ref[tile.index], pool, &mut slab, slab_row0, &mut sc,
+                            ctr,
+                        );
+                    }
+                }));
+            }
+            if let Some(ctr) = ctr {
+                if tasks.len() > 1 {
+                    ctr.add_pool_tasks(tasks.len() as u64);
+                }
+                ctr.add_temporal_tiles(tiles.len() as u64);
+                ctr.add_temporal_fused_steps(tb);
+            }
+            workers.run(tasks);
+            std::mem::swap(&mut cur, &mut next);
+            remaining -= tb;
+        }
+        for ts in statics.drain(..) {
+            for g in ts {
+                pool.put(g.data);
+            }
+        }
+        pool.put(next.data);
+        cur
+    }
+
+    /// One tile of one blocked round: seed the local double buffer from
+    /// the global read plane, fuse `tb` steps over the shrinking needed
+    /// range, write the owned rows into this task's slab of `next`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_tile_blocked(
+        &self,
+        tile: &Tile,
+        tb: u64,
+        live_top: usize,
+        live_bot: usize,
+        c0: usize,
+        c1: usize,
+        cur: &Grid,
+        statics: &[Grid],
+        pool: &BufferPool,
+        slab: &mut [f32],
+        slab_row0: usize,
+        sc: &mut Scratch,
+        ctr: Option<&EngineCounters>,
+    ) {
+        let cols = cur.cols;
+        let (e0, e1) = (tile.ext_start, tile.ext_end);
+        let pr = self.pr;
+        // plane buffers: `a` holds plane s-1, `b` receives plane s. Both
+        // seeded with the full extended range so copy-through rows and the
+        // columns outside [c0, c1) start (and stay) at their true values.
+        let mut a = grid_copy_rows(pool, cur, e0, e1);
+        let mut b = grid_take(pool, e1 - e0, cols);
+        b.data.copy_from_slice(&a.data);
+        for s in 1..=tb {
+            let shrink = pr * (tb - s) as usize;
+            // rows whose plane-s values later steps still need (global
+            // coordinates): owned extended by pr per remaining step,
+            // clipped to the tile buffer
+            let nlo = tile.start.saturating_sub(shrink).max(e0);
+            let nhi = (tile.end + shrink).min(e1);
+            // the sub-range actually evaluated: needed ∩ live band
+            let wlo = live_top.clamp(nlo, nhi);
+            let whi = live_bot.clamp(wlo, nhi);
+            // copy-through rows carry plane s-1 forward unchanged
+            if nlo < wlo {
+                b.data[(nlo - e0) * cols..(wlo - e0) * cols]
+                    .copy_from_slice(&a.data[(nlo - e0) * cols..(wlo - e0) * cols]);
+            }
+            if whi < nhi {
+                b.data[(whi - e0) * cols..(nhi - e0) * cols]
+                    .copy_from_slice(&a.data[(whi - e0) * cols..(nhi - e0) * cols]);
+            }
+            if wlo < whi {
+                let mut grids: Vec<&Grid> = Vec::with_capacity(self.n_inputs);
+                let mut si = 0;
+                for i in 0..self.n_inputs {
+                    if i == self.upd {
+                        grids.push(&a);
+                    } else {
+                        grids.push(&statics[si]);
+                        si += 1;
+                    }
+                }
+                eval_band(
+                    &self.out_prog, &grids, (wlo - e0)..(whi - e0), (c0, c1), cols,
+                    &mut b.data, 0, sc, ctr,
+                );
+            }
+            std::mem::swap(&mut a, &mut b);
+        }
+        // plane tb is valid exactly on the owned rows: write them home
+        let (la, lb) = tile.owned_local();
+        let off = (tile.start - slab_row0) * cols;
+        slab[off..off + (lb - la) * cols].copy_from_slice(&a.data[la * cols..lb * cols]);
+        pool.put(a.data);
+        pool.put(b.data);
+    }
+}
+
+/// Auto-blocking only engages on grids at least this tall: below it the
+/// halo recompute and tile bookkeeping outweigh the saved buffer traffic
+/// (and the small-grid unit tests keep their exact counter expectations).
+const MIN_BLOCK_ROWS: usize = 192;
+
+/// Target owned-row count per trapezoidal tile (grown when a deep fusion
+/// needs a wider halo, see `auto_block_depth`'s geometry-pays rule).
+const BLOCK_TILE_BODY_ROWS: usize = 64;
+
+/// Deepest automatic fusion depth.
+const MAX_BLOCK_DEPTH: u64 = 8;
+
+/// A pooled grid with arbitrary contents — the caller must overwrite every
+/// cell it later reads (the arena discipline).
+fn grid_take(pool: &BufferPool, rows: usize, cols: usize) -> Grid {
+    Grid::from_vec(rows, cols, pool.take(rows * cols))
+}
+
+/// A pooled copy of `src`.
+fn grid_copy(pool: &BufferPool, src: &Grid) -> Grid {
+    let mut buf = pool.take(src.data.len());
+    buf.copy_from_slice(&src.data);
+    Grid::from_vec(src.rows, src.cols, buf)
+}
+
+/// A pooled copy of rows `[r0, r1)` of `src`.
+fn grid_copy_rows(pool: &BufferPool, src: &Grid, r0: usize, r1: usize) -> Grid {
+    let cols = src.cols;
+    let mut buf = pool.take((r1 - r0) * cols);
+    buf.copy_from_slice(&src.data[r0 * cols..r1 * cols]);
+    Grid::from_vec(r1 - r0, cols, buf)
 }
 
 // ---------------------------------------------------------------------------
@@ -802,6 +1129,88 @@ mod tests {
         assert_eq!(counters.arena_grids_reused(), 0);
         // 140 cells per region is far below the pool threshold: inline
         assert_eq!(counters.pool_tasks(), 0);
+    }
+
+    #[test]
+    fn degenerate_live_region_returns_input_untouched() {
+        // dilate has row radius 2: on a 4x4 grid live_top == live_bot, so
+        // no cell is ever written. The old path still spun the step loop
+        // and pre-credited arena counters; now the input comes back as-is
+        // with every counter at zero.
+        let mut rng = Prng::new(11);
+        let prog = parse(&b::with_dims(b::DILATE_DSL, &[4, 4], 5)).unwrap();
+        let inputs = vec![Grid::from_vec(4, 4, rng.grid(4, 4, -1.0, 1.0))];
+        let counters = Arc::new(EngineCounters::default());
+        let engine = Engine::new(&prog).with_counters(counters.clone());
+        let out = engine.run(&inputs, 4, 5);
+        assert_eq!(out, inputs[0]);
+        assert_eq!(out, interpret_naive(&prog, &inputs, 4, 5));
+        assert_eq!(counters.interior_cells() + counters.border_cells(), 0);
+        assert_eq!(counters.arena_grids_allocated(), 0);
+        assert_eq!(counters.arena_grids_reused(), 0);
+        assert_eq!(counters.pool_tasks(), 0);
+    }
+
+    #[test]
+    fn degenerate_columns_skip_local_statements() {
+        // blur-jacobi2d's composed column radius is 3, so 6 columns leave
+        // c0 >= c1 while the row band stays live. The local chain must not
+        // run (it fed nothing) and its arena must never materialize.
+        let mut rng = Prng::new(12);
+        let prog = parse(&b::with_dims(b::BLUR_JACOBI2D_DSL, &[8, 6], 4)).unwrap();
+        let inputs = vec![Grid::from_vec(8, 6, rng.grid(8, 6, -1.0, 1.0))];
+        let counters = Arc::new(EngineCounters::default());
+        let engine = Engine::new(&prog).with_counters(counters.clone());
+        let out = engine.run(&inputs, 8, 4);
+        assert_eq!(out, inputs[0]);
+        assert_eq!(out, interpret_naive(&prog, &inputs, 8, 4));
+        assert_eq!(counters.interior_cells() + counters.border_cells(), 0);
+        assert_eq!(counters.arena_grids_allocated(), 0);
+        assert_eq!(counters.arena_grids_reused(), 0);
+    }
+
+    #[test]
+    fn blocked_engine_matches_naive_with_retile_round() {
+        // 160 rows / depth 8: multiple trapezoidal tiles, and 11 steps
+        // split into rounds of 8 + 3 — the final round re-tiles with a
+        // narrower halo. Counters must still record the blocked work.
+        let mut rng = Prng::new(13);
+        let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[160, 12], 11)).unwrap();
+        let inputs = vec![Grid::from_vec(160, 12, rng.grid(160, 12, -1.0, 1.0))];
+        let counters = Arc::new(EngineCounters::default());
+        let engine = Engine::new(&prog).with_counters(counters.clone());
+        let blocked = engine.run_with_depth(&inputs, 160, 11, 8, None);
+        assert_eq!(blocked, interpret_naive(&prog, &inputs, 160, 11));
+        assert!(counters.temporal_tiles() >= 2, "expected a multi-tile round");
+        assert_eq!(counters.temporal_fused_steps(), 11);
+    }
+
+    #[test]
+    fn blocked_engine_matches_naive_two_input_kernel() {
+        // hotspot iterates in_2 while in_1 stays static: the blocked path
+        // must slice the static input to each tile's extended range.
+        let mut rng = Prng::new(14);
+        let prog = parse(&b::with_dims(b::HOTSPOT_DSL, &[160, 12], 7)).unwrap();
+        let inputs: Vec<Grid> =
+            (0..2).map(|_| Grid::from_vec(160, 12, rng.grid(160, 12, 0.0, 1.0))).collect();
+        let engine = Engine::new(&prog);
+        let blocked = engine.run_with_depth(&inputs, 160, 7, 3, None);
+        assert_eq!(blocked, interpret_naive(&prog, &inputs, 160, 7));
+    }
+
+    #[test]
+    fn auto_depth_only_engages_where_geometry_pays() {
+        let j = Engine::new(&parse(&b::with_dims(b::JACOBI2D_DSL, &[768, 64], 8)).unwrap());
+        assert_eq!(j.auto_block_depth(768, 8), 8);
+        assert_eq!(j.auto_block_depth(768, 1), 1, "single step cannot fuse");
+        assert_eq!(j.auto_block_depth(12, 8), 1, "small grids stay plain");
+        // radius-2 dilate: halo 4t per side must stay under the tile body
+        let d = Engine::new(&parse(&b::with_dims(b::DILATE_DSL, &[768, 64], 8)).unwrap());
+        assert_eq!(d.auto_block_depth(768, 8), 8);
+        // local chains fall back to the plain sweep
+        let bj =
+            Engine::new(&parse(&b::with_dims(b::BLUR_JACOBI2D_DSL, &[768, 64], 8)).unwrap());
+        assert_eq!(bj.auto_block_depth(768, 8), 1);
     }
 
     #[test]

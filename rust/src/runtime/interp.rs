@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::dsl::{analyze, benchmarks as b, parse};
 use crate::reference::{Engine, Grid};
+use crate::util::pool::BufferPool;
 
 use super::artifact::{ArtifactEntry, Manifest};
 use super::{RuntimeStats, TileExecutor};
@@ -90,6 +91,12 @@ pub struct Runtime {
     /// `run_stencil` calls execute outside the cache lock.
     cache: Mutex<HashMap<String, Arc<Engine>>>,
     stats: Mutex<RuntimeStats>,
+    /// Canvas/arena recycling: every grid-sized buffer this runtime hands
+    /// out (padded canvases, `run_stencil` results, engine working
+    /// buffers) is drawn from here, and the coordinator returns consumed
+    /// canvases via [`TileExecutor::recycle_canvas`] — the warm-path
+    /// steady state allocates no grid-sized memory.
+    canvases: BufferPool,
 }
 
 impl Runtime {
@@ -98,6 +105,7 @@ impl Runtime {
             manifest,
             cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(RuntimeStats::default()),
+            canvases: BufferPool::new(),
         })
     }
 
@@ -118,7 +126,10 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
+        let mut s = self.stats.lock().unwrap().clone();
+        s.canvas_allocated = self.canvases.allocated();
+        s.canvas_reused = self.canvases.reused();
+        s
     }
 
     /// Instantiate (or fetch from cache) the builtin DSL program behind an
@@ -212,7 +223,7 @@ impl Runtime {
             .expect("compiled above")
             .clone();
         let t0 = Instant::now();
-        let out = engine.run(inputs, nrows as usize, nsteps);
+        let out = engine.run_pooled(inputs, nrows as usize, nsteps, Some(&self.canvases));
         let mut stats = self.stats.lock().unwrap();
         stats.executions += 1;
         stats.execute_seconds += t0.elapsed().as_secs_f64();
@@ -223,13 +234,13 @@ impl Runtime {
 
     /// Pad a tile (rows <= maxr) up to the artifact's [maxr, c] canvas.
     pub fn pad_to_canvas(&self, entry: &ArtifactEntry, tile: &Grid) -> Grid {
-        let mut canvas = Grid::new(entry.maxr as usize, entry.c as usize);
-        canvas.write_rows(0, tile);
-        canvas
+        self.pad_rows_to_canvas(entry, tile, 0, tile.rows)
     }
 
     /// Pad rows [start, end) of `src` onto the artifact's [maxr, c] canvas
-    /// without materializing the intermediate row slice.
+    /// without materializing the intermediate row slice. The canvas buffer
+    /// comes from the recycling pool; the zero tail below the copied rows
+    /// is re-established on every call (pooled buffers carry stale data).
     pub fn pad_rows_to_canvas(
         &self,
         entry: &ArtifactEntry,
@@ -237,7 +248,25 @@ impl Runtime {
         start: usize,
         end: usize,
     ) -> Grid {
-        Grid::from_padded_rows(entry.maxr as usize, entry.c as usize, src, start, end)
+        let (rows, cols) = (entry.maxr as usize, entry.c as usize);
+        assert_eq!(src.cols, cols, "column widths must agree");
+        let n = end - start;
+        let mut buf = self.canvases.take(rows * cols);
+        buf[..n * cols].copy_from_slice(&src.data[start * cols..end * cols]);
+        buf[n * cols..].fill(0.0);
+        Grid::from_vec(rows, cols, buf)
+    }
+
+    /// Return a consumed canvas to the recycling pool.
+    pub fn recycle_canvas(&self, canvas: Grid) {
+        self.canvases.put(canvas.data);
+    }
+
+    /// Clone a canvas through the recycling pool.
+    pub fn canvas_clone(&self, src: &Grid) -> Grid {
+        let mut buf = self.canvases.take(src.data.len());
+        buf.copy_from_slice(&src.data);
+        Grid::from_vec(src.rows, src.cols, buf)
     }
 }
 
@@ -268,6 +297,12 @@ impl TileExecutor for Runtime {
         end: usize,
     ) -> Grid {
         Runtime::pad_rows_to_canvas(self, entry, src, start, end)
+    }
+    fn recycle_canvas(&self, canvas: Grid) {
+        Runtime::recycle_canvas(self, canvas)
+    }
+    fn canvas_clone(&self, src: &Grid) -> Grid {
+        Runtime::canvas_clone(self, src)
     }
 }
 

@@ -60,7 +60,11 @@ pub type Runtime = interp::Runtime;
 /// [`Coordinator`](crate::coordinator::Coordinator) is generic over it, so
 /// the same dataflow (tiling, halo exchange, round structure) runs on any
 /// substrate.
-pub trait TileExecutor {
+///
+/// `Sync` is a supertrait: the coordinator fans independent tiles over the
+/// persistent worker pool, and every task shares the executor by
+/// reference.
+pub trait TileExecutor: Sync {
     /// The artifact manifest this executor serves.
     fn manifest(&self) -> &Manifest;
     /// Snapshot of the cumulative runtime counters.
@@ -81,6 +85,16 @@ pub trait TileExecutor {
     /// without materializing the intermediate row slice.
     fn pad_rows_to_canvas(&self, entry: &ArtifactEntry, src: &Grid, start: usize, end: usize)
         -> Grid;
+    /// Return a consumed canvas (one produced by `run_stencil`,
+    /// `pad_to_canvas`, `pad_rows_to_canvas`, or `canvas_clone`) to the
+    /// executor's buffer pool. A no-op default keeps executors without a
+    /// pool correct — recycling is always an optimization, never required.
+    fn recycle_canvas(&self, _canvas: Grid) {}
+    /// Clone a canvas through the executor's buffer pool (a plain
+    /// `Grid::clone` by default).
+    fn canvas_clone(&self, src: &Grid) -> Grid {
+        src.clone()
+    }
 }
 
 /// Cumulative runtime statistics (hot-path profiling), shared by both
@@ -98,6 +112,13 @@ pub struct RuntimeStats {
     pub executions: u64,
     pub execute_seconds: f64,
     pub cells_processed: u64,
+    /// Canvas-sized buffers created fresh by the executor's pool.
+    pub canvas_allocated: u64,
+    /// Canvas-sized buffers recycled from the executor's pool. The
+    /// allocated/reused split is scheduling-dependent under parallel tile
+    /// workers, so these feed profiling output only — never the
+    /// byte-diffed deterministic outputs.
+    pub canvas_reused: u64,
 }
 
 impl RuntimeStats {
@@ -108,6 +129,8 @@ impl RuntimeStats {
         self.executions += other.executions;
         self.execute_seconds += other.execute_seconds;
         self.cells_processed += other.cells_processed;
+        self.canvas_allocated += other.canvas_allocated;
+        self.canvas_reused += other.canvas_reused;
     }
 }
 
@@ -137,6 +160,8 @@ mod tests {
             executions: 3,
             execute_seconds: 1.25,
             cells_processed: 100,
+            canvas_allocated: 6,
+            canvas_reused: 10,
         };
         let b = RuntimeStats {
             compiles: 2,
@@ -144,6 +169,8 @@ mod tests {
             executions: 4,
             execute_seconds: 0.75,
             cells_processed: 900,
+            canvas_allocated: 4,
+            canvas_reused: 30,
         };
         let sum = a.clone() + b.clone();
         assert_eq!(sum.compiles, 3);
@@ -151,6 +178,8 @@ mod tests {
         assert_eq!(sum.cells_processed, 1000);
         assert_eq!(sum.compile_seconds, 0.75);
         assert_eq!(sum.execute_seconds, 2.0);
+        assert_eq!(sum.canvas_allocated, 10);
+        assert_eq!(sum.canvas_reused, 40);
         let mut m = a;
         m += b;
         assert_eq!(m, sum);
@@ -164,6 +193,8 @@ mod tests {
             executions: 9,
             execute_seconds: 2.0,
             cells_processed: 42,
+            canvas_allocated: 3,
+            canvas_reused: 17,
         };
         assert_eq!(a.clone() + RuntimeStats::default(), a);
     }

@@ -16,6 +16,8 @@
 //! cannot deadlock the pool.
 
 use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -148,10 +150,88 @@ impl Pool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// buffer pool
+// ---------------------------------------------------------------------------
+
+/// A keyed free list of `f32` buffers for the crate's grid-sized hot-path
+/// allocations: the engine's double buffers and local arenas, the blocked
+/// sweep's tile planes, and the runtime's tile canvases. Buffers are
+/// shelved by exact length, so `take` never returns a wrong-sized vector
+/// and never reallocates a recycled one.
+///
+/// Contract: a buffer handed out by [`BufferPool::take`] has **arbitrary
+/// contents** — the caller must overwrite every element it later reads
+/// (the same discipline the engine's arena already follows). Recycling is
+/// purely an optimization; dropping a buffer instead of `put`ting it back
+/// is always correct.
+///
+/// Thread-safe: one shelf mutex plus relaxed counters, so parallel tile
+/// workers share a single pool. The reuse/allocate *split* observed by
+/// concurrent takers depends on scheduling; only the totals are meaningful
+/// (which is why the counters feed `RuntimeStats`, not the byte-diffed
+/// deterministic outputs).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl BufferPool {
+    /// Per-length shelf cap: beyond this, `put` drops the buffer instead
+    /// of hoarding it (bounds worst-case retention at cap × length).
+    const MAX_PER_SHELF: usize = 32;
+
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// A buffer of exactly `len` elements with arbitrary contents —
+    /// recycled when the shelf has one, freshly allocated otherwise.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if let Some(buf) = self
+            .shelves
+            .lock()
+            .unwrap()
+            .get_mut(&len)
+            .and_then(Vec::pop)
+        {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return buf;
+        }
+        self.allocated.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to its length's shelf (dropped when the shelf is
+    /// full or the buffer is empty).
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry(buf.len()).or_default();
+        if shelf.len() < Self::MAX_PER_SHELF {
+            shelf.push(buf);
+        }
+    }
+
+    /// Buffers created fresh because no shelf had one.
+    pub fn allocated(&self) -> u64 {
+        self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Takes served from a shelf instead of the allocator.
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn runs_all_tasks_with_borrows() {
@@ -219,5 +299,46 @@ mod tests {
         let t: Box<dyn FnOnce() + Send + '_> = Box::new(|| x = 7);
         pool.run(vec![t]);
         assert_eq!(x, 7);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_by_exact_length() {
+        let pool = BufferPool::new();
+        let a = pool.take(64);
+        assert_eq!(a.len(), 64);
+        assert_eq!((pool.allocated(), pool.reused()), (1, 0));
+        pool.put(a);
+        // wrong length misses the shelf
+        let b = pool.take(65);
+        assert_eq!(b.len(), 65);
+        assert_eq!((pool.allocated(), pool.reused()), (2, 0));
+        // exact length hits it
+        let c = pool.take(64);
+        assert_eq!(c.len(), 64);
+        assert_eq!((pool.allocated(), pool.reused()), (2, 1));
+        pool.put(b);
+        pool.put(c);
+    }
+
+    #[test]
+    fn buffer_pool_shelf_is_capped() {
+        let pool = BufferPool::new();
+        let bufs: Vec<Vec<f32>> =
+            (0..BufferPool::MAX_PER_SHELF + 5).map(|_| pool.take(8)).collect();
+        for b in bufs {
+            pool.put(b);
+        }
+        // only MAX_PER_SHELF survive: draining reuses exactly that many
+        for _ in 0..BufferPool::MAX_PER_SHELF {
+            pool.take(8);
+        }
+        let reused_at_cap = pool.reused();
+        pool.take(8);
+        assert_eq!(pool.reused(), reused_at_cap, "over-cap puts must be dropped");
+        // empty buffers are never shelved
+        pool.put(Vec::new());
+        let allocated = pool.allocated();
+        assert_eq!(pool.take(0).len(), 0);
+        assert_eq!(pool.allocated(), allocated + 1);
     }
 }

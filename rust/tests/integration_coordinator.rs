@@ -141,6 +141,24 @@ fn report_counts_sane() {
 }
 
 #[test]
+fn zero_iteration_report_has_finite_throughput() {
+    // iter=0 jobs process zero cell-iterations: the throughput column must
+    // render as 0.00, never inf/NaN (the giga_rate guard at the report
+    // construction site)
+    let rt = runtime();
+    let coord = Coordinator::new(&rt);
+    let (_, job) = job_for(b::JACOBI2D_DSL, &[64, 64], 0);
+    let (grid, rep) = coord
+        .execute(&job, Config { parallelism: Parallelism::Temporal, k: 1, s: 2 })
+        .unwrap();
+    assert_eq!(grid, job.inputs[job.inputs.len() - 1]);
+    assert_eq!(rep.rounds, 0);
+    assert!(rep.gcell_per_s.is_finite(), "gcell_per_s leaked {}", rep.gcell_per_s);
+    assert_eq!(rep.gcell_per_s, 0.0);
+    assert_eq!(format!("{:.2}", rep.gcell_per_s), "0.00");
+}
+
+#[test]
 fn runtime_stats_accumulate() {
     let rt = runtime();
     let coord = Coordinator::new(&rt);

@@ -1,21 +1,43 @@
-//! The disabled recorder's zero-cost guarantee, enforced with a counting
-//! global allocator: `Recorder::emit` on the default (disabled) path must
-//! never run the event constructor, and therefore never allocate. This
-//! lives in its own integration-test binary because `#[global_allocator]`
-//! is process-global — it must not skew any other test's behavior.
+//! Zero-allocation guarantees, enforced with a counting global allocator:
+//!
+//! * `Recorder::emit` on the default (disabled) path must never run the
+//!   event constructor, and therefore never allocate;
+//! * a *warm* coordinator `run_temporal` round must allocate no
+//!   grid-sized buffers — the runtime's canvas pool and the engine's
+//!   pooled double buffers recycle everything after the first execute.
+//!
+//! This lives in its own integration-test binary because
+//! `#[global_allocator]` is process-global — it must not skew any other
+//! test's behavior. The tests in this binary serialize on a mutex: they
+//! share the allocation counters, and cargo runs tests in one binary
+//! concurrently.
 
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
 
+use sasa::coordinator::{Coordinator, StencilJob};
+use sasa::dsl::{benchmarks as b, parse};
+use sasa::model::{Config, Parallelism};
 use sasa::obs::{Event, Recorder};
+use sasa::reference::Grid;
+use sasa::runtime::interp::{builtin_manifest, Runtime};
+use sasa::util::prng::Prng;
 
 struct CountingAlloc;
 
 static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+/// Allocations at least `LARGE_THRESHOLD` bytes (usize::MAX disarms).
+static LARGE_ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static LARGE_THRESHOLD: AtomicUsize = AtomicUsize::new(usize::MAX);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        if layout.size() >= LARGE_THRESHOLD.load(Ordering::Relaxed) {
+            LARGE_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
         System.alloc(layout)
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
@@ -23,6 +45,9 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        if new_size >= LARGE_THRESHOLD.load(Ordering::Relaxed) {
+            LARGE_ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
         System.realloc(ptr, layout, new_size)
     }
 }
@@ -30,8 +55,12 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
+/// Tests share the process-global counters: serialize them.
+static SERIAL: Mutex<()> = Mutex::new(());
+
 #[test]
 fn disabled_recorder_emit_never_allocates() {
+    let _guard = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
     let recorder = Recorder::disabled();
     assert!(!recorder.is_enabled());
 
@@ -53,5 +82,47 @@ fn disabled_recorder_emit_never_allocates() {
     assert!(
         ALLOCATIONS.load(Ordering::Relaxed) > after,
         "the counting allocator must observe enabled-path allocations"
+    );
+}
+
+#[test]
+fn warm_coordinator_temporal_round_allocates_no_grid_buffers() {
+    let _guard = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    let (rows, cols) = (96usize, 64usize);
+    let rt = Runtime::new(builtin_manifest(PathBuf::from("artifacts"))).unwrap();
+    let coord = Coordinator::new(&rt);
+    let prog = parse(&b::with_dims(b::JACOBI2D_DSL, &[rows as u64, cols as u64], 6)).unwrap();
+    let mut rng = Prng::new(0x90A7);
+    let inputs = vec![Grid::from_vec(rows, cols, rng.grid(rows, cols, 0.0, 1.0))];
+    let job = StencilJob::new(&prog, inputs, 6).unwrap();
+    // 3 rounds of 2 steps: each round pads a canvas, runs the engine
+    // (double buffer inside), and copies the result back
+    let cfg = Config { parallelism: Parallelism::Temporal, k: 1, s: 2 };
+
+    // cold run: compiles the engine, populates the canvas pool
+    let (cold, _) = coord.execute(&job, cfg).unwrap();
+
+    // warm run: every grid-sized buffer must come from the pools. The
+    // single allowed large allocation is `run_temporal`'s state clone of
+    // the iterated input — state is job-owned, not pool-owned.
+    let grid_bytes = rows * cols * std::mem::size_of::<f32>();
+    LARGE_THRESHOLD.store(grid_bytes / 2, Ordering::Relaxed);
+    let (warm, report) = coord.execute(&job, cfg).unwrap();
+    let large = LARGE_ALLOCATIONS.load(Ordering::Relaxed);
+    LARGE_THRESHOLD.store(usize::MAX, Ordering::Relaxed);
+    LARGE_ALLOCATIONS.store(0, Ordering::Relaxed);
+
+    assert_eq!(warm, cold, "warm run must reproduce the cold result bit-exactly");
+    assert_eq!(report.rounds, 3);
+    assert_eq!(
+        large, 1,
+        "warm temporal rounds must recycle every grid-sized buffer \
+         (only the per-execute state clone may allocate, saw {large})"
+    );
+    let stats = rt.stats();
+    assert!(
+        stats.canvas_reused > 0,
+        "the canvas pool must have served the warm run (reused={})",
+        stats.canvas_reused
     );
 }

@@ -11,7 +11,7 @@
 use sasa::dsl::{analyze, benchmarks as b, parse};
 use sasa::model::explore;
 use sasa::platform::FpgaPlatform;
-use sasa::reference::{interpret, interpret_naive, Grid};
+use sasa::reference::{interpret, interpret_naive, Engine, Grid};
 use sasa::sim::{simulate, simulate_walk};
 use sasa::util::prng::Prng;
 
@@ -86,6 +86,102 @@ fn tiered_engine_bit_identical_on_tile_contract_grids() {
             let inputs = random_inputs(&mut rng, info.n_inputs, rows, cols);
             let fast = interpret(&prog, &inputs, nrows, 4);
             let naive = interpret_naive(&prog, &inputs, nrows, 4);
+            assert_eq!(fast, naive, "{} nrows={nrows}", info.name);
+        }
+    }
+}
+
+#[test]
+fn temporal_blocked_engine_bit_identical_across_depths() {
+    // the trapezoidal temporally blocked path vs the naive oracle, across
+    // radii (jacobi2d/hotspot r=1, dilate r=2), shapes (border-dominated
+    // minis through multi-tile talls), step counts, and forced block
+    // depths — including depths far beyond the step count (clamped round
+    // by round) and depths whose halo wedges span whole tiles
+    let kernels: [(&str, &str); 5] = [
+        ("jacobi2d", b::JACOBI2D_DSL),
+        ("hotspot", b::HOTSPOT_DSL),
+        ("dilate", b::DILATE_DSL),
+        ("blur", b::BLUR_DSL),
+        ("jacobi3d", b::JACOBI3D_DSL),
+    ];
+    let mut rng = Prng::new(0xB10C);
+    let mut cases = 0u32;
+    for (name, src) in kernels {
+        let is3d = parse(src).unwrap().dims().len() == 3;
+        let dim_sets: Vec<Vec<u64>> = if is3d {
+            vec![vec![12, 4, 4], vec![64, 4, 4], vec![9, 3, 3]]
+        } else {
+            vec![
+                vec![12, 16],
+                vec![64, 64],
+                vec![96, 32],
+                vec![9, 9],
+                vec![5, 40],
+                vec![33, 7],
+            ]
+        };
+        for dims in dim_sets {
+            let prog = parse(&b::with_dims(src, &dims, 8)).unwrap();
+            let info = analyze(&prog);
+            let engine = Engine::new(&prog);
+            let rows = dims[0] as usize;
+            let cols = dims[1..].iter().product::<u64>() as usize;
+            for steps in [1u64, 2, 5, 8] {
+                for depth in [2u64, 3, 8, 16] {
+                    for nrows in [rows, rows.div_ceil(2)] {
+                        let inputs = random_inputs(&mut rng, info.n_inputs, rows, cols);
+                        let blocked =
+                            engine.run_with_depth(&inputs, nrows, steps, depth, None);
+                        let naive = interpret_naive(&prog, &inputs, nrows, steps);
+                        assert_eq!(
+                            blocked, naive,
+                            "{name} dims={dims:?} nrows={nrows} steps={steps} depth={depth}"
+                        );
+                        cases += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(cases > 500, "coverage shrank: only {cases} cases");
+}
+
+#[test]
+fn blocked_depth_request_on_local_chain_falls_back_to_plain() {
+    // blur-jacobi2d has a local statement chain: a depth request must
+    // silently take the plain path and still match the oracle
+    let mut rng = Prng::new(0xFA11);
+    let prog = parse(&b::with_dims(b::BLUR_JACOBI2D_DSL, &[48, 32], 5)).unwrap();
+    let info = analyze(&prog);
+    let engine = Engine::new(&prog);
+    let inputs = random_inputs(&mut rng, info.n_inputs, 48, 32);
+    let out = engine.run_with_depth(&inputs, 48, 5, 4, None);
+    assert_eq!(out, interpret_naive(&prog, &inputs, 48, 5));
+}
+
+#[test]
+fn auto_blocked_interpret_bit_identical_on_tall_grids() {
+    // 192 rows crosses the auto-blocking threshold: `interpret` (the
+    // public entry every runtime uses) silently takes the blocked path
+    // here, and must stay bit-exact — including with dead rows masked off
+    let mut rng = Prng::new(0xA07B);
+    for (src, dims) in
+        [(b::JACOBI2D_DSL, vec![192u64, 24]), (b::HOTSPOT_DSL, vec![192, 24])]
+    {
+        let prog = parse(&b::with_dims(src, &dims, 8)).unwrap();
+        let info = analyze(&prog);
+        let rows = dims[0] as usize;
+        let cols = dims[1] as usize;
+        let engine = Engine::new(&prog);
+        assert!(
+            engine.auto_block_depth(rows, 8) >= 2,
+            "case must actually engage auto blocking"
+        );
+        for nrows in [rows, rows - 11] {
+            let inputs = random_inputs(&mut rng, info.n_inputs, rows, cols);
+            let fast = interpret(&prog, &inputs, nrows, 8);
+            let naive = interpret_naive(&prog, &inputs, nrows, 8);
             assert_eq!(fast, naive, "{} nrows={nrows}", info.name);
         }
     }
